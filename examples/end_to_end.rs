@@ -1,0 +1,90 @@
+//! End-to-end driver (DESIGN.md validation requirement): simulate a small
+//! sequencing run, base-call it through the full coordinator (dynamic
+//! batching -> PJRT DNN -> CTC beam decode pool -> read voting), assemble,
+//! map and polish — the complete Fig 1 pipeline — and report the paper's
+//! headline metrics plus the simulated Helix-chip throughput for the same
+//! workload.
+//!
+//!     make artifacts && cargo run --release --example end_to_end
+
+use anyhow::Result;
+
+use helix::basecall::edit::identity;
+use helix::coordinator::{Coordinator, CoordinatorConfig};
+use helix::genome::pore::PoreModel;
+use helix::genome::synth::{RunSpec, SequencingRun};
+use helix::pim::mapper::Topology;
+use helix::pim::schemes::{evaluate, Scheme};
+use helix::pipeline;
+use helix::runtime::meta::default_artifacts_dir;
+
+fn main() -> Result<()> {
+    let dir = default_artifacts_dir();
+    let pm = PoreModel::load(&format!("{dir}/pore_model.json"))?;
+    let spec = RunSpec {
+        genome_len: 2500,
+        coverage: 8,
+        read_len_min: 250,
+        read_len_max: 450,
+        seed: 77,
+    };
+    let run = SequencingRun::simulate(&pm, spec);
+    println!("== workload: {} bp genome, {} reads, {:.1}x coverage",
+             spec.genome_len, run.reads.len(), run.mean_coverage());
+
+    for (label, bits) in [("fp32", 32u32), ("5-bit + SEAT (Helix)", 5)] {
+        println!("\n== base-calling with guppy / {label}");
+        let mut coord = Coordinator::new(CoordinatorConfig {
+            model: "guppy".into(),
+            bits,
+            artifacts_dir: dir.clone(),
+            ..Default::default()
+        })?;
+        let t0 = std::time::Instant::now();
+        for r in &run.reads {
+            coord.submit(r);
+        }
+        let max_batch = coord.max_batch();
+        let metrics = coord.metrics.clone();
+        let called = coord.finish()?;
+        let wall = t0.elapsed();
+
+        // per-read accuracy
+        let mut acc = 0.0;
+        let mut seqs = Vec::new();
+        for c in &called {
+            let truth = &run.reads.iter().find(|r| r.id == c.read_id)
+                .unwrap().seq;
+            acc += identity(&c.seq, &truth[..truth.len()
+                                           .min(c.seq.len() + 8)]);
+            seqs.push(c.seq.clone());
+        }
+        println!("  called {} reads in {wall:.2?}  ({})",
+                 called.len(), metrics.report(max_batch));
+        println!("  base-call accuracy : {:.4}", acc / called.len() as f64);
+
+        // downstream pipeline (Fig 1): overlap -> assembly -> polish
+        let draft = pipeline::assemble(&seqs, 12);
+        let polished = pipeline::polish(&draft, &seqs);
+        let idx = pipeline::mapping::DraftIndex::build(&run.genome);
+        let d_id = pipeline::mapping::map_read(&draft, &run.genome, &idx)
+            .map_or(0.0, |m| m.identity);
+        let p_id = pipeline::mapping::map_read(&polished, &run.genome, &idx)
+            .map_or(0.0, |m| m.identity);
+        println!("  draft assembly     : {} bp, identity {d_id:.4}",
+                 draft.len());
+        println!("  polished assembly  : identity {p_id:.4}");
+    }
+
+    // what the Helix chip would do with this workload (PIM simulator)
+    println!("\n== simulated accelerator throughput for this workload");
+    let topo = Topology::guppy();
+    let bases: usize = run.reads.iter().map(|r| r.seq.len()).sum();
+    for s in [Scheme::Gpu, Scheme::Isaac, Scheme::Helix] {
+        let e = evaluate(s, &topo, 10);
+        println!("  {:<6} {:>10.1} kbp/s  -> {:>8.2} ms for these {} bases",
+                 s.name(), e.throughput() / 1e3,
+                 bases as f64 / e.throughput() * 1e3, bases);
+    }
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! PIM design-space explorer: sweep the architecture knobs the paper fixes
+//! (ADC resolution, crossbar size, beam width, comparator coverage) and
+//! print their effect on throughput / power / area — the ablation study
+//! DESIGN.md calls out beyond the paper's own figures.
+//!
+//!     cargo run --release --example pim_explorer
+
+use helix::pim::adc::CmosAdc;
+use helix::pim::crossbar::ArrayConfig;
+use helix::pim::mapper::{dnn_cell_ops_per_base, Topology};
+use helix::pim::schemes::{evaluate, evaluate_with_adc, Scheme};
+use helix::pim::variation;
+
+fn main() {
+    let topo = Topology::guppy();
+
+    println!("== ADC resolution (SEAT scheme, guppy)");
+    println!("{:>6} {:>12} {:>12} {:>12}", "bits", "kbp/s", "bp/s/W",
+             "ADC mW/IMA");
+    for bits in [4u32, 5, 6, 7, 8] {
+        let e = evaluate_with_adc(Scheme::Seat, &topo, 10, Some(bits));
+        println!("{bits:>6} {:>12.1} {:>12.1} {:>12.2}",
+                 e.throughput() / 1e3, e.throughput_per_watt(),
+                 CmosAdc::with_bits(bits).power_mw());
+    }
+
+    println!("\n== crossbar geometry (cell-ops per base, 5-bit datapath)");
+    println!("{:>10} {:>16}", "array", "cell-ops/base");
+    for size in [64usize, 128, 256] {
+        let cfg = ArrayConfig { rows: size, cols: size, ..Default::default() };
+        println!("{:>7}x{:<3} {:>16.3e}", size, size,
+                 dnn_cell_ops_per_base(&topo, &cfg, 5, 5));
+    }
+
+    println!("\n== beam width vs scheme throughput (guppy)");
+    println!("{:>6} {:>12} {:>12} {:>12}", "width", "GPU", "ADC", "Helix");
+    for w in [2usize, 5, 10, 20, 40] {
+        println!("{w:>6} {:>12.1} {:>12.1} {:>12.1}",
+                 evaluate(Scheme::Gpu, &topo, w).throughput() / 1e3,
+                 evaluate(Scheme::Adc, &topo, w).throughput() / 1e3,
+                 evaluate(Scheme::Helix, &topo, w).throughput() / 1e3);
+    }
+
+    println!("\n== SOT-MRAM cell size vs worst-case write (Fig 16 sweep)");
+    for (s, w) in variation::worst_case_vs_cell_size(
+        &[30.0, 45.0, 60.0, 75.0], variation::ADC_WRITE_VOLTAGE, 30_000, 7)
+    {
+        println!("{s:>6.0} F^2  worst {w:>8.3} ns {}",
+                 if w <= 1.56 { "(meets 1.56ns)" } else { "" });
+    }
+
+    println!("\n== per-model scheme summary");
+    for topo in Topology::all() {
+        let isaac = evaluate(Scheme::Isaac, &topo, 10);
+        let helix = evaluate(Scheme::Helix, &topo, 10);
+        println!("{:<10} ISAAC {:>9.1} kbp/s -> Helix {:>9.1} kbp/s \
+                  ({:.2}x)", topo.name, isaac.throughput() / 1e3,
+                 helix.throughput() / 1e3,
+                 helix.throughput() / isaac.throughput());
+    }
+}

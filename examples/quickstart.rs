@@ -1,0 +1,53 @@
+//! Quickstart: load a base-caller artifact, run one window through the PJRT
+//! runtime, decode it with CTC beam search, and print the called bases.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+
+use helix::basecall::ctc::beam_search;
+use helix::basecall::edit::identity;
+use helix::basecall::to_acgt;
+use helix::genome::dataset::windows_from_read;
+use helix::genome::pore::PoreModel;
+use helix::genome::synth::{RunSpec, SequencingRun};
+use helix::runtime::meta::default_artifacts_dir;
+use helix::runtime::Engine;
+
+fn main() -> Result<()> {
+    let dir = default_artifacts_dir();
+    let mut engine = Engine::new(&dir)?;
+
+    // synthesize one read with the shared pore model
+    let pm = PoreModel::load(&format!("{dir}/pore_model.json"))?;
+    let run = SequencingRun::simulate(&pm, RunSpec {
+        genome_len: 800,
+        coverage: 1,
+        seed: 5,
+        ..Default::default()
+    });
+    let read = &run.reads[0];
+    println!("simulated read: {} bases, {} raw samples",
+             read.seq.len(), read.signal.len());
+
+    // window it, run the DNN (AOT-compiled JAX/Pallas via PJRT), decode
+    let windows = windows_from_read(read, engine.meta.window, 150);
+    let signals: Vec<Vec<f32>> = windows.iter()
+        .map(|w| w.signal.clone())
+        .collect();
+    let lps = engine.run_windows("guppy", 32, &signals)?;
+    println!("\n{:<6} {:<34} {:<34} {:>8}", "win", "called", "truth", "ident");
+    let mut total = 0.0;
+    for (w, lp) in windows.iter().zip(&lps) {
+        let called = beam_search(lp, 10);
+        let id = identity(&called, &w.truth);
+        total += id;
+        println!("{:<6} {:<34} {:<34} {:>8.3}",
+                 w.base_start,
+                 to_acgt(&called[..called.len().min(32)]),
+                 to_acgt(&w.truth[..w.truth.len().min(32)]),
+                 id);
+    }
+    println!("\nmean window identity: {:.3}", total / windows.len() as f64);
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Serving demo: drive the coordinator like a sequencer would — reads
+//! arriving over time — and report batching behaviour and latency, the
+//! telemetry a deployment would watch.
+//!
+//!     make artifacts && cargo run --release --example serve_demo
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use helix::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
+use helix::genome::pore::PoreModel;
+use helix::genome::synth::{RunSpec, SequencingRun};
+use helix::runtime::meta::default_artifacts_dir;
+
+fn main() -> Result<()> {
+    let dir = default_artifacts_dir();
+    let pm = PoreModel::load(&format!("{dir}/pore_model.json"))?;
+    let run = SequencingRun::simulate(&pm, RunSpec {
+        genome_len: 1500,
+        coverage: 4,
+        seed: 13,
+        ..Default::default()
+    });
+
+    for (label, policy) in [
+        ("batch=1 (no batching)",
+         BatchPolicy { max_batch: 1, max_wait: Duration::ZERO }),
+        ("batch=8, 10ms deadline",
+         BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(10) }),
+        ("batch=32, 20ms deadline",
+         BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(20) }),
+    ] {
+        let mut coord = Coordinator::new(CoordinatorConfig {
+            model: "guppy".into(),
+            bits: 32,
+            policy,
+            artifacts_dir: dir.clone(),
+            ..Default::default()
+        })?;
+        let t0 = Instant::now();
+        // reads "arrive" with a small inter-arrival gap
+        for r in &run.reads {
+            coord.submit(r);
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let max_batch = coord.max_batch();
+        let metrics = coord.metrics.clone();
+        let called = coord.finish()?;
+        println!("{label:<26} {} reads in {:>8.2?}   {}",
+                 called.len(), t0.elapsed(), metrics.report(max_batch));
+    }
+    Ok(())
+}

@@ -1,0 +1,103 @@
+"""Sequence alignment utilities (host-side numpy).
+
+Edit distance (the paper's base-calling error metric, §2.2) and pairwise
+alignment backtraces used to vote overlapping window decodes into a consensus
+read (Fig 19). The production implementations live in rust
+(rust/src/basecall/{edit,vote}.rs); these are the python twins used during
+SEAT training and in pytest oracles.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def edit_distance(a, b) -> int:
+    """Levenshtein distance between two int sequences."""
+    a, b = list(a), list(b)
+    if len(a) < len(b):
+        a, b = b, a
+    prev = list(range(len(b) + 1))
+    for i, ca in enumerate(a, 1):
+        cur = [i] + [0] * len(b)
+        for j, cb in enumerate(b, 1):
+            cur[j] = min(prev[j] + 1, cur[j - 1] + 1,
+                         prev[j - 1] + (ca != cb))
+        prev = cur
+    return prev[-1]
+
+
+def identity(pred, truth) -> float:
+    """1 - edit_distance/len(truth); the paper's 'base-calling accuracy'."""
+    if len(truth) == 0:
+        return 1.0 if len(pred) == 0 else 0.0
+    return max(0.0, 1.0 - edit_distance(pred, truth) / len(truth))
+
+
+def align_onto(scaffold, other):
+    """Semi-global ("fit") alignment of ``other`` onto ``scaffold``:
+    leading/trailing scaffold positions are free, so a fragment that only
+    covers part of the scaffold aligns where it belongs instead of being
+    stretched end-to-end (which would inject wrong votes — the failure mode
+    that made voting HURT accuracy before this fix).
+
+    Returns an array ``m`` of len(scaffold) where m[i] is the symbol of
+    ``other`` aligned to scaffold position i, or -1 for a gap.
+    """
+    n, m = len(scaffold), len(other)
+    out = np.full(n, -1, dtype=np.int32)
+    if n == 0 or m == 0:
+        return out
+    D = np.zeros((n + 1, m + 1), dtype=np.int32)
+    D[0, :] = np.arange(m + 1)   # consuming the fragment costs
+    D[:, 0] = 0                  # skipping scaffold prefix is free
+    for i in range(1, n + 1):
+        ca = scaffold[i - 1]
+        row = D[i]
+        prev = D[i - 1]
+        for j in range(1, m + 1):
+            row[j] = min(prev[j] + 1, row[j - 1] + 1,
+                         prev[j - 1] + (ca != other[j - 1]))
+    # free scaffold suffix: start the backtrace at the best last column.
+    # tie-break order: exact-match diagonal > scaffold skip > mismatch
+    # diagonal > fragment skip (keeps votes on genuinely matching symbols).
+    i = int(np.argmin(D[:, m]))
+    j = m
+    while i > 0 and j > 0:
+        match = scaffold[i - 1] == other[j - 1]
+        if match and D[i, j] == D[i - 1, j - 1]:
+            out[i - 1] = other[j - 1]
+            i, j = i - 1, j - 1
+        elif D[i, j] == D[i - 1, j] + 1:
+            i -= 1
+        elif not match and D[i, j] == D[i - 1, j - 1] + 1:
+            out[i - 1] = other[j - 1]
+            i, j = i - 1, j - 1
+        else:
+            j -= 1
+    return out
+
+
+def consensus(center, neighbors) -> np.ndarray:
+    """Majority vote of ``neighbors`` decodes onto the ``center`` scaffold.
+
+    Random errors at a position are outvoted; systematic errors (all decodes
+    agree on the wrong symbol) survive — exactly the error taxonomy of Fig 3.
+    Ties keep the center symbol.
+    """
+    center = np.asarray(center, dtype=np.int32)
+    if len(center) == 0:
+        return center
+    votes = np.zeros((len(center), 5), dtype=np.int32)
+    votes[np.arange(len(center)), center] += 1
+    for nb in neighbors:
+        if len(nb) == 0:
+            continue
+        aligned = align_onto(center, nb)
+        mask = aligned >= 0
+        votes[np.nonzero(mask)[0], aligned[mask]] += 1
+    best = votes.argmax(axis=1)
+    best_count = votes.max(axis=1)
+    center_count = votes[np.arange(len(center)), center]
+    out = np.where(best_count > center_count, best, center)
+    return out.astype(np.int32)

@@ -1,0 +1,130 @@
+"""AOT lowering: jax base-caller forward -> HLO *text* -> artifacts/.
+
+HLO text (NOT serialized HloModuleProto) is the interchange format: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's xla_extension
+0.5.1 rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+For every exported config we lower the Layer-2 forward (which calls the
+Layer-1 Pallas kernels, so they end up inside the same HLO module) at fixed
+batch sizes, and write a meta.json the rust runtime uses to discover
+artifacts. A golden input/output pair is emitted for the rust integration
+test (rust/tests/runtime_golden.rs).
+
+Usage (from python/):  python -m compile.aot [--out ../artifacts] [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model, pore
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+# (bits, seat) operating points exported per model:
+#   fp32 baseline, 16-bit naive quant (the paper's '16-bit' scheme),
+#   5-bit + SEAT (the Helix operating point).
+POINTS = [(32, False), (16, False), (5, True), (4, True)]
+BATCHES = [1, 8, 32]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants=True: the default ELIDES weight constants to
+    # "{...}", which the old HLO text parser silently reads as garbage —
+    # every model weight would be lost (see EXPERIMENTS.md §Debug).
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def load_or_init(spec, tag, out):
+    path = os.path.join(out, "params", f"{tag}.npz")
+    if os.path.exists(path):
+        return model.load_params(spec, path), True
+    return model.init_params(spec, seed=0), False
+
+
+def export_config(spec, params, bits, batch, use_pallas, out, name):
+    def fwd(signals):
+        return (model.forward(params, spec, signals, bits=bits,
+                              use_pallas=use_pallas),)
+
+    shape = jax.ShapeDtypeStruct((batch, spec.window), jnp.float32)
+    lowered = jax.jit(fwd).lower(shape)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    return {
+        "name": name, "model": spec.name, "bits": bits, "batch": batch,
+        "window": spec.window, "time_steps": spec.time_steps,
+        "pallas": use_pallas, "file": f"{name}.hlo.txt",
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=ART)
+    ap.add_argument("--quick", action="store_true",
+                    help="only guppy fp32 b1 (dev smoke)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    if not os.path.exists(os.path.join(args.out, "pore_model.json")):
+        pore.PoreModel.default(seed=7).save(
+            os.path.join(args.out, "pore_model.json"))
+
+    entries = []
+    trained_flags = {}
+    for name, spec in model.ARCHS.items():
+        for bits, seat in POINTS:
+            tag = f"{name}_{bits}" + ("_seat" if seat else "")
+            params, trained = load_or_init(spec, tag, args.out)
+            trained_flags[tag] = trained
+            for b in BATCHES:
+                ename = f"{tag}_b{b}"
+                entries.append(export_config(spec, params, bits, b, True,
+                                             args.out, ename))
+                print("exported", ename, "(trained)" if trained else "(INIT)")
+                if args.quick:
+                    break
+            if args.quick:
+                break
+        # pure-jnp twin of the first config for the pallas-vs-jnp
+        # cross-check executed from rust (runtime_golden.rs).
+        if name == "guppy":
+            tag = "guppy_32"
+            params, _ = load_or_init(spec, tag, args.out)
+            entries.append(export_config(spec, params, 32, 1, False,
+                                         args.out, "guppy_32_jnp_b1"))
+        if args.quick:
+            break
+
+    # Golden pair for the rust integration test: guppy fp32 batch-1.
+    spec = model.ARCHS["guppy"]
+    params, trained = load_or_init(spec, "guppy_32", args.out)
+    rng = np.random.default_rng(42)
+    x = rng.normal(size=(1, spec.window)).astype(np.float32)
+    y = np.asarray(model.forward(params, spec, jnp.asarray(x), bits=32,
+                                 use_pallas=True))
+    with open(os.path.join(args.out, "golden_guppy32.json"), "w") as f:
+        json.dump({"input": x.flatten().tolist(),
+                   "output": y.flatten().tolist(),
+                   "out_shape": list(y.shape),
+                   "trained": trained}, f)
+
+    with open(os.path.join(args.out, "meta.json"), "w") as f:
+        json.dump({"window": 300, "alphabet": "ACGT-", "blank": 4,
+                   "trained": trained_flags, "entries": entries}, f, indent=1)
+    print(f"wrote {len(entries)} HLO artifacts + meta.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,127 @@
+"""Connectionist Temporal Classification: loss (forward algorithm) + decoders.
+
+The image ships no optax, so the CTC log-likelihood (Eq. 2/3 of the paper) is
+implemented from scratch: the standard forward algorithm over the extended
+label sequence (blanks interleaved), computed in log space with a jax.lax.scan
+over time so it stays a single fused HLO loop.
+
+Alphabet convention used across the whole repo (python + rust):
+    0=A, 1=C, 2=G, 3=T, 4=blank ('-')
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NUM_BASES = 4
+BLANK = 4
+NUM_SYMBOLS = 5
+
+NEG_INF = -1e30
+
+
+def extend_labels(labels: jnp.ndarray) -> jnp.ndarray:
+    """Interleave blanks: [c1, c2, ...] -> [-, c1, -, c2, -, ...]."""
+    z = labels.shape[0]
+    ext = jnp.full((2 * z + 1,), BLANK, dtype=jnp.int32)
+    return ext.at[1::2].set(labels.astype(jnp.int32))
+
+
+def ctc_log_prob(log_probs: jnp.ndarray, labels: jnp.ndarray,
+                 label_len: jnp.ndarray) -> jnp.ndarray:
+    """log p(labels | log_probs) via the CTC forward algorithm.
+
+    Args:
+      log_probs: (T, NUM_SYMBOLS) per-step log probabilities.
+      labels:    (Z,) int32 label ids in [0, NUM_BASES), padded arbitrarily.
+      label_len: scalar int32, number of valid entries in ``labels``.
+
+    Returns the scalar log likelihood (NEG_INF-ish when label_len > feasible).
+    """
+    T = log_probs.shape[0]
+    ext = extend_labels(labels)            # (S,) with S = 2Z+1
+    S = ext.shape[0]
+    s_len = 2 * label_len + 1
+
+    # Transition mask: alpha[s] may come from s, s-1, and s-2 when
+    # ext[s] != blank and ext[s] != ext[s-2].
+    idx = jnp.arange(S)
+    ext_m2 = jnp.concatenate([jnp.full((2,), -1, jnp.int32), ext[:-2]])
+    allow_skip = (ext != BLANK) & (ext != ext_m2)
+
+    # init: alpha_0[0] = lp[0, blank], alpha_0[1] = lp[0, ext[1]]
+    alpha0 = jnp.full((S,), NEG_INF)
+    alpha0 = alpha0.at[0].set(log_probs[0, BLANK])
+    if S > 1:
+        alpha0 = alpha0.at[1].set(log_probs[0, ext[1]])
+
+    def step(alpha, lp_t):
+        a_m1 = jnp.concatenate([jnp.array([NEG_INF]), alpha[:-1]])
+        a_m2 = jnp.concatenate([jnp.array([NEG_INF, NEG_INF]), alpha[:-2]])
+        a_m2 = jnp.where(allow_skip, a_m2, NEG_INF)
+        stacked = jnp.stack([alpha, a_m1, a_m2])
+        merged = jax.scipy.special.logsumexp(stacked, axis=0)
+        new = merged + lp_t[ext]
+        return new, None
+
+    alpha, _ = jax.lax.scan(step, alpha0, log_probs[1:])
+    # Answer = logsumexp of the last two valid states (last label, last blank).
+    last = jnp.where(idx == s_len - 1, alpha, NEG_INF)
+    prev = jnp.where(idx == s_len - 2, alpha, NEG_INF)
+    out = jax.scipy.special.logsumexp(jnp.concatenate([last, prev]))
+    # Degenerate case: empty label -> all blanks.
+    empty = jnp.sum(log_probs[:, BLANK])
+    return jnp.where(label_len == 0, empty, out)
+
+
+def ctc_loss(log_probs: jnp.ndarray, labels: jnp.ndarray,
+             label_len: jnp.ndarray) -> jnp.ndarray:
+    """-ln p(G|R) — the paper's loss_0 (Eq. 3) for one example."""
+    return -ctc_log_prob(log_probs, labels, label_len)
+
+
+ctc_loss_batch = jax.vmap(ctc_loss, in_axes=(0, 0, 0))
+ctc_log_prob_batch = jax.vmap(ctc_log_prob, in_axes=(0, 0, 0))
+
+
+def greedy_decode(log_probs: np.ndarray) -> np.ndarray:
+    """Best-path decode: argmax per step, collapse repeats, drop blanks.
+
+    Host-side (numpy): used for consensus construction during SEAT training
+    and quick evaluation. The production beam-search decoder lives in rust
+    (rust/src/basecall/ctc.rs).
+    """
+    path = np.asarray(log_probs).argmax(axis=-1)
+    out = []
+    prev = -1
+    for s in path:
+        if s != prev and s != BLANK:
+            out.append(int(s))
+        prev = s
+    return np.array(out, dtype=np.int32)
+
+
+def brute_force_log_prob(probs: np.ndarray, labels: list[int]) -> float:
+    """Reference oracle: enumerate every alignment (exponential; tests only)."""
+    T = probs.shape[0]
+    total = 0.0
+
+    def collapse(path):
+        out = []
+        prev = -1
+        for s in path:
+            if s != prev and s != BLANK:
+                out.append(s)
+            prev = s
+        return out
+
+    import itertools
+    for path in itertools.product(range(NUM_SYMBOLS), repeat=T):
+        if collapse(path) == list(labels):
+            p = 1.0
+            for t, s in enumerate(path):
+                p *= probs[t, s]
+            total += p
+    return float(np.log(max(total, 1e-300)))

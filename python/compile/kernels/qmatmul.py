@@ -1,0 +1,167 @@
+"""Layer-1 Pallas kernels: the base-caller's compute hot-spots.
+
+Three kernels cover every MAC in a base-caller (Table 3: Conv / GRU|LSTM / FC
+layers are all matmul-shaped once conv is im2col'ed):
+
+  * ``qmatmul``  — tiled matmul, the universal crossbar-shaped primitive.
+  * ``gru_cell`` — one fused GRU time step (gates + state update in one pass).
+  * ``lstm_cell``— one fused LSTM time step (Chiron's RNN).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's PIM streams
+1-bit input slices through 128x128 crossbars of 2-bit cells and shift-&-adds
+the ADC outputs. On TPU the analogous schedule is a (128,128)-tiled matmul
+whose blocks live in VMEM and hit the MXU; the K-loop accumulation in VMEM
+scratch plays the role of the shift-&-add pipeline stage. Kernels are lowered
+with ``interpret=True`` (CPU PJRT cannot execute Mosaic custom-calls); the
+BlockSpec structure is what a real-TPU build would keep.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    n = x.shape[axis]
+    rem = (-n) % mult
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """Grid = (M/bm, N/bn, K/bk); the output block is revisited across the K
+    dimension, so accumulation into ``o_ref`` plays the role of the PIM's
+    shift-&-add stage after each crossbar/ADC pass."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                          preferred_element_type=jnp.float32)
+
+
+def _qmatmul_impl(x, w, bm, bn, bk):
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch {k} vs {k2}"
+    bm, bn, bk = min(bm, m) or 1, min(bn, n) or 1, min(bk, k) or 1
+    xp = _pad_to(_pad_to(x, 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(w, 0, bk), 1, bn)
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    k_steps = kp // bk
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _qmatmul_vjp(x, w, bm, bn, bk):
+    return _qmatmul_impl(x, w, bm, bn, bk)
+
+
+def _qmatmul_fwd(x, w, bm, bn, bk):
+    return _qmatmul_impl(x, w, bm, bn, bk), (x, w)
+
+
+def _qmatmul_bwd(bm, bn, bk, res, g):
+    # Both cotangents are themselves crossbar-tiled matmuls.
+    x, w = res
+    dx = _qmatmul_impl(g, w.T, bm, bk, bn)
+    dw = _qmatmul_impl(x.T, g, bk, bm, bn)
+    return dx, dw
+
+
+_qmatmul_vjp.defvjp(_qmatmul_fwd, _qmatmul_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def qmatmul(x: jnp.ndarray, w: jnp.ndarray,
+            bm: int = 128, bn: int = 128, bk: int = 128) -> jnp.ndarray:
+    """Tiled matmul ``x @ w`` with crossbar-shaped (bm, bn, bk) blocking.
+
+    Shapes are padded up to block multiples (crossbars are physically padded
+    the same way: unused rows are programmed to zero conductance). Gradients
+    are a custom VJP in terms of the same tiled kernel (interpret-mode pallas
+    has no transpose rule for the revisited-output accumulation pattern).
+    """
+    return _qmatmul_vjp(x, w, bm, bn, bk)
+
+
+def _gru_kernel(x_ref, h_ref, wx_ref, wh_ref, b_ref, o_ref, *, hidden: int):
+    """Fused GRU step. Gate layout along the 3H axis: [z | r | n]."""
+    x = x_ref[...]
+    h = h_ref[...]
+    gx = jnp.dot(x, wx_ref[...], preferred_element_type=jnp.float32)
+    gh = jnp.dot(h, wh_ref[...], preferred_element_type=jnp.float32)
+    b = b_ref[...]
+    z = jax.nn.sigmoid(gx[:, :hidden] + gh[:, :hidden] + b[0, :hidden])
+    r = jax.nn.sigmoid(gx[:, hidden:2 * hidden] + gh[:, hidden:2 * hidden]
+                       + b[0, hidden:2 * hidden])
+    n = jnp.tanh(gx[:, 2 * hidden:] + r * gh[:, 2 * hidden:]
+                 + b[0, 2 * hidden:])
+    o_ref[...] = z * h + (1.0 - z) * n
+
+
+def gru_cell(x: jnp.ndarray, h: jnp.ndarray, wx: jnp.ndarray,
+             wh: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """One GRU time step (paper Eq. 1), fused into a single kernel.
+
+    x: (B, F), h: (B, H), wx: (F, 3H), wh: (H, 3H), b: (3H,) -> (B, H)
+    """
+    hidden = h.shape[1]
+    return pl.pallas_call(
+        functools.partial(_gru_kernel, hidden=hidden),
+        out_shape=jax.ShapeDtypeStruct(h.shape, jnp.float32),
+        interpret=True,
+    )(x, h, wx, wh, b.reshape(1, -1))
+
+
+def _lstm_kernel(x_ref, h_ref, c_ref, wx_ref, wh_ref, b_ref, ho_ref, co_ref,
+                 *, hidden: int):
+    """Fused LSTM step. Gate layout along the 4H axis: [i | f | g | o]."""
+    x = x_ref[...]
+    h = h_ref[...]
+    c = c_ref[...]
+    g = (jnp.dot(x, wx_ref[...], preferred_element_type=jnp.float32)
+         + jnp.dot(h, wh_ref[...], preferred_element_type=jnp.float32)
+         + b_ref[...])
+    i = jax.nn.sigmoid(g[:, :hidden])
+    f = jax.nn.sigmoid(g[:, hidden:2 * hidden])
+    gg = jnp.tanh(g[:, 2 * hidden:3 * hidden])
+    o = jax.nn.sigmoid(g[:, 3 * hidden:])
+    c_new = f * c + i * gg
+    ho_ref[...] = o * jnp.tanh(c_new)
+    co_ref[...] = c_new
+
+
+def lstm_cell(x: jnp.ndarray, h: jnp.ndarray, c: jnp.ndarray,
+              wx: jnp.ndarray, wh: jnp.ndarray, b: jnp.ndarray):
+    """One LSTM time step fused into a single kernel.
+
+    x: (B, F), h/c: (B, H), wx: (F, 4H), wh: (H, 4H), b: (4H,)
+    Returns (h_new, c_new).
+    """
+    hidden = h.shape[1]
+    return pl.pallas_call(
+        functools.partial(_lstm_kernel, hidden=hidden),
+        out_shape=(jax.ShapeDtypeStruct(h.shape, jnp.float32),
+                   jax.ShapeDtypeStruct(c.shape, jnp.float32)),
+        interpret=True,
+    )(x, h, c, wx, wh, b.reshape(1, -1))

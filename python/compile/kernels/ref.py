@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Layer-1 Pallas kernel.
+
+pytest asserts kernel == ref across shape/dtype sweeps (the CORE correctness
+signal for the L1 layer); the L2 model can also be built on these refs (the
+training fast path) while AOT export uses the Pallas kernels.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def gru_cell_ref(x: jnp.ndarray, h: jnp.ndarray, wx: jnp.ndarray,
+                 wh: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Paper Eq. 1 with gate layout [z | r | n] along the 3H axis."""
+    hidden = h.shape[1]
+    gx = x @ wx
+    gh = h @ wh
+    z = jax.nn.sigmoid(gx[:, :hidden] + gh[:, :hidden] + b[:hidden])
+    r = jax.nn.sigmoid(gx[:, hidden:2 * hidden] + gh[:, hidden:2 * hidden]
+                       + b[hidden:2 * hidden])
+    n = jnp.tanh(gx[:, 2 * hidden:] + r * gh[:, 2 * hidden:] + b[2 * hidden:])
+    return z * h + (1.0 - z) * n
+
+
+def lstm_cell_ref(x: jnp.ndarray, h: jnp.ndarray, c: jnp.ndarray,
+                  wx: jnp.ndarray, wh: jnp.ndarray, b: jnp.ndarray):
+    """Gate layout [i | f | g | o] along the 4H axis."""
+    hidden = h.shape[1]
+    g = x @ wx + h @ wh + b
+    i = jax.nn.sigmoid(g[:, :hidden])
+    f = jax.nn.sigmoid(g[:, hidden:2 * hidden])
+    gg = jnp.tanh(g[:, 2 * hidden:3 * hidden])
+    o = jax.nn.sigmoid(g[:, 3 * hidden:])
+    c_new = f * c + i * gg
+    return o * jnp.tanh(c_new), c_new
+
+
+def conv1d_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+               stride: int) -> jnp.ndarray:
+    """Valid conv1d. x: (B, L, Cin), w: (K, Cin, Cout), b: (Cout,)."""
+    out = jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"))
+    return out + b

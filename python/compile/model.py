@@ -1,0 +1,187 @@
+"""Layer-2: base-caller models (Guppy / Scrappie / Chiron class, Table 3).
+
+Each model is Conv -> RNN stack (GRU or LSTM) -> FC -> log-softmax over the
+5-symbol CTC alphabet, exactly the structure of Table 3. Channel counts are
+scaled down so the full SEAT x bit-width training grid fits a CPU budget
+(DESIGN.md §Substitutions); the *full-size* Table 3 topologies are used
+analytically by the rust PIM mapper (rust/src/pim/mapper.rs).
+
+``forward`` has two interchangeable compute paths:
+  * ``use_pallas=True``  — calls the Layer-1 Pallas kernels (AOT export path,
+    so the kernels lower into the same HLO the rust runtime loads);
+  * ``use_pallas=False`` — pure-jnp refs (training fast path).
+pytest asserts both paths agree to float tolerance.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .quant import fake_quant, fake_quant_tree
+from .kernels import qmatmul as K
+from .kernels import ref as R
+from .ctc import NUM_SYMBOLS
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    kernel: int
+    stride: int
+    channels: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    """A base-caller topology (scaled-down Table 3 row)."""
+    name: str
+    convs: Sequence[ConvSpec]
+    rnn_type: str          # "gru" | "lstm"
+    rnn_layers: int
+    rnn_hidden: int
+    window: int = 300
+
+    @property
+    def time_steps(self) -> int:
+        t = self.window
+        for c in self.convs:
+            t = (t - c.kernel) // c.stride + 1
+        return t
+
+
+# Scaled Table 3. Strides/kernels follow the paper; channels/hidden scaled.
+ARCHS = {
+    # Guppy: 1 conv (k=11, stride 2), 5 GRU x 256 -> here 2 GRU x 48.
+    "guppy": ArchSpec("guppy", (ConvSpec(11, 2, 32),), "gru", 2, 48),
+    # Scrappie: 1 conv (k=11, stride 5), 5 GRU -> 2 GRU x 48, T=58.
+    "scrappie": ArchSpec("scrappie", (ConvSpec(11, 5, 32),), "gru", 2, 48),
+    # Chiron: 3 convs stride 1 (1x1 then 3x1s), 6 LSTM x 100 -> 2 LSTM x 48.
+    "chiron": ArchSpec("chiron",
+                       (ConvSpec(1, 1, 16), ConvSpec(3, 1, 16),
+                        ConvSpec(3, 3, 32)), "lstm", 2, 48),
+}
+
+
+def init_params(spec: ArchSpec, seed: int = 0) -> dict:
+    """Glorot-ish init; params are a plain nested dict (easy to npz/JSON)."""
+    rng = np.random.default_rng(seed)
+
+    def glorot(shape):
+        fan_in = np.prod(shape[:-1])
+        return (rng.normal(size=shape) / np.sqrt(max(fan_in, 1))).astype(np.float32)
+
+    params: dict = {"convs": [], "rnns": []}
+    cin = 1
+    for c in spec.convs:
+        params["convs"].append({
+            "w": glorot((c.kernel, cin, c.channels)),
+            "b": np.zeros(c.channels, np.float32),
+        })
+        cin = c.channels
+    gates = 3 if spec.rnn_type == "gru" else 4
+    fin = cin
+    for _ in range(spec.rnn_layers):
+        params["rnns"].append({
+            "wx": glorot((fin, gates * spec.rnn_hidden)),
+            "wh": glorot((spec.rnn_hidden, gates * spec.rnn_hidden)),
+            "b": np.zeros(gates * spec.rnn_hidden, np.float32),
+        })
+        fin = spec.rnn_hidden
+    params["fc"] = {"w": glorot((fin, NUM_SYMBOLS)),
+                    "b": np.zeros(NUM_SYMBOLS, np.float32)}
+    return jax.tree_util.tree_map(jnp.asarray, params)
+
+
+def _im2col(x: jnp.ndarray, kernel: int, stride: int) -> jnp.ndarray:
+    """(B, L, C) -> (B, T, kernel*C) patches for matmul-shaped conv."""
+    b, l, c = x.shape
+    t = (l - kernel) // stride + 1
+    idx = (jnp.arange(t)[:, None] * stride + jnp.arange(kernel)[None, :])
+    patches = x[:, idx, :]                       # (B, T, K, C)
+    return patches.reshape(b, t, kernel * c)
+
+
+def _conv_layer(x, w, b, stride, bits, use_pallas):
+    k, cin, cout = w.shape
+    patches = _im2col(x, k, stride)              # (B, T, K*Cin)
+    bsz, t, f = patches.shape
+    flat = patches.reshape(bsz * t, f)
+    flat = fake_quant(flat, bits)                # quantized activations
+    wmat = w.reshape(k * cin, cout)
+    mm = K.qmatmul(flat, wmat) if use_pallas else R.matmul_ref(flat, wmat)
+    out = mm.reshape(bsz, t, cout) + b
+    return jax.nn.relu(out)
+
+
+def _rnn_layer(x, p, rnn_type, bits, use_pallas):
+    """x: (B, T, F) -> (B, T, H); unidirectional scan over time."""
+    bsz, t, f = x.shape
+    hidden = p["wh"].shape[0]
+    h0 = jnp.zeros((bsz, hidden), jnp.float32)
+
+    if rnn_type == "gru":
+        cell = K.gru_cell if use_pallas else R.gru_cell_ref
+
+        def step(h, xt):
+            xt = fake_quant(xt, bits)
+            h_new = cell(xt, h, p["wx"], p["wh"], p["b"])
+            return h_new, h_new
+
+        _, ys = jax.lax.scan(step, h0, jnp.swapaxes(x, 0, 1))
+    else:
+        cell = K.lstm_cell if use_pallas else R.lstm_cell_ref
+        c0 = jnp.zeros((bsz, hidden), jnp.float32)
+
+        def step(carry, xt):
+            h, c = carry
+            xt = fake_quant(xt, bits)
+            h_new, c_new = cell(xt, h, c, p["wx"], p["wh"], p["b"])
+            return (h_new, c_new), h_new
+
+        _, ys = jax.lax.scan(step, (h0, c0), jnp.swapaxes(x, 0, 1))
+    return jnp.swapaxes(ys, 0, 1)
+
+
+def forward(params: dict, spec: ArchSpec, signals: jnp.ndarray,
+            bits: int = 32, use_pallas: bool = False) -> jnp.ndarray:
+    """signals: (B, window) -> log-probs (B, T, NUM_SYMBOLS).
+
+    ``bits`` fake-quantizes both weights and activations (FQN-style); 32 is
+    the full-precision baseline.
+    """
+    params = fake_quant_tree(params, bits)
+    x = signals[:, :, None]                      # (B, W, 1)
+    for cp, cs in zip(params["convs"], spec.convs):
+        x = _conv_layer(x, cp["w"], cp["b"], cs.stride, bits, use_pallas)
+    for rp in params["rnns"]:
+        x = _rnn_layer(x, rp, spec.rnn_type, bits, use_pallas)
+    x = fake_quant(x, bits)
+    bsz, t, f = x.shape
+    flat = x.reshape(bsz * t, f)
+    mm = (K.qmatmul(flat, params["fc"]["w"]) if use_pallas
+          else R.matmul_ref(flat, params["fc"]["w"]))
+    logits = mm.reshape(bsz, t, NUM_SYMBOLS) + params["fc"]["b"]
+    return jax.nn.log_softmax(logits, axis=-1)
+
+
+def count_params(params) -> int:
+    return int(sum(np.prod(p.shape)
+                   for p in jax.tree_util.tree_leaves(params)))
+
+
+def save_params(params, path: str) -> None:
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    arrays = {jax.tree_util.keystr(kp): np.asarray(v) for kp, v in flat}
+    np.savez(path, **arrays)
+
+
+def load_params(spec: ArchSpec, path: str) -> dict:
+    params = init_params(spec)
+    data = np.load(path)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    loaded = [jnp.asarray(data[jax.tree_util.keystr(kp)]) for kp, _ in flat]
+    return jax.tree_util.tree_unflatten(treedef, loaded)

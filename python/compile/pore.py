@@ -1,0 +1,180 @@
+"""Synthetic nanopore signal substrate.
+
+The paper trains/evaluates on R9.4 MinION datasets (Table 4) which are not
+available here (repro band 0), so we build the closest synthetic equivalent
+(DESIGN.md §Substitutions): a k-mer pore model maps the DNA context inside the
+pore to a mean current level; each base dwells a random number of samples
+(nanopore DNA motion is not uniform — the very reason base-callers need CTC);
+Gaussian noise is added on top. This exercises the identical signal→symbol
+translation problem, the random/systematic error structure, and coverage
+voting.
+
+The pore model table + generation parameters are serialized to
+``artifacts/pore_model.json`` and shared with the rust side
+(rust/src/genome/pore.rs) so both languages synthesize statistically identical
+signals.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+BASES = "ACGT"
+
+
+@dataclasses.dataclass
+class PoreModel:
+    """k-mer current model + dwell/noise parameters."""
+
+    k: int
+    levels: np.ndarray           # (4**k,) standardized current levels
+    dwell_min: int
+    dwell_max: int
+    noise_sigma: float
+    window: int                  # samples per base-calling window
+    seed: int
+
+    @staticmethod
+    def default(seed: int = 7) -> "PoreModel":
+        rng = np.random.default_rng(seed)
+        k = 3
+        levels = rng.normal(size=4 ** k)
+        levels = (levels - levels.mean()) / levels.std()
+        return PoreModel(k=k, levels=levels, dwell_min=7, dwell_max=11,
+                         noise_sigma=0.12, window=300, seed=seed)
+
+    def save(self, path: str) -> None:
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
+            json.dump({
+                "k": self.k,
+                "levels": [float(x) for x in self.levels],
+                "dwell_min": self.dwell_min,
+                "dwell_max": self.dwell_max,
+                "noise_sigma": self.noise_sigma,
+                "window": self.window,
+                "seed": self.seed,
+            }, f)
+
+    @staticmethod
+    def load(path: str) -> "PoreModel":
+        with open(path) as f:
+            d = json.load(f)
+        return PoreModel(k=d["k"], levels=np.array(d["levels"]),
+                         dwell_min=d["dwell_min"], dwell_max=d["dwell_max"],
+                         noise_sigma=d["noise_sigma"], window=d["window"],
+                         seed=d["seed"])
+
+
+def random_genome(n: int, rng: np.random.Generator) -> np.ndarray:
+    """Uniform random genome as int ids (0=A,1=C,2=G,3=T)."""
+    return rng.integers(0, 4, size=n).astype(np.int32)
+
+
+def kmer_ids(seq: np.ndarray, k: int) -> np.ndarray:
+    """Sliding k-mer id per base; the context is the k-mer ENDING at the base
+    (edges clamp by repeating the first base)."""
+    n = len(seq)
+    pad = np.concatenate([np.full(k - 1, seq[0], dtype=seq.dtype), seq])
+    ids = np.zeros(n, dtype=np.int64)
+    for j in range(k):
+        ids = ids * 4 + pad[j:j + n]
+    return ids
+
+
+def simulate_read_signal(seq: np.ndarray, pm: PoreModel,
+                         rng: np.random.Generator):
+    """Emit a raw signal for a read.
+
+    Returns (signal, base_of_sample) where base_of_sample[i] is the index into
+    ``seq`` of the base the pore held at sample i — the ground-truth alignment
+    used to label training windows.
+    """
+    ids = kmer_ids(seq, pm.k)
+    dwells = rng.integers(pm.dwell_min, pm.dwell_max + 1, size=len(seq))
+    total = int(dwells.sum())
+    signal = np.empty(total, dtype=np.float32)
+    owner = np.empty(total, dtype=np.int32)
+    pos = 0
+    for i in range(len(seq)):
+        d = int(dwells[i])
+        signal[pos:pos + d] = pm.levels[ids[i]]
+        owner[pos:pos + d] = i
+        pos += d
+    signal += rng.normal(0.0, pm.noise_sigma, size=total).astype(np.float32)
+    # Normalize like the paper (§5.2): subtract read mean, divide read std.
+    signal = (signal - signal.mean()) / (signal.std() + 1e-8)
+    return signal, owner
+
+
+def windows_from_read(signal: np.ndarray, owner: np.ndarray,
+                      seq: np.ndarray, pm: PoreModel, hop: int):
+    """Chop a read signal into fixed-size windows with CTC labels.
+
+    A base is part of a window's label iff ALL of its samples fall inside the
+    window (partially-covered edge bases are ambiguous, as in Chiron's
+    training pipeline).
+    Returns list of (window_signal (window,), labels int32 array, base_start).
+    """
+    out = []
+    w = pm.window
+    for start in range(0, len(signal) - w + 1, hop):
+        sl = owner[start:start + w]
+        lo, hi = int(sl[0]), int(sl[-1])
+        # trim edge bases not fully contained
+        if start > 0 and owner[start - 1] == lo:
+            lo += 1
+        if start + w < len(signal) and owner[start + w] == hi:
+            hi -= 1
+        if hi < lo:
+            continue
+        out.append((signal[start:start + w], seq[lo:hi + 1].astype(np.int32), lo))
+    return out
+
+
+@dataclasses.dataclass
+class Batch:
+    """Padded training batch."""
+    signals: np.ndarray    # (B, window)
+    labels: np.ndarray     # (B, Lmax)
+    label_lens: np.ndarray  # (B,)
+
+
+def build_dataset(pm: PoreModel, genome_len: int, n_reads: int,
+                  read_len: tuple[int, int], hop: int, seed: int,
+                  max_label: int = 64):
+    """Synthesize a windowed dataset over a shared genome.
+
+    Also returns per-window genome offsets and a read index so that SEAT can
+    form overlapping-window triples and evaluation can vote across reads.
+    """
+    rng = np.random.default_rng(seed)
+    genome = random_genome(genome_len, rng)
+    sigs, labs, lens, offs, rids = [], [], [], [], []
+    for r in range(n_reads):
+        rl = int(rng.integers(read_len[0], read_len[1] + 1))
+        start = int(rng.integers(0, genome_len - rl))
+        seq = genome[start:start + rl]
+        signal, owner = simulate_read_signal(seq, pm, rng)
+        for wsig, wlab, lo in windows_from_read(signal, owner, seq, pm, hop):
+            if len(wlab) > max_label or len(wlab) == 0:
+                continue
+            sigs.append(wsig)
+            lab = np.zeros(max_label, dtype=np.int32)
+            lab[:len(wlab)] = wlab
+            labs.append(lab)
+            lens.append(len(wlab))
+            offs.append(start + lo)
+            rids.append(r)
+    return {
+        "genome": genome,
+        "signals": np.stack(sigs).astype(np.float32),
+        "labels": np.stack(labs),
+        "label_lens": np.array(lens, dtype=np.int32),
+        "offsets": np.array(offs, dtype=np.int32),
+        "read_ids": np.array(rids, dtype=np.int32),
+    }

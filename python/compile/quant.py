@@ -1,0 +1,54 @@
+"""Uniform symmetric fake-quantization with straight-through estimator.
+
+This is the FQN-style quantization the paper applies to base-callers (§2.3,
+§3.1): inputs, weights and activations are approximated by fixed-point values
+with a per-tensor scale. ``fake_quant`` keeps everything in f32 but snaps
+values onto the fixed-point grid, which is exactly what the crossbar + ADC
+datapath of the PIM sees (2-bit cells x bit-sliced inputs, then shift-&-add).
+The straight-through estimator makes the rounding transparent to gradients so
+quantized models can be (re)trained — the substrate SEAT builds on.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def qmax(bits: int) -> float:
+    """Largest magnitude representable with ``bits``-bit signed fixed point."""
+    return float(2 ** (bits - 1) - 1)
+
+
+def quant_scale(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Per-tensor symmetric scale so that max|x| maps to the grid edge."""
+    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8)
+    return amax / qmax(bits)
+
+
+def quantize(x: jnp.ndarray, scale: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Snap to the signed fixed-point grid (returns integer-valued f32)."""
+    q = jnp.round(x / scale)
+    return jnp.clip(q, -qmax(bits), qmax(bits))
+
+
+def fake_quant(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Quantize-dequantize with a straight-through gradient.
+
+    ``bits >= 32`` is treated as full precision (identity), matching the
+    paper's fp32 baseline column in Fig 7/21.
+    """
+    if bits >= 32:
+        return x
+    scale = quant_scale(x, bits)
+    xq = quantize(x, scale, bits) * scale
+    # Straight-through estimator: forward = xq, backward = identity.
+    return x + jax.lax.stop_gradient(xq - x)
+
+
+def fake_quant_tree(params, bits: int):
+    """Fake-quantize every weight tensor in a pytree (biases included —
+    the paper quantizes all layer parameters)."""
+    if bits >= 32:
+        return params
+    return jax.tree_util.tree_map(lambda w: fake_quant(w, bits), params)

@@ -1,0 +1,87 @@
+"""Resume sweep: reuse the trained fp32 base weights and redo every
+quantized fine-tune + evaluation with the cross-read voting machinery
+(vote_partners / SEAT consensus) — the corrected Fig 7/21/22 numbers.
+
+Run as ``python -m compile.resume`` from python/.
+"""
+
+from __future__ import annotations
+
+import csv
+import os
+import time
+
+from . import model, pore
+from .train import evaluate, train, ART
+
+
+def main():
+    ft_steps = int(os.environ.get("HELIX_FT_STEPS", "300"))
+    base_steps = int(os.environ.get("HELIX_BASE_STEPS", "3000"))
+    pm = pore.PoreModel.default(seed=7)
+    ds = pore.build_dataset(pm, genome_len=9000, n_reads=100,
+                            read_len=(280, 560), hop=100, seed=11)
+    eval_ds = pore.build_dataset(pm, genome_len=3500, n_reads=45,
+                                 read_len=(280, 560), hop=100, seed=99)
+    print(f"dataset: {len(ds['signals'])} train / {len(eval_ds['signals'])} "
+          f"eval windows")
+    results = []
+    curves10 = []
+    t0 = time.time()
+    for name, spec in model.ARCHS.items():
+        base_path = os.path.join(ART, "params", f"{name}_32.npz")
+        if not os.path.exists(base_path):
+            print(f"[{time.time()-t0:6.1f}s] (re)training {name} fp32 ...")
+            p32, _ = train(spec, ds, bits=32, steps=base_steps, lr=2e-3)
+            model.save_params(p32, base_path)
+        else:
+            p32 = model.load_params(spec, base_path)
+        ra, va = evaluate(p32, spec, eval_ds, 32)
+        results.append((name, 32, 0, ra, va))
+        print(f"[{time.time()-t0:6.1f}s] {name} fp32: read={ra:.4f} "
+              f"vote={va:.4f}")
+        if name == "guppy":
+            # Fig 10 curves: fp32 loss0 (short retrace) vs loss1
+            _, c0 = train(spec, ds, bits=32, steps=600, lr=2e-3,
+                          log_every=100, eval_ds=eval_ds)
+            for s, l, r, v in c0:
+                curves10.append(("guppy_fp32_loss0", s, l, r, v))
+            _, c1 = train(spec, ds, bits=32, use_seat=True, eta=1.0,
+                          steps=600, lr=2e-3, log_every=100,
+                          eval_ds=eval_ds)
+            for s, l, r, v in c1:
+                curves10.append(("guppy_fp32_loss1", s, l, r, v))
+
+        bit_grid = [3, 4, 5, 8, 16] if name == "guppy" else [3, 4, 5, 8]
+        for bits in bit_grid:
+            for use_seat in (False, True):
+                tag = f"{name}_{bits}" + ("_seat" if use_seat else "")
+                print(f"[{time.time()-t0:6.1f}s] finetune {tag} ...")
+                log_every = (ft_steps // 5
+                             if (name == "guppy" and bits == 8) else 0)
+                p, curve = train(spec, ds, bits=bits, use_seat=use_seat,
+                                 steps=ft_steps, params=p32, lr=5e-4,
+                                 log_every=log_every, eval_ds=eval_ds)
+                model.save_params(p, os.path.join(ART, "params",
+                                                  f"{tag}.npz"))
+                ra, va = evaluate(p, spec, eval_ds, bits)
+                results.append((name, bits, int(use_seat), ra, va))
+                print(f"    read={ra:.4f} vote={va:.4f}")
+                for s, l, r, v in curve:
+                    curves10.append((f"guppy_8bit_loss{int(use_seat)}",
+                                     s, l, r, v))
+
+    with open(os.path.join(ART, "train_results.csv"), "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["model", "bits", "seat", "read_acc", "vote_acc"])
+        w.writerows(results)
+    with open(os.path.join(ART, "curves_fig10.csv"), "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["variant", "step", "loss", "read_acc", "vote_acc"])
+        w.writerows(curves10)
+    print(f"[{time.time()-t0:6.1f}s] resume sweep done "
+          f"({len(results)} configs)")
+
+
+if __name__ == "__main__":
+    main()

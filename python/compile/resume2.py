@@ -1,0 +1,39 @@
+"""Refit only the SEAT fine-tunes (after the seat.LAMBDA stabilization)
+and merge the refreshed rows into train_results.csv."""
+import csv, os, time
+from . import model, pore
+from .train import evaluate, train, ART
+
+def main():
+    ft_steps = int(os.environ.get("HELIX_FT_STEPS", "300"))
+    pm = pore.PoreModel.default(seed=7)
+    ds = pore.build_dataset(pm, 9000, 100, (280, 560), 100, seed=11)
+    eval_ds = pore.build_dataset(pm, 3500, 45, (280, 560), 100, seed=99)
+    rows = {}
+    with open(os.path.join(ART, "train_results.csv")) as f:
+        for r in csv.DictReader(f):
+            rows[(r["model"], int(r["bits"]), int(r["seat"]))] = (
+                float(r["read_acc"]), float(r["vote_acc"]))
+    t0 = time.time()
+    for name, spec in model.ARCHS.items():
+        p32 = model.load_params(spec, os.path.join(ART, "params",
+                                                   f"{name}_32.npz"))
+        bit_grid = [3, 4, 5, 8, 16] if name == "guppy" else [3, 4, 5, 8]
+        for bits in bit_grid:
+            tag = f"{name}_{bits}_seat"
+            print(f"[{time.time()-t0:6.1f}s] refit {tag}", flush=True)
+            p, _ = train(spec, ds, bits=bits, use_seat=True,
+                         steps=ft_steps, params=p32, lr=5e-4)
+            model.save_params(p, os.path.join(ART, "params", f"{tag}.npz"))
+            ra, va = evaluate(p, spec, eval_ds, bits)
+            rows[(name, bits, 1)] = (ra, va)
+            print(f"    read={ra:.4f} vote={va:.4f}", flush=True)
+    with open(os.path.join(ART, "train_results.csv"), "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["model", "bits", "seat", "read_acc", "vote_acc"])
+        for (m, b, s), (ra, va) in sorted(rows.items()):
+            w.writerow([m, b, s, ra, va])
+    print(f"[{time.time()-t0:6.1f}s] refit done", flush=True)
+
+if __name__ == "__main__":
+    main()

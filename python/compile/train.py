@@ -1,0 +1,290 @@
+"""Training driver: Adam (hand-rolled; no optax in the image), loss_0/loss_1
+training loops, read/vote accuracy evaluation, and the bit-width x SEAT sweep
+that feeds Figs 7/10/21/22.
+
+Run as ``python -m compile.train`` (from python/); artifacts land in
+``../artifacts/``:
+  params/<model>_<bits>[_seat].npz   trained weights per config
+  train_results.csv                  model,bits,seat,read_acc,vote_acc,...
+  curves_fig10.csv                   training curves loss_0 vs loss_1
+Budget knobs: HELIX_BASE_STEPS (default 400), HELIX_FT_STEPS (default 120),
+HELIX_FAST=1 shrinks everything for CI smoke runs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import csv
+import functools
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import align, ctc, model, pore, seat
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+# ---------------------------------------------------------------- optimizer
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+@jax.jit
+def clip_by_global_norm(grads, max_norm=5.0):
+    """RNN+CTC training explodes without clipping (blank-collapse otherwise)."""
+    n = jnp.sqrt(sum(jnp.sum(g * g)
+                     for g in jax.tree_util.tree_leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / (n + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+
+@jax.jit
+def adam_update(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g,
+                               state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                               state["v"], grads)
+    mh = jax.tree_util.tree_map(lambda m: m / (1 - b1 ** t), m)
+    vh = jax.tree_util.tree_map(lambda v: v / (1 - b2 ** t), v)
+    new = jax.tree_util.tree_map(
+        lambda p, m, v: p - lr * m / (jnp.sqrt(v) + eps), params, mh, vh)
+    return new, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------- evaluation
+
+@functools.partial(jax.jit, static_argnames=("spec", "bits"))
+def _fwd(params, spec, signals, bits):
+    return model.forward(params, spec, signals, bits=bits)
+
+
+def vote_partners(ds, k=4, min_frac=0.6):
+    """Cross-read voting index: center window -> windows of OTHER reads
+    covering (>= min_frac of) the same genome span.
+
+    This is the paper's read vote (§2.2 / Fig 3): reads of the same genome
+    region carry INDEPENDENT signal noise, so voting across them corrects
+    random errors; only model-systematic errors survive. (Windows of the
+    same read share raw samples — voting those cannot fix noise errors.)
+
+    Returns {center: [(j, trim_start, trim_end), ...]} where the trims cut
+    the partner's non-overlapping flanks (in truth-base units).
+    """
+    offs = ds["offsets"].astype(int)
+    lens = ds["label_lens"].astype(int)
+    rids = ds["read_ids"]
+    n = len(offs)
+    order = np.argsort(offs, kind="stable")
+    partners = {}
+    for ii in range(n):
+        i = order[ii]
+        lo_i, hi_i = offs[i], offs[i] + lens[i]
+        ps = []
+        for jj in range(max(0, ii - 40), min(n, ii + 40)):
+            j = order[jj]
+            if j == i or rids[j] == rids[i]:
+                continue
+            lo_j, hi_j = offs[j], offs[j] + lens[j]
+            ov = min(hi_i, hi_j) - max(lo_i, lo_j)
+            if ov >= min_frac * (hi_i - lo_i):
+                ps.append((int(j), int(max(0, lo_i - lo_j)),
+                           int(max(0, hi_j - hi_i))))
+        if len(ps) >= 2:
+            partners[int(i)] = ps[:k]
+    return partners
+
+
+def _trim(dec, ts, te):
+    """Cut a partner decode's non-overlapping flanks (approximate: decode
+    length tracks truth length; the fit alignment absorbs the residue)."""
+    out = dec[ts:len(dec) - te if te else len(dec)]
+    return out if len(out) else dec
+
+
+def evaluate(params, spec, ds, bits, n_eval=160, k=4):
+    """(read_acc, vote_acc): pre-vote decode identity vs post-(cross-read)-
+    vote consensus identity — the two accuracies of Fig 7/21/22."""
+    partners = ds.setdefault(
+        "_partners", vote_partners(ds, k=k))
+    centers = sorted(partners.keys())[:n_eval]
+    if not centers:
+        return 0.0, 0.0
+    need = sorted({i for c in centers for i in
+                   [c] + [j for j, _, _ in partners[c]]})
+    pos = {w: x for x, w in enumerate(need)}
+    decs = []
+    for lo in range(0, len(need), 64):
+        sel = need[lo:lo + 64]
+        lp = np.asarray(_fwd(params, spec,
+                             jnp.asarray(ds["signals"][sel]), bits))
+        decs.extend(ctc.greedy_decode(x) for x in lp)
+    r_acc, v_acc = [], []
+    for c in centers:
+        truth = ds["labels"][c][:ds["label_lens"][c]]
+        center = decs[pos[c]]
+        frags = [_trim(decs[pos[j]], ts, te)
+                 for j, ts, te in partners[c]]
+        cons = align.consensus(center, frags)
+        r_acc.append(align.identity(center, truth))
+        v_acc.append(align.identity(cons, truth))
+    return float(np.mean(r_acc)), float(np.mean(v_acc))
+
+
+# ---------------------------------------------------------------- training
+
+def train(spec, ds, bits=32, use_seat=False, steps=400, batch=32, lr=1e-3,
+          eta=1.0, params=None, seed=0, log_every=0, eval_ds=None):
+    """Train (or fine-tune, if ``params`` given) one configuration.
+
+    Returns (params, curve) where curve rows are
+    (step, loss, read_acc, vote_acc) sampled every ``log_every`` steps.
+    """
+    rng = np.random.default_rng(seed)
+    if params is None:
+        params = model.init_params(spec, seed=seed)
+    opt = adam_init(params)
+    max_label = ds["labels"].shape[1]
+    grad_base = jax.jit(jax.value_and_grad(seat.base_loss),
+                        static_argnames=("spec", "bits"))
+    grad_seat = jax.jit(jax.value_and_grad(seat.seat_loss),
+                        static_argnames=("spec", "bits", "eta"))
+    partners = (ds.setdefault("_partners_k2", vote_partners(ds, k=2))
+                if use_seat else None)
+    centers_all = (np.array(sorted(partners.keys()))
+                   if use_seat else np.arange(len(ds["signals"])))
+    curve = []
+    for step in range(steps):
+        if use_seat:
+            centers = rng.choice(centers_all, size=batch, replace=False)
+            # forward centers + their cross-read partners (fixed shape:
+            # batch x 3 windows; missing partner slots repeat the center)
+            tri = np.stack(
+                [centers] +
+                [np.array([partners[c][s][0] if s < len(partners[c]) else c
+                           for c in centers]) for s in range(2)], 1
+            ).reshape(-1)
+            lp3 = np.asarray(_fwd(params, spec,
+                                  jnp.asarray(ds["signals"][tri]), bits))
+            lp3 = lp3.reshape(batch, 3, *lp3.shape[1:])
+            cl = np.zeros((batch, max_label), np.int32)
+            cn = np.zeros(batch, np.int32)
+            for i, (row, c) in enumerate(zip(lp3, centers)):
+                center_dec = ctc.greedy_decode(row[0])
+                frags = [_trim(ctc.greedy_decode(row[1 + s]),
+                               partners[c][s][1], partners[c][s][2])
+                         for s in range(min(2, len(partners[c])))]
+                cons = align.consensus(center_dec, frags)[:max_label]
+                cl[i, :len(cons)] = cons
+                cn[i] = len(cons)
+            loss, grads = grad_seat(
+                params, spec, jnp.asarray(ds["signals"][centers]),
+                jnp.asarray(ds["labels"][centers]),
+                jnp.asarray(ds["label_lens"][centers]),
+                jnp.asarray(cl), jnp.asarray(cn), bits, eta)
+        else:
+            sel = rng.choice(len(ds["signals"]), size=batch, replace=False)
+            loss, grads = grad_base(
+                params, spec, jnp.asarray(ds["signals"][sel]),
+                jnp.asarray(ds["labels"][sel]),
+                jnp.asarray(ds["label_lens"][sel]), bits)
+        grads = clip_by_global_norm(grads)
+        params, opt = adam_update(params, grads, opt, lr=lr)
+        if log_every and (step % log_every == 0 or step == steps - 1):
+            ra, va = evaluate(params, spec, eval_ds or ds, bits, n_eval=48)
+            curve.append((step, float(loss), ra, va))
+    return params, curve
+
+
+# ---------------------------------------------------------------- sweeps
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=ART)
+    ap.add_argument("--fast", action="store_true",
+                    default=os.environ.get("HELIX_FAST") == "1")
+    args = ap.parse_args()
+    os.makedirs(os.path.join(args.out, "params"), exist_ok=True)
+
+    base_steps = int(os.environ.get("HELIX_BASE_STEPS",
+                                    "60" if args.fast else "3000"))
+    ft_steps = int(os.environ.get("HELIX_FT_STEPS",
+                                  "20" if args.fast else "400"))
+    pm = pore.PoreModel.default(seed=7)
+    pm.save(os.path.join(args.out, "pore_model.json"))
+    # coverage ~5x so cross-read voting (the paper's read vote) has
+    # partners at every window
+    ds = pore.build_dataset(pm, genome_len=9000, n_reads=100,
+                            read_len=(280, 560), hop=100, seed=11)
+    eval_ds = pore.build_dataset(pm, genome_len=3500, n_reads=45,
+                                 read_len=(280, 560), hop=100, seed=99)
+    print(f"dataset: {len(ds['signals'])} train windows, "
+          f"{len(eval_ds['signals'])} eval windows")
+
+    results = []
+    curves10 = []
+    t0 = time.time()
+    for name, spec in model.ARCHS.items():
+        # fp32 baseline (loss_0).
+        print(f"[{time.time()-t0:6.1f}s] training {name} fp32 ...")
+        p32, curve = train(spec, ds, bits=32, steps=base_steps, lr=2e-3,
+                           log_every=max(base_steps // 8, 1), eval_ds=eval_ds)
+        model.save_params(p32, os.path.join(args.out, "params",
+                                            f"{name}_32.npz"))
+        ra, va = evaluate(p32, spec, eval_ds, 32)
+        results.append((name, 32, 0, ra, va))
+        for s, l, r, v in curve:
+            curves10.append((f"{name}_fp32_loss0", s, l, r, v))
+        if name == "guppy":
+            # Fig 10(a): fp32 trained with loss_1 (eta=1) for curve comparison.
+            _, curve1 = train(spec, ds, bits=32, use_seat=True, eta=1.0,
+                              steps=base_steps, lr=2e-3,
+                              log_every=max(base_steps // 8, 1),
+                              eval_ds=eval_ds)
+            for s, l, r, v in curve1:
+                curves10.append(("guppy_fp32_loss1", s, l, r, v))
+
+        # Quantized fine-tunes from the fp32 weights: no-SEAT vs SEAT.
+        bit_grid = [3, 4, 5, 8, 16] if name == "guppy" else [3, 4, 5, 8]
+        for bits in bit_grid:
+            for use_seat in (False, True):
+                tag = f"{name}_{bits}" + ("_seat" if use_seat else "")
+                print(f"[{time.time()-t0:6.1f}s] finetune {tag} ...")
+                log_every = (max(ft_steps // 6, 1)
+                             if (name == "guppy" and bits == 8) else 0)
+                p, curve = train(spec, ds, bits=bits, use_seat=use_seat,
+                                 steps=ft_steps, params=p32, lr=5e-4,
+                                 log_every=log_every, eval_ds=eval_ds)
+                model.save_params(p, os.path.join(args.out, "params",
+                                                  f"{tag}.npz"))
+                ra, va = evaluate(p, spec, eval_ds, bits)
+                results.append((name, bits, int(use_seat), ra, va))
+                # Fig 10(b): 8-bit guppy curves for both losses.
+                for s, l, r, v in curve:
+                    curves10.append((f"guppy_8bit_loss{int(use_seat)}",
+                                     s, l, r, v))
+
+    with open(os.path.join(args.out, "train_results.csv"), "w",
+              newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["model", "bits", "seat", "read_acc", "vote_acc"])
+        w.writerows(results)
+    with open(os.path.join(args.out, "curves_fig10.csv"), "w",
+              newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["variant", "step", "loss", "read_acc", "vote_acc"])
+        w.writerows(curves10)
+    print(f"[{time.time()-t0:6.1f}s] sweep done: {len(results)} configs")
+    for r in results:
+        print("  %-10s bits=%-2d seat=%d read=%.4f vote=%.4f" % tuple(r))
+
+
+if __name__ == "__main__":
+    main()

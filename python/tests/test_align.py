@@ -1,0 +1,63 @@
+"""Edit distance / consensus voting oracles (rust twins are proptested)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.align import align_onto, consensus, edit_distance, identity
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+seqs = st.lists(st.integers(0, 3), min_size=0, max_size=25)
+
+
+def test_known_distances():
+    assert edit_distance([0, 1, 2], [0, 1, 2]) == 0
+    assert edit_distance([0, 1, 2], [0, 2]) == 1
+    assert edit_distance([], [1, 2, 3]) == 3
+    assert edit_distance([0, 1], [1, 0]) == 2
+
+
+@given(a=seqs, b=seqs)
+def test_metric_properties(a, b):
+    d = edit_distance(a, b)
+    assert d == edit_distance(b, a)
+    assert d <= max(len(a), len(b))
+    assert (d == 0) == (a == b)
+
+
+@given(a=seqs, b=seqs, c=seqs)
+def test_triangle_inequality(a, b, c):
+    assert edit_distance(a, c) <= edit_distance(a, b) + edit_distance(b, c)
+
+
+def test_identity_range():
+    assert identity([0, 1, 2], [0, 1, 2]) == 1.0
+    assert identity([], [0, 1]) == 0.0
+    assert identity([], []) == 1.0
+
+
+def test_consensus_fixes_random_error():
+    truth = [0, 1, 2, 3, 0, 1, 2, 3]
+    r1 = list(truth); r1[3] = 0          # one random error
+    cons = consensus(np.array(truth), [np.array(r1), np.array(truth)])
+    assert list(cons) == truth
+    # error in the center scaffold gets outvoted by two correct neighbors
+    cons2 = consensus(np.array(r1), [np.array(truth), np.array(truth)])
+    assert list(cons2) == truth
+
+
+def test_systematic_error_survives_vote():
+    truth = [0, 1, 2, 3, 0, 1]
+    wrong = list(truth); wrong[2] = 3     # every read has the same error
+    cons = consensus(np.array(wrong), [np.array(wrong), np.array(wrong)])
+    assert list(cons) == wrong != truth
+
+
+@given(a=seqs.filter(lambda s: len(s) > 0))
+def test_consensus_of_identical_reads_is_identity(a):
+    cons = consensus(np.array(a), [np.array(a), np.array(a)])
+    assert list(cons) == a
+
+
+def test_align_onto_gaps():
+    m = align_onto(np.array([0, 1, 2, 3]), np.array([0, 2, 3]))
+    assert m[0] == 0 and m[2] == 2 and m[3] == 3

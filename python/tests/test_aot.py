@@ -1,0 +1,38 @@
+"""AOT export: HLO text artifacts parse and carry the right shapes."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_quick_export_roundtrip(tmp_path):
+    out = str(tmp_path)
+    r = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", out, "--quick"],
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+        capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    meta = json.load(open(os.path.join(out, "meta.json")))
+    assert meta["window"] == 300 and meta["blank"] == 4
+    e = meta["entries"][0]
+    text = open(os.path.join(out, e["file"])).read()
+    assert text.startswith("HloModule")
+    assert f"f32[{e['batch']},{e['window']}]" in text.replace(" ", "")
+    golden = json.load(open(os.path.join(out, "golden_guppy32.json")))
+    assert len(golden["input"]) == 300
+    b, t, s = golden["out_shape"]
+    assert len(golden["output"]) == b * t * s == 145 * 5
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "meta.json")),
+                    reason="make artifacts not run yet")
+def test_existing_artifacts_consistent():
+    meta = json.load(open(os.path.join(ART, "meta.json")))
+    for e in meta["entries"]:
+        p = os.path.join(ART, e["file"])
+        assert os.path.exists(p), e["file"]
+        assert open(p).read(9) == "HloModule"

@@ -1,0 +1,93 @@
+"""CTC forward algorithm vs brute-force alignment enumeration."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import ctc
+
+settings.register_profile("ci", max_examples=10, deadline=None)
+settings.load_profile("ci")
+
+
+def _rand_logprobs(t, seed):
+    rng = np.random.default_rng(seed)
+    p = rng.random((t, ctc.NUM_SYMBOLS)) + 0.05
+    p /= p.sum(axis=1, keepdims=True)
+    return p
+
+
+@settings(max_examples=10, deadline=None)
+@given(t=st.integers(2, 5), z=st.integers(0, 3), seed=st.integers(0, 1000))
+def test_forward_matches_bruteforce(t, z, seed):
+    rng = np.random.default_rng(seed)
+    p = _rand_logprobs(t, seed)
+    labels = rng.integers(0, 4, size=max(z, 1)).astype(np.int32)
+    want = ctc.brute_force_log_prob(p, list(labels[:z]))
+    lab = np.zeros(8, np.int32); lab[:z] = labels[:z]
+    got = float(ctc.ctc_log_prob(jnp.asarray(np.log(p), jnp.float32),
+                                 jnp.asarray(lab), jnp.int32(z)))
+    if want < -600:         # infeasible label for this T
+        assert got < -600
+    else:
+        assert abs(got - want) < 1e-3, (got, want)
+
+
+def test_empty_label_is_all_blanks():
+    p = _rand_logprobs(6, 0)
+    lab = np.zeros(4, np.int32)
+    got = float(ctc.ctc_log_prob(jnp.asarray(np.log(p), jnp.float32),
+                                 jnp.asarray(lab), jnp.int32(0)))
+    want = float(np.log(p[:, ctc.BLANK]).sum())
+    assert abs(got - want) < 1e-4
+
+
+def test_infeasible_label_has_tiny_prob():
+    p = _rand_logprobs(3, 1)
+    lab = np.array([0, 0, 0, 0], np.int32)  # AAAA needs T >= 7
+    got = float(ctc.ctc_log_prob(jnp.asarray(np.log(p), jnp.float32),
+                                 jnp.asarray(lab), jnp.int32(4)))
+    assert got < -1e20
+
+
+def test_repeated_symbol_needs_blank():
+    """p(AA) over 2 steps is 0 (needs a separating blank)."""
+    p = np.full((2, 5), 1e-9); p[:, 0] = 1.0
+    p /= p.sum(axis=1, keepdims=True)
+    lab = np.array([0, 0], np.int32)
+    got = float(ctc.ctc_log_prob(jnp.asarray(np.log(p), jnp.float32),
+                                 jnp.asarray(lab), jnp.int32(2)))
+    assert got < -15
+
+
+def test_batch_matches_single():
+    p1 = _rand_logprobs(5, 2); p2 = _rand_logprobs(5, 3)
+    labs = np.array([[0, 1, 0, 0], [2, 3, 1, 0]], np.int32)
+    lens = np.array([2, 3], np.int32)
+    lp = jnp.asarray(np.log(np.stack([p1, p2])), jnp.float32)
+    batch = np.asarray(ctc.ctc_log_prob_batch(lp, jnp.asarray(labs),
+                                              jnp.asarray(lens)))
+    for i, p in enumerate([p1, p2]):
+        single = float(ctc.ctc_log_prob(jnp.asarray(np.log(p), jnp.float32),
+                                        jnp.asarray(labs[i]),
+                                        jnp.int32(lens[i])))
+        assert abs(batch[i] - single) < 1e-4
+
+
+def test_greedy_decode_collapses():
+    lp = np.log(np.array([
+        [.9, .025, .025, .025, .025],
+        [.9, .025, .025, .025, .025],
+        [.025, .025, .025, .025, .9],
+        [.9, .025, .025, .025, .025],
+        [.025, .9, .025, .025, .025],
+    ], np.float32))
+    assert list(ctc.greedy_decode(lp)) == [0, 0, 1]  # A A(after blank) C
+
+
+def test_loss_is_differentiable():
+    p = jnp.asarray(np.log(_rand_logprobs(6, 5)), jnp.float32)
+    lab = jnp.asarray(np.array([0, 1, 2, 0], np.int32))
+    g = jax.grad(lambda x: ctc.ctc_loss(x, lab, jnp.int32(3)))(p)
+    assert np.isfinite(np.asarray(g)).all()

@@ -1,0 +1,102 @@
+"""L1 Pallas kernels vs pure-jnp oracle — the CORE correctness signal.
+
+hypothesis sweeps shapes (and the f32/bf16 dtypes the MXU cares about);
+assert_allclose against ref.py for every kernel.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.qmatmul import qmatmul, gru_cell, lstm_cell
+from compile.kernels import ref
+
+settings.register_profile("ci", max_examples=12, deadline=None)
+settings.load_profile("ci")
+
+
+@settings(max_examples=12, deadline=None)
+@given(m=st.integers(1, 70), k=st.integers(1, 90), n=st.integers(1, 70),
+       seed=st.integers(0, 2**31 - 1))
+def test_qmatmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    np.testing.assert_allclose(np.asarray(qmatmul(x, w)),
+                               np.asarray(ref.matmul_ref(x, w)),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (129, 257, 130),
+                                   (1, 1, 1), (300, 11, 32)])
+def test_qmatmul_block_boundaries(m, k, n):
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    np.testing.assert_allclose(np.asarray(qmatmul(x, w)),
+                               np.asarray(x @ w), rtol=1e-3, atol=1e-3)
+
+
+def test_qmatmul_bf16_inputs():
+    """bf16 inputs (the MXU-native dtype) still accumulate in f32."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(32, 48)), jnp.bfloat16).astype(jnp.float32)
+    w = jnp.asarray(rng.normal(size=(48, 16)), jnp.bfloat16).astype(jnp.float32)
+    out = qmatmul(x, w)
+    assert out.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x @ w), rtol=1e-3,
+                               atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(b=st.integers(1, 16), f=st.integers(1, 40), h=st.integers(1, 50),
+       seed=st.integers(0, 2**31 - 1))
+def test_gru_cell_matches_ref(b, f, h, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(b, f)), jnp.float32)
+    hh = jnp.asarray(rng.normal(size=(b, h)), jnp.float32)
+    wx = jnp.asarray(rng.normal(size=(f, 3 * h)) * 0.3, jnp.float32)
+    wh = jnp.asarray(rng.normal(size=(h, 3 * h)) * 0.3, jnp.float32)
+    bb = jnp.asarray(rng.normal(size=(3 * h,)) * 0.3, jnp.float32)
+    np.testing.assert_allclose(np.asarray(gru_cell(x, hh, wx, wh, bb)),
+                               np.asarray(ref.gru_cell_ref(x, hh, wx, wh, bb)),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(b=st.integers(1, 16), f=st.integers(1, 40), h=st.integers(1, 50),
+       seed=st.integers(0, 2**31 - 1))
+def test_lstm_cell_matches_ref(b, f, h, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(b, f)), jnp.float32)
+    hh = jnp.asarray(rng.normal(size=(b, h)), jnp.float32)
+    cc = jnp.asarray(rng.normal(size=(b, h)), jnp.float32)
+    wx = jnp.asarray(rng.normal(size=(f, 4 * h)) * 0.3, jnp.float32)
+    wh = jnp.asarray(rng.normal(size=(h, 4 * h)) * 0.3, jnp.float32)
+    bb = jnp.asarray(rng.normal(size=(4 * h,)) * 0.3, jnp.float32)
+    h2, c2 = lstm_cell(x, hh, cc, wx, wh, bb)
+    h3, c3 = ref.lstm_cell_ref(x, hh, cc, wx, wh, bb)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(h3), rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(c2), np.asarray(c3), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_gru_cell_state_fixed_point():
+    """With z=1 (huge update-gate bias) the state must pass through."""
+    b, f, h = 4, 8, 8
+    x = jnp.zeros((b, f)); hh = jnp.asarray(
+        np.random.default_rng(0).normal(size=(b, h)), jnp.float32)
+    wx = jnp.zeros((f, 3 * h)); wh = jnp.zeros((h, 3 * h))
+    bias = jnp.concatenate([jnp.full((h,), 30.0), jnp.zeros(2 * h)])
+    out = gru_cell(x, hh, wx, wh, bias)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(hh), atol=1e-5)
+
+
+def test_qmatmul_gradients_flow():
+    def f(x, w):
+        return jnp.sum(qmatmul(x, w) ** 2)
+    x = jnp.ones((4, 6)); w = jnp.ones((6, 3))
+    gx, gw = jax.grad(f, argnums=(0, 1))(x, w)
+    assert np.isfinite(np.asarray(gx)).all() and np.isfinite(np.asarray(gw)).all()

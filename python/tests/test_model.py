@@ -1,0 +1,63 @@
+"""L2 model: shapes, pallas-vs-jnp path agreement, quantization behaviour."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.ctc import NUM_SYMBOLS
+
+
+@pytest.mark.parametrize("name", list(model.ARCHS))
+def test_forward_shapes(name):
+    spec = model.ARCHS[name]
+    p = model.init_params(spec)
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(3, spec.window)),
+                    jnp.float32)
+    lp = model.forward(p, spec, x)
+    assert lp.shape == (3, spec.time_steps, NUM_SYMBOLS)
+    # log_softmax normalization
+    np.testing.assert_allclose(np.exp(np.asarray(lp)).sum(-1), 1.0, rtol=1e-4)
+
+
+@pytest.mark.parametrize("name", list(model.ARCHS))
+@pytest.mark.parametrize("bits", [32, 5])
+def test_pallas_path_matches_jnp(name, bits):
+    spec = model.ARCHS[name]
+    p = model.init_params(spec, seed=1)
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(2, spec.window)),
+                    jnp.float32)
+    a = np.asarray(model.forward(p, spec, x, bits=bits, use_pallas=True))
+    b = np.asarray(model.forward(p, spec, x, bits=bits, use_pallas=False))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_quantization_perturbs_but_not_wildly():
+    spec = model.ARCHS["guppy"]
+    p = model.init_params(spec, seed=2)
+    x = jnp.asarray(np.random.default_rng(2).normal(size=(2, spec.window)),
+                    jnp.float32)
+    full = np.asarray(model.forward(p, spec, x, bits=32))
+    q8 = np.asarray(model.forward(p, spec, x, bits=8))
+    q3 = np.asarray(model.forward(p, spec, x, bits=3))
+    e8 = np.abs(full - q8).mean()
+    e3 = np.abs(full - q3).mean()
+    assert 0 < e8 < e3   # more aggressive quantization, larger deviation
+
+
+def test_params_roundtrip(tmp_path):
+    spec = model.ARCHS["chiron"]
+    p = model.init_params(spec, seed=3)
+    path = str(tmp_path / "p.npz")
+    model.save_params(p, path)
+    p2 = model.load_params(spec, path)
+    x = jnp.asarray(np.random.default_rng(3).normal(size=(1, spec.window)),
+                    jnp.float32)
+    np.testing.assert_allclose(np.asarray(model.forward(p, spec, x)),
+                               np.asarray(model.forward(p2, spec, x)))
+
+
+def test_param_counts_scale_with_arch():
+    counts = {n: model.count_params(model.init_params(s))
+              for n, s in model.ARCHS.items()}
+    # chiron is the parameter-rich one (Table 3 ordering preserved at scale)
+    assert counts["chiron"] > counts["guppy"]

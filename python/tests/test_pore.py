@@ -1,0 +1,70 @@
+"""Synthetic pore-model substrate: signal/label consistency invariants."""
+import json
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import pore
+
+settings.register_profile("ci", max_examples=10, deadline=None)
+settings.load_profile("ci")
+
+PM = pore.PoreModel.default(seed=7)
+
+
+def test_kmer_ids_range_and_locality():
+    rng = np.random.default_rng(0)
+    seq = pore.random_genome(100, rng)
+    ids = pore.kmer_ids(seq, PM.k)
+    assert ids.min() >= 0 and ids.max() < 4 ** PM.k
+    # last base of the k-mer id is the base itself
+    assert np.array_equal(ids % 4, seq)
+
+
+@given(seed=st.integers(0, 10_000))
+def test_signal_owner_monotone_and_dwell_bounded(seed):
+    rng = np.random.default_rng(seed)
+    seq = pore.random_genome(50, rng)
+    sig, owner = pore.simulate_read_signal(seq, PM, rng)
+    assert len(sig) == len(owner)
+    d = np.diff(owner)
+    assert ((d == 0) | (d == 1)).all()            # pore moves forward
+    counts = np.bincount(owner)
+    assert counts.min() >= PM.dwell_min and counts.max() <= PM.dwell_max
+
+
+def test_signal_is_normalized():
+    rng = np.random.default_rng(3)
+    seq = pore.random_genome(300, rng)
+    sig, _ = pore.simulate_read_signal(seq, PM, rng)
+    assert abs(sig.mean()) < 1e-3 and abs(sig.std() - 1) < 1e-3
+
+
+def test_window_labels_match_genome():
+    rng = np.random.default_rng(5)
+    seq = pore.random_genome(200, rng)
+    sig, owner = pore.simulate_read_signal(seq, PM, rng)
+    ws = pore.windows_from_read(sig, owner, seq, PM, hop=100)
+    assert len(ws) > 0
+    for wsig, wlab, lo in ws:
+        assert len(wsig) == PM.window
+        np.testing.assert_array_equal(wlab, seq[lo:lo + len(wlab)])
+
+
+def test_dataset_shapes_and_read_order():
+    ds = pore.build_dataset(PM, 3000, 8, (280, 400), 100, seed=1)
+    n = len(ds["signals"])
+    assert ds["labels"].shape[0] == n == len(ds["label_lens"])
+    assert (ds["label_lens"] > 0).all()
+    assert (np.diff(ds["read_ids"]) >= 0).all()   # windows stored in read order
+    # labels beyond label_len are zero padding
+    for i in range(min(n, 20)):
+        assert (ds["labels"][i, ds["label_lens"][i]:] == 0).all()
+
+
+def test_pore_model_json_roundtrip(tmp_path):
+    p = str(tmp_path / "pm.json")
+    PM.save(p)
+    pm2 = pore.PoreModel.load(p)
+    np.testing.assert_allclose(pm2.levels, PM.levels)
+    assert pm2.k == PM.k and pm2.window == PM.window
+    json.load(open(p))  # valid json for the rust side

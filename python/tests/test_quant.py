@@ -1,0 +1,57 @@
+"""Fake-quantization: grid snapping, STE gradients, bit-width monotonicity."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.quant import fake_quant, fake_quant_tree, qmax, quant_scale, quantize
+
+settings.register_profile("ci", max_examples=15, deadline=None)
+settings.load_profile("ci")
+
+
+def test_fp32_is_identity():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(7, 5)), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(fake_quant(x, 32)), np.asarray(x))
+
+
+@given(bits=st.integers(2, 16), seed=st.integers(0, 1000))
+def test_grid_has_at_most_2b_levels(bits, seed):
+    x = jnp.asarray(np.random.default_rng(seed).normal(size=200), jnp.float32)
+    xq = np.asarray(fake_quant(x, bits))
+    levels = np.unique(np.round(xq / (np.abs(xq)[np.abs(xq) > 0].min() + 1e-12)))
+    assert len(np.unique(xq)) <= 2 ** bits
+
+
+@given(bits=st.integers(2, 12), seed=st.integers(0, 1000))
+def test_error_bounded_by_half_step(bits, seed):
+    x = np.random.default_rng(seed).normal(size=300).astype(np.float32)
+    xq = np.asarray(fake_quant(jnp.asarray(x), bits))
+    step = np.abs(x).max() / qmax(bits)
+    assert np.abs(xq - x).max() <= step / 2 + 1e-6
+
+
+def test_ste_gradient_is_identity():
+    x = jnp.asarray(np.random.default_rng(1).normal(size=50), jnp.float32)
+    g = jax.grad(lambda v: jnp.sum(fake_quant(v, 4) * 3.0))(x)
+    np.testing.assert_allclose(np.asarray(g), 3.0, rtol=1e-6)
+
+
+def test_more_bits_less_error():
+    x = jnp.asarray(np.random.default_rng(2).normal(size=500), jnp.float32)
+    errs = [float(jnp.mean((fake_quant(x, b) - x) ** 2)) for b in (3, 5, 8, 16)]
+    assert errs == sorted(errs, reverse=True)
+
+
+def test_tree_quantizes_leaves():
+    tree = {"a": jnp.linspace(-1, 1, 11), "b": [jnp.ones((2, 2))]}
+    out = fake_quant_tree(tree, 3)
+    assert len(np.unique(np.asarray(out["a"]))) <= 8
+    np.testing.assert_allclose(np.asarray(out["b"][0]), 1.0)
+
+
+def test_quantize_respects_clip():
+    x = jnp.asarray([-10.0, 10.0], jnp.float32)
+    s = quant_scale(x, 4)
+    q = np.asarray(quantize(x, s, 4))
+    assert q.min() >= -qmax(4) and q.max() <= qmax(4)

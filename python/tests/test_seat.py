@@ -1,0 +1,62 @@
+"""SEAT (Eq. 4): consensus construction + loss properties."""
+import numpy as np
+import jax.numpy as jnp
+
+from compile import ctc, model, pore, seat
+
+
+def _tiny():
+    pm = pore.PoreModel.default(seed=7)
+    ds = pore.build_dataset(pm, 2500, 6, (280, 340), 100, seed=4)
+    return model.ARCHS["guppy"], ds
+
+
+def test_window_triples_same_read():
+    _, ds = _tiny()
+    tri = seat.window_triples(ds["read_ids"])
+    assert len(tri) > 0
+    for i in tri[:20]:
+        assert ds["read_ids"][i - 1] == ds["read_ids"][i] == ds["read_ids"][i + 1]
+
+
+def test_consensus_labels_clip_and_pad():
+    rng = np.random.default_rng(0)
+    lp = np.log(rng.dirichlet(np.ones(5), size=(3, 40)).astype(np.float32))
+    labs, n = seat.consensus_labels(lp, max_label=8)
+    assert labs.shape == (8,) and 0 <= n <= 8
+    assert (labs[n:] == 0).all()
+
+
+def test_seat_loss_reduces_to_base_when_consensus_is_truth():
+    """Eq. 4 with C == G and eta=1 equals loss_0 exactly (the quadratic term
+    vanishes)."""
+    spec, ds = _tiny()
+    p = model.init_params(spec, seed=0)
+    sig = jnp.asarray(ds["signals"][:4])
+    lab = jnp.asarray(ds["labels"][:4])
+    ll = jnp.asarray(ds["label_lens"][:4])
+    l0 = float(seat.base_loss(p, spec, sig, lab, ll, 32))
+    l1 = float(seat.seat_loss(p, spec, sig, lab, ll, lab, ll, 32, 1.0))
+    assert abs(l0 - l1) < 1e-3
+
+
+def test_seat_loss_penalizes_consensus_gap():
+    spec, ds = _tiny()
+    p = model.init_params(spec, seed=0)
+    sig = jnp.asarray(ds["signals"][:4])
+    lab = jnp.asarray(ds["labels"][:4])
+    ll = jnp.asarray(ds["label_lens"][:4])
+    other = jnp.asarray((np.asarray(lab) + 1) % 4)   # a different consensus
+    l_same = float(seat.seat_loss(p, spec, sig, lab, ll, lab, ll, 32, 1.0))
+    l_diff = float(seat.seat_loss(p, spec, sig, lab, ll, other, ll, 32, 1.0))
+    assert l_diff > l_same
+
+
+def test_eta_zero_removes_ground_truth_pull():
+    spec, ds = _tiny()
+    p = model.init_params(spec, seed=0)
+    sig = jnp.asarray(ds["signals"][:2])
+    lab = jnp.asarray(ds["labels"][:2])
+    ll = jnp.asarray(ds["label_lens"][:2])
+    l_eta0 = float(seat.seat_loss(p, spec, sig, lab, ll, lab, ll, 32, 0.0))
+    assert abs(l_eta0) < 1e-3   # C == G and no -ln p(G|R) term -> 0

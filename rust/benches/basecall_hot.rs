@@ -1,0 +1,79 @@
+//! Hot-path micro-benchmarks: CTC decode, voting, edit distance, signal
+//! simulation. (In-tree timer replaces criterion — offline build.)
+//!
+//!     cargo bench --bench basecall_hot
+
+use helix::basecall::ctc::{beam_search, greedy_decode, LogProbs};
+use helix::basecall::edit::{edit_distance, edit_distance_banded};
+use helix::basecall::vote::consensus;
+use helix::bench::timer::bench;
+use helix::genome::pore::PoreModel;
+use helix::util::rng::Rng;
+
+/// Guppy-shaped logprobs: T=145, peaked like a trained model's output.
+fn realistic_lp(t: usize, seed: u64) -> LogProbs {
+    let mut rng = Rng::new(seed);
+    let mut data = Vec::with_capacity(t * 5);
+    for _ in 0..t {
+        let hot = rng.below(5);
+        let mut row = [0.02f32; 5];
+        row[hot] = 0.92;
+        let sum: f32 = row.iter().sum();
+        data.extend(row.iter().map(|p| (p / sum).ln()));
+    }
+    LogProbs::new(t, data)
+}
+
+fn main() {
+    println!("== basecall hot paths ==");
+    let lp = realistic_lp(145, 1);
+
+    bench("greedy_decode T=145", 200, || {
+        std::hint::black_box(greedy_decode(&lp));
+    });
+    for width in [2usize, 10, 32, 64] {
+        bench(&format!("beam_search T=145 width={width}"), 300, || {
+            std::hint::black_box(beam_search(&lp, width));
+        });
+    }
+
+    let mut rng = Rng::new(2);
+    let a: Vec<u8> = (0..30).map(|_| rng.base()).collect();
+    let mut b = a.clone();
+    b[10] = (b[10] + 1) % 4;
+    b.insert(20, 2);
+    bench("edit_distance 30x31", 100, || {
+        std::hint::black_box(edit_distance(&a, &b));
+    });
+    bench("edit_distance_banded 30x31 band=4", 100, || {
+        std::hint::black_box(edit_distance_banded(&a, &b, 4));
+    });
+    let long_a: Vec<u8> = (0..300).map(|_| rng.base()).collect();
+    let mut long_b = long_a.clone();
+    for _ in 0..20 {
+        let i = rng.below(long_b.len());
+        long_b[i] = (long_b[i] + 1) % 4;
+    }
+    bench("edit_distance 300x300", 150, || {
+        std::hint::black_box(edit_distance(&long_a, &long_b));
+    });
+    bench("edit_distance_banded 300x300 band=40", 150, || {
+        std::hint::black_box(edit_distance_banded(&long_a, &long_b, 40));
+    });
+
+    let truth: Vec<u8> = (0..30).map(|_| rng.base()).collect();
+    let mut n1 = truth.clone();
+    n1[5] = (n1[5] + 1) % 4;
+    let mut n2 = truth.clone();
+    n2[20] = (n2[20] + 2) % 4;
+    bench("consensus 3x30-base reads", 150, || {
+        std::hint::black_box(consensus(&truth, &[&n1, &n2]));
+    });
+
+    let pm = PoreModel::synthetic(7);
+    let seq: Vec<u8> = (0..400).map(|_| rng.base()).collect();
+    let mut sim_rng = Rng::new(3);
+    bench("pore simulate 400-base read", 150, || {
+        std::hint::black_box(pm.simulate(&seq, &mut sim_rng));
+    });
+}

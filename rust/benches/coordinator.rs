@@ -1,0 +1,96 @@
+//! End-to-end coordinator benchmark: measured host base-calling throughput
+//! through the full PJRT + CTC + vote pipeline (the L3 perf deliverable),
+//! plus batching-policy ablation. Requires `make artifacts`.
+//!
+//!     cargo bench --bench coordinator
+
+use std::time::Duration;
+
+use helix::basecall::ctc::beam_search;
+use helix::bench::timer::bench;
+use helix::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
+use helix::genome::pore::PoreModel;
+use helix::genome::synth::{RunSpec, SequencingRun};
+use helix::runtime::meta::{artifacts_available, default_artifacts_dir};
+use helix::runtime::Engine;
+
+fn main() {
+    let dir = default_artifacts_dir();
+    if !artifacts_available(&dir) {
+        println!("artifacts not built — run `make artifacts` first; \
+                  skipping coordinator bench");
+        return;
+    }
+    let pm = PoreModel::load(&format!("{dir}/pore_model.json")).unwrap();
+    let run = SequencingRun::simulate(&pm, RunSpec {
+        genome_len: 1200,
+        coverage: 4,
+        seed: 99,
+        ..Default::default()
+    });
+    let total_bases: usize = run.reads.iter().map(|r| r.seq.len()).sum();
+
+    // raw DNN executor throughput at each exported batch size
+    println!("== PJRT DNN executor ==");
+    let mut engine = Engine::new(&dir).unwrap();
+    let window = engine.meta.window;
+    let sig = vec![0.1f32; window];
+    for b in engine.meta.batches("guppy", 32) {
+        let sigs: Vec<&[f32]> = (0..b).map(|_| sig.as_slice()).collect();
+        let exe = engine.load("guppy", 32, b).unwrap();
+        let t = exe.entry.time_steps;
+        let st = bench(&format!("guppy fp32 batch={b} (T={t})"), 400, || {
+            std::hint::black_box(exe.run(&sigs).unwrap());
+        });
+        let windows_per_sec = b as f64 / (st.median_ns / 1e9);
+        println!("    -> {windows_per_sec:.0} windows/s \
+                  (~{:.0} bases/s DNN-only)", windows_per_sec * 30.0);
+    }
+
+    // decode cost on realistic outputs
+    let lps = {
+        let sigs: Vec<Vec<f32>> = run.reads[0].signal
+            .chunks(window).take(1)
+            .map(|c| {
+                let mut v = c.to_vec();
+                v.resize(window, 0.0);
+                v
+            })
+            .collect();
+        engine.run_windows("guppy", 32, &sigs).unwrap()
+    };
+    bench("beam_search width=10 on real output", 200, || {
+        std::hint::black_box(beam_search(&lps[0], 10));
+    });
+
+    // full coordinator with different batch policies
+    println!("\n== coordinator end-to-end ({} reads, {} bases) ==",
+             run.reads.len(), total_bases);
+    for (label, policy) in [
+        ("batch=1", BatchPolicy { max_batch: 1,
+                                  max_wait: Duration::ZERO }),
+        ("batch=8/5ms", BatchPolicy { max_batch: 8,
+                                      max_wait: Duration::from_millis(5) }),
+        ("batch=32/10ms", BatchPolicy { max_batch: 32,
+                                        max_wait: Duration::from_millis(10) }),
+    ] {
+        let t0 = std::time::Instant::now();
+        let mut coord = Coordinator::new(CoordinatorConfig {
+            model: "guppy".into(),
+            bits: 32,
+            policy,
+            artifacts_dir: dir.clone(),
+            ..Default::default()
+        }).unwrap();
+        for r in &run.reads {
+            coord.submit(r);
+        }
+        let metrics = coord.metrics.clone();
+        let called = coord.finish().unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        let bases: usize = called.iter().map(|c| c.seq.len()).sum();
+        println!("{label:<14} {:>8.2}s  {:>9.0} bases/s   fill {:.2}",
+                 dt, bases as f64 / dt,
+                 metrics.mean_batch_fill(policy.max_batch));
+    }
+}

@@ -1,0 +1,42 @@
+//! Figure/table regeneration bench: times each paper panel's regeneration
+//! and prints the panels themselves — one bench per table AND figure, as
+//! DESIGN.md's experiment index requires.
+//!
+//!     cargo bench --bench pim_figures
+
+use helix::bench::figures;
+use helix::bench::timer::bench;
+use helix::pim::mapper::Topology;
+use helix::pim::schemes::{evaluate, Scheme};
+use helix::pim::variation;
+use helix::runtime::meta::default_artifacts_dir;
+
+fn main() {
+    let dir = default_artifacts_dir();
+
+    println!("== per-panel regeneration timing ==");
+    bench("scheme evaluation (8 schemes x 3 models)", 150, || {
+        for topo in Topology::all() {
+            for s in Scheme::all() {
+                std::hint::black_box(evaluate(s, &topo, 10));
+            }
+        }
+    });
+    bench("device MC 10k samples (fig15 unit)", 300, || {
+        std::hint::black_box(variation::duration_mc(
+            60.0, variation::ADC_WRITE_VOLTAGE, 10_000, 7));
+    });
+
+    // regenerate every panel (the figure output itself is the artifact;
+    // CSV-derived panels are skipped gracefully when artifacts are absent)
+    for f in ["fig2", "fig3", "fig7", "fig8", "fig9", "fig10", "fig13",
+              "fig14", "fig15", "fig16", "fig21", "fig22", "fig23",
+              "fig24", "fig25", "fig26", "table1", "table2", "table3",
+              "table4", "table5"] {
+        let t0 = std::time::Instant::now();
+        match figures::run(f, &dir) {
+            Ok(()) => println!("[{f}] regenerated in {:.2?}", t0.elapsed()),
+            Err(e) => println!("[{f}] unavailable: {e}"),
+        }
+    }
+}

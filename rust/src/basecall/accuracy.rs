@@ -1,0 +1,121 @@
+//! Accuracy accounting: read accuracy (pre-vote) vs vote accuracy
+//! (post-vote), and the random/systematic error split of Fig 3.
+
+use super::edit::identity;
+use super::vote::consensus;
+
+/// Summary of a basecalling evaluation run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Accuracy {
+    /// mean identity of individual decoded reads vs truth (pre-vote).
+    pub read_acc: f64,
+    /// identity of the voted consensus vs truth (post-vote).
+    pub vote_acc: f64,
+    /// positions wrong in >= half the reads AND wrong in the consensus
+    /// (systematic, uncorrectable by voting).
+    pub systematic_errors: usize,
+    /// positions wrong in some read but fixed by the vote (random).
+    pub random_errors: usize,
+    pub positions: usize,
+}
+
+/// Evaluate a group of decoded reads that all cover the same `truth`
+/// sequence: per-read identity, consensus identity, and the error split.
+pub fn evaluate_group(decodes: &[Vec<u8>], truth: &[u8]) -> Accuracy {
+    if decodes.is_empty() || truth.is_empty() {
+        return Accuracy::default();
+    }
+    let read_acc = decodes.iter()
+        .map(|d| identity(d, truth))
+        .sum::<f64>() / decodes.len() as f64;
+    let refs: Vec<&[u8]> = decodes.iter().map(|d| d.as_slice()).collect();
+    let cons = consensus(truth_scaffold(&refs), &refs);
+    let vote_acc = identity(&cons, truth);
+
+    // error split: align consensus and each read onto the truth
+    let cons_aligned = super::vote::align_onto(truth, &cons);
+    let mut systematic = 0usize;
+    let mut random = 0usize;
+    let per_read: Vec<Vec<Option<u8>>> = refs.iter()
+        .map(|r| super::vote::align_onto(truth, r))
+        .collect();
+    for (i, &t) in truth.iter().enumerate() {
+        let wrong_reads = per_read.iter()
+            .filter(|a| a[i].map_or(true, |s| s != t))
+            .count();
+        let cons_wrong = cons_aligned[i].map_or(true, |s| s != t);
+        if cons_wrong && wrong_reads * 2 >= per_read.len() {
+            systematic += 1;
+        } else if wrong_reads > 0 && !cons_wrong {
+            random += 1;
+        }
+    }
+    Accuracy {
+        read_acc,
+        vote_acc,
+        systematic_errors: systematic,
+        random_errors: random,
+        positions: truth.len(),
+    }
+}
+
+/// Pick the scaffold for voting: the read whose length is the median —
+/// robust to truncated decodes.
+fn truth_scaffold<'a>(reads: &[&'a [u8]]) -> &'a [u8] {
+    let mut order: Vec<usize> = (0..reads.len()).collect();
+    order.sort_by_key(|&i| reads[i].len());
+    reads[order[order.len() / 2]]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn perfect_reads_are_perfect() {
+        let truth = vec![0u8, 1, 2, 3, 0, 1];
+        let acc = evaluate_group(&[truth.clone(), truth.clone(),
+                                   truth.clone()], &truth);
+        assert_eq!(acc.read_acc, 1.0);
+        assert_eq!(acc.vote_acc, 1.0);
+        assert_eq!(acc.systematic_errors, 0);
+        assert_eq!(acc.random_errors, 0);
+    }
+
+    #[test]
+    fn random_error_fixed_by_vote() {
+        let truth = vec![0u8, 1, 2, 3, 0, 1, 2, 3];
+        let mut r1 = truth.clone();
+        r1[4] = 2;
+        let acc = evaluate_group(&[r1, truth.clone(), truth.clone()], &truth);
+        assert!(acc.read_acc < 1.0);
+        assert_eq!(acc.vote_acc, 1.0);
+        assert_eq!(acc.systematic_errors, 0);
+        assert!(acc.random_errors >= 1);
+    }
+
+    #[test]
+    fn systematic_error_counted() {
+        let truth = vec![0u8, 1, 2, 3, 0, 1, 2, 3];
+        let mut bad = truth.clone();
+        bad[4] = 2; // every read carries the same error
+        let acc = evaluate_group(&[bad.clone(), bad.clone(), bad], &truth);
+        assert!(acc.vote_acc < 1.0);
+        assert!(acc.systematic_errors >= 1);
+    }
+
+    #[test]
+    fn prop_vote_acc_at_least_read_acc_with_clean_majority() {
+        prop::check("vote >= read (majority clean)", 25, |rng, _| {
+            let truth = prop::dna(rng, 10, 40);
+            let mut noisy = truth.clone();
+            let i = rng.below(noisy.len());
+            noisy[i] = (noisy[i] + 1 + rng.base() % 3) % 4;
+            let acc = evaluate_group(
+                &[noisy, truth.clone(), truth.clone()], &truth);
+            assert!(acc.vote_acc >= acc.read_acc - 1e-9,
+                    "vote {} read {}", acc.vote_acc, acc.read_acc);
+        });
+    }
+}

@@ -1,0 +1,166 @@
+//! Edit distance — the paper's base-calling error metric (§2.2): the minimum
+//! number of insertions, deletions and substitutions transforming one read
+//! into the other.
+
+/// Classic two-row Levenshtein, O(|a|*|b|) time, O(min) memory.
+pub fn edit_distance(a: &[u8], b: &[u8]) -> usize {
+    let (a, b) = if a.len() < b.len() { (b, a) } else { (a, b) };
+    if b.is_empty() {
+        return a.len();
+    }
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// Banded Levenshtein: exact when the true distance <= band, otherwise
+/// returns a lower-bound >= band. Reads differ by ~12% in nanopore data, so
+/// a narrow band covers the realistic cases at a fraction of the cost — this
+/// is the hot-path variant used by voting and accuracy evaluation.
+pub fn edit_distance_banded(a: &[u8], b: &[u8], band: usize) -> usize {
+    let n = a.len();
+    let m = b.len();
+    if n.abs_diff(m) > band {
+        return n.abs_diff(m).max(band);
+    }
+    if m == 0 {
+        return n;
+    }
+    const INF: usize = usize::MAX / 2;
+    let width = 2 * band + 1;
+    // row[i] holds cells j in [i-band, i+band] mapped to [0, width)
+    let mut prev = vec![INF; width];
+    let mut cur = vec![INF; width];
+    // row 0: D[0][j] = j for j <= band
+    for j in 0..=band.min(m) {
+        prev[j + band] = j; // offset: col j maps to j - 0 + band
+    }
+    for i in 1..=n {
+        for c in cur.iter_mut() {
+            *c = INF;
+        }
+        let jlo = i.saturating_sub(band).max(0);
+        let jhi = (i + band).min(m);
+        for j in jlo..=jhi {
+            let k = j + band - i; // in [0, width)
+            let mut best = INF;
+            if j == 0 {
+                best = i;
+            } else {
+                // substitution: prev row col j-1 -> offset (j-1)+band-(i-1)
+                let ks = j + band - i;
+                if prev[ks] < INF {
+                    best = best.min(prev[ks]
+                        + usize::from(a[i - 1] != b[j - 1]));
+                }
+                // insertion in a: cur row col j-1 -> offset k-1
+                if k > 0 && cur[k - 1] < INF {
+                    best = best.min(cur[k - 1] + 1);
+                }
+                // deletion: prev row col j -> offset j+band-(i-1) = k+1
+                if k + 1 < width && prev[k + 1] < INF {
+                    best = best.min(prev[k + 1] + 1);
+                }
+            }
+            cur[k] = best;
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    let k = m + band - n;
+    prev.get(k).copied().unwrap_or(INF).min(n.max(m))
+}
+
+/// Identity = 1 - dist/|truth| (clamped to [0,1]); the paper's accuracy.
+pub fn identity(pred: &[u8], truth: &[u8]) -> f64 {
+    if truth.is_empty() {
+        return if pred.is_empty() { 1.0 } else { 0.0 };
+    }
+    let d = edit_distance(pred, truth) as f64;
+    (1.0 - d / truth.len() as f64).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn known_cases() {
+        assert_eq!(edit_distance(b"\x00\x01\x02", b"\x00\x01\x02"), 0);
+        assert_eq!(edit_distance(b"\x00\x01\x02", b"\x00\x02"), 1);
+        assert_eq!(edit_distance(b"", b"\x01\x02\x03"), 3);
+        assert_eq!(edit_distance(b"\x00\x01", b"\x01\x00"), 2);
+    }
+
+    #[test]
+    fn prop_metric_axioms() {
+        prop::check("edit metric", 60, |rng, _| {
+            let a = prop::dna(rng, 0, 30);
+            let b = prop::dna(rng, 0, 30);
+            let d = edit_distance(&a, &b);
+            assert_eq!(d, edit_distance(&b, &a), "symmetry");
+            assert!(d <= a.len().max(b.len()), "upper bound");
+            assert_eq!(d == 0, a == b, "identity of indiscernibles");
+            assert!(d >= a.len().abs_diff(b.len()), "length lower bound");
+        });
+    }
+
+    #[test]
+    fn prop_triangle_inequality() {
+        prop::check("edit triangle", 40, |rng, _| {
+            let a = prop::dna(rng, 0, 20);
+            let b = prop::dna(rng, 0, 20);
+            let c = prop::dna(rng, 0, 20);
+            assert!(edit_distance(&a, &c)
+                <= edit_distance(&a, &b) + edit_distance(&b, &c));
+        });
+    }
+
+    #[test]
+    fn prop_banded_matches_exact_within_band() {
+        prop::check("banded = exact", 80, |rng, _| {
+            let a = prop::dna(rng, 0, 40);
+            // mutate a into b with a few edits so the distance is small
+            let mut b = a.clone();
+            let edits = rng.below(4);
+            for _ in 0..edits {
+                if b.is_empty() {
+                    b.push(rng.base());
+                    continue;
+                }
+                let i = rng.below(b.len());
+                match rng.below(3) {
+                    0 => b[i] = rng.base(),
+                    1 => {
+                        b.insert(i, rng.base());
+                    }
+                    _ => {
+                        b.remove(i);
+                    }
+                }
+            }
+            let exact = edit_distance(&a, &b);
+            if exact <= 8 {
+                assert_eq!(edit_distance_banded(&a, &b, 8), exact,
+                           "a={a:?} b={b:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn identity_bounds() {
+        assert_eq!(identity(b"", b""), 1.0);
+        assert_eq!(identity(b"", b"\x00\x01"), 0.0);
+        assert_eq!(identity(b"\x00\x01", b"\x00\x01"), 1.0);
+        let id = identity(b"\x00\x00", b"\x00\x01");
+        assert!(id > 0.0 && id < 1.0);
+    }
+}

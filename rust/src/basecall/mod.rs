@@ -1,0 +1,24 @@
+//! Base-calling algorithms: CTC decoding (greedy + prefix beam search),
+//! read voting (consensus), and accuracy metrics (edit distance / identity).
+//!
+//! These are the operations the paper identifies as the post-quantization
+//! bottleneck (Fig 9: CTC decoding 16.7% + read voting 37% of latency) and
+//! accelerates with the crossbar CTC engine (§4.3) and the SOT-MRAM binary
+//! comparator arrays. The software implementations here are both the
+//! functional reference for those hardware models and the production decode
+//! path of the rust coordinator.
+
+pub mod accuracy;
+pub mod ctc;
+pub mod edit;
+pub mod vote;
+
+/// Alphabet shared with the python side: 0=A 1=C 2=G 3=T, 4=blank.
+pub const NUM_BASES: usize = 4;
+pub const BLANK: usize = 4;
+pub const NUM_SYMBOLS: usize = 5;
+
+/// Render a base-id sequence as an ACGT string (for logs/examples).
+pub fn to_acgt(seq: &[u8]) -> String {
+    seq.iter().map(|&b| b"ACGT"[b as usize] as char).collect()
+}

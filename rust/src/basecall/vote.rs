@@ -1,0 +1,224 @@
+//! Read voting (§2.2, §4.3 Fig 19): aligning multiple decoded reads that
+//! cover the same DNA and taking a per-position majority. Random errors are
+//! outvoted; systematic errors (same wrong symbol in every read) survive —
+//! the error taxonomy of Fig 3 that motivates SEAT.
+//!
+//! The hardware twin is `pim::comparator` (SOT-MRAM binary comparator
+//! arrays finding the longest sub-string matches); this module is the
+//! functional reference and the production software path.
+
+use super::edit::edit_distance_banded;
+
+/// Semi-global ("fit") alignment of `other` onto `scaffold`: leading and
+/// trailing scaffold positions are FREE, so a fragment covering only part
+/// of the scaffold aligns where it belongs instead of being stretched
+/// end-to-end — stretched alignments inject systematically wrong votes and
+/// made voting hurt accuracy before this fix (python twin:
+/// compile/align.py). Returns per-scaffold-position symbols or None (gap).
+pub fn align_onto(scaffold: &[u8], other: &[u8]) -> Vec<Option<u8>> {
+    let n = scaffold.len();
+    let m = other.len();
+    let mut out = vec![None; n];
+    if n == 0 || m == 0 {
+        return out;
+    }
+    // full DP with backtrace; reads are short (10-300 bases) so O(nm) is fine
+    let w = m + 1;
+    let mut d = vec![0u32; (n + 1) * w];
+    for j in 0..=m {
+        d[j] = j as u32; // consuming the fragment costs
+    }
+    for i in 1..=n {
+        d[i * w] = 0; // skipping scaffold prefix is free
+        for j in 1..=m {
+            let sub = d[(i - 1) * w + j - 1]
+                + u32::from(scaffold[i - 1] != other[j - 1]);
+            let del = d[(i - 1) * w + j] + 1;
+            let ins = d[i * w + j - 1] + 1;
+            d[i * w + j] = sub.min(del).min(ins);
+        }
+    }
+    // free scaffold suffix: backtrace from the best row of the last column
+    let mut i = (0..=n).min_by_key(|&i| d[i * w + m]).unwrap();
+    let mut j = m;
+    // tie-break order: exact-match diagonal > scaffold skip > mismatch
+    // diagonal > fragment skip — keeps votes on genuinely matching symbols
+    while i > 0 && j > 0 {
+        let cur = d[i * w + j];
+        let is_match = scaffold[i - 1] == other[j - 1];
+        if is_match && cur == d[(i - 1) * w + j - 1] {
+            out[i - 1] = Some(other[j - 1]);
+            i -= 1;
+            j -= 1;
+        } else if cur == d[(i - 1) * w + j] + 1 {
+            i -= 1;
+        } else if cur == d[(i - 1) * w + j - 1] + 1 && !is_match {
+            out[i - 1] = Some(other[j - 1]);
+            i -= 1;
+            j -= 1;
+        } else {
+            j -= 1;
+        }
+    }
+    out
+}
+
+/// Majority-vote `reads` onto the `scaffold` read (ties keep the scaffold
+/// symbol). Returns the consensus, same length as the scaffold.
+pub fn consensus(scaffold: &[u8], reads: &[&[u8]]) -> Vec<u8> {
+    if scaffold.is_empty() {
+        return Vec::new();
+    }
+    let n = scaffold.len();
+    let mut votes = vec![[0u32; 5]; n];
+    for (i, &s) in scaffold.iter().enumerate() {
+        votes[i][s as usize] += 1;
+    }
+    for read in reads {
+        for (i, sym) in align_onto(scaffold, read).into_iter().enumerate() {
+            if let Some(s) = sym {
+                votes[i][s as usize] += 1;
+            }
+        }
+    }
+    scaffold
+        .iter()
+        .enumerate()
+        .map(|(i, &orig)| {
+            let v = &votes[i];
+            let (mut best, mut cnt) = (orig as usize, v[orig as usize]);
+            for (s, &c) in v.iter().enumerate() {
+                if c > cnt {
+                    best = s;
+                    cnt = c;
+                }
+            }
+            best as u8
+        })
+        .collect()
+}
+
+/// Find the best suffix(a)-prefix(b) overlap of length >= `min_len` allowing
+/// up to ~12% mismatch (banded edit distance). Returns the overlap length.
+/// This is the "longest match" primitive of Fig 19(a), also reused by the
+/// pipeline's overlap-finding stage.
+pub fn best_overlap(a: &[u8], b: &[u8], min_len: usize) -> Option<usize> {
+    let max_len = a.len().min(b.len());
+    let mut best: Option<(usize, f64)> = None;
+    for len in (min_len..=max_len).rev() {
+        let band = (len / 5).max(1);
+        let d = edit_distance_banded(&a[a.len() - len..], &b[..len], band);
+        // accept up to 20% divergence (nanopore-realistic), but penalize
+        // edits hard so a slop-extended overlap never beats a cleaner,
+        // shorter one (which would silently drop genome bases on splice).
+        if d <= len / 5 {
+            let score = len as f64 - 16.0 * d as f64;
+            if best.map_or(true, |(_, s)| score > s) {
+                best = Some((len, score));
+            }
+            if d == 0 {
+                break; // exact match: longer candidates were already scanned
+            }
+        }
+    }
+    best.map(|(l, _)| l)
+}
+
+/// Merge overlapping reads (in genome order) into one contig using
+/// suffix-prefix overlaps; non-overlapping reads are concatenated.
+/// Fig 19(b): "align & vote" — with only two reads per junction this is the
+/// alignment half; column voting happens in `pipeline::polish`.
+pub fn merge_reads(reads: &[Vec<u8>], min_overlap: usize) -> Vec<u8> {
+    let mut contig: Vec<u8> = Vec::new();
+    for read in reads {
+        if contig.is_empty() {
+            contig = read.clone();
+            continue;
+        }
+        let tail = &contig[contig.len().saturating_sub(read.len() + 16)..];
+        match best_overlap(tail, read, min_overlap) {
+            Some(len) => contig.extend_from_slice(&read[len..]),
+            None => contig.extend_from_slice(read),
+        }
+    }
+    contig
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn consensus_outvotes_random_error() {
+        let truth = vec![0u8, 1, 2, 3, 0, 1, 2, 3];
+        let mut r1 = truth.clone();
+        r1[3] = 0;
+        let cons = consensus(&truth, &[&r1, &truth]);
+        assert_eq!(cons, truth);
+        // error in the scaffold itself is fixed by two good neighbours
+        let cons2 = consensus(&r1, &[&truth, &truth]);
+        assert_eq!(cons2, truth);
+    }
+
+    #[test]
+    fn systematic_error_survives() {
+        let truth = vec![0u8, 1, 2, 3, 0, 1];
+        let mut wrong = truth.clone();
+        wrong[2] = 3;
+        let cons = consensus(&wrong, &[&wrong, &wrong]);
+        assert_eq!(cons, wrong);
+        assert_ne!(cons, truth);
+    }
+
+    #[test]
+    fn prop_consensus_of_identical_reads_is_identity() {
+        prop::check("consensus identity", 40, |rng, _| {
+            let a = prop::dna(rng, 1, 40);
+            assert_eq!(consensus(&a, &[&a, &a]), a);
+        });
+    }
+
+    #[test]
+    fn prop_consensus_majority_wins_everywhere() {
+        // coverage-5 vote with <=1 corrupted read recovers the truth
+        prop::check("consensus majority", 30, |rng, _| {
+            let truth = prop::dna(rng, 8, 30);
+            let mut bad = truth.clone();
+            let i = rng.below(bad.len());
+            bad[i] = (bad[i] + 1) % 4;
+            let cons = consensus(&truth,
+                                 &[&bad, &truth, &truth, &truth]);
+            assert_eq!(cons, truth);
+        });
+    }
+
+    #[test]
+    fn overlap_found_exact() {
+        let a = vec![0u8, 1, 2, 3, 0, 1, 2, 3];
+        let b = vec![0u8, 1, 2, 3, 3, 3, 3];
+        assert_eq!(best_overlap(&a, &b, 3), Some(4));
+    }
+
+    #[test]
+    fn merge_reconstructs_sequence() {
+        // pseudo-random (aperiodic) truth so overlaps are unambiguous
+        let mut rng = crate::util::rng::Rng::new(99);
+        let truth: Vec<u8> = (0..64).map(|_| rng.base()).collect();
+        let reads: Vec<Vec<u8>> = (0..7)
+            .map(|k| truth[k * 8..(k * 8 + 16).min(truth.len())].to_vec())
+            .collect();
+        let contig = merge_reads(&reads, 5);
+        assert_eq!(contig, truth);
+    }
+
+    #[test]
+    fn align_onto_handles_indels() {
+        let scaf = vec![0u8, 1, 2, 3];
+        let other = vec![0u8, 2, 3]; // deletion of '1'
+        let m = align_onto(&scaf, &other);
+        assert_eq!(m[0], Some(0));
+        assert_eq!(m[2], Some(2));
+        assert_eq!(m[3], Some(3));
+    }
+}

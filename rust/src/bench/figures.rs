@@ -1,0 +1,562 @@
+//! Regenerate every table and figure of the paper's evaluation.
+//!
+//! Each function prints the same rows/series the paper reports (DESIGN.md
+//! experiment index). Training-derived panels (Figs 2/7/10/21/22) read the
+//! CSVs produced by `make artifacts`; architecture panels come from the PIM
+//! simulator; Fig 23 runs the full basecall+assembly pipeline end-to-end
+//! through the PJRT runtime.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::basecall::accuracy::evaluate_group;
+use crate::basecall::edit::identity;
+use crate::coordinator::{Coordinator, CoordinatorConfig};
+use crate::genome::pore::PoreModel;
+use crate::genome::synth::{RunSpec, SequencingRun};
+use crate::pim::adc::{CmosAdc, SotAdcArray};
+use crate::pim::device::{reference_ladder, vcma_write_threshold, DeviceParams};
+use crate::pim::mapper::Topology;
+use crate::pim::power;
+use crate::pim::schemes::{evaluate, evaluate_with_adc, Scheme};
+use crate::pim::variation;
+use crate::pipeline;
+
+/// train_results.csv rows keyed by (model, bits, seat).
+type TrainResults = BTreeMap<(String, u32, bool), (f64, f64)>;
+
+fn load_train_results(dir: &str) -> Result<TrainResults> {
+    let text = std::fs::read_to_string(format!("{dir}/train_results.csv"))
+        .context("train_results.csv missing — run `make artifacts`")?;
+    let mut out = TrainResults::new();
+    for line in text.lines().skip(1) {
+        let f: Vec<&str> = line.split(',').collect();
+        if f.len() == 5 {
+            out.insert(
+                (f[0].to_string(), f[1].parse()?, f[2] != "0"),
+                (f[3].parse()?, f[4].parse()?),
+            );
+        }
+    }
+    Ok(out)
+}
+
+fn hr(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+pub fn fig2(dir: &str) -> Result<()> {
+    hr("Figure 2: base-caller comparison (accuracy & modeled GPU speed)");
+    let tr = load_train_results(dir)?;
+    println!("{:<10} {:>10} {:>10} {:>14}", "model", "read acc", "vote acc",
+             "GPU kbp/s");
+    for topo in Topology::all() {
+        let (ra, va) = tr.get(&(topo.name.to_string(), 32, false))
+            .copied().unwrap_or((f64::NAN, f64::NAN));
+        let e = evaluate(Scheme::Gpu, &topo, 10);
+        println!("{:<10} {:>10.4} {:>10.4} {:>14.0}", topo.name, ra, va,
+                 e.throughput() / 1e3);
+    }
+    Ok(())
+}
+
+pub fn fig3() -> Result<()> {
+    hr("Figure 3: random vs systematic errors under read voting");
+    let truth: Vec<u8> = vec![0, 1, 2, 3, 0, 1, 2, 3, 0, 1];
+    let mut random = truth.clone();
+    random[4] = 2; // one read wrong -> outvoted
+    let acc_r = evaluate_group(&[random, truth.clone(), truth.clone()],
+                               &truth);
+    let mut sys = truth.clone();
+    sys[4] = 2; // every read wrong the same way -> survives
+    let acc_s = evaluate_group(&[sys.clone(), sys.clone(), sys], &truth);
+    println!("random error   : read acc {:.3} -> vote acc {:.3} (corrected: {})",
+             acc_r.read_acc, acc_r.vote_acc, acc_r.random_errors);
+    println!("systematic err : read acc {:.3} -> vote acc {:.3} (surviving: {})",
+             acc_s.read_acc, acc_s.vote_acc, acc_s.systematic_errors);
+    Ok(())
+}
+
+pub fn fig7(dir: &str) -> Result<()> {
+    hr("Figure 7: accuracy & speed of quantized Guppy (no SEAT, GPU)");
+    let tr = load_train_results(dir)?;
+    let topo = Topology::guppy();
+    println!("{:>5} {:>10} {:>10} {:>12} {:>8}", "bits", "read acc",
+             "vote acc", "GPU kbp/s", "speedup");
+    let base = evaluate(Scheme::Gpu, &topo, 10).throughput();
+    for bits in [32u32, 16, 8, 5, 4, 3] {
+        let acc = tr.get(&("guppy".into(), bits, false)).copied();
+        // GPU rate doubles per precision halving
+        let rate = crate::pim::schemes::GPU_MAC_RATE_FP32
+            * (32.0 / bits.max(4) as f64);
+        let t = topo.macs_per_base() / rate
+            + crate::pim::schemes::GPU_CTC_PER_STEP * topo.ctc_steps as f64
+              / topo.bases_per_window
+            + crate::pim::schemes::GPU_VOTE_PER_BASE;
+        let tp = 1.0 / t;
+        match acc {
+            Some((ra, va)) => println!(
+                "{bits:>5} {ra:>10.4} {va:>10.4} {:>12.0} {:>7.2}x",
+                tp / 1e3, tp / base),
+            None => println!("{bits:>5} {:>10} {:>10} {:>12.0} {:>7.2}x",
+                             "-", "-", tp / 1e3, tp / base),
+        }
+    }
+    Ok(())
+}
+
+pub fn fig8() -> Result<()> {
+    hr("Figure 8: ADC share of NVM dot-product engine power/area");
+    println!("{:<10} {:>12} {:>12}", "tech", "ADC power %", "ADC area %");
+    for tech in ["reram", "pcm", "stt"] {
+        let (p, a) = power::fig8_breakdown(tech);
+        println!("{tech:<10} {:>11.1}% {:>11.1}%", p * 100.0, a * 100.0);
+    }
+    Ok(())
+}
+
+pub fn fig9() -> Result<()> {
+    hr("Figure 9: execution-time breakdown of 16-bit quantized Guppy (GPU)");
+    let topo = Topology::guppy();
+    let dnn = topo.macs_per_base()
+        / (crate::pim::schemes::GPU_MAC_RATE_FP32 * 2.0);
+    let ctc = crate::pim::schemes::GPU_CTC_PER_STEP * topo.ctc_steps as f64
+        / topo.bases_per_window;
+    let vote = crate::pim::schemes::GPU_VOTE_PER_BASE;
+    let total = dnn + ctc + vote;
+    println!("Conv+GRU+FC : {:>5.1}%  (paper: 46.3%)", dnn / total * 100.0);
+    println!("CTC decode  : {:>5.1}%  (paper: 16.7%)", ctc / total * 100.0);
+    println!("read voting : {:>5.1}%  (paper: 37.0%)", vote / total * 100.0);
+    Ok(())
+}
+
+pub fn fig10(dir: &str) -> Result<()> {
+    hr("Figure 10: training with loss_0 vs loss_1 (SEAT)");
+    let text = std::fs::read_to_string(format!("{dir}/curves_fig10.csv"))
+        .context("curves_fig10.csv missing — run `make artifacts`")?;
+    let mut series: BTreeMap<String, Vec<(u32, f64, f64)>> = BTreeMap::new();
+    for line in text.lines().skip(1) {
+        let f: Vec<&str> = line.split(',').collect();
+        if f.len() == 5 {
+            series.entry(f[0].to_string()).or_default()
+                .push((f[1].parse()?, f[2].parse()?, f[4].parse()?));
+        }
+    }
+    for (name, rows) in series {
+        println!("--- {name} (step, loss, vote_acc)");
+        for (s, l, v) in rows {
+            println!("  {s:>5} {l:>9.3} {v:>7.4}");
+        }
+    }
+    Ok(())
+}
+
+pub fn fig13() -> Result<()> {
+    hr("Figure 13: SOT-MRAM write threshold vs RBL voltage (VCMA)");
+    println!("{:>10} {:>16}", "V_RBL (V)", "write Vth (V)");
+    for v in reference_ladder(8) {
+        println!("{v:>10.2} {:>16.3}", vcma_write_threshold(v));
+    }
+    Ok(())
+}
+
+pub fn fig14() -> Result<()> {
+    hr("Figure 14: switching probability vs write voltage x pulse duration");
+    let d = DeviceParams::default();
+    print!("{:>8}", "V \\ ns");
+    let durations = [0.5, 1.0, 1.56, 2.5, 5.0];
+    for t in durations {
+        print!(" {t:>7.2}");
+    }
+    println!();
+    for i in 0..6 {
+        let v = 0.45 + 0.05 * i as f64;
+        print!("{v:>8.2}");
+        for t in durations {
+            print!(" {:>7.3}", d.switch_probability(v, t * 1e-9));
+        }
+        println!();
+    }
+    Ok(())
+}
+
+pub fn fig15() -> Result<()> {
+    hr("Figure 15: write-duration distribution at 60F^2 (Monte-Carlo)");
+    let st = variation::duration_mc(60.0, variation::ADC_WRITE_VOLTAGE,
+                                    200_000, 7);
+    println!("samples {}  mean {:.3} ns  sigma {:.3} ns  p99.9 {:.3} ns  \
+              worst(1e10 extrapolated) {:.3} ns",
+             st.samples, st.mean_ns, st.sigma_ns, st.p999_ns, st.worst_ns);
+    let max = st.histogram.iter().map(|&(_, c)| c).max().unwrap_or(1);
+    for (ns, count) in &st.histogram {
+        if *count > 0 {
+            let bar = "#".repeat(1 + count * 40 / max);
+            println!("{ns:>7.3} ns |{bar}");
+        }
+    }
+    Ok(())
+}
+
+pub fn fig16() -> Result<()> {
+    hr("Figure 16: worst-case write duration vs cell size");
+    let sizes = [20.0, 30.0, 40.0, 50.0, 60.0, 70.0, 80.0];
+    let curve = variation::worst_case_vs_cell_size(
+        &sizes, variation::ADC_WRITE_VOLTAGE, 60_000, 7);
+    println!("{:>10} {:>16}", "cell F^2", "worst-case (ns)");
+    for (s, w) in curve {
+        let marker = if w <= 1.56 { "  <= 1.56ns target" } else { "" };
+        println!("{s:>10.0} {w:>16.3}{marker}");
+    }
+    println!("(the paper selects 60F^2; §4.2)");
+    Ok(())
+}
+
+pub fn fig21(dir: &str) -> Result<()> {
+    hr("Figure 21: SEAT vs naive quantization on Guppy (vote accuracy)");
+    let tr = load_train_results(dir)?;
+    println!("{:>5} {:>12} {:>12}", "bits", "no SEAT", "SEAT");
+    let fp = tr.get(&("guppy".into(), 32, false)).map(|x| x.1);
+    for bits in [3u32, 4, 5, 8, 16] {
+        let ns = tr.get(&("guppy".into(), bits, false)).map(|x| x.1);
+        let se = tr.get(&("guppy".into(), bits, true)).map(|x| x.1);
+        println!("{bits:>5} {:>12} {:>12}",
+                 ns.map_or("-".into(), |v| format!("{v:.4}")),
+                 se.map_or("-".into(), |v| format!("{v:.4}")));
+    }
+    if let Some(fp) = fp {
+        println!("fp32 reference vote accuracy: {fp:.4}");
+    }
+    Ok(())
+}
+
+pub fn fig22(dir: &str) -> Result<()> {
+    hr("Figure 22: quantization with SEAT across base-callers (vote acc)");
+    let tr = load_train_results(dir)?;
+    println!("{:<10} {:>8} {:>8} {:>8} {:>8} {:>8}",
+             "model", "fp32", "8-bit", "5-bit", "4-bit", "3-bit");
+    for model in ["guppy", "scrappie", "chiron"] {
+        let g = |bits: u32, seat: bool| {
+            tr.get(&(model.to_string(), bits, seat))
+                .map_or("-".to_string(), |x| format!("{:.4}", x.1))
+        };
+        println!("{model:<10} {:>8} {:>8} {:>8} {:>8} {:>8}",
+                 g(32, false), g(8, true), g(5, true), g(4, true),
+                 g(3, true));
+    }
+    Ok(())
+}
+
+/// Fig 23 work-horse: basecall a sequencing run end-to-end and push it
+/// through overlap/assembly/mapping/polish.
+pub fn pipeline_accuracy(dir: &str, model: &str, bits: u32,
+                         spec: RunSpec) -> Result<(f64, f64, f64)> {
+    let pm = PoreModel::load(
+        &format!("{dir}/pore_model.json"))?;
+    let run = SequencingRun::simulate(&pm, spec);
+    let mut coord = Coordinator::new(CoordinatorConfig {
+        model: model.into(),
+        bits,
+        artifacts_dir: dir.into(),
+        ..Default::default()
+    })?;
+    for r in &run.reads {
+        coord.submit(r);
+    }
+    let called = coord.finish()?;
+    // base-call accuracy: identity of each called read vs its truth
+    let mut acc = 0.0;
+    let mut n = 0;
+    let mut called_seqs = Vec::new();
+    for c in &called {
+        let truth = &run.reads.iter().find(|r| r.id == c.read_id)
+            .unwrap().seq;
+        // called read covers the interior of the truth (window trimming);
+        // compare against the aligned prefix window
+        let t = &truth[..truth.len().min(c.seq.len() + 8)];
+        acc += identity(&c.seq, t);
+        n += 1;
+        called_seqs.push(c.seq.clone());
+    }
+    let base_call = acc / n.max(1) as f64;
+    // draft assembly + polish
+    let draft = pipeline::assemble(&called_seqs, 12);
+    let polished = pipeline::polish(&draft, &called_seqs);
+    let draft_acc = best_window_identity(&draft, &run.genome);
+    let polished_acc = best_window_identity(&polished, &run.genome);
+    Ok((base_call, draft_acc, polished_acc))
+}
+
+/// Identity of `seq` against its best-matching window of `genome`.
+fn best_window_identity(seq: &[u8], genome: &[u8]) -> f64 {
+    if seq.is_empty() {
+        return 0.0;
+    }
+    let idx = pipeline::mapping::DraftIndex::build(genome);
+    match pipeline::mapping::map_read(seq, genome, &idx) {
+        Some(m) => m.identity,
+        None => identity(seq, &genome[..seq.len().min(genome.len())]),
+    }
+}
+
+pub fn fig23(dir: &str) -> Result<()> {
+    hr("Figure 23: base-call / draft / polished accuracy through the \
+        full pipeline");
+    let spec = RunSpec {
+        genome_len: 1200,
+        coverage: 6,
+        read_len_min: 200,
+        read_len_max: 320,
+        seed: 21,
+    };
+    println!("{:<16} {:>10} {:>10} {:>10}", "config", "base-call", "draft",
+             "polished");
+    for (model, bits) in [("guppy", 32u32), ("guppy", 5), ("guppy", 4)] {
+        match pipeline_accuracy(dir, model, bits, spec) {
+            Ok((b, d, p)) => println!(
+                "{:<16} {b:>10.4} {d:>10.4} {p:>10.4}",
+                format!("{model}-{bits}bit")),
+            Err(e) => println!("{:<16} unavailable: {e}",
+                               format!("{model}-{bits}bit")),
+        }
+    }
+    Ok(())
+}
+
+pub fn fig24() -> Result<()> {
+    hr("Figure 24: throughput / per-Watt / per-mm^2 across schemes");
+    for topo in Topology::all() {
+        println!("--- {}", topo.name);
+        println!("{:<8} {:>12} {:>14} {:>14} {:>9} {:>9}",
+                 "scheme", "kbp/s", "bp/s/W", "bp/s/mm2", "vs ISAAC",
+                 "step");
+        let base = evaluate(Scheme::Isaac, &topo, 10);
+        let mut prev: Option<f64> = None;
+        for s in Scheme::all() {
+            let e = evaluate(s, &topo, 10);
+            let vs = e.throughput() / base.throughput();
+            let step = prev.map_or(String::from("-"),
+                                   |p| format!("{:+.1}%",
+                                               (e.throughput() / p - 1.0)
+                                               * 100.0));
+            println!("{:<8} {:>12.1} {:>14.1} {:>14.1} {:>8.2}x {:>9}",
+                     s.name(), e.throughput() / 1e3,
+                     e.throughput_per_watt(), e.throughput_per_mm2(), vs,
+                     step);
+            if matches!(s, Scheme::Isaac | Scheme::Q16 | Scheme::Seat
+                        | Scheme::Adc | Scheme::Ctc | Scheme::Helix) {
+                prev = Some(e.throughput());
+            }
+        }
+    }
+    use crate::pim::schemes::geomean_ratio;
+    println!("\ngeomean Helix vs ISAAC:  throughput {:.2}x (paper 6x)   \
+              /W {:.2}x (paper 11.9x)   /mm2 {:.2}x (paper 7.5x)",
+             geomean_ratio(Scheme::Helix, Scheme::Isaac, 10,
+                           |e| e.throughput()),
+             geomean_ratio(Scheme::Helix, Scheme::Isaac, 10,
+                           |e| e.throughput_per_watt()),
+             geomean_ratio(Scheme::Helix, Scheme::Isaac, 10,
+                           |e| e.throughput_per_mm2()));
+    Ok(())
+}
+
+pub fn fig25() -> Result<()> {
+    hr("Figure 25: SOT-MRAM ADC arrays vs low-resolution CMOS ADCs");
+    println!("{:<22} {:>12} {:>12}", "datapath", "bp/s/W", "bp/s/mm2");
+    for topo in Topology::all() {
+        println!("--- {}", topo.name);
+        for (name, bits) in [("8-bit CMOS (ISAAC)", Some(8u32)),
+                             ("6-bit CMOS (SRE)", Some(6)),
+                             ("5-bit CMOS (IMP)", Some(5))] {
+            let e = evaluate_with_adc(Scheme::Seat, &topo, 10, bits);
+            println!("{name:<22} {:>12.1} {:>12.1}",
+                     e.throughput_per_watt(), e.throughput_per_mm2());
+        }
+        let e = evaluate(Scheme::Adc, &topo, 10);
+        println!("{:<22} {:>12.1} {:>12.1}", "SOT-MRAM ADC (Helix)",
+                 e.throughput_per_watt(), e.throughput_per_mm2());
+    }
+    Ok(())
+}
+
+pub fn fig26() -> Result<()> {
+    hr("Figure 26: sensitivity of the crossbar CTC engine to beam width");
+    println!("{:>6} {:>14} {:>14} {:>10}", "width", "ADC kbp/s",
+             "CTC kbp/s", "gain");
+    let topo = Topology::guppy();
+    for w in [2usize, 5, 10, 20, 30] {
+        let adc = evaluate(Scheme::Adc, &topo, w).throughput();
+        let ctc = evaluate(Scheme::Ctc, &topo, w).throughput();
+        println!("{w:>6} {:>14.1} {:>14.1} {:>9.2}x", adc / 1e3, ctc / 1e3,
+                 ctc / adc);
+    }
+    Ok(())
+}
+
+pub fn table1() -> Result<()> {
+    hr("Table 1: SOT-MRAM process-variation parameters");
+    let d = DeviceParams::default();
+    let s = crate::pim::device::VariationSigmas::default();
+    println!("WR/RD transistor width : {} nm (±{:.0}%)", d.w_wt, s.w_wt * 100.0);
+    println!("WR/RD transistor length: {} nm (±{:.0}%)", d.l_wt, s.l_wt * 100.0);
+    println!("threshold voltage      : {} V (±{:.0}%)", d.v_th, s.v_th * 100.0);
+    println!("MTJ R*A product        : {} Ohm*um^2 (±{:.0}%)", d.ra, s.ra * 100.0);
+    println!("MTJ cross-section      : {} nm^2 (±{:.0}%)", d.area_nm2,
+             s.area * 100.0);
+    println!("stability Delta        : {} (±{:.0}%)", d.delta, s.delta * 100.0);
+    Ok(())
+}
+
+pub fn table2() -> Result<()> {
+    hr("Table 2: area and power of Helix (model rollup)");
+    let (pp, pa): (f64, f64) = power::tile_peripherals().iter()
+        .fold((0.0, 0.0), |(p, a), c| (p + c.power_mw, a + c.area_mm2));
+    println!("tile peripherals       : {pp:.1} mW  {pa:.4} mm^2");
+    let (ip, ia) = power::ima_with_cmos_adc(&CmosAdc::isaac());
+    println!("ISAAC IMA (x12)        : {:.1} mW  {:.4} mm^2", ip * 12.0,
+             ia * 12.0);
+    let (hp, ha) = power::ima_with_sot_adc();
+    println!("Helix IMA (x12)        : {:.1} mW  {:.4} mm^2", hp * 12.0,
+             ha * 12.0);
+    let i = power::isaac_chip();
+    let h = power::helix_chip();
+    println!("ISAAC tile / chip      : {:.0} mW, {:.3} mm^2  ->  {:.1} W, \
+              {:.1} mm^2 (paper 330mW/0.372mm^2, 55.4W/62.5mm^2)",
+             i.tile_power_mw, i.tile_area_mm2, i.power_w, i.area_mm2);
+    println!("Helix tile / chip      : {:.0} mW, {:.3} mm^2  ->  {:.1} W, \
+              {:.1} mm^2 (paper 163mW/0.259mm^2, 25.7W/43.83mm^2)",
+             h.tile_power_mw, h.tile_area_mm2, h.power_w, h.area_mm2);
+    let sot = SotAdcArray::paper();
+    println!("SOT ADC array          : {:.3} mW, {:.6} mm^2 @ {} MHz",
+             sot.power_mw(), sot.area_mm2(), sot.freq_mhz);
+    let cmp = power::comparator_block();
+    println!("comparator block       : {:.1} W, {:.2} mm^2",
+             cmp.power_mw / 1000.0, cmp.area_mm2);
+    Ok(())
+}
+
+pub fn table3() -> Result<()> {
+    hr("Table 3: base-caller architectures (full-size, as mapped)");
+    println!("{:<10} {:>12} {:>12} {:>10} {:>8}", "model", "MACs/window",
+             "params", "CTC steps", "layers");
+    for t in Topology::all() {
+        println!("{:<10} {:>12.2e} {:>12.2e} {:>10} {:>8}", t.name,
+                 t.total_macs(), t.total_params(), t.ctc_steps,
+                 t.layers.len());
+    }
+    Ok(())
+}
+
+pub fn table4() -> Result<()> {
+    hr("Table 4: datasets (synthetic equivalents; DESIGN.md §Substitutions)");
+    let pm = PoreModel::synthetic(7);
+    println!("{:<16} {:>9} {:>16} {:>10}", "sample", "# reads",
+             "median len (b)", "coverage");
+    for (name, spec) in [
+        ("Lambda-like", RunSpec { genome_len: 8000, coverage: 30,
+                                  seed: 41, ..Default::default() }),
+        ("E.coli-like", RunSpec { genome_len: 12000, coverage: 30,
+                                  seed: 42, ..Default::default() }),
+        ("M.tb-like", RunSpec { genome_len: 10000, coverage: 40,
+                                read_len_min: 250, read_len_max: 450,
+                                seed: 43 }),
+        ("human-like", RunSpec { genome_len: 15000, coverage: 30,
+                                 read_len_min: 350, read_len_max: 700,
+                                 seed: 44 }),
+    ] {
+        let run = SequencingRun::simulate(&pm, spec);
+        let mut lens: Vec<usize> = run.reads.iter()
+            .map(|r| r.seq.len())
+            .collect();
+        lens.sort_unstable();
+        println!("{name:<16} {:>9} {:>16} {:>10.1}", run.reads.len(),
+                 lens[lens.len() / 2], run.mean_coverage());
+    }
+    Ok(())
+}
+
+pub fn table5() -> Result<()> {
+    hr("Table 5: CPU vs GPU vs Helix");
+    use crate::pim::schemes as s;
+    let h = power::helix_chip();
+    println!("{:<12} {:>12} {:>12} {:>12}", "", "CPU", "GPU", "Helix");
+    println!("{:<12} {:>12} {:>12} {:>12}", "cores", "8", "2560",
+             crate::pim::isaac::Chip::helix().total_arrays());
+    println!("{:<12} {:>12} {:>12} {:>12}", "freq", "3.2 GHz", "1.5 GHz",
+             "10 MHz");
+    println!("{:<12} {:>11.0}W {:>11.0}W {:>11.1}W", "TDP", s::CPU_TDP_W,
+             s::GPU_TDP_W, h.power_w);
+    println!("{:<12} {:>9}mm2 {:>9}mm2 {:>8.1}mm2", "area", s::CPU_AREA_MM2,
+             s::GPU_AREA_MM2, h.area_mm2);
+    Ok(())
+}
+
+/// Run one figure/table by id, or "all".
+pub fn run(which: &str, artifacts_dir: &str) -> Result<()> {
+    let d = artifacts_dir;
+    match which {
+        "fig2" => fig2(d)?,
+        "fig3" => fig3()?,
+        "fig7" => fig7(d)?,
+        "fig8" => fig8()?,
+        "fig9" => fig9()?,
+        "fig10" => fig10(d)?,
+        "fig13" => fig13()?,
+        "fig14" => fig14()?,
+        "fig15" => fig15()?,
+        "fig16" => fig16()?,
+        "fig21" => fig21(d)?,
+        "fig22" => fig22(d)?,
+        "fig23" => fig23(d)?,
+        "fig24" => fig24()?,
+        "fig25" => fig25()?,
+        "fig26" => fig26()?,
+        "table1" => table1()?,
+        "table2" => table2()?,
+        "table3" => table3()?,
+        "table4" => table4()?,
+        "table5" => table5()?,
+        "all" => {
+            for f in ["fig2", "fig3", "fig7", "fig8", "fig9", "fig10",
+                      "fig13", "fig14", "fig15", "fig16", "fig21", "fig22",
+                      "fig23", "fig24", "fig25", "fig26", "table1",
+                      "table2", "table3", "table4", "table5"] {
+                if let Err(e) = run(f, d) {
+                    println!("[{f}] unavailable: {e}");
+                }
+            }
+        }
+        other => anyhow::bail!("unknown figure id '{other}' \
+                                (fig2..fig26, table1..table5, all)"),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn architecture_figures_run_without_artifacts() {
+        // Everything not derived from training CSVs must work standalone.
+        for f in ["fig3", "fig8", "fig9", "fig13", "fig14", "fig16",
+                  "fig24", "fig25", "fig26", "table1", "table2", "table3",
+                  "table4", "table5"] {
+            run(f, "/nonexistent").unwrap_or_else(|e| panic!("{f}: {e}"));
+        }
+    }
+
+    #[test]
+    fn unknown_figure_errors() {
+        assert!(run("fig99", ".").is_err());
+    }
+
+    #[test]
+    fn best_window_identity_finds_subsequence() {
+        let mut rng = Rng::new(3);
+        let genome: Vec<u8> = (0..500).map(|_| rng.base()).collect();
+        let seq = genome[100..300].to_vec();
+        assert!(best_window_identity(&seq, &genome) > 0.99);
+    }
+}

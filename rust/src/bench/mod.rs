@@ -1,0 +1,9 @@
+//! Benchmark + figure-regeneration harness.
+//!
+//! `figures` re-creates every table and figure of the paper's evaluation
+//! (DESIGN.md experiment index); `timer` is the micro-benchmark scaffold the
+//! `rust/benches/*.rs` binaries use (criterion is unavailable in the
+//! offline build — DESIGN.md §Substitutions).
+
+pub mod figures;
+pub mod timer;

@@ -1,0 +1,80 @@
+//! Micro-benchmark scaffold: warmup + timed iterations + robust stats.
+//! In-tree replacement for criterion (offline build).
+
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl Stats {
+    pub fn per_iter(&self) -> String {
+        fmt_ns(self.median_ns)
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Time `f` adaptively: warm up, then run until ~`budget_ms` of samples.
+pub fn bench<F: FnMut()>(name: &str, budget_ms: u64, mut f: F) -> Stats {
+    // warmup + calibration
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_nanos().max(1) as f64;
+    let target = (budget_ms as f64 * 1e6 / once).clamp(3.0, 10_000.0) as usize;
+    let mut samples = Vec::with_capacity(target);
+    for _ in 0..target {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let stats = Stats {
+        iters: samples.len(),
+        mean_ns: mean,
+        median_ns: samples[samples.len() / 2],
+        p95_ns: samples[(samples.len() - 1) * 95 / 100],
+    };
+    println!("{name:<44} {:>12}/iter  (n={}, mean {}, p95 {})",
+             stats.per_iter(), stats.iters, fmt_ns(stats.mean_ns),
+             fmt_ns(stats.p95_ns));
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut acc = 0u64;
+        let s = bench("noop-ish", 5, || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(s.iters >= 3);
+        assert!(s.mean_ns > 0.0);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5e4).contains("µs"));
+        assert!(fmt_ns(5e7).contains("ms"));
+        assert!(fmt_ns(5e9).contains("s"));
+    }
+}

@@ -1,0 +1,124 @@
+//! Dynamic batching: size-or-deadline policy over an mpsc queue.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// launch as soon as this many items are queued.
+    pub max_batch: usize,
+    /// ... or when the oldest item has waited this long.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(20) }
+    }
+}
+
+/// A collected batch plus queueing telemetry.
+#[derive(Debug)]
+pub struct Batch<T> {
+    pub items: Vec<T>,
+    /// how long the oldest item waited before launch.
+    pub oldest_wait: Duration,
+    /// whether the size (true) or the deadline (false) triggered launch.
+    pub full: bool,
+}
+
+/// Pulls batches off a channel according to the policy. Returns None when
+/// the channel is closed and drained.
+pub struct Batcher<T> {
+    rx: Receiver<T>,
+    policy: BatchPolicy,
+    closed: bool,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(rx: Receiver<T>, policy: BatchPolicy) -> Self {
+        Batcher { rx, policy, closed: false }
+    }
+
+    pub fn next_batch(&mut self) -> Option<Batch<T>> {
+        if self.closed {
+            return None;
+        }
+        // block for the first item
+        let first = match self.rx.recv() {
+            Ok(x) => x,
+            Err(_) => {
+                self.closed = true;
+                return None;
+            }
+        };
+        let start = Instant::now();
+        let mut items = vec![first];
+        let mut full = false;
+        while items.len() < self.policy.max_batch {
+            let remaining = self.policy.max_wait
+                .checked_sub(start.elapsed())
+                .unwrap_or(Duration::ZERO);
+            match self.rx.recv_timeout(remaining) {
+                Ok(x) => items.push(x),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => {
+                    self.closed = true;
+                    break;
+                }
+            }
+        }
+        if items.len() >= self.policy.max_batch {
+            full = true;
+        }
+        Some(Batch { items, oldest_wait: start.elapsed(), full })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn size_trigger() {
+        let (tx, rx) = channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let mut b = Batcher::new(rx, BatchPolicy {
+            max_batch: 4, max_wait: Duration::from_secs(5),
+        });
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.items, vec![0, 1, 2, 3]);
+        assert!(batch.full);
+        assert_eq!(b.next_batch().unwrap().items, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn deadline_trigger() {
+        let (tx, rx) = channel();
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        let mut b = Batcher::new(rx, BatchPolicy {
+            max_batch: 100, max_wait: Duration::from_millis(10),
+        });
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.items, vec![1, 2]);
+        assert!(!batch.full);
+        assert!(batch.oldest_wait >= Duration::from_millis(9));
+    }
+
+    #[test]
+    fn drains_after_close() {
+        let (tx, rx) = channel();
+        tx.send(7).unwrap();
+        drop(tx);
+        let mut b = Batcher::new(rx, BatchPolicy::default());
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.items, vec![7]);
+        assert!(b.next_batch().is_none());
+        assert!(b.next_batch().is_none());
+    }
+}

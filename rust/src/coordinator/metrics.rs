@@ -1,0 +1,104 @@
+//! Coordinator telemetry: lock-free counters + derived rates.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+#[derive(Debug)]
+pub struct Metrics {
+    start: Instant,
+    pub reads_in: AtomicU64,
+    pub reads_out: AtomicU64,
+    pub windows: AtomicU64,
+    pub batches: AtomicU64,
+    pub batch_items: AtomicU64,
+    pub full_batches: AtomicU64,
+    pub bases_called: AtomicU64,
+    pub dnn_micros: AtomicU64,
+    pub decode_micros: AtomicU64,
+    pub vote_micros: AtomicU64,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics {
+            start: Instant::now(),
+            reads_in: AtomicU64::new(0),
+            reads_out: AtomicU64::new(0),
+            windows: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batch_items: AtomicU64::new(0),
+            full_batches: AtomicU64::new(0),
+            bases_called: AtomicU64::new(0),
+            dnn_micros: AtomicU64::new(0),
+            decode_micros: AtomicU64::new(0),
+            vote_micros: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Metrics {
+    pub fn add(&self, counter: &AtomicU64, n: u64) {
+        counter.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn mean_batch_fill(&self, max_batch: usize) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.batch_items.load(Ordering::Relaxed) as f64
+            / (b as f64 * max_batch as f64)
+    }
+
+    /// Base-calling throughput so far (bases/s).
+    pub fn throughput(&self) -> f64 {
+        let secs = self.start.elapsed().as_secs_f64().max(1e-9);
+        self.bases_called.load(Ordering::Relaxed) as f64 / secs
+    }
+
+    pub fn report(&self, max_batch: usize) -> String {
+        format!(
+            "reads {}->{}  windows {}  batches {} (fill {:.2})  bases {}  \
+             t_dnn {:.1}ms t_decode {:.1}ms t_vote {:.1}ms  {:.0} bp/s",
+            self.reads_in.load(Ordering::Relaxed),
+            self.reads_out.load(Ordering::Relaxed),
+            self.windows.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_batch_fill(max_batch),
+            self.bases_called.load(Ordering::Relaxed),
+            self.dnn_micros.load(Ordering::Relaxed) as f64 / 1e3,
+            self.decode_micros.load(Ordering::Relaxed) as f64 / 1e3,
+            self.vote_micros.load(Ordering::Relaxed) as f64 / 1e3,
+            self.throughput(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::default();
+        m.add(&m.windows, 5);
+        m.add(&m.windows, 3);
+        assert_eq!(m.windows.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn batch_fill() {
+        let m = Metrics::default();
+        m.add(&m.batches, 2);
+        m.add(&m.batch_items, 48);
+        assert!((m.mean_batch_fill(32) - 0.75).abs() < 1e-12);
+        assert_eq!(Metrics::default().mean_batch_fill(32), 0.0);
+    }
+
+    #[test]
+    fn report_contains_counts() {
+        let m = Metrics::default();
+        m.add(&m.bases_called, 123);
+        assert!(m.report(32).contains("bases 123"));
+    }
+}

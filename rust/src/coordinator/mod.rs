@@ -1,0 +1,21 @@
+//! Layer-3 coordinator: the serving front of the system.
+//!
+//! A staged, threaded pipeline (DESIGN.md; tokio is unavailable in the
+//! offline build, so stages are OS threads joined by mpsc channels — same
+//! architecture, no async runtime):
+//!
+//!   submit(read) -> [windower] -> [dynamic batcher + DNN executor thread
+//!   (owns the PJRT client)] -> [CTC decode worker pool] -> [per-read
+//!   collector + voter] -> called reads out.
+//!
+//! The batcher implements the size-or-deadline policy of serving systems
+//! (vLLM-style): a batch launches when full OR when the oldest queued
+//! window exceeds the deadline.
+
+pub mod batcher;
+pub mod metrics;
+pub mod server;
+
+pub use batcher::{Batch, Batcher, BatchPolicy};
+pub use metrics::Metrics;
+pub use server::{CalledRead, Coordinator, CoordinatorConfig};

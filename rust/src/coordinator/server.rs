@@ -1,0 +1,267 @@
+//! The coordinator proper: read router -> window batcher -> DNN executor
+//! (PJRT, single owner thread) -> CTC decode pool -> per-read collector +
+//! voter.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::basecall::ctc::{beam_search, LogProbs};
+use crate::basecall::vote::consensus;
+use crate::genome::dataset::windows_from_read;
+use crate::genome::synth::Read;
+use crate::runtime::Engine;
+
+use super::batcher::{Batcher, BatchPolicy};
+use super::metrics::Metrics;
+
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    pub model: String,
+    pub bits: u32,
+    /// window hop in samples; window length comes from the artifact meta.
+    pub hop: usize,
+    pub beam_width: usize,
+    pub decode_threads: usize,
+    pub policy: BatchPolicy,
+    pub artifacts_dir: String,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            model: "guppy".into(),
+            bits: 32,
+            hop: 100,
+            beam_width: 10,
+            decode_threads: 2,
+            policy: BatchPolicy::default(),
+            artifacts_dir: crate::runtime::meta::default_artifacts_dir(),
+        }
+    }
+}
+
+/// A fully base-called read: per-window decodes voted into a consensus and
+/// spliced into one sequence.
+#[derive(Clone, Debug)]
+pub struct CalledRead {
+    pub read_id: usize,
+    pub seq: Vec<u8>,
+    /// per-window decoded fragments (pre-splice), for accuracy accounting.
+    pub window_decodes: Vec<Vec<u8>>,
+}
+
+struct WindowJob {
+    read_id: usize,
+    window_idx: usize,
+    signal: Vec<f32>,
+}
+
+struct DecodeJob {
+    read_id: usize,
+    window_idx: usize,
+    lp: LogProbs,
+}
+
+struct DecodedWindow {
+    read_id: usize,
+    window_idx: usize,
+    seq: Vec<u8>,
+}
+
+/// Staged pipeline coordinator. Construct, `submit` reads, then `finish`.
+pub struct Coordinator {
+    cfg: CoordinatorConfig,
+    window: usize,
+    tx_windows: Option<Sender<WindowJob>>,
+    dnn_thread: Option<JoinHandle<Result<()>>>,
+    decode_threads: Vec<JoinHandle<()>>,
+    rx_decoded: Receiver<DecodedWindow>,
+    pub metrics: Arc<Metrics>,
+    expected: HashMap<usize, usize>,
+}
+
+impl Coordinator {
+    pub fn new(cfg: CoordinatorConfig) -> Result<Coordinator> {
+        // validate metadata on the caller thread for early errors
+        let meta = crate::runtime::Meta::load(&cfg.artifacts_dir)?;
+        let window = meta.window;
+        let batches = meta.batches(&cfg.model, cfg.bits);
+        anyhow::ensure!(!batches.is_empty(),
+                        "no artifacts for {}/{}b", cfg.model, cfg.bits);
+        let metrics = Arc::new(Metrics::default());
+
+        let (tx_windows, rx_windows) = channel::<WindowJob>();
+        let (tx_decode, rx_decode) = channel::<DecodeJob>();
+        let (tx_decoded, rx_decoded) = channel::<DecodedWindow>();
+        let (tx_ready, rx_ready) = channel::<Result<()>>();
+
+        // DNN executor: the PJRT client is not Send, so the engine is both
+        // constructed and used inside its owner thread.
+        let m = metrics.clone();
+        let c = cfg.clone();
+        let dnn_thread = std::thread::spawn(move || -> Result<()> {
+            let mut engine = match Engine::new(&c.artifacts_dir) {
+                Ok(mut e) => {
+                    // warm the executable cache; report readiness
+                    let mut init = Ok(());
+                    for b in e.meta.batches(&c.model, c.bits) {
+                        if let Err(err) = e.load(&c.model, c.bits, b) {
+                            init = Err(err);
+                            break;
+                        }
+                    }
+                    let ok = init.is_ok();
+                    let _ = tx_ready.send(init);
+                    if !ok {
+                        return Ok(());
+                    }
+                    e
+                }
+                Err(err) => {
+                    let _ = tx_ready.send(Err(err));
+                    return Ok(());
+                }
+            };
+            let mut batcher = Batcher::new(rx_windows, c.policy);
+            while let Some(batch) = batcher.next_batch() {
+                let t0 = Instant::now();
+                let sigs: Vec<Vec<f32>> = batch.items.iter()
+                    .map(|j| j.signal.clone())
+                    .collect();
+                let lps = engine.run_windows(&c.model, c.bits, &sigs)?;
+                m.add(&m.batches, 1);
+                m.add(&m.batch_items, batch.items.len() as u64);
+                if batch.full {
+                    m.add(&m.full_batches, 1);
+                }
+                m.add(&m.dnn_micros, t0.elapsed().as_micros() as u64);
+                for (job, lp) in batch.items.into_iter().zip(lps) {
+                    let _ = tx_decode.send(DecodeJob {
+                        read_id: job.read_id,
+                        window_idx: job.window_idx,
+                        lp,
+                    });
+                }
+            }
+            Ok(())
+        });
+
+        // decode pool.
+        let rx_decode = Arc::new(Mutex::new(rx_decode));
+        let mut decode_threads = Vec::new();
+        for _ in 0..cfg.decode_threads.max(1) {
+            let rx = rx_decode.clone();
+            let tx = tx_decoded.clone();
+            let m = metrics.clone();
+            let beam = cfg.beam_width;
+            decode_threads.push(std::thread::spawn(move || {
+                loop {
+                    let job = match rx.lock().unwrap().recv() {
+                        Ok(j) => j,
+                        Err(_) => break,
+                    };
+                    let t0 = Instant::now();
+                    let seq = beam_search(&job.lp, beam);
+                    m.add(&m.decode_micros, t0.elapsed().as_micros() as u64);
+                    let _ = tx.send(DecodedWindow {
+                        read_id: job.read_id,
+                        window_idx: job.window_idx,
+                        seq,
+                    });
+                }
+            }));
+        }
+        drop(tx_decoded);
+
+        // wait for the engine thread to finish compiling (or fail fast)
+        rx_ready.recv()
+            .map_err(|_| anyhow::anyhow!("engine thread died during init"))??;
+
+        Ok(Coordinator {
+            cfg,
+            window,
+            tx_windows: Some(tx_windows),
+            dnn_thread: Some(dnn_thread),
+            decode_threads,
+            rx_decoded,
+            metrics,
+            expected: HashMap::new(),
+        })
+    }
+
+    /// Split a read into windows and enqueue them.
+    pub fn submit(&mut self, read: &Read) {
+        let ws = windows_from_read(read, self.window, self.cfg.hop);
+        self.metrics.add(&self.metrics.reads_in, 1);
+        self.metrics.add(&self.metrics.windows, ws.len() as u64);
+        self.expected.insert(read.id, ws.len());
+        if let Some(tx) = &self.tx_windows {
+            for (i, w) in ws.into_iter().enumerate() {
+                let _ = tx.send(WindowJob {
+                    read_id: read.id,
+                    window_idx: i,
+                    signal: w.signal,
+                });
+            }
+        }
+    }
+
+    /// Close the intake, drain the pipeline, vote per-read consensus, and
+    /// splice window decodes into called reads.
+    pub fn finish(mut self) -> Result<Vec<CalledRead>> {
+        drop(self.tx_windows.take());
+        if let Some(h) = self.dnn_thread.take() {
+            h.join().map_err(|_| anyhow::anyhow!("dnn thread panicked"))??;
+        }
+        for h in self.decode_threads.drain(..) {
+            let _ = h.join();
+        }
+        // collect decoded windows per read
+        let mut per_read: HashMap<usize, Vec<(usize, Vec<u8>)>> =
+            HashMap::new();
+        while let Ok(d) = self.rx_decoded.recv_timeout(Duration::ZERO) {
+            per_read.entry(d.read_id).or_default()
+                .push((d.window_idx, d.seq));
+        }
+        let mut out = Vec::new();
+        for (read_id, mut wins) in per_read {
+            wins.sort_by_key(|(i, _)| *i);
+            let decodes: Vec<Vec<u8>> = wins.into_iter()
+                .map(|(_, s)| s)
+                .collect();
+            let t0 = Instant::now();
+            // within-read voting (the ⌊L/T⌋-reads-per-signal vote of §2.2):
+            // neighbouring windows overlap, so vote each window against its
+            // neighbours before splicing.
+            let voted: Vec<Vec<u8>> = (0..decodes.len())
+                .map(|i| {
+                    let mut nbrs: Vec<&[u8]> = Vec::new();
+                    if i > 0 {
+                        nbrs.push(&decodes[i - 1]);
+                    }
+                    if i + 1 < decodes.len() {
+                        nbrs.push(&decodes[i + 1]);
+                    }
+                    consensus(&decodes[i], &nbrs)
+                })
+                .collect();
+            let seq = crate::basecall::vote::merge_reads(&voted, 6);
+            self.metrics.add(&self.metrics.vote_micros,
+                             t0.elapsed().as_micros() as u64);
+            self.metrics.add(&self.metrics.bases_called, seq.len() as u64);
+            self.metrics.add(&self.metrics.reads_out, 1);
+            out.push(CalledRead { read_id, seq, window_decodes: decodes });
+        }
+        out.sort_by_key(|r| r.read_id);
+        Ok(out)
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.cfg.policy.max_batch
+    }
+}

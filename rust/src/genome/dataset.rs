@@ -1,0 +1,129 @@
+//! Windowing: chop read signals into fixed-size model inputs with
+//! ground-truth labels (rust twin of `pore.windows_from_read`).
+
+use super::synth::Read;
+
+/// One model input window plus its ground truth.
+#[derive(Clone, Debug)]
+pub struct Window {
+    pub read_id: usize,
+    /// offset of the window start in the read signal.
+    pub sample_start: usize,
+    /// offset of the first labeled base within the read.
+    pub base_start: usize,
+    pub signal: Vec<f32>,
+    /// ground-truth bases fully contained in the window.
+    pub truth: Vec<u8>,
+}
+
+/// Chop one read into windows of `window` samples every `hop` samples.
+/// A base is labeled iff ALL its samples fall inside the window.
+pub fn windows_from_read(read: &Read, window: usize, hop: usize)
+                         -> Vec<Window> {
+    let mut out = Vec::new();
+    if read.signal.len() < window {
+        return out;
+    }
+    let mut start = 0usize;
+    while start + window <= read.signal.len() {
+        let sl = &read.owner[start..start + window];
+        let mut lo = sl[0] as usize;
+        let mut hi = *sl.last().unwrap() as usize;
+        if start > 0 && read.owner[start - 1] as usize == lo {
+            lo += 1;
+        }
+        if start + window < read.owner.len()
+            && read.owner[start + window] as usize == hi
+        {
+            hi = hi.saturating_sub(1);
+        }
+        if hi >= lo {
+            out.push(Window {
+                read_id: read.id,
+                sample_start: start,
+                base_start: lo,
+                signal: read.signal[start..start + window].to_vec(),
+                truth: read.seq[lo..=hi].to_vec(),
+            });
+        }
+        start += hop;
+    }
+    out
+}
+
+/// The per-signal voting group of the paper (§2.2: "⌊L/T⌋ reads containing
+/// the same signal element vote"): all windows of one read whose base spans
+/// overlap a given center window.
+pub fn overlapping_groups(windows: &[Window]) -> Vec<(usize, Vec<usize>)> {
+    let mut groups = Vec::new();
+    for (i, w) in windows.iter().enumerate() {
+        let lo = w.base_start;
+        let hi = w.base_start + w.truth.len();
+        let members: Vec<usize> = windows.iter().enumerate()
+            .filter(|(_, o)| {
+                o.read_id == w.read_id
+                    && o.base_start < hi
+                    && o.base_start + o.truth.len() > lo
+            })
+            .map(|(j, _)| j)
+            .collect();
+        if members.len() >= 2 {
+            groups.push((i, members));
+        }
+    }
+    groups
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::genome::pore::PoreModel;
+    use crate::util::rng::Rng;
+
+    fn mk_read(len: usize, seed: u64) -> Read {
+        let pm = PoreModel::synthetic(7);
+        let mut rng = Rng::new(seed);
+        let seq: Vec<u8> = (0..len).map(|_| rng.base()).collect();
+        let (signal, owner) = pm.simulate(&seq, &mut rng);
+        Read { id: 0, start: 0, seq, signal, owner }
+    }
+
+    #[test]
+    fn window_truth_matches_read() {
+        let read = mk_read(120, 3);
+        let ws = windows_from_read(&read, 300, 100);
+        assert!(!ws.is_empty());
+        for w in &ws {
+            assert_eq!(w.signal.len(), 300);
+            assert_eq!(&read.seq[w.base_start..w.base_start + w.truth.len()],
+                       &w.truth[..]);
+            assert!(!w.truth.is_empty());
+        }
+    }
+
+    #[test]
+    fn short_read_yields_nothing() {
+        let read = mk_read(10, 4);
+        assert!(windows_from_read(&read, 10_000, 100).is_empty());
+    }
+
+    #[test]
+    fn hop_controls_window_count() {
+        let read = mk_read(200, 5);
+        let dense = windows_from_read(&read, 300, 50).len();
+        let sparse = windows_from_read(&read, 300, 200).len();
+        assert!(dense > sparse);
+    }
+
+    #[test]
+    fn groups_are_overlapping() {
+        let read = mk_read(200, 6);
+        let ws = windows_from_read(&read, 300, 100);
+        let groups = overlapping_groups(&ws);
+        assert!(!groups.is_empty());
+        for (center, members) in groups {
+            assert!(members.contains(&center));
+            assert!(members.len() >= 2);
+        }
+    }
+}

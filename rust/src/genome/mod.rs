@@ -1,0 +1,12 @@
+//! Synthetic genome substrate: the rust twin of `python/compile/pore.py`
+//! (DESIGN.md §Substitutions — stands in for the R9.4 datasets of Table 4).
+//! The pore model table is loaded from `artifacts/pore_model.json` written by
+//! the python build path, so both languages synthesize statistically
+//! identical signals.
+
+pub mod dataset;
+pub mod pore;
+pub mod synth;
+
+pub use pore::PoreModel;
+pub use synth::{random_genome, Read};

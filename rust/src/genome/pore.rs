@@ -1,0 +1,157 @@
+//! Pore model: k-mer current table + dwell/noise parameters, shared with the
+//! python training path through `artifacts/pore_model.json`.
+
+use anyhow::{Context, Result};
+
+use crate::util::{json::Json, rng::Rng};
+
+#[derive(Clone, Debug)]
+pub struct PoreModel {
+    pub k: usize,
+    /// 4^k standardized current levels, indexed by k-mer id.
+    pub levels: Vec<f32>,
+    pub dwell_min: u32,
+    pub dwell_max: u32,
+    pub noise_sigma: f32,
+    /// samples per base-calling window (the model input length).
+    pub window: usize,
+}
+
+impl PoreModel {
+    pub fn load(path: &str) -> Result<PoreModel> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading pore model {path}"))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parse {path}: {e}"))?;
+        let k = j.get("k").and_then(Json::as_usize).context("k")?;
+        let levels = j.get("levels").and_then(Json::as_f32_vec)
+            .context("levels")?;
+        anyhow::ensure!(levels.len() == 4usize.pow(k as u32),
+                        "pore table size {} != 4^{k}", levels.len());
+        Ok(PoreModel {
+            k,
+            levels,
+            dwell_min: j.get("dwell_min").and_then(Json::as_usize)
+                .context("dwell_min")? as u32,
+            dwell_max: j.get("dwell_max").and_then(Json::as_usize)
+                .context("dwell_max")? as u32,
+            noise_sigma: j.get("noise_sigma").and_then(Json::as_f64)
+                .context("noise_sigma")? as f32,
+            window: j.get("window").and_then(Json::as_usize)
+                .context("window")?,
+        })
+    }
+
+    /// Synthetic fallback with the same construction as
+    /// `pore.PoreModel.default` (used by unit tests and pure-sim paths that
+    /// must not depend on artifacts being built).
+    pub fn synthetic(seed: u64) -> PoreModel {
+        let k = 4usize;
+        let mut rng = Rng::new(seed);
+        let mut levels: Vec<f32> =
+            (0..4usize.pow(k as u32)).map(|_| rng.normal() as f32).collect();
+        let mean = levels.iter().sum::<f32>() / levels.len() as f32;
+        let var = levels.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>()
+            / levels.len() as f32;
+        let std = var.sqrt();
+        for l in levels.iter_mut() {
+            *l = (*l - mean) / std;
+        }
+        PoreModel {
+            k,
+            levels,
+            dwell_min: 6,
+            dwell_max: 12,
+            noise_sigma: 0.22,
+            window: 300,
+        }
+    }
+
+    /// k-mer id of the context ENDING at base `i` (edges clamp by repeating
+    /// the first base) — identical convention to python's `kmer_ids`.
+    pub fn kmer_id(&self, seq: &[u8], i: usize) -> usize {
+        let mut id = 0usize;
+        for j in 0..self.k {
+            let pos = (i + j + 1).checked_sub(self.k)
+                .map(|p| p.min(seq.len() - 1))
+                .unwrap_or(0);
+            id = id * 4 + seq[pos] as usize;
+        }
+        id
+    }
+
+    /// Emit a raw signal for `seq`. Returns (signal, owner) where owner[s]
+    /// is the base index held by the pore at sample s.
+    pub fn simulate(&self, seq: &[u8], rng: &mut Rng) -> (Vec<f32>, Vec<u32>) {
+        let mut signal = Vec::with_capacity(seq.len() * 9);
+        let mut owner = Vec::with_capacity(seq.len() * 9);
+        for i in 0..seq.len() {
+            let level = self.levels[self.kmer_id(seq, i)];
+            let dwell = rng.range(self.dwell_min as i64,
+                                  self.dwell_max as i64) as usize;
+            for _ in 0..dwell {
+                signal.push(level
+                    + (rng.normal() as f32) * self.noise_sigma);
+                owner.push(i as u32);
+            }
+        }
+        // normalize per read, as the paper does (§5.2)
+        let n = signal.len() as f32;
+        let mean = signal.iter().sum::<f32>() / n;
+        let var = signal.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n;
+        let std = var.sqrt().max(1e-8);
+        for s in signal.iter_mut() {
+            *s = (*s - mean) / std;
+        }
+        (signal, owner)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn synthetic_table_is_standardized() {
+        let pm = PoreModel::synthetic(7);
+        assert_eq!(pm.levels.len(), 256);
+        let mean: f32 = pm.levels.iter().sum::<f32>() / 256.0;
+        assert!(mean.abs() < 1e-3);
+    }
+
+    #[test]
+    fn kmer_id_last_base_is_lsb() {
+        let pm = PoreModel::synthetic(7);
+        let seq = vec![0u8, 1, 2, 3, 0, 1];
+        for i in 0..seq.len() {
+            assert_eq!(pm.kmer_id(&seq, i) % 4, seq[i] as usize);
+            assert!(pm.kmer_id(&seq, i) < 256);
+        }
+    }
+
+    #[test]
+    fn simulate_invariants() {
+        let pm = PoreModel::synthetic(7);
+        prop::check("pore simulate", 20, |rng, _| {
+            let seq = prop::dna(rng, 10, 80);
+            let (sig, owner) = pm.simulate(&seq, rng);
+            assert_eq!(sig.len(), owner.len());
+            // pore moves monotonically forward, one base at a time
+            for w in owner.windows(2) {
+                assert!(w[1] == w[0] || w[1] == w[0] + 1);
+            }
+            assert_eq!(*owner.last().unwrap() as usize, seq.len() - 1);
+            // dwell bounds
+            let mut counts = vec![0u32; seq.len()];
+            for &o in &owner {
+                counts[o as usize] += 1;
+            }
+            assert!(counts.iter().all(
+                |&c| c >= pm.dwell_min && c <= pm.dwell_max));
+            // normalized
+            let mean: f32 = sig.iter().sum::<f32>() / sig.len() as f32;
+            assert!(mean.abs() < 1e-3);
+        });
+    }
+}

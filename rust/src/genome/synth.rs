@@ -1,0 +1,125 @@
+//! Synthetic genomes and sequencing runs: reads with coverage, the Table 4
+//! stand-in (DESIGN.md §Substitutions).
+
+use crate::util::rng::Rng;
+
+use super::pore::PoreModel;
+
+/// Uniform random genome over {A,C,G,T}.
+pub fn random_genome(n: usize, rng: &mut Rng) -> Vec<u8> {
+    (0..n).map(|_| rng.base()).collect()
+}
+
+/// A simulated nanopore read: the true subsequence plus its raw signal.
+#[derive(Clone, Debug)]
+pub struct Read {
+    pub id: usize,
+    /// start offset in the genome.
+    pub start: usize,
+    /// ground-truth bases.
+    pub seq: Vec<u8>,
+    /// raw normalized signal.
+    pub signal: Vec<f32>,
+    /// owner[s] = index into `seq` of the base held at sample s.
+    pub owner: Vec<u32>,
+}
+
+/// Parameters of a simulated sequencing run.
+#[derive(Clone, Copy, Debug)]
+pub struct RunSpec {
+    pub genome_len: usize,
+    /// target coverage (mean reads crossing a position), 30-50 in the paper.
+    pub coverage: usize,
+    pub read_len_min: usize,
+    pub read_len_max: usize,
+    pub seed: u64,
+}
+
+impl Default for RunSpec {
+    fn default() -> Self {
+        RunSpec {
+            genome_len: 10_000,
+            coverage: 30,
+            read_len_min: 300,
+            read_len_max: 600,
+            seed: 7,
+        }
+    }
+}
+
+/// A full sequencing run: one genome + enough reads for the coverage target.
+#[derive(Clone, Debug)]
+pub struct SequencingRun {
+    pub genome: Vec<u8>,
+    pub reads: Vec<Read>,
+}
+
+impl SequencingRun {
+    pub fn simulate(pm: &PoreModel, spec: RunSpec) -> SequencingRun {
+        let mut rng = Rng::new(spec.seed);
+        let genome = random_genome(spec.genome_len, &mut rng);
+        let mean_len = (spec.read_len_min + spec.read_len_max) / 2;
+        let n_reads = (spec.genome_len * spec.coverage / mean_len).max(1);
+        let mut reads = Vec::with_capacity(n_reads);
+        for id in 0..n_reads {
+            let len = rng.range(spec.read_len_min as i64,
+                                spec.read_len_max as i64) as usize;
+            let len = len.min(spec.genome_len);
+            let start = rng.below(spec.genome_len - len + 1);
+            let seq = genome[start..start + len].to_vec();
+            let (signal, owner) = pm.simulate(&seq, &mut rng);
+            reads.push(Read { id, start, seq, signal, owner });
+        }
+        // present reads in genome order (the voting stage relies on known
+        // ordering, as the paper notes for read votes in Fig 19)
+        reads.sort_by_key(|r| r.start);
+        SequencingRun { genome, reads }
+    }
+
+    /// Empirical mean coverage across genome positions.
+    pub fn mean_coverage(&self) -> f64 {
+        let mut cov = vec![0u32; self.genome.len()];
+        for r in &self.reads {
+            for c in cov[r.start..r.start + r.seq.len()].iter_mut() {
+                *c += 1;
+            }
+        }
+        cov.iter().map(|&c| c as f64).sum::<f64>() / cov.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_reaches_target_coverage() {
+        let pm = PoreModel::synthetic(7);
+        let run = SequencingRun::simulate(&pm, RunSpec {
+            genome_len: 4000, coverage: 10, ..Default::default()
+        });
+        let cov = run.mean_coverage();
+        assert!(cov > 6.0 && cov < 14.0, "coverage {cov}");
+    }
+
+    #[test]
+    fn reads_match_genome() {
+        let pm = PoreModel::synthetic(7);
+        let run = SequencingRun::simulate(&pm, RunSpec {
+            genome_len: 2000, coverage: 5, ..Default::default()
+        });
+        for r in &run.reads {
+            assert_eq!(&run.genome[r.start..r.start + r.seq.len()], &r.seq[..]);
+            assert_eq!(r.signal.len(), r.owner.len());
+        }
+    }
+
+    #[test]
+    fn reads_sorted_by_start() {
+        let pm = PoreModel::synthetic(7);
+        let run = SequencingRun::simulate(&pm, RunSpec {
+            genome_len: 3000, coverage: 8, ..Default::default()
+        });
+        assert!(run.reads.windows(2).all(|w| w[0].start <= w[1].start));
+    }
+}

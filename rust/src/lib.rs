@@ -1,0 +1,19 @@
+//! # helix
+//!
+//! Reproduction of *"Helix: Algorithm/Architecture Co-design for Accelerating
+//! Nanopore Genome Base-calling"* (Lou, Janga, Jiang — PACT 2020).
+//!
+//! Layer-3 of the three-layer stack: the rust coordinator owns the event
+//! loop, batching, CTC decoding, read voting, the downstream assembly
+//! pipeline, and the cycle-level PIM simulator that reproduces the paper's
+//! architecture evaluation. The DNN forward pass is an AOT-compiled XLA
+//! artifact (JAX/Pallas, built once by `make artifacts`) executed through
+//! PJRT — python is never on the request path.
+pub mod util;
+pub mod runtime;
+pub mod basecall;
+pub mod genome;
+pub mod coordinator;
+pub mod pim;
+pub mod pipeline;
+pub mod bench;

@@ -1,0 +1,124 @@
+//! `helix` CLI — the Layer-3 entrypoint.
+//!
+//! Subcommands (hand-rolled parser; clap is unavailable offline):
+//!   basecall  — run the coordinator over a synthetic sequencing run
+//!   simulate  — emit a synthetic run's stats (Table 4 workloads)
+//!   figures   — regenerate paper tables/figures: `helix figures fig24`
+//!   schemes   — quick Fig 24 summary
+//!   mc        — device Monte-Carlo (Figs 15/16)
+
+use anyhow::Result;
+
+use helix::basecall::edit::identity;
+use helix::bench::figures;
+use helix::coordinator::{Coordinator, CoordinatorConfig};
+use helix::genome::pore::PoreModel;
+use helix::genome::synth::{RunSpec, SequencingRun};
+use helix::runtime::meta::default_artifacts_dir;
+
+fn usage() -> ! {
+    eprintln!("usage: helix <command> [options]\n\
+        commands:\n  \
+        basecall [--model guppy] [--bits 32] [--genome 2000] [--coverage 5]\n  \
+        simulate [--genome 10000] [--coverage 30]\n  \
+        figures <fig2|...|fig26|table1..table5|all>\n  \
+        schemes\n  \
+        mc [--samples 100000]\n\
+        env: HELIX_ARTIFACTS=artifacts");
+    std::process::exit(2);
+}
+
+/// Tiny flag parser: --key value pairs after the subcommand.
+fn flags(args: &[String]) -> std::collections::HashMap<String, String> {
+    let mut out = std::collections::HashMap::new();
+    let mut i = 0;
+    while i + 1 < args.len() {
+        if let Some(k) = args[i].strip_prefix("--") {
+            out.insert(k.to_string(), args[i + 1].clone());
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("");
+    let rest = &args[1.min(args.len())..];
+    let f = flags(rest);
+    let dir = default_artifacts_dir();
+    match cmd {
+        "basecall" => {
+            let model = f.get("model").cloned()
+                .unwrap_or_else(|| "guppy".into());
+            let bits: u32 = f.get("bits").map_or(32, |s| s.parse().unwrap_or(32));
+            let genome: usize = f.get("genome")
+                .map_or(2000, |s| s.parse().unwrap_or(2000));
+            let coverage: usize = f.get("coverage")
+                .map_or(5, |s| s.parse().unwrap_or(5));
+            let pm = PoreModel::load(&format!("{dir}/pore_model.json"))?;
+            let run = SequencingRun::simulate(&pm, RunSpec {
+                genome_len: genome, coverage, ..Default::default()
+            });
+            println!("basecalling {} reads ({} genome, {:.1}x coverage) \
+                      with {model}/{bits}b ...",
+                     run.reads.len(), genome, run.mean_coverage());
+            let mut coord = Coordinator::new(CoordinatorConfig {
+                model, bits, artifacts_dir: dir.clone(),
+                ..Default::default()
+            })?;
+            let t0 = std::time::Instant::now();
+            for r in &run.reads {
+                coord.submit(r);
+            }
+            let max_batch = coord.max_batch();
+            let metrics = coord.metrics.clone();
+            let called = coord.finish()?;
+            let dt = t0.elapsed();
+            let mut acc = 0.0;
+            for c in &called {
+                let truth = &run.reads.iter()
+                    .find(|r| r.id == c.read_id).unwrap().seq;
+                acc += identity(&c.seq,
+                                &truth[..truth.len().min(c.seq.len() + 8)]);
+            }
+            println!("called {} reads in {:.2?}", called.len(), dt);
+            println!("mean read identity: {:.4}", acc / called.len() as f64);
+            println!("{}", metrics.report(max_batch));
+        }
+        "simulate" => {
+            let genome: usize = f.get("genome")
+                .map_or(10_000, |s| s.parse().unwrap_or(10_000));
+            let coverage: usize = f.get("coverage")
+                .map_or(30, |s| s.parse().unwrap_or(30));
+            let pm = PoreModel::load(&format!("{dir}/pore_model.json"))
+                .unwrap_or_else(|_| PoreModel::synthetic(7));
+            let run = SequencingRun::simulate(&pm, RunSpec {
+                genome_len: genome, coverage, ..Default::default()
+            });
+            let samples: usize = run.reads.iter()
+                .map(|r| r.signal.len()).sum();
+            println!("genome {} bp, {} reads, {:.1}x coverage, {} raw \
+                      samples", genome, run.reads.len(),
+                     run.mean_coverage(), samples);
+        }
+        "figures" => {
+            let which = rest.first().map(|s| s.as_str()).unwrap_or("all");
+            figures::run(which, &dir)?;
+        }
+        "schemes" => figures::run("fig24", &dir)?,
+        "mc" => {
+            let samples: usize = f.get("samples")
+                .map_or(100_000, |s| s.parse().unwrap_or(100_000));
+            let st = helix::pim::variation::duration_mc(
+                60.0, helix::pim::variation::ADC_WRITE_VOLTAGE, samples, 7);
+            println!("60F^2 @{} samples: mean {:.3}ns sigma {:.3}ns \
+                      worst {:.3}ns", st.samples, st.mean_ns, st.sigma_ns,
+                     st.worst_ns);
+        }
+        _ => usage(),
+    }
+    Ok(())
+}

@@ -1,0 +1,194 @@
+//! SOT-MRAM binary comparator arrays for read voting (§4.3, Figs 19/20).
+//!
+//! Each DNA symbol is encoded in 3 bits; each bit occupies a 2-cell pair in
+//! a row (0 = LRS,HRS; 1 = HRS,LRS). The query symbol drives the two RBLs of
+//! each pair with complementary voltages, so a matching pair draws no source
+//! line current and any mismatch does — an analog XNOR across the whole row
+//! in one cycle. Sub-strings of one read live in rows; the query read is
+//! streamed on the bit-lines; the first row with zero SL current is the
+//! longest match.
+
+use crate::util::rng::Rng;
+
+/// 3-bit encoding of Fig 19(c): A=001, C=010, T=000, G=100, -=101.
+pub fn encode(sym: u8) -> [u8; 3] {
+    match sym {
+        0 => [0, 0, 1], // A
+        1 => [0, 1, 0], // C
+        2 => [1, 0, 0], // G
+        3 => [0, 0, 0], // T
+        _ => [1, 0, 1], // blank
+    }
+}
+
+/// A `rows x cols` comparator array (cols counted in CELLS; a symbol takes
+/// 6 cells = 3 bit-pairs).
+#[derive(Clone, Debug)]
+pub struct ComparatorArray {
+    pub rows: usize,
+    pub cols: usize,
+    /// per-cell read upset probability (from `variation::cell_error_rate`).
+    pub cell_error: f64,
+    pub freq_mhz: f64,
+}
+
+impl ComparatorArray {
+    /// The paper's design point: 256x256, 1e-11 cell error (§4.3).
+    pub fn paper() -> Self {
+        ComparatorArray { rows: 256, cols: 256, cell_error: 1e-11,
+                          freq_mhz: 640.0 }
+    }
+
+    /// Max symbols per row (2 cells per bit, 3 bits per symbol).
+    pub fn symbols_per_row(&self) -> usize {
+        self.cols / 6
+    }
+
+    /// Compare a stored row against a query of equal length: true iff every
+    /// symbol matches (zero SL current). Functional model of Fig 20.
+    pub fn row_matches(&self, stored: &[u8], query: &[u8]) -> bool {
+        if stored.len() != query.len() {
+            return false;
+        }
+        for (s, q) in stored.iter().zip(query) {
+            let es = encode(*s);
+            let eq = encode(*q);
+            for b in 0..3 {
+                // cell pair (es) vs complementary voltages (eq): current
+                // flows iff bits differ
+                if es[b] != eq[b] {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Same with per-cell upsets injected (reliability study §4.3).
+    pub fn row_matches_noisy(&self, stored: &[u8], query: &[u8],
+                             rng: &mut Rng) -> bool {
+        let clean = self.row_matches(stored, query);
+        // a row compares 6*len cells; any upset flips the verdict
+        let p_row_err = 1.0
+            - (1.0 - self.cell_error).powi(6 * stored.len() as i32);
+        if rng.f64() < p_row_err {
+            !clean
+        } else {
+            clean
+        }
+    }
+
+    /// Longest suffix(a)/prefix(b) match via the array: suffixes of `a` are
+    /// written into rows (longest first), `b`'s prefix drives the RBLs; the
+    /// first matching row wins. Returns the match length (exact matching —
+    /// the hardware compares binary vectors).
+    pub fn longest_match(&self, a: &[u8], b: &[u8]) -> usize {
+        let max = a.len().min(b.len()).min(self.symbols_per_row());
+        for len in (1..=max).rev() {
+            if self.row_matches(&a[a.len() - len..], &b[..len]) {
+                return len;
+            }
+        }
+        0
+    }
+
+    /// Cycle cost of one voting group: write all sub-strings of the
+    /// scaffold (one row-write per sub-string), then stream `n_reads`
+    /// queries (one compare cycle each; the array compares up to `rows`
+    /// stored sub-strings against a query concurrently — "Helix can
+    /// concurrently compare up to 256 reads" §6.3).
+    pub fn cycles_per_vote(&self, scaffold_len: usize, n_reads: usize)
+                           -> f64 {
+        let writes = scaffold_len.min(self.rows) as f64;
+        let compares = n_reads as f64;
+        writes + compares
+    }
+}
+
+/// Expected comparator mistakes when comparing `n` reads of `len` bases
+/// (the paper: 1 mistake per 556 million 30-base reads at 1e-11/cell).
+pub fn expected_errors(n_reads: f64, len: usize, cell_error: f64) -> f64 {
+    n_reads * 6.0 * len as f64 * cell_error
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn encoding_is_injective() {
+        let codes: Vec<[u8; 3]> = (0..5).map(encode).collect();
+        for i in 0..5 {
+            for j in (i + 1)..5 {
+                assert_ne!(codes[i], codes[j], "{i} vs {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn row_match_iff_equal() {
+        let arr = ComparatorArray::paper();
+        prop::check("cmp row match", 50, |rng, _| {
+            let a = prop::dna(rng, 1, 30);
+            let mut b = a.clone();
+            assert!(arr.row_matches(&a, &b));
+            let i = rng.below(b.len());
+            b[i] = (b[i] + 1 + (rng.below(3) as u8)) % 4;
+            assert!(!arr.row_matches(&a, &b));
+        });
+    }
+
+    #[test]
+    fn longest_match_agrees_with_naive() {
+        let arr = ComparatorArray::paper();
+        prop::check("cmp longest match", 40, |rng, _| {
+            let a = prop::dna(rng, 1, 25);
+            let b = prop::dna(rng, 1, 25);
+            let naive = (1..=a.len().min(b.len())).rev()
+                .find(|&l| a[a.len() - l..] == b[..l])
+                .unwrap_or(0);
+            assert_eq!(arr.longest_match(&a, &b), naive);
+        });
+    }
+
+    #[test]
+    fn fig19_example() {
+        // R1="ACTA", R2="CTAG": longest suffix-prefix match is "CTA" (3)
+        let arr = ComparatorArray::paper();
+        let r1 = [0u8, 1, 3, 0];
+        let r2 = [1u8, 3, 0, 2];
+        assert_eq!(arr.longest_match(&r1, &r2), 3);
+    }
+
+    #[test]
+    fn paper_error_rate_reproduced() {
+        // "After comparing 556 million 30-base reads, on average, our binary
+        // comparator array makes 1 mistake" at 1e-11 per cell
+        let e = expected_errors(556e6, 30, 1e-11);
+        assert!((e - 1.0).abs() < 0.05, "{e}");
+    }
+
+    #[test]
+    fn noisy_match_rarely_differs_at_design_error() {
+        let arr = ComparatorArray::paper();
+        let mut rng = Rng::new(3);
+        let a: Vec<u8> = (0..30).map(|i| (i % 4) as u8).collect();
+        let mut diffs = 0;
+        for _ in 0..10_000 {
+            if arr.row_matches_noisy(&a, &a, &mut rng)
+                != arr.row_matches(&a, &a)
+            {
+                diffs += 1;
+            }
+        }
+        assert_eq!(diffs, 0);
+    }
+
+    #[test]
+    fn vote_cycles_scale() {
+        let arr = ComparatorArray::paper();
+        assert!(arr.cycles_per_vote(30, 50) > arr.cycles_per_vote(30, 3));
+        assert!(arr.cycles_per_vote(30, 3) >= 33.0);
+    }
+}

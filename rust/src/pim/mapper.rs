@@ -1,0 +1,204 @@
+//! DNN-to-crossbar mapper over the FULL-SIZE Table 3 base-caller
+//! topologies: array allocation, fill factors, and engine cycles per
+//! base-called window.
+
+use super::crossbar::ArrayConfig;
+
+/// Layer kind — recurrent layers have a sequential dependence over time
+/// steps that bounds single-window latency (not batched throughput).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    Conv,
+    Rnn,
+    Fc,
+}
+
+/// One layer of a base-caller (full-size Table 3 numbers).
+#[derive(Clone, Copy, Debug)]
+pub struct Layer {
+    pub kind: LayerKind,
+    /// multiply-accumulates per 300-sample input window.
+    pub macs: f64,
+    /// weight parameters.
+    pub params: f64,
+    /// rows of the weight matrix as mapped (for fill estimation).
+    pub rows: usize,
+    /// cols of the weight matrix as mapped.
+    pub cols: usize,
+    /// sequential time steps (1 for Conv/FC).
+    pub steps: usize,
+}
+
+/// A full-size base-caller topology (Table 3).
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub name: &'static str,
+    pub layers: Vec<Layer>,
+    /// CTC decoder time steps per window (output rows of Table 3).
+    pub ctc_steps: usize,
+    /// mean bases called per 300-sample window (~dwell 10 samples/base).
+    pub bases_per_window: f64,
+}
+
+impl Topology {
+    /// Table 3, Guppy column: conv 11x1x96 s2, 5x GRU 256, FC 40x5.
+    pub fn guppy() -> Topology {
+        Topology {
+            name: "guppy",
+            layers: vec![
+                Layer { kind: LayerKind::Conv, macs: 0.2736e6, params: 1.8e3,
+                        rows: 11, cols: 96, steps: 1 },
+                Layer { kind: LayerKind::Rnn, macs: 36.0e6, params: 0.23e6,
+                        rows: 256 + 96, cols: 3 * 256, steps: 150 },
+                Layer { kind: LayerKind::Fc, macs: 0.012e6, params: 0.012e6,
+                        rows: 40, cols: 5, steps: 1 },
+            ],
+            ctc_steps: 60,
+            bases_per_window: 30.0,
+        }
+    }
+
+    /// Table 3, Scrappie column.
+    pub fn scrappie() -> Topology {
+        Topology {
+            name: "scrappie",
+            layers: vec![
+                Layer { kind: LayerKind::Conv, macs: 0.063e6, params: 1056.0,
+                        rows: 11, cols: 96, steps: 1 },
+                Layer { kind: LayerKind::Rnn, macs: 8.1e6, params: 0.14e6,
+                        rows: 96 + 96, cols: 3 * 96, steps: 60 },
+                Layer { kind: LayerKind::Fc, macs: 0.31e6, params: 0.31e6,
+                        rows: 1025, cols: 5, steps: 1 },
+            ],
+            ctc_steps: 60,
+            bases_per_window: 30.0,
+        }
+    }
+
+    /// Table 3, Chiron column: 3 convs (570M MACs!), 6x LSTM 100, FC 100x5.
+    pub fn chiron() -> Topology {
+        Topology {
+            name: "chiron",
+            layers: vec![
+                Layer { kind: LayerKind::Conv, macs: 570.0e6, params: 1.9e6,
+                        rows: 256 * 3, cols: 256, steps: 1 },
+                Layer { kind: LayerKind::Rnn, macs: 45.0e6, params: 0.15e6,
+                        rows: 100 + 256, cols: 4 * 100, steps: 300 },
+                Layer { kind: LayerKind::Fc, macs: 0.15e6, params: 0.15e6,
+                        rows: 100, cols: 5, steps: 1 },
+            ],
+            ctc_steps: 300,
+            bases_per_window: 30.0,
+        }
+    }
+
+    pub fn all() -> Vec<Topology> {
+        vec![Topology::guppy(), Topology::scrappie(), Topology::chiron()]
+    }
+
+    pub fn by_name(name: &str) -> Option<Topology> {
+        Topology::all().into_iter().find(|t| t.name == name)
+    }
+
+    pub fn total_macs(&self) -> f64 {
+        self.layers.iter().map(|l| l.macs).sum()
+    }
+
+    pub fn total_params(&self) -> f64 {
+        self.layers.iter().map(|l| l.params).sum()
+    }
+
+    pub fn macs_per_base(&self) -> f64 {
+        self.total_macs() / self.bases_per_window
+    }
+}
+
+/// How a layer lands on crossbar arrays.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerMapping {
+    /// arrays needed to hold one copy of the weights.
+    pub arrays: usize,
+    /// fraction of allocated cells actually used.
+    pub fill: f64,
+    /// engine cell-op cycles consumed per window (throughput cost).
+    pub cell_ops: f64,
+}
+
+/// Map one layer at (w,a)-bit precision onto `cfg`-shaped arrays.
+pub fn map_layer(layer: &Layer, cfg: &ArrayConfig, w_bits: u32, a_bits: u32)
+                 -> LayerMapping {
+    let cpw = cfg.cells_per_weight(w_bits) as f64;
+    let row_tiles = layer.rows.div_ceil(cfg.rows);
+    let col_cells = (layer.cols as f64 * cpw).ceil() as usize;
+    let col_tiles = col_cells.div_ceil(cfg.cols);
+    let arrays = row_tiles * col_tiles;
+    let used_cells = layer.params * cpw;
+    let fill = (used_cells / (arrays as f64 * (cfg.rows * cfg.cols) as f64))
+        .min(1.0);
+    // cell-ops per window: every MAC needs cpw cell-slices x a input cycles;
+    // under-filled arrays still burn whole-array passes -> divide by fill.
+    let cell_ops = layer.macs * cpw * cfg.cycles_per_input(a_bits) as f64
+        / fill.max(1e-3);
+    LayerMapping { arrays, fill, cell_ops }
+}
+
+/// Chip-level DNN cost: engine cell-ops per base-called base.
+pub fn dnn_cell_ops_per_base(topo: &Topology, cfg: &ArrayConfig,
+                             w_bits: u32, a_bits: u32) -> f64 {
+    let total: f64 = topo.layers.iter()
+        .map(|l| map_layer(l, cfg, w_bits, a_bits).cell_ops)
+        .sum();
+    total / topo.bases_per_window
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_totals_match_paper() {
+        let g = Topology::guppy();
+        assert!((g.total_macs() - 36.3e6).abs() / 36.3e6 < 0.01);
+        assert!((g.total_params() - 0.244e6).abs() / 0.244e6 < 0.01);
+        let s = Topology::scrappie();
+        assert!((s.total_macs() - 8.47e6).abs() / 8.47e6 < 0.01);
+        let c = Topology::chiron();
+        assert!((c.total_macs() - 615.2e6).abs() / 615.2e6 < 0.01);
+        assert!((c.total_params() - 2.2e6).abs() / 2.2e6 < 0.01);
+    }
+
+    #[test]
+    fn chiron_is_the_mac_heavy_one() {
+        let all = Topology::all();
+        let chiron = all.iter().find(|t| t.name == "chiron").unwrap();
+        for t in &all {
+            assert!(chiron.total_macs() >= t.total_macs());
+        }
+    }
+
+    #[test]
+    fn mapping_fill_in_unit_range() {
+        let cfg = ArrayConfig::default();
+        for topo in Topology::all() {
+            for l in &topo.layers {
+                let m = map_layer(l, &cfg, 16, 16);
+                assert!(m.arrays >= 1);
+                assert!(m.fill > 0.0 && m.fill <= 1.0,
+                        "{}: fill {}", topo.name, m.fill);
+            }
+        }
+    }
+
+    #[test]
+    fn lower_precision_needs_fewer_cell_ops() {
+        let cfg = ArrayConfig::default();
+        let topo = Topology::guppy();
+        let c32 = dnn_cell_ops_per_base(&topo, &cfg, 32, 32);
+        let c16 = dnn_cell_ops_per_base(&topo, &cfg, 16, 16);
+        let c5 = dnn_cell_ops_per_base(&topo, &cfg, 5, 5);
+        assert!(c32 > c16 && c16 > c5, "{c32} {c16} {c5}");
+        // 32->16 bit is ~4x fewer cell-ops (2x slices x 2x cycles)
+        let ratio = c32 / c16;
+        assert!(ratio > 3.0 && ratio < 5.0, "ratio {ratio}");
+    }
+}

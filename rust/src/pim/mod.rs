@@ -1,0 +1,22 @@
+//! Cycle-level PIM simulator: the paper's architecture contribution.
+//!
+//! Reproduces the evaluation methodology of §5.1 (a dot-product-engine
+//! simulator in the spirit of [40]/NVSim/Spectre-MC): SOT-MRAM device
+//! physics (`device`), process-variation Monte-Carlo (`variation`), CMOS
+//! and SOT-MRAM ADC models (`adc`), the bit-sliced crossbar dot-product
+//! engine (`crossbar`), ISAAC tile/chip configs (`isaac`), the DNN-to-array
+//! mapper over the full-size Table 3 topologies (`mapper`), the crossbar
+//! CTC engine (`ctc_engine`), SOT-MRAM binary comparator arrays
+//! (`comparator`), the Table 2 power/area model (`power`), and the eight
+//! evaluation schemes of §5.3 (`schemes`).
+
+pub mod adc;
+pub mod comparator;
+pub mod crossbar;
+pub mod ctc_engine;
+pub mod device;
+pub mod isaac;
+pub mod mapper;
+pub mod power;
+pub mod schemes;
+pub mod variation;

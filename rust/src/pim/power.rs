@@ -1,0 +1,175 @@
+//! Table 2 power/area component model (NVSim-style, 32nm) and the Fig 8
+//! breakdown of NVM dot-product engines.
+
+use super::adc::{CmosAdc, SotAdcArray};
+
+/// One line of Table 2.
+#[derive(Clone, Debug)]
+pub struct Component {
+    pub name: &'static str,
+    pub power_mw: f64,
+    pub area_mm2: f64,
+}
+
+/// Tile-level peripherals shared by ISAAC and Helix (Table 2, top block).
+pub fn tile_peripherals() -> Vec<Component> {
+    vec![
+        Component { name: "eDRAM buffer (4 banks, 64KB)", power_mw: 20.7, area_mm2: 0.083 },
+        Component { name: "bus (384 wires)", power_mw: 7.0, area_mm2: 0.09 },
+        Component { name: "router (flit 32)", power_mw: 10.5, area_mm2: 0.0378 },
+        Component { name: "activation x2", power_mw: 0.52, area_mm2: 0.0006 },
+        Component { name: "shift-&-add", power_mw: 0.05, area_mm2: 0.00006 },
+        Component { name: "maxpool", power_mw: 0.4, area_mm2: 0.0024 },
+        Component { name: "output reg (3KB)", power_mw: 1.68, area_mm2: 0.0032 },
+    ]
+}
+
+/// In-situ multiply-accumulate unit internals minus the ADC (Table 2,
+/// middle block): 8 arrays 128x128 @ 2 bits/cell + DACs + regs + S&H + S+A.
+pub fn ima_common() -> Vec<Component> {
+    vec![
+        Component { name: "NVM arrays x8 (128x128, 2b/cell)", power_mw: 2.4, area_mm2: 0.0002 },
+        Component { name: "sample & hold x1024", power_mw: 0.001, area_mm2: 0.00004 },
+        Component { name: "shift-&-add x4", power_mw: 0.2, area_mm2: 0.00024 },
+        Component { name: "input reg (2KB)", power_mw: 1.24, area_mm2: 0.0021 },
+        Component { name: "output reg (256B)", power_mw: 0.23, area_mm2: 0.00077 },
+        Component { name: "DAC x1024 (1-bit)", power_mw: 4.0, area_mm2: 0.00017 },
+    ]
+}
+
+fn sum(cs: &[Component]) -> (f64, f64) {
+    cs.iter().fold((0.0, 0.0), |(p, a), c| (p + c.power_mw, a + c.area_mm2))
+}
+
+/// IMA totals with a CMOS ADC bank (ISAAC-class).
+pub fn ima_with_cmos_adc(adc: &CmosAdc) -> (f64, f64) {
+    let (p, a) = sum(&ima_common());
+    (p + adc.power_mw(), a + adc.area_mm2())
+}
+
+/// IMA totals with SOT-MRAM ADC arrays (Helix): 8x4 arrays + vref + encoders
+/// (Table 2, bottom block).
+pub fn ima_with_sot_adc() -> (f64, f64) {
+    let (p, a) = sum(&ima_common());
+    let adc = SotAdcArray::paper();
+    let n = 8.0 * 4.0;
+    (p + n * adc.power_mw() + 0.02 + n * 0.001,
+     a + n * adc.area_mm2() + 0.00003 + n * 2e-6)
+}
+
+/// Full-chip rollup.
+#[derive(Clone, Copy, Debug)]
+pub struct ChipBudget {
+    pub tiles: usize,
+    pub imas_per_tile: usize,
+    pub tile_power_mw: f64,
+    pub tile_area_mm2: f64,
+    pub power_w: f64,
+    pub area_mm2: f64,
+}
+
+pub fn chip(tiles: usize, imas_per_tile: usize, ima_pa: (f64, f64),
+            extra: &[Component]) -> ChipBudget {
+    let (pp, pa) = sum(&tile_peripherals());
+    let tile_power = pp + imas_per_tile as f64 * ima_pa.0;
+    let tile_area = pa + imas_per_tile as f64 * ima_pa.1;
+    let (ep, ea) = sum(extra);
+    ChipBudget {
+        tiles,
+        imas_per_tile,
+        tile_power_mw: tile_power,
+        tile_area_mm2: tile_area,
+        power_w: tiles as f64 * tile_power / 1000.0 + ep / 1000.0,
+        area_mm2: tiles as f64 * tile_area + ea,
+    }
+}
+
+/// The SOT-MRAM binary comparator block of Helix (Table 2 bottom):
+/// 1024x 256x256 arrays, 1.3 W, 0.11 mm^2.
+pub fn comparator_block() -> Component {
+    Component { name: "SOT-MRAM binary cmp (1024x 256x256)",
+                power_mw: 1300.0, area_mm2: 0.11 }
+}
+
+/// ISAAC chip (Table 2 / Table 5): 168 tiles x 12 IMAs, 8-bit CMOS ADCs.
+pub fn isaac_chip() -> ChipBudget {
+    chip(168, 12, ima_with_cmos_adc(&CmosAdc::isaac()), &[])
+}
+
+/// Helix chip: SOT-MRAM ADCs + comparator block.
+pub fn helix_chip() -> ChipBudget {
+    chip(168, 12, ima_with_sot_adc(), &[comparator_block()])
+}
+
+/// Fig 8: power/area breakdown of an NVM dot-product engine — ADC share for
+/// ReRAM/PCM/STT-MRAM (array cost differs by cell size but peripherals
+/// dominate, so shares are similar across technologies).
+pub fn fig8_breakdown(tech: &str) -> (f64, f64) {
+    // array power/area scales with cell size: ReRAM/PCM 4F^2, STT 60F^2
+    let cell_f2 = match tech {
+        "reram" | "pcm" => 4.0,
+        _ => 60.0,
+    };
+    let mut common = ima_common();
+    common[0].area_mm2 *= cell_f2 / 4.0;
+    let adc = CmosAdc::isaac();
+    let (pc, ac) = sum(&common);
+    let adc_power_share = adc.power_mw() / (pc + adc.power_mw());
+    let adc_area_share = adc.area_mm2() / (ac + adc.area_mm2());
+    (adc_power_share, adc_area_share)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn isaac_tile_matches_table2() {
+        let c = isaac_chip();
+        // Table 2: ISAAC tile total 330 mW / 0.372 mm^2; chip 55.4W / 62.5mm^2
+        assert!((c.tile_power_mw - 330.0).abs() / 330.0 < 0.05,
+                "tile power {}", c.tile_power_mw);
+        assert!((c.tile_area_mm2 - 0.372).abs() / 0.372 < 0.10,
+                "tile area {}", c.tile_area_mm2);
+        assert!((c.power_w - 55.4).abs() / 55.4 < 0.05, "chip {}", c.power_w);
+        assert!((c.area_mm2 - 62.5).abs() / 62.5 < 0.10,
+                "chip area {}", c.area_mm2);
+    }
+
+    #[test]
+    fn helix_chip_matches_table2() {
+        let c = helix_chip();
+        // Table 2: Helix 25.7 W, 43.83 mm^2 (we accept a 15% modeling band —
+        // Table 2's own sub-totals do not add up exactly).
+        assert!((c.power_w - 25.7).abs() / 25.7 < 0.15, "power {}", c.power_w);
+        assert!((c.area_mm2 - 43.83).abs() / 43.83 < 0.15,
+                "area {}", c.area_mm2);
+    }
+
+    #[test]
+    fn helix_cheaper_than_isaac() {
+        let h = helix_chip();
+        let i = isaac_chip();
+        assert!(h.power_w < i.power_w * 0.6);
+        assert!(h.area_mm2 < i.area_mm2 * 0.8);
+    }
+
+    #[test]
+    fn fig8_adc_dominates_engine() {
+        for tech in ["reram", "pcm", "stt"] {
+            let (p, a) = fig8_breakdown(tech);
+            // paper: ADCs cost 82-85% of power, 87-91% of area
+            assert!(p > 0.60 && p < 0.95, "{tech} power share {p}");
+            assert!(a > 0.60 && a < 0.97, "{tech} area share {a}");
+        }
+    }
+
+    #[test]
+    fn ima_sot_much_cheaper_than_cmos() {
+        let (pc, _) = ima_with_cmos_adc(&CmosAdc::isaac());
+        let (ps, _) = ima_with_sot_adc();
+        // Table 2: 289 mW (ISAAC IMA w/ periph share) vs 122 mW...
+        // at IMA granularity we expect at least ~2x
+        assert!(ps < pc * 0.6, "cmos {pc} sot {ps}");
+    }
+}

@@ -1,0 +1,349 @@
+//! The eight evaluation schemes of §5.3 and the Fig 24/25/26 models.
+//!
+//! End-to-end base-calling time per base = t_dnn + t_ctc + t_vote, each term
+//! computed from the component models:
+//!   * DNN on CPU/GPU: MACs/base over an effective MAC rate (Table 5
+//!     machines; rates calibrated so full-precision Guppy lands at the
+//!     paper's ~1 Mbp/s on the T4 — §1).
+//!   * DNN on PIM: crossbar cell-ops/base (mapper) over the chip cell-op
+//!     rate. ISAAC's native datapath stores 16-bit fixed-point weights
+//!     (2-bit cells x 8) — "32-bit" models execute with 32 input-bit cycles,
+//!     quantized ones with their own bit-width.
+//!   * CTC on GPU: proportional to CTC steps x beam width (constant
+//!     calibrated from the Fig 9 breakdown: 16.7% of 16-bit Guppy).
+//!   * CTC on PIM: engine cell-ops from `ctc_engine` (shares the crossbars).
+//!   * Vote on GPU: per-base constant from Fig 9 (37% of 16-bit Guppy).
+//!   * Vote on Helix comparators: compute is concurrent across 1024 arrays;
+//!     the binding resource is moving sub-strings + queries over the 384-bit
+//!     10 MHz tile bus into the comparator block (6L + 3C bits per base).
+//! Every calibration constant is a named const below with its anchor.
+
+use super::comparator::ComparatorArray;
+use super::ctc_engine;
+use super::isaac::Chip;
+use super::mapper::{dnn_cell_ops_per_base, Topology};
+
+/// Effective GPU MAC rate at fp32 (MAC/s). Anchor: full-precision Guppy
+/// (36.3M MACs / 30 bases) + CTC + vote = ~1 Mbp/s on the Tesla T4 (§1).
+pub const GPU_MAC_RATE_FP32: f64 = 2.0e12;
+/// Effective CPU MAC rate at fp32 (8-core Xeon E5-4655 v4, Table 5).
+pub const CPU_MAC_RATE_FP32: f64 = 1.0e11;
+/// GPU CTC decode cost per CTC step per base-window, at beam width 10.
+/// Anchor: CTC = 16.7% of 16-bit Guppy latency (Fig 9).
+pub const GPU_CTC_PER_STEP: f64 = 5.45e-8 / 2.0 * 2.0; // s per step / window
+/// GPU read-vote cost per base. Anchor: vote = 37% of 16-bit Guppy (Fig 9).
+pub const GPU_VOTE_PER_BASE: f64 = 2.4e-7;
+/// CPU CTC/vote penalty vs GPU (poorly parallelized on 8 cores).
+pub const CPU_SERIAL_PENALTY: f64 = 4.0;
+/// Read length (bases) per voting group and coverage (reads per position).
+pub const VOTE_GROUP_LEN: f64 = 30.0;
+pub const VOTE_COVERAGE: f64 = 30.0;
+/// Tile bus feeding the comparator block: 384 wires @ 10 MHz (Table 2).
+pub const VOTE_BUS_BITS_PER_SEC: f64 = 384.0 * 10.0e6;
+
+/// Machine envelopes (Table 5).
+pub const CPU_TDP_W: f64 = 135.0;
+pub const CPU_AREA_MM2: f64 = 450.0;
+pub const GPU_TDP_W: f64 = 70.0;
+pub const GPU_AREA_MM2: f64 = 515.0;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Scheme {
+    /// Xeon CPU, full precision, everything in software.
+    Cpu,
+    /// Tesla T4, full precision DNN + CTC + vote.
+    Gpu,
+    /// DNN (fp32 model, 16b-cell datapath x 32 input cycles) on ISAAC;
+    /// CTC + vote stay on the GPU at no charged cost (§5.3).
+    Isaac,
+    /// 16-bit quantized base-caller (no SEAT) on ISAAC.
+    Q16,
+    /// 5-bit + SEAT quantized base-caller on ISAAC (CMOS ADCs).
+    Seat,
+    /// SEAT + SOT-MRAM ADC arrays replacing the CMOS ADCs.
+    Adc,
+    /// ADC + CTC decoding moved onto the dot-product engines.
+    Ctc,
+    /// CTC + read voting on the SOT-MRAM comparator arrays: full Helix.
+    Helix,
+}
+
+impl Scheme {
+    pub fn all() -> [Scheme; 8] {
+        [Scheme::Cpu, Scheme::Gpu, Scheme::Isaac, Scheme::Q16,
+         Scheme::Seat, Scheme::Adc, Scheme::Ctc, Scheme::Helix]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheme::Cpu => "CPU",
+            Scheme::Gpu => "GPU",
+            Scheme::Isaac => "ISAAC",
+            Scheme::Q16 => "16-bit",
+            Scheme::Seat => "SEAT",
+            Scheme::Adc => "ADC",
+            Scheme::Ctc => "CTC",
+            Scheme::Helix => "Helix",
+        }
+    }
+
+    /// (weight bits, activation/input bits) of the DNN datapath.
+    fn dnn_bits(&self) -> (u32, u32) {
+        match self {
+            Scheme::Cpu | Scheme::Gpu | Scheme::Isaac => (16, 32),
+            Scheme::Q16 => (16, 16),
+            _ => (5, 5),
+        }
+    }
+}
+
+/// Evaluation output for one (scheme, base-caller) pair.
+#[derive(Clone, Copy, Debug)]
+pub struct Eval {
+    pub t_dnn: f64,
+    pub t_ctc: f64,
+    pub t_vote: f64,
+    pub power_w: f64,
+    pub area_mm2: f64,
+}
+
+impl Eval {
+    pub fn t_total(&self) -> f64 {
+        self.t_dnn + self.t_ctc + self.t_vote
+    }
+
+    /// Base-calling throughput in bases/s.
+    pub fn throughput(&self) -> f64 {
+        1.0 / self.t_total()
+    }
+
+    pub fn throughput_per_watt(&self) -> f64 {
+        self.throughput() / self.power_w
+    }
+
+    pub fn throughput_per_mm2(&self) -> f64 {
+        self.throughput() / self.area_mm2
+    }
+}
+
+/// Evaluate a scheme on a base-caller at a beam width (Fig 24 uses 10).
+pub fn evaluate(scheme: Scheme, topo: &Topology, beam_width: usize) -> Eval {
+    evaluate_with_adc(scheme, topo, beam_width, None)
+}
+
+/// Same, overriding the CMOS ADC resolution of the PIM datapath (Fig 25's
+/// IMP 5-bit / SRE 6-bit comparison).
+pub fn evaluate_with_adc(scheme: Scheme, topo: &Topology, beam_width: usize,
+                         cmos_adc_bits: Option<u32>) -> Eval {
+    let (w_bits, a_bits) = scheme.dnn_bits();
+    let bases = topo.bases_per_window;
+    let gpu_ctc = GPU_CTC_PER_STEP * topo.ctc_steps as f64
+        * (beam_width as f64 / 10.0) / bases;
+    let gpu_vote = GPU_VOTE_PER_BASE;
+
+    match scheme {
+        Scheme::Cpu => Eval {
+            t_dnn: topo.macs_per_base() / CPU_MAC_RATE_FP32,
+            t_ctc: gpu_ctc * CPU_SERIAL_PENALTY,
+            t_vote: gpu_vote * CPU_SERIAL_PENALTY,
+            power_w: CPU_TDP_W,
+            area_mm2: CPU_AREA_MM2,
+        },
+        Scheme::Gpu => Eval {
+            t_dnn: topo.macs_per_base() / GPU_MAC_RATE_FP32,
+            t_ctc: gpu_ctc,
+            t_vote: gpu_vote,
+            power_w: GPU_TDP_W,
+            area_mm2: GPU_AREA_MM2,
+        },
+        Scheme::Isaac | Scheme::Q16 | Scheme::Seat => {
+            let mut chip = Chip::isaac();
+            if let Some(bits) = cmos_adc_bits {
+                let ima = super::power::ima_with_cmos_adc(
+                    &super::adc::CmosAdc::with_bits(bits));
+                chip.budget = super::power::chip(chip.tiles,
+                                                 chip.imas_per_tile, ima, &[]);
+                chip.array.adc_bits = bits;
+            }
+            pim_eval(&chip, topo, w_bits, a_bits, gpu_ctc, gpu_vote,
+                     false, false, beam_width)
+        }
+        Scheme::Adc => {
+            let chip = Chip::helix_no_cmp();
+            pim_eval(&chip, topo, w_bits, a_bits, gpu_ctc, gpu_vote,
+                     false, false, beam_width)
+        }
+        Scheme::Ctc => {
+            let chip = Chip::helix_no_cmp();
+            pim_eval(&chip, topo, w_bits, a_bits, gpu_ctc, gpu_vote,
+                     true, false, beam_width)
+        }
+        Scheme::Helix => {
+            let chip = Chip::helix();
+            pim_eval(&chip, topo, w_bits, a_bits, gpu_ctc, gpu_vote,
+                     true, true, beam_width)
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn pim_eval(chip: &Chip, topo: &Topology, w_bits: u32, a_bits: u32,
+            gpu_ctc: f64, gpu_vote: f64, ctc_on_pim: bool,
+            vote_on_cmp: bool, beam_width: usize) -> Eval {
+    let rate = chip.cell_ops_per_sec();
+    let mut dnn_ops = dnn_cell_ops_per_base(topo, &chip.array, w_bits, a_bits);
+    let mut t_ctc = gpu_ctc;
+    if ctc_on_pim {
+        // CTC shares the dot-product engines: charge its cell-ops to the
+        // same budget (§4.3 — no extra power or area).
+        let ctc_ops = ctc_engine::cell_ops_per_window(
+            topo.ctc_steps, beam_width, chip.array.rows, chip.array.cols)
+            / topo.bases_per_window;
+        dnn_ops += ctc_ops;
+        t_ctc = 0.0;
+    }
+    let t_dnn = dnn_ops / rate;
+    let t_vote = if vote_on_cmp {
+        // compare cycles run concurrently on 1024 arrays; the bus transfer
+        // of sub-strings (6L bits/base) + queries (3C bits/base) binds.
+        let bus_bits = 6.0 * VOTE_GROUP_LEN + 3.0 * VOTE_COVERAGE;
+        let t_bus = bus_bits / VOTE_BUS_BITS_PER_SEC;
+        let cmp = ComparatorArray::paper();
+        let t_cmp = cmp.cycles_per_vote(VOTE_GROUP_LEN as usize,
+                                        VOTE_COVERAGE as usize)
+            / (cmp.freq_mhz * 1e6)
+            / VOTE_GROUP_LEN / 1024.0;
+        t_bus + t_cmp
+    } else {
+        gpu_vote
+    };
+    Eval {
+        t_dnn,
+        t_ctc,
+        t_vote,
+        power_w: chip.budget.power_w,
+        area_mm2: chip.budget.area_mm2,
+    }
+}
+
+/// Geometric mean of per-model ratios of `f(scheme)` vs `f(baseline)` —
+/// the aggregation used for the headline claims.
+pub fn geomean_ratio<F: Fn(&Eval) -> f64>(scheme: Scheme, baseline: Scheme,
+                                          beam: usize, f: F) -> f64 {
+    let mut acc = 1.0f64;
+    let topos = Topology::all();
+    for t in &topos {
+        let a = f(&evaluate(scheme, t, beam));
+        let b = f(&evaluate(baseline, t, beam));
+        acc *= a / b;
+    }
+    acc.powf(1.0 / topos.len() as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gpu_guppy_is_about_1mbps() {
+        // §1: "Guppy ... obtains only 1 million base pairs per second"
+        let e = evaluate(Scheme::Gpu, &Topology::guppy(), 10);
+        let mbps = e.throughput() / 1e6;
+        assert!(mbps > 0.7 && mbps < 1.4, "{mbps} Mbp/s");
+    }
+
+    #[test]
+    fn fig9_breakdown_16bit_guppy() {
+        // Fig 9: CTC 16.7%, vote 37% of 16-bit Guppy on the GPU.
+        let t = Topology::guppy();
+        let dnn16 = t.macs_per_base() / (GPU_MAC_RATE_FP32 * 2.0);
+        let ctc = GPU_CTC_PER_STEP * t.ctc_steps as f64 / t.bases_per_window;
+        let total = dnn16 + ctc + GPU_VOTE_PER_BASE;
+        let fc = ctc / total;
+        let fv = GPU_VOTE_PER_BASE / total;
+        assert!((fc - 0.167).abs() < 0.05, "ctc frac {fc}");
+        assert!((fv - 0.37).abs() < 0.06, "vote frac {fv}");
+    }
+
+    #[test]
+    fn scheme_order_is_monotone_in_throughput() {
+        // Fig 24(a): each accumulated technique must not hurt throughput.
+        for topo in Topology::all() {
+            let tp: Vec<f64> = [Scheme::Isaac, Scheme::Q16, Scheme::Seat,
+                                Scheme::Adc, Scheme::Ctc, Scheme::Helix]
+                .iter()
+                .map(|&s| evaluate(s, &topo, 10).throughput())
+                .collect();
+            for w in tp.windows(2) {
+                assert!(w[1] >= w[0] * 0.999,
+                        "{}: {:?}", topo.name, tp);
+            }
+        }
+    }
+
+    #[test]
+    fn headline_helix_vs_isaac() {
+        // Conclusion: Helix = ~6x throughput, ~11.9x /W, ~7.5x /mm^2 over
+        // ISAAC (accept a generous modeling band; exact values are logged by
+        // the fig24 bench and recorded in EXPERIMENTS.md).
+        let perf = geomean_ratio(Scheme::Helix, Scheme::Isaac, 10,
+                                 |e| e.throughput());
+        let pw = geomean_ratio(Scheme::Helix, Scheme::Isaac, 10,
+                               |e| e.throughput_per_watt());
+        let pa = geomean_ratio(Scheme::Helix, Scheme::Isaac, 10,
+                               |e| e.throughput_per_mm2());
+        assert!(perf > 3.0 && perf < 12.0, "perf {perf}");
+        assert!(pw > 6.0 && pw < 24.0, "perf/W {pw}");
+        assert!(pa > 4.0 && pa < 16.0, "perf/mm2 {pa}");
+    }
+
+    #[test]
+    fn isaac_beats_cpu_and_gpu() {
+        // Fig 24(a): ISAAC ~25x CPU, ~2.15x GPU on average.
+        let vs_cpu = geomean_ratio(Scheme::Isaac, Scheme::Cpu, 10,
+                                   |e| e.throughput());
+        let vs_gpu = geomean_ratio(Scheme::Isaac, Scheme::Gpu, 10,
+                                   |e| e.throughput());
+        assert!(vs_cpu > 8.0, "vs cpu {vs_cpu}");
+        assert!(vs_gpu > 1.2 && vs_gpu < 6.0, "vs gpu {vs_gpu}");
+    }
+
+    #[test]
+    fn adc_scheme_iso_perf_lower_power() {
+        for topo in Topology::all() {
+            let seat = evaluate(Scheme::Seat, &topo, 10);
+            let adc = evaluate(Scheme::Adc, &topo, 10);
+            assert!((seat.t_total() - adc.t_total()).abs()
+                    / seat.t_total() < 1e-9);
+            assert!(adc.power_w < seat.power_w * 0.6);
+            assert!(adc.area_mm2 < seat.area_mm2);
+        }
+    }
+
+    #[test]
+    fn ctc_gain_grows_with_beam_width() {
+        // Fig 26: larger beam width -> bigger CTC-scheme gain over ADC.
+        let topo = Topology::guppy();
+        let gain = |w: usize| {
+            evaluate(Scheme::Ctc, &topo, w).throughput()
+                / evaluate(Scheme::Adc, &topo, w).throughput()
+        };
+        assert!(gain(30) > gain(10));
+        assert!(gain(10) > gain(2));
+    }
+
+    #[test]
+    fn chiron_gains_most_from_pim() {
+        // §6.1: Chiron achieves the largest speedup from ISAAC (95% of its
+        // time is the DNN part).
+        let speedup = |t: &Topology| {
+            evaluate(Scheme::Isaac, t, 10).throughput()
+                / evaluate(Scheme::Gpu, t, 10).throughput()
+        };
+        let all = Topology::all();
+        let chiron = speedup(all.iter().find(|t| t.name == "chiron").unwrap());
+        for t in &all {
+            assert!(chiron >= speedup(t) - 1e-9, "{}", t.name);
+        }
+    }
+}

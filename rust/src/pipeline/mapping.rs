@@ -1,0 +1,151 @@
+//! Read mapping (Fig 1 stage 4): place each base-called read on the draft
+//! assembly with seed-and-extend, returning the aligned interval.
+
+use std::collections::HashMap;
+
+use crate::basecall::edit::{edit_distance_banded, identity};
+
+use super::overlap::SEED_K;
+
+/// A read mapped onto the draft.
+#[derive(Clone, Copy, Debug)]
+pub struct Mapping {
+    /// start position on the draft.
+    pub pos: usize,
+    /// length of the draft interval.
+    pub len: usize,
+    /// identity of the read vs that interval.
+    pub identity: f64,
+}
+
+/// Seed index over the draft.
+pub struct DraftIndex {
+    k: usize,
+    index: HashMap<u64, Vec<usize>>,
+}
+
+impl DraftIndex {
+    pub fn build(draft: &[u8]) -> DraftIndex {
+        let k = SEED_K;
+        let mut index: HashMap<u64, Vec<usize>> = HashMap::new();
+        if draft.len() >= k {
+            for (i, w) in draft.windows(k).enumerate() {
+                let mut h = 0u64;
+                for &b in w {
+                    h = h * 4 + b as u64;
+                }
+                index.entry(h).or_default().push(i);
+            }
+        }
+        DraftIndex { k, index }
+    }
+}
+
+/// Map a read onto the draft: vote on the offset implied by each shared
+/// seed, then score the best candidate with banded alignment.
+pub fn map_read(read: &[u8], draft: &[u8], idx: &DraftIndex)
+                -> Option<Mapping> {
+    if read.len() < idx.k || draft.len() < idx.k {
+        return None;
+    }
+    let mut offset_votes: HashMap<i64, u32> = HashMap::new();
+    for (i, w) in read.windows(idx.k).enumerate() {
+        let mut h = 0u64;
+        for &b in w {
+            h = h * 4 + b as u64;
+        }
+        if let Some(hits) = idx.index.get(&h) {
+            for &p in hits.iter().take(8) {
+                *offset_votes.entry(p as i64 - i as i64).or_insert(0) += 1;
+            }
+        }
+    }
+    // allow nearby offsets to pool (indels shift seeds slightly)
+    let (&best_off, _) = offset_votes.iter()
+        .max_by_key(|&(off, &v)| {
+            let near: u32 = (-3..=3i64)
+                .filter_map(|d| offset_votes.get(&(off + d)))
+                .sum();
+            (near, v, std::cmp::Reverse(*off))
+        })?;
+    let pos = best_off.max(0) as usize;
+    if pos >= draft.len() {
+        return None;
+    }
+    let len = read.len().min(draft.len() - pos);
+    let interval = &draft[pos..pos + len];
+    let band = (read.len() / 6).max(4);
+    let d = edit_distance_banded(read, interval, band);
+    let id = 1.0 - (d as f64 / read.len().max(1) as f64);
+    if id < 0.5 {
+        return None;
+    }
+    Some(Mapping { pos, len, identity: id.max(0.0) })
+}
+
+/// Mean mapping identity over a read set — the "draft" series of Fig 23.
+pub fn mean_mapping_identity(reads: &[Vec<u8>], draft: &[u8]) -> f64 {
+    let idx = DraftIndex::build(draft);
+    let mut acc = 0.0;
+    let mut n = 0usize;
+    for r in reads {
+        if let Some(m) = map_read(r, draft, &idx) {
+            acc += m.identity;
+            n += 1;
+        }
+    }
+    if n == 0 { 0.0 } else { acc / n as f64 }
+}
+
+/// Identity of the draft against the true genome (aligned at the best
+/// seed offset) — the quality metric Fig 23 reports for "draft".
+pub fn draft_vs_truth(draft: &[u8], genome: &[u8]) -> f64 {
+    let n = draft.len().min(genome.len());
+    if n == 0 {
+        return 0.0;
+    }
+    identity(&draft[..n], &genome[..n])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn maps_exact_read() {
+        let mut rng = Rng::new(7);
+        let draft: Vec<u8> = (0..300).map(|_| rng.base()).collect();
+        let idx = DraftIndex::build(&draft);
+        let read = draft[100..180].to_vec();
+        let m = map_read(&read, &draft, &idx).unwrap();
+        assert_eq!(m.pos, 100);
+        assert!(m.identity > 0.99);
+    }
+
+    #[test]
+    fn maps_noisy_read() {
+        let mut rng = Rng::new(8);
+        let draft: Vec<u8> = (0..300).map(|_| rng.base()).collect();
+        let idx = DraftIndex::build(&draft);
+        let mut read = draft[50..140].to_vec();
+        for _ in 0..6 {
+            let i = rng.below(read.len());
+            read[i] = (read[i] + 1) % 4;
+        }
+        let m = map_read(&read, &draft, &idx).unwrap();
+        assert!(m.pos.abs_diff(50) <= 3, "pos {}", m.pos);
+        assert!(m.identity > 0.85, "{}", m.identity);
+    }
+
+    #[test]
+    fn rejects_unrelated_read() {
+        let mut rng = Rng::new(9);
+        let draft: Vec<u8> = (0..200).map(|_| rng.base()).collect();
+        let idx = DraftIndex::build(&draft);
+        let read: Vec<u8> = (0..80).map(|_| rng.base()).collect();
+        if let Some(m) = map_read(&read, &draft, &idx) {
+            assert!(m.identity < 0.8, "spurious {m:?}");
+        }
+    }
+}

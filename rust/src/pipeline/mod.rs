@@ -1,0 +1,14 @@
+//! Downstream nanopore sequencing pipeline (Fig 1): overlap finding,
+//! assembly, read mapping, polishing — the consumers of base-called reads
+//! that Fig 23 pushes quantized base-callers through ("base-call" ->
+//! "draft" -> "polished" accuracy).
+
+pub mod assembly;
+pub mod mapping;
+pub mod overlap;
+pub mod polish;
+
+pub use assembly::assemble;
+pub use mapping::map_read;
+pub use overlap::find_overlaps;
+pub use polish::polish;

@@ -1,0 +1,125 @@
+//! Overlap finding (Fig 1 stage 2): all suffix-prefix matches between read
+//! pairs, seeded by shared k-mers and verified with banded alignment.
+
+use std::collections::HashMap;
+
+use crate::basecall::vote::best_overlap;
+
+/// One suffix(a)-prefix(b) overlap edge of the overlap graph.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Overlap {
+    pub a: usize,
+    pub b: usize,
+    pub len: usize,
+}
+
+/// Seed size for candidate generation. 8 bases = 16 bits of specificity,
+/// enough at nanopore error rates over the read lengths we simulate.
+pub const SEED_K: usize = 8;
+
+fn seeds(read: &[u8]) -> impl Iterator<Item = (u64, usize)> + '_ {
+    read.windows(SEED_K).enumerate().map(|(i, w)| {
+        let mut h = 0u64;
+        for &b in w {
+            h = h * 4 + b as u64;
+        }
+        (h, i)
+    })
+}
+
+/// Find suffix-prefix overlaps of length >= `min_len` between all pairs.
+///
+/// Candidates come from a k-mer index (a seed of `a`'s tail matching a seed
+/// of `b`'s head); each candidate pair is verified with the banded
+/// suffix-prefix aligner of `basecall::vote` — the same "longest match"
+/// primitive the SOT-MRAM comparator arrays accelerate.
+pub fn find_overlaps(reads: &[Vec<u8>], min_len: usize) -> Vec<Overlap> {
+    // index k-mers of every read head (first min_len*2 bases)
+    let mut head_index: HashMap<u64, Vec<usize>> = HashMap::new();
+    for (id, read) in reads.iter().enumerate() {
+        let head = &read[..read.len().min(min_len * 2)];
+        for (h, _) in seeds(head) {
+            head_index.entry(h).or_default().push(id);
+        }
+    }
+    let mut out = Vec::new();
+    for (a, read) in reads.iter().enumerate() {
+        if read.len() < min_len {
+            continue;
+        }
+        let tail = &read[read.len() - read.len().min(min_len * 2)..];
+        let mut cands: Vec<usize> = seeds(tail)
+            .filter_map(|(h, _)| head_index.get(&h))
+            .flatten()
+            .copied()
+            .filter(|&b| b != a)
+            .collect();
+        cands.sort_unstable();
+        cands.dedup();
+        for b in cands {
+            if let Some(len) = best_overlap(read, &reads[b], min_len) {
+                out.push(Overlap { a, b, len });
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn shredded(genome_len: usize, read_len: usize, step: usize, seed: u64)
+                -> (Vec<u8>, Vec<Vec<u8>>) {
+        let mut rng = Rng::new(seed);
+        let genome: Vec<u8> = (0..genome_len).map(|_| rng.base()).collect();
+        let mut reads = Vec::new();
+        let mut s = 0;
+        while s + read_len <= genome.len() {
+            reads.push(genome[s..s + read_len].to_vec());
+            s += step;
+        }
+        (genome, reads)
+    }
+
+    #[test]
+    fn finds_consecutive_overlaps() {
+        let (_, reads) = shredded(400, 60, 30, 1);
+        let ovl = find_overlaps(&reads, 15);
+        // every consecutive pair overlaps by 30
+        for i in 0..reads.len() - 1 {
+            assert!(ovl.iter().any(|o| o.a == i && o.b == i + 1
+                                       && o.len >= 25),
+                    "missing overlap {i}->{}", i + 1);
+        }
+    }
+
+    #[test]
+    fn no_overlaps_between_unrelated_reads() {
+        let mut rng = Rng::new(2);
+        let r1: Vec<u8> = (0..80).map(|_| rng.base()).collect();
+        let r2: Vec<u8> = (0..80).map(|_| rng.base()).collect();
+        let ovl = find_overlaps(&[r1, r2], 20);
+        assert!(ovl.is_empty(), "{ovl:?}");
+    }
+
+    #[test]
+    fn tolerates_read_errors() {
+        let (_, mut reads) = shredded(300, 60, 30, 3);
+        // corrupt ~5% of bases
+        let mut rng = Rng::new(4);
+        for r in reads.iter_mut() {
+            for _ in 0..3 {
+                let i = rng.below(r.len());
+                r[i] = (r[i] + 1) % 4;
+            }
+        }
+        let ovl = find_overlaps(&reads, 15);
+        let consecutive = (0..reads.len() - 1)
+            .filter(|&i| ovl.iter().any(|o| o.a == i && o.b == i + 1))
+            .count();
+        assert!(consecutive >= reads.len() - 2,
+                "{consecutive}/{}", reads.len() - 1);
+    }
+}

@@ -1,0 +1,101 @@
+//! Polishing (Fig 1 stage 5): column-wise majority vote of mapped reads
+//! over the draft (a racon-style pileup consensus, simplified).
+
+use crate::basecall::vote::align_onto;
+
+use super::mapping::{map_read, DraftIndex};
+
+/// Polish the draft with the read pileup: every mapped read votes on the
+/// draft positions it aligns to; majority wins (ties keep the draft base).
+pub fn polish(draft: &[u8], reads: &[Vec<u8>]) -> Vec<u8> {
+    if draft.is_empty() {
+        return Vec::new();
+    }
+    let idx = DraftIndex::build(draft);
+    let mut votes = vec![[0u32; 4]; draft.len()];
+    for (i, &b) in draft.iter().enumerate() {
+        votes[i][b as usize] += 1;
+    }
+    for read in reads {
+        if let Some(m) = map_read(read, draft, &idx) {
+            let interval = &draft[m.pos..m.pos + m.len];
+            for (k, sym) in align_onto(interval, read).into_iter().enumerate()
+            {
+                if let Some(s) = sym {
+                    if s < 4 {
+                        votes[m.pos + k][s as usize] += 1;
+                    }
+                }
+            }
+        }
+    }
+    draft.iter()
+        .enumerate()
+        .map(|(i, &orig)| {
+            let v = &votes[i];
+            let (mut best, mut cnt) = (orig as usize, v[orig as usize]);
+            for (s, &c) in v.iter().enumerate() {
+                if c > cnt {
+                    best = s;
+                    cnt = c;
+                }
+            }
+            best as u8
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::basecall::edit::identity;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn polishing_fixes_draft_errors() {
+        let mut rng = Rng::new(11);
+        let genome: Vec<u8> = (0..400).map(|_| rng.base()).collect();
+        // draft with scattered errors
+        let mut draft = genome.clone();
+        for _ in 0..20 {
+            let i = rng.below(draft.len());
+            draft[i] = (draft[i] + 1) % 4;
+        }
+        // clean overlapping reads
+        let mut reads = Vec::new();
+        let mut s = 0;
+        while s + 80 <= genome.len() {
+            reads.push(genome[s..s + 80].to_vec());
+            s += 20;
+        }
+        let polished = polish(&draft, &reads);
+        let before = identity(&draft, &genome);
+        let after = identity(&polished, &genome);
+        assert!(after > before, "before {before} after {after}");
+        assert!(after > 0.99, "after {after}");
+    }
+
+    #[test]
+    fn polish_without_reads_is_identity() {
+        let draft = vec![0u8, 1, 2, 3, 2, 1];
+        assert_eq!(polish(&draft, &[]), draft);
+    }
+
+    #[test]
+    fn systematic_read_errors_survive_polish() {
+        // all reads share the same wrong base -> polishing keeps it wrong
+        let mut rng = Rng::new(12);
+        let genome: Vec<u8> = (0..200).map(|_| rng.base()).collect();
+        let mut corrupt = genome.clone();
+        corrupt[100] = (corrupt[100] + 1) % 4;
+        let mut reads = Vec::new();
+        let mut s = 0;
+        while s + 60 <= corrupt.len() {
+            reads.push(corrupt[s..s + 60].to_vec());
+            s += 20;
+        }
+        let polished = polish(&genome, &reads); // draft correct here
+        // majority of reads vote the systematic error INTO the draft
+        assert_eq!(polished[100], corrupt[100]);
+    }
+}

@@ -1,0 +1,118 @@
+//! PJRT executable wrapper: HLO text -> compile -> batched execution.
+//!
+//! Follows the /opt/xla-example/load_hlo pattern: `PjRtClient::cpu()` ->
+//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
+//! `client.compile` -> `execute`. Outputs are 1-tuples (the export lowers
+//! with return_tuple=True), unwrapped with `to_tuple1`.
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+use crate::basecall::ctc::LogProbs;
+use crate::basecall::NUM_SYMBOLS;
+
+use super::meta::{ArtifactEntry, Meta};
+
+/// One compiled model variant at a fixed batch size.
+pub struct ModelExecutable {
+    pub entry: ArtifactEntry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl ModelExecutable {
+    /// Run one batch of signal windows (rows of `entry.window` f32 samples).
+    /// `signals.len()` must equal `entry.batch`. Returns per-window
+    /// log-probabilities (time_steps x NUM_SYMBOLS each).
+    pub fn run(&self, signals: &[&[f32]]) -> Result<Vec<LogProbs>> {
+        anyhow::ensure!(signals.len() == self.entry.batch,
+                        "batch mismatch: got {}, executable wants {}",
+                        signals.len(), self.entry.batch);
+        let w = self.entry.window;
+        let mut flat = Vec::with_capacity(signals.len() * w);
+        for s in signals {
+            anyhow::ensure!(s.len() == w, "window length {} != {w}", s.len());
+            flat.extend_from_slice(s);
+        }
+        let input = xla::Literal::vec1(&flat)
+            .reshape(&[signals.len() as i64, w as i64])?;
+        let result = self.exe.execute::<xla::Literal>(&[input])?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let values = out.to_vec::<f32>()?;
+        let t = self.entry.time_steps;
+        anyhow::ensure!(values.len() == signals.len() * t * NUM_SYMBOLS,
+                        "unexpected output size {}", values.len());
+        Ok(values
+            .chunks(t * NUM_SYMBOLS)
+            .map(|c| LogProbs::new(t, c.to_vec()))
+            .collect())
+    }
+}
+
+/// The runtime engine: one PJRT client + a cache of compiled executables.
+pub struct Engine {
+    pub meta: Meta,
+    client: xla::PjRtClient,
+    cache: HashMap<String, ModelExecutable>,
+}
+
+impl Engine {
+    pub fn new(artifacts_dir: &str) -> Result<Engine> {
+        let meta = Meta::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Engine { meta, client, cache: HashMap::new() })
+    }
+
+    /// Compile (or fetch from cache) the artifact for (model, bits, batch).
+    pub fn load(&mut self, model: &str, bits: u32, batch: usize)
+                -> Result<&ModelExecutable> {
+        let entry = self.meta.find(model, bits, batch)
+            .with_context(|| format!("no artifact for {model}/{bits}b/b{batch} \
+                                      — run `make artifacts`"))?
+            .clone();
+        if !self.cache.contains_key(&entry.name) {
+            let path = self.meta.path_of(&entry);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("path")?)
+                .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compile {}: {e:?}", entry.name))?;
+            self.cache.insert(entry.name.clone(),
+                              ModelExecutable { entry: entry.clone(), exe });
+        }
+        Ok(&self.cache[&entry.name])
+    }
+
+    /// Basecall an arbitrary number of windows by tiling over the largest
+    /// available batch executable (padding the tail batch with zeros).
+    pub fn run_windows(&mut self, model: &str, bits: u32,
+                       windows: &[Vec<f32>]) -> Result<Vec<LogProbs>> {
+        let batches = self.meta.batches(model, bits);
+        anyhow::ensure!(!batches.is_empty(), "no artifacts for {model}");
+        let bmax = *batches.last().unwrap();
+        let window = self.meta.window;
+        let zero = vec![0f32; window];
+        let mut out = Vec::with_capacity(windows.len());
+        let mut i = 0;
+        while i < windows.len() {
+            let remaining = windows.len() - i;
+            // pick the smallest batch size that covers the tail
+            let b = *batches.iter().find(|&&b| b >= remaining)
+                .unwrap_or(&bmax);
+            let exe = self.load(model, bits, b)?;
+            let mut refs: Vec<&[f32]> = Vec::with_capacity(b);
+            for k in 0..b {
+                refs.push(windows.get(i + k).map(|w| w.as_slice())
+                          .unwrap_or(&zero));
+            }
+            let lps = exe.run(&refs)?;
+            let take = remaining.min(b);
+            out.extend(lps.into_iter().take(take));
+            i += take;
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,144 @@
+//! Artifact metadata: `artifacts/meta.json` written by the AOT export.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// One exported (model, bits, seat, batch) HLO artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub model: String,
+    pub bits: u32,
+    pub batch: usize,
+    pub window: usize,
+    pub time_steps: usize,
+    pub pallas: bool,
+    pub file: String,
+}
+
+/// Parsed meta.json + artifact directory root.
+#[derive(Clone, Debug)]
+pub struct Meta {
+    pub root: PathBuf,
+    pub window: usize,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Meta {
+    pub fn load(dir: &str) -> Result<Meta> {
+        let root = PathBuf::from(dir);
+        let text = std::fs::read_to_string(root.join("meta.json"))
+            .with_context(|| format!("reading {dir}/meta.json — run \
+                                      `make artifacts` first"))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parse meta.json: {e}"))?;
+        let window = j.get("window").and_then(Json::as_usize)
+            .context("window")?;
+        let mut entries = Vec::new();
+        for e in j.get("entries").and_then(Json::as_arr).context("entries")? {
+            entries.push(ArtifactEntry {
+                name: e.get("name").and_then(Json::as_str)
+                    .context("name")?.to_string(),
+                model: e.get("model").and_then(Json::as_str)
+                    .context("model")?.to_string(),
+                bits: e.get("bits").and_then(Json::as_usize)
+                    .context("bits")? as u32,
+                batch: e.get("batch").and_then(Json::as_usize)
+                    .context("batch")?,
+                window: e.get("window").and_then(Json::as_usize)
+                    .context("window")?,
+                time_steps: e.get("time_steps").and_then(Json::as_usize)
+                    .context("time_steps")?,
+                pallas: e.get("pallas").and_then(Json::as_bool)
+                    .unwrap_or(false),
+                file: e.get("file").and_then(Json::as_str)
+                    .context("file")?.to_string(),
+            });
+        }
+        Ok(Meta { root, window, entries })
+    }
+
+    /// Find the artifact for (model, bits, batch), preferring the pallas
+    /// build (the kernel-bearing HLO).
+    pub fn find(&self, model: &str, bits: u32, batch: usize)
+                -> Option<&ArtifactEntry> {
+        self.entries.iter()
+            .filter(|e| e.model == model && e.bits == bits
+                        && e.batch == batch)
+            .max_by_key(|e| e.pallas)
+    }
+
+    /// Batch sizes available for (model, bits), ascending.
+    pub fn batches(&self, model: &str, bits: u32) -> Vec<usize> {
+        let mut b: Vec<usize> = self.entries.iter()
+            .filter(|e| e.model == model && e.bits == bits)
+            .map(|e| e.batch)
+            .collect();
+        b.sort_unstable();
+        b.dedup();
+        b
+    }
+
+    pub fn path_of(&self, e: &ArtifactEntry) -> PathBuf {
+        self.root.join(&e.file)
+    }
+
+    pub fn pore_model_path(&self) -> PathBuf {
+        self.root.join("pore_model.json")
+    }
+}
+
+/// Default artifacts directory (relative to the repo root).
+pub fn default_artifacts_dir() -> String {
+    std::env::var("HELIX_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".to_string())
+}
+
+/// True when artifacts exist (tests skip gracefully otherwise).
+pub fn artifacts_available(dir: &str) -> bool {
+    Path::new(dir).join("meta.json").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_meta(dir: &Path) {
+        let meta = r#"{"window": 300, "alphabet": "ACGT-", "blank": 4,
+          "entries": [
+            {"name": "guppy_32_b1", "model": "guppy", "bits": 32,
+             "batch": 1, "window": 300, "time_steps": 145,
+             "pallas": true, "file": "guppy_32_b1.hlo.txt"},
+            {"name": "guppy_32_b8", "model": "guppy", "bits": 32,
+             "batch": 8, "window": 300, "time_steps": 145,
+             "pallas": false, "file": "guppy_32_b8.hlo.txt"}
+          ]}"#;
+        let mut f = std::fs::File::create(dir.join("meta.json")).unwrap();
+        f.write_all(meta.as_bytes()).unwrap();
+    }
+
+    #[test]
+    fn parses_and_finds() {
+        let dir = std::env::temp_dir().join("helix_meta_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_meta(&dir);
+        let m = Meta::load(dir.to_str().unwrap()).unwrap();
+        assert_eq!(m.window, 300);
+        assert_eq!(m.entries.len(), 2);
+        let e = m.find("guppy", 32, 1).unwrap();
+        assert!(e.pallas);
+        assert_eq!(e.time_steps, 145);
+        assert_eq!(m.batches("guppy", 32), vec![1, 8]);
+        assert!(m.find("guppy", 5, 1).is_none());
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(Meta::load("/nonexistent/helix").is_err());
+        assert!(!artifacts_available("/nonexistent/helix"));
+    }
+}

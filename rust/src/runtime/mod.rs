@@ -1,0 +1,10 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by `make artifacts`
+//! (python/compile/aot.py) and executes them on the CPU PJRT client.
+//! Python is never on this path — the rust binary is self-contained once
+//! artifacts exist.
+
+pub mod executable;
+pub mod meta;
+
+pub use executable::{Engine, ModelExecutable};
+pub use meta::{ArtifactEntry, Meta};

@@ -1,0 +1,7 @@
+//! Small in-tree replacements for crates unavailable in the offline build
+//! environment (DESIGN.md §Substitutions): a seeded RNG (`rng`), a JSON
+//! subset parser (`json`), and a property-testing helper (`prop`).
+
+pub mod json;
+pub mod prop;
+pub mod rng;

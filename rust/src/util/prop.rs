@@ -1,0 +1,60 @@
+//! Tiny property-testing helper — in-tree replacement for `proptest`
+//! (offline build). Runs a closure over N randomized cases from a seeded
+//! RNG; on failure it reports the case index and seed so the case can be
+//! replayed deterministically.
+
+use crate::util::rng::Rng;
+
+/// Run `cases` randomized checks. The closure gets a per-case RNG and the
+/// case index; it should panic (assert!) on property violation.
+pub fn check<F: FnMut(&mut Rng, usize)>(name: &str, cases: usize, mut f: F) {
+    for i in 0..cases {
+        let seed = 0x9E37_79B9u64
+            .wrapping_mul(i as u64 + 1)
+            .wrapping_add(name.len() as u64);
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || f(&mut rng, i)));
+        if let Err(e) = result {
+            panic!("property '{name}' failed at case {i} (seed {seed}): {:?}",
+                   e.downcast_ref::<String>()
+                       .map(|s| s.as_str())
+                       .or_else(|| e.downcast_ref::<&str>().copied())
+                       .unwrap_or("panic"));
+        }
+    }
+}
+
+/// Random DNA sequence of length in [lo, hi].
+pub fn dna(rng: &mut Rng, lo: usize, hi: usize) -> Vec<u8> {
+    let n = rng.range(lo as i64, hi as i64) as usize;
+    (0..n).map(|_| rng.base()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut count = 0;
+        check("counter", 25, |_, _| count += 1);
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn check_reports_failure() {
+        check("fails", 10, |_, i| assert!(i < 5, "boom"));
+    }
+
+    #[test]
+    fn dna_in_bounds() {
+        let mut rng = Rng::new(9);
+        for _ in 0..100 {
+            let s = dna(&mut rng, 3, 12);
+            assert!(s.len() >= 3 && s.len() <= 12);
+            assert!(s.iter().all(|&b| b < 4));
+        }
+    }
+}

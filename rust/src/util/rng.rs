@@ -1,0 +1,161 @@
+//! Deterministic xoshiro256++ RNG + distributions (normal, geometric-ish)
+//! — in-tree replacement for `rand`/`rand_distr` (offline build).
+//!
+//! Determinism matters here: the Monte-Carlo device studies (Fig 15/16) and
+//! the synthetic datasets must be reproducible run-to-run, so every consumer
+//! takes an explicit seed.
+
+/// xoshiro256++ by Blackman & Vigna (public domain reference constants).
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        Rng { s: [splitmix64(&mut sm), splitmix64(&mut sm),
+                  splitmix64(&mut sm), splitmix64(&mut sm)] }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.f64() * n as f64) as usize % n
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    #[inline]
+    pub fn range(&mut self, lo: i64, hi: i64) -> i64 {
+        lo + self.below((hi - lo + 1) as usize) as i64
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.f64();
+            if u1 > 1e-12 {
+                let u2 = self.f64();
+                return (-2.0 * u1.ln()).sqrt()
+                    * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Normal with mean/sigma.
+    #[inline]
+    pub fn normal_ms(&mut self, mean: f64, sigma: f64) -> f64 {
+        mean + sigma * self.normal()
+    }
+
+    /// Log-normal such that the *multiplicative* sigma is `rel_sigma` of the
+    /// mean — the form device papers use for "X% process variation".
+    pub fn lognormal_rel(&mut self, mean: f64, rel_sigma: f64) -> f64 {
+        if rel_sigma <= 0.0 {
+            return mean;
+        }
+        let var = (rel_sigma * rel_sigma).ln_1p();
+        let mu = mean.ln() - var / 2.0;
+        (mu + var.sqrt() * self.normal()).exp()
+    }
+
+    /// Random DNA base id in [0, 4).
+    #[inline]
+    pub fn base(&mut self) -> u8 {
+        (self.next_u64() % 4) as u8
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng::new(43);
+        assert_ne!(Rng::new(42).next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn uniform_mean_is_half() {
+        let mut r = Rng::new(1);
+        let m: f64 = (0..20_000).map(|_| r.f64()).sum::<f64>() / 20_000.0;
+        assert!((m - 0.5).abs() < 0.01, "{m}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(2);
+        let xs: Vec<f64> = (0..40_000).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / xs.len() as f64;
+        assert!(mean.abs() < 0.02, "{mean}");
+        assert!((var - 1.0).abs() < 0.05, "{var}");
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = Rng::new(3);
+        for _ in 0..1000 {
+            assert!(r.below(7) < 7);
+        }
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            seen[r.below(7)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn lognormal_rel_mean_approx() {
+        let mut r = Rng::new(4);
+        let m: f64 = (0..40_000).map(|_| r.lognormal_rel(10.0, 0.1)).sum::<f64>()
+            / 40_000.0;
+        assert!((m - 10.0).abs() < 0.15, "{m}");
+    }
+}

@@ -1,0 +1,163 @@
+//! Integration tests over the real AOT artifacts: HLO text -> PJRT compile
+//! -> execute, checked against golden outputs computed by JAX at export
+//! time, plus the pallas-vs-jnp cross-check and a full coordinator run.
+//!
+//! These tests skip (with a message) when `make artifacts` has not produced
+//! artifacts yet, so `cargo test` stays green on a fresh checkout.
+
+use helix::basecall::ctc::LogProbs;
+use helix::basecall::NUM_SYMBOLS;
+use helix::coordinator::{Coordinator, CoordinatorConfig};
+use helix::genome::pore::PoreModel;
+use helix::genome::synth::{RunSpec, SequencingRun};
+use helix::runtime::meta::{artifacts_available, default_artifacts_dir};
+use helix::runtime::Engine;
+use helix::util::json::Json;
+
+fn artifacts() -> Option<String> {
+    let dir = default_artifacts_dir();
+    if artifacts_available(&dir) {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts not built (`make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn golden_guppy_fp32_matches_jax() {
+    let Some(dir) = artifacts() else { return };
+    let text = std::fs::read_to_string(format!("{dir}/golden_guppy32.json"))
+        .expect("golden file");
+    let j = Json::parse(&text).unwrap();
+    let input = j.get("input").unwrap().as_f32_vec().unwrap();
+    let want = j.get("output").unwrap().as_f32_vec().unwrap();
+
+    let mut engine = Engine::new(&dir).unwrap();
+    let exe = engine.load("guppy", 32, 1).unwrap();
+    let got = exe.run(&[&input]).unwrap();
+    assert_eq!(got.len(), 1);
+    let got = &got[0].data;
+    assert_eq!(got.len(), want.len());
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert!((g - w).abs() < 1e-3,
+                "logprob {i}: rust-PJRT {g} vs jax {w}");
+    }
+}
+
+#[test]
+fn pallas_and_jnp_artifacts_agree() {
+    let Some(dir) = artifacts() else { return };
+    let mut engine = Engine::new(&dir).unwrap();
+    if engine.meta.entries.iter().all(|e| e.name != "guppy_32_jnp_b1") {
+        eprintln!("skipping: jnp twin not exported");
+        return;
+    }
+    let window = engine.meta.window;
+    let sig: Vec<f32> = (0..window)
+        .map(|i| ((i as f32) * 0.37).sin())
+        .collect();
+    // kernel-bearing artifact
+    let a = engine.load("guppy", 32, 1).unwrap().run(&[&sig]).unwrap();
+    // pure-jnp twin: load by direct entry lookup
+    let entry = engine.meta.entries.iter()
+        .find(|e| e.name == "guppy_32_jnp_b1").unwrap().clone();
+    let proto = xla::HloModuleProto::from_text_file(
+        engine.meta.path_of(&entry).to_str().unwrap()).unwrap();
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let client = xla::PjRtClient::cpu().unwrap();
+    let exe = client.compile(&comp).unwrap();
+    let lit = xla::Literal::vec1(&sig).reshape(&[1, window as i64]).unwrap();
+    let out = exe.execute::<xla::Literal>(&[lit]).unwrap()[0][0]
+        .to_literal_sync().unwrap()
+        .to_tuple1().unwrap()
+        .to_vec::<f32>().unwrap();
+    assert_eq!(out.len(), a[0].data.len());
+    for (x, y) in out.iter().zip(&a[0].data) {
+        assert!((x - y).abs() < 1e-3, "pallas {y} vs jnp {x}");
+    }
+}
+
+#[test]
+fn outputs_are_normalized_log_probs() {
+    let Some(dir) = artifacts() else { return };
+    let mut engine = Engine::new(&dir).unwrap();
+    let window = engine.meta.window;
+    let sig = vec![0.25f32; window];
+    let lps = engine.run_windows("guppy", 32, &[sig]).unwrap();
+    let lp: &LogProbs = &lps[0];
+    for t in 0..lp.t {
+        let total: f32 = lp.row(t).iter().map(|x| x.exp()).sum();
+        assert!((total - 1.0).abs() < 1e-3, "t={t}: sum {total}");
+        assert_eq!(lp.row(t).len(), NUM_SYMBOLS);
+    }
+}
+
+#[test]
+fn run_windows_handles_ragged_batches() {
+    let Some(dir) = artifacts() else { return };
+    let mut engine = Engine::new(&dir).unwrap();
+    let window = engine.meta.window;
+    // 11 windows: exercises batch tiling + tail padding
+    let windows: Vec<Vec<f32>> = (0..11)
+        .map(|k| (0..window).map(|i| ((i + k) as f32 * 0.11).cos()).collect())
+        .collect();
+    let lps = engine.run_windows("guppy", 32, &windows).unwrap();
+    assert_eq!(lps.len(), 11);
+    // same window in different batch positions must give the same output
+    let single = engine.run_windows("guppy", 32, &windows[3..4]).unwrap();
+    for (a, b) in lps[3].data.iter().zip(&single[0].data) {
+        assert!((a - b).abs() < 1e-4, "batch-position dependence: {a} vs {b}");
+    }
+}
+
+#[test]
+fn quantized_artifacts_execute_and_differ() {
+    let Some(dir) = artifacts() else { return };
+    let mut engine = Engine::new(&dir).unwrap();
+    if engine.meta.find("guppy", 5, 1).is_none() {
+        eprintln!("skipping: 5-bit artifact not exported");
+        return;
+    }
+    let window = engine.meta.window;
+    let sig: Vec<f32> = (0..window).map(|i| (i as f32 * 0.2).sin()).collect();
+    let fp = engine.run_windows("guppy", 32, &[sig.clone()]).unwrap();
+    let q5 = engine.run_windows("guppy", 5, &[sig]).unwrap();
+    // different weights (finetuned) + fake-quant: outputs must differ, but
+    // both be valid distributions
+    let diff: f32 = fp[0].data.iter().zip(&q5[0].data)
+        .map(|(a, b)| (a - b).abs())
+        .sum();
+    assert!(diff > 1e-3, "5-bit artifact identical to fp32?");
+    let total: f32 = q5[0].row(0).iter().map(|x| x.exp()).sum();
+    assert!((total - 1.0).abs() < 1e-3);
+}
+
+#[test]
+fn coordinator_end_to_end_calls_reads() {
+    let Some(dir) = artifacts() else { return };
+    let pm = PoreModel::load(&format!("{dir}/pore_model.json")).unwrap();
+    let run = SequencingRun::simulate(&pm, RunSpec {
+        genome_len: 600,
+        coverage: 2,
+        read_len_min: 200,
+        read_len_max: 300,
+        seed: 3,
+    });
+    let mut coord = Coordinator::new(CoordinatorConfig {
+        model: "guppy".into(),
+        bits: 32,
+        artifacts_dir: dir,
+        ..Default::default()
+    }).unwrap();
+    for r in &run.reads {
+        coord.submit(r);
+    }
+    let called = coord.finish().unwrap();
+    assert_eq!(called.len(), run.reads.len());
+    for c in &called {
+        assert!(!c.seq.is_empty(), "read {} decoded empty", c.read_id);
+        assert!(c.seq.iter().all(|&b| b < 4));
+        assert!(!c.window_decodes.is_empty());
+    }
+}
