@@ -1,0 +1,41 @@
+#!/usr/bin/env bash
+# Tier-1 CI for the Helix reproduction: build, tests, lints, and
+# (optionally) the coordinator perf bench that emits
+# BENCH_coordinator.json for the perf trajectory.
+#
+#   ./ci.sh          # build + test + clippy
+#   ./ci.sh bench    # ... plus `cargo bench --bench coordinator`
+#                    # (needs `make artifacts` for the PJRT artifacts)
+set -euo pipefail
+cd "$(dirname "$0")"
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "ci.sh: cargo not found on PATH — rust toolchain unavailable in" \
+         "this environment; skipping build/test/lint." >&2
+    exit 0
+fi
+
+echo "== cargo build --release"
+cargo build --release
+
+echo "== cargo test -q"
+cargo test -q
+
+echo "== cargo clippy -- -D warnings"
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "ci.sh: clippy not installed; skipping lint" >&2
+fi
+
+if [ "${1:-}" = "bench" ]; then
+    echo "== cargo bench --bench coordinator"
+    # the bench skips itself gracefully when artifacts are missing; it
+    # writes BENCH_coordinator.json next to where it runs
+    cargo bench --bench coordinator
+    if [ -f BENCH_coordinator.json ]; then
+        echo "wrote $(pwd)/BENCH_coordinator.json"
+    fi
+fi
+
+echo "ci.sh: OK"

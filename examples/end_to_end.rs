@@ -41,12 +41,16 @@ fn main() -> Result<()> {
             ..Default::default()
         })?;
         let t0 = std::time::Instant::now();
+        // stream completed reads out while later reads are still going in
+        let mut called = Vec::new();
         for r in &run.reads {
             coord.submit(r);
+            called.extend(coord.drain_ready());
         }
         let max_batch = coord.max_batch();
         let metrics = coord.metrics.clone();
-        let called = coord.finish()?;
+        called.extend(coord.finish()?);
+        called.sort_by_key(|c| c.read_id);
         let wall = t0.elapsed();
 
         // per-read accuracy

@@ -1,6 +1,7 @@
 //! Serving demo: drive the coordinator like a sequencer would — reads
-//! arriving over time — and report batching behaviour and latency, the
-//! telemetry a deployment would watch.
+//! arriving over time — and watch called reads STREAM BACK OUT while
+//! submission is still in progress (per-read eager completion), plus the
+//! batching and latency telemetry a deployment would watch.
 //!
 //!     make artifacts && cargo run --release --example serve_demo
 
@@ -39,16 +40,32 @@ fn main() -> Result<()> {
             ..Default::default()
         })?;
         let t0 = Instant::now();
-        // reads "arrive" with a small inter-arrival gap
-        for r in &run.reads {
+        let mut called = Vec::new();
+        let mut streamed_mid_run = 0usize;
+        // reads "arrive" with a small inter-arrival gap; completed reads
+        // stream back between submissions
+        for (i, r) in run.reads.iter().enumerate() {
             coord.submit(r);
             std::thread::sleep(Duration::from_millis(2));
+            while let Some(c) = coord.try_recv() {
+                streamed_mid_run += 1;
+                if streamed_mid_run <= 3 {
+                    println!("  [{label}] read {} ({} bp) completed after \
+                              {:?}, {} of {} submissions in",
+                             c.read_id, c.seq.len(), t0.elapsed(),
+                             i + 1, run.reads.len());
+                }
+                called.push(c);
+            }
         }
         let max_batch = coord.max_batch();
         let metrics = coord.metrics.clone();
-        let called = coord.finish()?;
-        println!("{label:<26} {} reads in {:>8.2?}   {}",
-                 called.len(), t0.elapsed(), metrics.report(max_batch));
+        called.extend(coord.finish()?);
+        called.sort_by_key(|c| c.read_id);
+        println!("{label:<26} {} reads in {:>8.2?} ({} streamed mid-run)   \
+                  {}",
+                 called.len(), t0.elapsed(), streamed_mid_run,
+                 metrics.report(max_batch));
     }
     Ok(())
 }

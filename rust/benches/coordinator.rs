@@ -63,9 +63,11 @@ fn main() {
         std::hint::black_box(beam_search(&lps[0], 10));
     });
 
-    // full coordinator with different batch policies
+    // full coordinator with different batch policies; per-read p50/p99
+    // latency comes from the streaming collector's histogram
     println!("\n== coordinator end-to-end ({} reads, {} bases) ==",
              run.reads.len(), total_bases);
+    let mut rows: Vec<String> = Vec::new();
     for (label, policy) in [
         ("batch=1", BatchPolicy { max_batch: 1,
                                   max_wait: Duration::ZERO }),
@@ -82,15 +84,37 @@ fn main() {
             artifacts_dir: dir.clone(),
             ..Default::default()
         }).unwrap();
+        let mut called = Vec::new();
         for r in &run.reads {
             coord.submit(r);
+            // streaming drain keeps the bounded output queue moving
+            called.extend(coord.drain_ready());
         }
         let metrics = coord.metrics.clone();
-        let called = coord.finish().unwrap();
+        called.extend(coord.finish().unwrap());
         let dt = t0.elapsed().as_secs_f64();
         let bases: usize = called.iter().map(|c| c.seq.len()).sum();
-        println!("{label:<14} {:>8.2}s  {:>9.0} bases/s   fill {:.2}",
+        let p50 = metrics.read_latency.quantile_micros(0.50);
+        let p99 = metrics.read_latency.quantile_micros(0.99);
+        println!("{label:<14} {:>8.2}s  {:>9.0} bases/s   fill {:.2}   \
+                  lat p50 {:.1}ms p99 {:.1}ms",
                  dt, bases as f64 / dt,
-                 metrics.mean_batch_fill(policy.max_batch));
+                 metrics.mean_batch_fill(policy.max_batch),
+                 p50 as f64 / 1e3, p99 as f64 / 1e3);
+        rows.push(format!(
+            "{{\"policy\": \"{label}\", \"wall_s\": {dt:.3}, \
+             \"bases_per_s\": {:.0}, \"batch_fill\": {:.3}, \
+             \"p50_us\": {p50}, \"p99_us\": {p99}}}",
+            bases as f64 / dt,
+            metrics.mean_batch_fill(policy.max_batch)));
+    }
+    // machine-readable summary for the perf trajectory (see ci.sh)
+    let json = format!(
+        "{{\"bench\": \"coordinator\", \"reads\": {}, \"bases\": {}, \
+         \"rows\": [{}]}}\n",
+        run.reads.len(), total_bases, rows.join(", "));
+    match std::fs::write("BENCH_coordinator.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_coordinator.json"),
+        Err(e) => println!("\ncould not write BENCH_coordinator.json: {e}"),
     }
 }

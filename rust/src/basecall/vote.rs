@@ -124,6 +124,27 @@ pub fn best_overlap(a: &[u8], b: &[u8], min_len: usize) -> Option<usize> {
     best.map(|(l, _)| l)
 }
 
+/// Within-read voting + splice (§2.2, the ⌊L/T⌋-reads-per-signal vote):
+/// neighbouring windows of one read overlap, so vote each window decode
+/// against its neighbours, then merge the voted windows into one sequence.
+/// This is the per-read consensus entry point the coordinator's collector
+/// stage calls the moment a read's last window decodes.
+pub fn vote_and_splice(decodes: &[Vec<u8>], min_overlap: usize) -> Vec<u8> {
+    let voted: Vec<Vec<u8>> = (0..decodes.len())
+        .map(|i| {
+            let mut nbrs: Vec<&[u8]> = Vec::new();
+            if i > 0 {
+                nbrs.push(&decodes[i - 1]);
+            }
+            if i + 1 < decodes.len() {
+                nbrs.push(&decodes[i + 1]);
+            }
+            consensus(&decodes[i], &nbrs)
+        })
+        .collect();
+    merge_reads(&voted, min_overlap)
+}
+
 /// Merge overlapping reads (in genome order) into one contig using
 /// suffix-prefix overlaps; non-overlapping reads are concatenated.
 /// Fig 19(b): "align & vote" — with only two reads per junction this is the
@@ -191,6 +212,27 @@ mod tests {
                                  &[&bad, &truth, &truth, &truth]);
             assert_eq!(cons, truth);
         });
+    }
+
+    #[test]
+    fn vote_and_splice_recovers_from_one_bad_window() {
+        // three overlapping windows of a pseudo-random truth; the middle
+        // one carries an error that its two neighbours outvote
+        let mut rng = crate::util::rng::Rng::new(41);
+        let truth: Vec<u8> = (0..40).map(|_| rng.base()).collect();
+        let w0 = truth[0..20].to_vec();
+        let mut w1 = truth[10..30].to_vec();
+        w1[5] = (w1[5] + 1) % 4; // truth[15] corrupted
+        let w2 = truth[20..40].to_vec();
+        let spliced = vote_and_splice(&[w0, w1, w2], 6);
+        assert_eq!(spliced, truth);
+    }
+
+    #[test]
+    fn vote_and_splice_degenerate_inputs() {
+        assert!(vote_and_splice(&[], 6).is_empty());
+        let one = vec![vec![0u8, 1, 2, 3]];
+        assert_eq!(vote_and_splice(&one, 6), vec![0u8, 1, 2, 3]);
     }
 
     #[test]

@@ -260,10 +260,15 @@ pub fn pipeline_accuracy(dir: &str, model: &str, bits: u32,
         artifacts_dir: dir.into(),
         ..Default::default()
     })?;
+    // stream completed reads out while submitting (keeps the bounded
+    // pipeline moving on arbitrarily large runs)
+    let mut called = Vec::new();
     for r in &run.reads {
         coord.submit(r);
+        called.extend(coord.drain_ready());
     }
-    let called = coord.finish()?;
+    called.extend(coord.finish()?);
+    called.sort_by_key(|c| c.read_id);
     // base-call accuracy: identity of each called read vs its truth
     let mut acc = 0.0;
     let mut n = 0;

@@ -1,7 +1,8 @@
-//! Dynamic batching: size-or-deadline policy over an mpsc queue.
+//! Dynamic batching: size-or-deadline policy over a bounded queue.
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
+
+use crate::util::bounded::{Receiver, RecvTimeoutError};
 
 /// Batching policy.
 #[derive(Clone, Copy, Debug)]
@@ -28,8 +29,11 @@ pub struct Batch<T> {
     pub full: bool,
 }
 
-/// Pulls batches off a channel according to the policy. Returns None when
-/// the channel is closed and drained.
+/// Pulls batches off a bounded channel according to the policy. Returns
+/// None when the channel is closed and drained. Because the feeding
+/// channel is bounded, a batcher that falls behind backpressures
+/// `Coordinator::submit()` instead of letting the queue grow without
+/// limit.
 pub struct Batcher<T> {
     rx: Receiver<T>,
     policy: BatchPolicy,
@@ -79,11 +83,11 @@ impl<T> Batcher<T> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::mpsc::channel;
+    use crate::util::bounded::bounded;
 
     #[test]
     fn size_trigger() {
-        let (tx, rx) = channel();
+        let (tx, rx) = bounded(16);
         for i in 0..10 {
             tx.send(i).unwrap();
         }
@@ -98,7 +102,7 @@ mod tests {
 
     #[test]
     fn deadline_trigger() {
-        let (tx, rx) = channel();
+        let (tx, rx) = bounded(16);
         tx.send(1).unwrap();
         tx.send(2).unwrap();
         let mut b = Batcher::new(rx, BatchPolicy {
@@ -112,7 +116,7 @@ mod tests {
 
     #[test]
     fn drains_after_close() {
-        let (tx, rx) = channel();
+        let (tx, rx) = bounded(16);
         tx.send(7).unwrap();
         drop(tx);
         let mut b = Batcher::new(rx, BatchPolicy::default());

@@ -1,0 +1,366 @@
+//! Collector stage: per-read eager completion.
+//!
+//! Decode workers emit `DecodedWindow`s in whatever order batches and beam
+//! searches finish. The collector's router thread assembles them against
+//! the expected window count registered at `submit()` time, and the moment
+//! a read's last window arrives it dispatches the read to a vote worker
+//! pool that runs the within-read neighbour vote + splice
+//! (`basecall::vote::vote_and_splice`) and pushes the finished
+//! `CalledRead` onto the output queue. Consensus is therefore
+//! pipelined with the DNN/decode stages instead of being single-threaded
+//! caller-side work after the run, and `Coordinator::try_recv()` observes
+//! reads mid-run.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::basecall::vote::vote_and_splice;
+use crate::util::bounded::{bounded, send_round_robin, unbounded,
+                           Receiver, Sender};
+
+use super::metrics::Metrics;
+use super::server::CalledRead;
+
+/// Overlap floor for splicing neighbouring window decodes (samples the
+/// windower's hop guarantees).
+const SPLICE_MIN_OVERLAP: usize = 6;
+
+/// One decoded window en route from the decode pool to the collector.
+#[derive(Clone, Debug)]
+pub struct DecodedWindow {
+    pub read_id: usize,
+    pub window_idx: usize,
+    pub seq: Vec<u8>,
+}
+
+struct ReadEntry {
+    expected: usize,
+    submitted_at: Instant,
+}
+
+/// Shared bookkeeping between `Coordinator::submit()` (which knows how
+/// many windows each read was chopped into) and the collector router
+/// (which must recognise a read's last window). Reads MUST be registered
+/// before their first window enters the pipeline.
+#[derive(Default)]
+pub struct ReadRegistry {
+    inner: Mutex<HashMap<usize, ReadEntry>>,
+}
+
+impl ReadRegistry {
+    pub fn register(&self, read_id: usize, expected: usize) {
+        self.inner.lock().unwrap().insert(read_id, ReadEntry {
+            expected,
+            submitted_at: Instant::now(),
+        });
+    }
+
+    fn expected(&self, read_id: usize) -> Option<usize> {
+        self.inner.lock().unwrap().get(&read_id).map(|e| e.expected)
+    }
+
+    fn take_submitted_at(&self, read_id: usize) -> Option<Instant> {
+        self.inner.lock().unwrap().remove(&read_id).map(|e| e.submitted_at)
+    }
+
+    /// Drop a registration whose windows never entered the pipeline
+    /// (e.g. `submit()` after a mid-run DNN failure).
+    pub(super) fn unregister(&self, read_id: usize) {
+        self.inner.lock().unwrap().remove(&read_id);
+    }
+
+    /// Drop every remaining registration. Called by the router once the
+    /// decoded stream has disconnected: no further window can ever
+    /// arrive, so anything still registered is permanently stuck.
+    fn clear(&self) {
+        self.inner.lock().unwrap().clear();
+    }
+
+    /// Reads whose windows are still somewhere in the pipeline (an entry
+    /// is removed when the read is handed to the vote stage, just before
+    /// its `CalledRead` is emitted). Telemetry/tests.
+    pub fn in_flight(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct CollectorConfig {
+    pub vote_threads: usize,
+    /// sizes the per-worker vote-job queues (shared with the rest of the
+    /// pipeline's queue bound); the output queue is uncapped.
+    pub queue_cap: usize,
+}
+
+impl Default for CollectorConfig {
+    fn default() -> Self {
+        CollectorConfig { vote_threads: 2, queue_cap: 256 }
+    }
+}
+
+struct VoteJob {
+    read_id: usize,
+    decodes: Vec<Vec<u8>>,
+    submitted_at: Option<Instant>,
+}
+
+/// In-progress assembly of one read's windows.
+struct Assembly {
+    expected: Option<usize>,
+    wins: Vec<Option<Vec<u8>>>,
+    got: usize,
+}
+
+/// Handle over the router thread + vote worker pool + output queue.
+pub struct Collector {
+    router: Option<JoinHandle<()>>,
+    vote_workers: Vec<JoinHandle<()>>,
+    rx_out: Receiver<CalledRead>,
+}
+
+impl Collector {
+    pub fn spawn(registry: Arc<ReadRegistry>,
+                 rx_decoded: Receiver<DecodedWindow>,
+                 metrics: Arc<Metrics>,
+                 cfg: CollectorConfig) -> Collector {
+        let n_vote = cfg.vote_threads.max(1);
+        let vote_cap = (cfg.queue_cap / n_vote).max(8);
+        // the output queue is deliberately unbounded: its occupancy is
+        // bounded by the run's own result set, and a cap here would turn
+        // a batch caller that only drains at finish() into a silent
+        // whole-pipeline deadlock once a run outgrows the cap.
+        let (tx_out, rx_out) = unbounded::<CalledRead>();
+
+        let mut vote_txs: Vec<Sender<VoteJob>> = Vec::with_capacity(n_vote);
+        let mut vote_workers = Vec::with_capacity(n_vote);
+        for _ in 0..n_vote {
+            let (tx, rx) = bounded::<VoteJob>(vote_cap);
+            vote_txs.push(tx);
+            let out = tx_out.clone();
+            let m = metrics.clone();
+            vote_workers.push(std::thread::spawn(move || {
+                while let Ok(job) = rx.recv() {
+                    let t0 = Instant::now();
+                    let seq = vote_and_splice(&job.decodes,
+                                              SPLICE_MIN_OVERLAP);
+                    m.add(&m.vote_micros, t0.elapsed().as_micros() as u64);
+                    m.add(&m.bases_called, seq.len() as u64);
+                    m.add(&m.reads_out, 1);
+                    if let Some(t) = job.submitted_at {
+                        m.read_latency
+                            .record(t.elapsed().as_micros() as u64);
+                    }
+                    if out.send(CalledRead {
+                        read_id: job.read_id,
+                        seq,
+                        window_decodes: job.decodes,
+                    }).is_err() {
+                        break; // output receiver gone: shutting down
+                    }
+                }
+            }));
+        }
+        drop(tx_out); // vote workers hold the only output senders
+
+        let router = std::thread::spawn(move || {
+            let mut pending: HashMap<usize, Assembly> = HashMap::new();
+            let mut rr = 0usize;
+            // skip-over-backlogged round-robin to the vote pool; a
+            // `false` return means every vote worker died — the job is
+            // lost, which Collector::finish surfaces as a panic error
+            let dispatch = |read_id: usize, a: Assembly, rr: &mut usize| {
+                let decodes: Vec<Vec<u8>> =
+                    a.wins.into_iter().flatten().collect();
+                send_round_robin(&vote_txs, rr, VoteJob {
+                    read_id,
+                    decodes,
+                    submitted_at: registry.take_submitted_at(read_id),
+                })
+            };
+            while let Ok(d) = rx_decoded.recv() {
+                let a = pending.entry(d.read_id).or_insert_with(|| {
+                    Assembly {
+                        expected: registry.expected(d.read_id),
+                        wins: Vec::new(),
+                        got: 0,
+                    }
+                });
+                if a.wins.len() <= d.window_idx {
+                    a.wins.resize(d.window_idx + 1, None);
+                }
+                if a.wins[d.window_idx].is_none() {
+                    a.got += 1;
+                }
+                a.wins[d.window_idx] = Some(d.seq);
+                if a.expected == Some(a.got) {
+                    let done = pending.remove(&d.read_id).unwrap();
+                    let _ = dispatch(d.read_id, done, &mut rr);
+                }
+            }
+            // upstream closed (normal end-of-run, or a mid-run DNN
+            // failure): flush whatever arrived so partial reads are not
+            // silently lost.
+            let mut rest: Vec<(usize, Assembly)> = pending.drain().collect();
+            rest.sort_by_key(|(id, _)| *id);
+            for (read_id, a) in rest {
+                let _ = dispatch(read_id, a, &mut rr);
+            }
+            // registrations whose windows never arrived at all (a DNN
+            // failure before their first window decoded) can never
+            // complete now — drop them so in_flight() settles at 0.
+            registry.clear();
+            // vote_txs drop here -> vote workers drain and exit -> the
+            // output queue disconnects once the last CalledRead is taken.
+        });
+
+        Collector { router: Some(router), vote_workers, rx_out }
+    }
+
+    /// Non-blocking: a read whose last window has decoded, if any.
+    pub fn try_recv(&self) -> Option<CalledRead> {
+        self.rx_out.try_recv().ok()
+    }
+
+    /// Block up to `timeout` for the next completed read. `None` means
+    /// timeout OR pipeline fully drained; use `finish` to disambiguate.
+    pub fn recv_timeout(&self, timeout: Duration) -> Option<CalledRead> {
+        self.rx_out.recv_timeout(timeout).ok()
+    }
+
+    /// Deterministic drain: block until the pipeline disconnects
+    /// end-to-end, return every remaining read, and join the workers.
+    /// Upstream senders must already be closed or closing, otherwise this
+    /// blocks until they are. A router or vote-worker panic surfaces as
+    /// `Err` instead of silently returning a short result set.
+    pub fn finish(mut self) -> Result<Vec<CalledRead>> {
+        let mut out = Vec::new();
+        while let Ok(r) = self.rx_out.recv() {
+            out.push(r);
+        }
+        let mut panicked = false;
+        if let Some(h) = self.router.take() {
+            panicked |= h.join().is_err();
+        }
+        for h in self.vote_workers.drain(..) {
+            panicked |= h.join().is_err();
+        }
+        anyhow::ensure!(!panicked,
+                        "collector stage panicked mid-run ({} reads were \
+                         recovered before the failure)", out.len());
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spawn_collector(queue_cap: usize)
+        -> (Arc<ReadRegistry>, Sender<DecodedWindow>, Collector,
+            Arc<Metrics>)
+    {
+        let registry = Arc::new(ReadRegistry::default());
+        let metrics = Arc::new(Metrics::default());
+        let (tx, rx) = bounded::<DecodedWindow>(queue_cap);
+        let col = Collector::spawn(registry.clone(), rx, metrics.clone(),
+                                   CollectorConfig {
+                                       vote_threads: 2,
+                                       queue_cap,
+                                   });
+        (registry, tx, col, metrics)
+    }
+
+    fn win(read_id: usize, window_idx: usize, seq: &[u8]) -> DecodedWindow {
+        DecodedWindow { read_id, window_idx, seq: seq.to_vec() }
+    }
+
+    #[test]
+    fn out_of_order_windows_assemble_in_order() {
+        let (reg, tx, col, metrics) = spawn_collector(64);
+        reg.register(7, 3);
+        // arrival order 2, 0, 1 — window_idx must still win
+        tx.send(win(7, 2, &[2, 2, 2, 2, 2, 2, 2, 2])).unwrap();
+        tx.send(win(7, 0, &[0, 0, 0, 0, 0, 0, 0, 0])).unwrap();
+        tx.send(win(7, 1, &[1, 1, 1, 1, 1, 1, 1, 1])).unwrap();
+        // eager: the read completes while the input channel is still open
+        let r = col.recv_timeout(Duration::from_secs(5))
+            .expect("read should complete before end-of-run");
+        assert_eq!(r.read_id, 7);
+        assert_eq!(r.window_decodes.len(), 3);
+        assert_eq!(r.window_decodes[0], vec![0u8; 8]);
+        assert_eq!(r.window_decodes[1], vec![1u8; 8]);
+        assert_eq!(r.window_decodes[2], vec![2u8; 8]);
+        assert_eq!(metrics.reads_out
+                       .load(std::sync::atomic::Ordering::Relaxed), 1);
+        assert_eq!(metrics.read_latency.count(), 1);
+        drop(tx);
+        assert!(col.finish().unwrap().is_empty());
+    }
+
+    #[test]
+    fn eager_completion_is_per_read() {
+        let (reg, tx, col, _m) = spawn_collector(64);
+        reg.register(1, 2);
+        reg.register(2, 2);
+        // read 2 completes while read 1 is still missing a window
+        tx.send(win(1, 0, &[0, 1, 2, 3])).unwrap();
+        tx.send(win(2, 0, &[3, 2, 1, 0])).unwrap();
+        tx.send(win(2, 1, &[3, 2, 1, 0])).unwrap();
+        let first = col.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(first.read_id, 2);
+        assert!(col.try_recv().is_none(), "read 1 must still be pending");
+        assert_eq!(reg.in_flight(), 1);
+        tx.send(win(1, 1, &[0, 1, 2, 3])).unwrap();
+        let second = col.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(second.read_id, 1);
+        drop(tx);
+        assert!(col.finish().unwrap().is_empty());
+        assert_eq!(reg.in_flight(), 0);
+    }
+
+    #[test]
+    fn duplicate_window_does_not_double_complete() {
+        let (reg, tx, col, _m) = spawn_collector(64);
+        reg.register(4, 2);
+        tx.send(win(4, 0, &[1, 1, 1, 1])).unwrap();
+        tx.send(win(4, 0, &[2, 2, 2, 2])).unwrap(); // re-delivery
+        assert!(col.try_recv().is_none());
+        tx.send(win(4, 1, &[3, 3, 3, 3])).unwrap();
+        let r = col.recv_timeout(Duration::from_secs(5)).unwrap();
+        // last delivery wins
+        assert_eq!(r.window_decodes[0], vec![2u8; 4]);
+        drop(tx);
+        assert!(col.finish().unwrap().is_empty());
+    }
+
+    #[test]
+    fn incomplete_reads_flush_at_shutdown() {
+        let (reg, tx, col, _m) = spawn_collector(64);
+        reg.register(9, 3);
+        tx.send(win(9, 0, &[0, 1, 2, 3, 0, 1, 2, 3])).unwrap();
+        tx.send(win(9, 2, &[2, 3, 0, 1, 2, 3, 0, 1])).unwrap();
+        drop(tx); // e.g. the DNN stage died mid-run
+        let out = col.finish().unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].read_id, 9);
+        // the gap at window 1 is skipped, order preserved
+        assert_eq!(out[0].window_decodes.len(), 2);
+        assert_eq!(out[0].window_decodes[0][0], 0);
+        assert_eq!(out[0].window_decodes[1][0], 2);
+    }
+
+    #[test]
+    fn unregistered_read_still_flushes() {
+        let (_reg, tx, col, _m) = spawn_collector(64);
+        tx.send(win(3, 0, &[1, 2, 3, 0])).unwrap();
+        assert!(col.try_recv().is_none(), "unknown total: cannot be eager");
+        drop(tx);
+        let out = col.finish().unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].read_id, 3);
+    }
+}

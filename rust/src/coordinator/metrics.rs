@@ -1,7 +1,85 @@
-//! Coordinator telemetry: lock-free counters + derived rates.
+//! Coordinator telemetry: lock-free counters, derived rates, and a
+//! fixed-bucket latency histogram for per-read end-to-end latency
+//! (submit -> CalledRead emitted by the collector).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
+
+/// Buckets in the latency histogram: bucket `i` covers `[2^i, 2^(i+1))`
+/// µs, so 40 buckets span sub-µs to ~12 days.
+const NUM_BUCKETS: usize = 40;
+
+/// Power-of-two-bucketed histogram of microsecond latencies: bucket `i`
+/// counts samples in `[2^i, 2^(i+1))` µs (bucket 0 also holds 0–1 µs).
+/// Lock-free, fixed memory, no external crates; quantiles are accurate to
+/// within one octave, which is plenty for a p50/p99 trend line.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; NUM_BUCKETS],
+    count: AtomicU64,
+    sum_micros: AtomicU64,
+    max_micros: AtomicU64,
+}
+
+impl LatencyHistogram {
+    fn bucket_of(us: u64) -> usize {
+        // floor(log2(us)) for us >= 1; 0 µs lands in bucket 0
+        (63 - (us | 1).leading_zeros() as usize).min(NUM_BUCKETS - 1)
+    }
+
+    pub fn record(&self, us: u64) {
+        self.buckets[Self::bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_micros.fetch_add(us, Ordering::Relaxed);
+        self.max_micros.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_micros(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_micros.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    pub fn max_micros(&self) -> u64 {
+        self.max_micros.load(Ordering::Relaxed)
+    }
+
+    /// Approximate quantile in µs: the upper edge of the bucket where the
+    /// cumulative count crosses `q`, clamped to the observed max.
+    pub fn quantile_micros(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let target = ((q * n as f64).ceil() as u64).clamp(1, n);
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            if cum >= target {
+                let upper = 1u64 << (i as u32 + 1).min(63);
+                return upper.min(self.max_micros());
+            }
+        }
+        self.max_micros()
+    }
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_micros: AtomicU64::new(0),
+            max_micros: AtomicU64::new(0),
+        }
+    }
+}
 
 #[derive(Debug)]
 pub struct Metrics {
@@ -16,6 +94,8 @@ pub struct Metrics {
     pub dnn_micros: AtomicU64,
     pub decode_micros: AtomicU64,
     pub vote_micros: AtomicU64,
+    /// per-read end-to-end latency, submit() -> CalledRead emitted.
+    pub read_latency: LatencyHistogram,
 }
 
 impl Default for Metrics {
@@ -32,6 +112,7 @@ impl Default for Metrics {
             dnn_micros: AtomicU64::new(0),
             decode_micros: AtomicU64::new(0),
             vote_micros: AtomicU64::new(0),
+            read_latency: LatencyHistogram::default(),
         }
     }
 }
@@ -57,7 +138,7 @@ impl Metrics {
     }
 
     pub fn report(&self, max_batch: usize) -> String {
-        format!(
+        let mut s = format!(
             "reads {}->{}  windows {}  batches {} (fill {:.2})  bases {}  \
              t_dnn {:.1}ms t_decode {:.1}ms t_vote {:.1}ms  {:.0} bp/s",
             self.reads_in.load(Ordering::Relaxed),
@@ -70,7 +151,15 @@ impl Metrics {
             self.decode_micros.load(Ordering::Relaxed) as f64 / 1e3,
             self.vote_micros.load(Ordering::Relaxed) as f64 / 1e3,
             self.throughput(),
-        )
+        );
+        if self.read_latency.count() > 0 {
+            s.push_str(&format!(
+                "  lat p50 {:.1}ms p99 {:.1}ms",
+                self.read_latency.quantile_micros(0.50) as f64 / 1e3,
+                self.read_latency.quantile_micros(0.99) as f64 / 1e3,
+            ));
+        }
+        s
     }
 }
 
@@ -100,5 +189,43 @@ mod tests {
         let m = Metrics::default();
         m.add(&m.bases_called, 123);
         assert!(m.report(32).contains("bases 123"));
+    }
+
+    #[test]
+    fn histogram_quantiles_bracket_samples() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.quantile_micros(0.99), 0);
+        // 99 fast samples, 1 slow one
+        for _ in 0..99 {
+            h.record(100);
+        }
+        h.record(100_000);
+        assert_eq!(h.count(), 100);
+        let p50 = h.quantile_micros(0.50);
+        assert!((64..=128).contains(&p50), "p50 {p50}");
+        let p99 = h.quantile_micros(0.99);
+        assert!(p99 <= 128, "p99 {p99} should still be in the fast bucket");
+        let p100 = h.quantile_micros(1.0);
+        assert_eq!(p100, 100_000, "max clamps the top bucket edge");
+        assert_eq!(h.max_micros(), 100_000);
+        assert!((h.mean_micros() - 1099.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_bucket_edges() {
+        assert_eq!(LatencyHistogram::bucket_of(0), 0);
+        assert_eq!(LatencyHistogram::bucket_of(1), 0);
+        assert_eq!(LatencyHistogram::bucket_of(2), 1);
+        assert_eq!(LatencyHistogram::bucket_of(3), 1);
+        assert_eq!(LatencyHistogram::bucket_of(4), 2);
+        assert_eq!(LatencyHistogram::bucket_of(u64::MAX), 39);
+    }
+
+    #[test]
+    fn report_includes_latency_when_recorded() {
+        let m = Metrics::default();
+        assert!(!m.report(32).contains("lat p50"));
+        m.read_latency.record(2_000);
+        assert!(m.report(32).contains("lat p50"));
     }
 }

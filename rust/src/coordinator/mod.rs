@@ -1,21 +1,29 @@
 //! Layer-3 coordinator: the serving front of the system.
 //!
-//! A staged, threaded pipeline (DESIGN.md; tokio is unavailable in the
-//! offline build, so stages are OS threads joined by mpsc channels — same
-//! architecture, no async runtime):
+//! A staged, threaded, *streaming* pipeline (DESIGN.md; tokio is
+//! unavailable in the offline build, so stages are OS threads joined by
+//! in-tree bounded channels — same architecture, no async runtime):
 //!
 //!   submit(read) -> [windower] -> [dynamic batcher + DNN executor thread
-//!   (owns the PJRT client)] -> [CTC decode worker pool] -> [per-read
-//!   collector + voter] -> called reads out.
+//!   (owns the PJRT client)] -> [CTC decode worker pool, per-worker
+//!   queues] -> [collector router] -> [vote worker pool] -> CalledReads
+//!   stream out via try_recv()/recv_timeout(); finish() drains the rest.
 //!
-//! The batcher implements the size-or-deadline policy of serving systems
-//! (vLLM-style): a batch launches when full OR when the oldest queued
-//! window exceeds the deadline.
+//! Every interior stage boundary is bounded, so `submit()` backpressures
+//! instead of buffering a whole run's raw signal; only the output queue
+//! is uncapped (its occupancy is the run's own result set), and each
+//! read is emitted the moment its last window decodes. The batcher implements the size-or-deadline policy of
+//! serving systems (vLLM-style): a batch launches when full OR when the
+//! oldest queued window exceeds the deadline. See `README.md` in this
+//! directory for the stage/queue map.
 
 pub mod batcher;
+pub mod collector;
 pub mod metrics;
 pub mod server;
 
 pub use batcher::{Batch, Batcher, BatchPolicy};
-pub use metrics::Metrics;
+pub use collector::{Collector, CollectorConfig, DecodedWindow,
+                    ReadRegistry};
+pub use metrics::{LatencyHistogram, Metrics};
 pub use server::{CalledRead, Coordinator, CoordinatorConfig};

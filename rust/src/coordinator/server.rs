@@ -1,22 +1,30 @@
 //! The coordinator proper: read router -> window batcher -> DNN executor
-//! (PJRT, single owner thread) -> CTC decode pool -> per-read collector +
-//! voter.
+//! (PJRT, single owner thread) -> CTC decode pool (per-worker queues fed
+//! round-robin) -> collector router -> vote worker pool -> output queue.
+//!
+//! Every interior stage boundary is a bounded channel (`util::bounded`),
+//! so a slow stage backpressures its producer all the way up to
+//! `submit()` instead of queues growing with run size; the output queue
+//! alone is uncapped (see README). Each `CalledRead` is emitted the
+//! moment its last window decodes (`try_recv`/`recv_timeout`);
+//! `finish()` is a thin drain-the-rest shim for batch callers. See
+//! `coordinator/README.md` for the stage/queue map.
 
-use std::collections::HashMap;
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::basecall::ctc::{beam_search, LogProbs};
-use crate::basecall::vote::consensus;
 use crate::genome::dataset::windows_from_read;
 use crate::genome::synth::Read;
 use crate::runtime::Engine;
+use crate::util::bounded::{bounded, send_round_robin, Receiver, Sender};
 
 use super::batcher::{Batcher, BatchPolicy};
+use super::collector::{Collector, CollectorConfig, DecodedWindow,
+                       ReadRegistry};
 use super::metrics::Metrics;
 
 #[derive(Clone, Debug)]
@@ -27,6 +35,10 @@ pub struct CoordinatorConfig {
     pub hop: usize,
     pub beam_width: usize,
     pub decode_threads: usize,
+    pub vote_threads: usize,
+    /// bound on in-flight windows per queue: `submit()` blocks once the
+    /// window queue holds this many undecoded windows (backpressure).
+    pub queue_cap: usize,
     pub policy: BatchPolicy,
     pub artifacts_dir: String,
 }
@@ -39,6 +51,8 @@ impl Default for CoordinatorConfig {
             hop: 100,
             beam_width: 10,
             decode_threads: 2,
+            vote_threads: 2,
+            queue_cap: 256,
             policy: BatchPolicy::default(),
             artifacts_dir: crate::runtime::meta::default_artifacts_dir(),
         }
@@ -67,22 +81,18 @@ struct DecodeJob {
     lp: LogProbs,
 }
 
-struct DecodedWindow {
-    read_id: usize,
-    window_idx: usize,
-    seq: Vec<u8>,
-}
-
-/// Staged pipeline coordinator. Construct, `submit` reads, then `finish`.
+/// Staged streaming pipeline coordinator. Construct, `submit` reads, pull
+/// completed reads mid-run with `try_recv`/`recv_timeout`, then `finish`
+/// to drain the rest.
 pub struct Coordinator {
     cfg: CoordinatorConfig,
     window: usize,
+    registry: Arc<ReadRegistry>,
     tx_windows: Option<Sender<WindowJob>>,
     dnn_thread: Option<JoinHandle<Result<()>>>,
     decode_threads: Vec<JoinHandle<()>>,
-    rx_decoded: Receiver<DecodedWindow>,
+    collector: Option<Collector>,
     pub metrics: Arc<Metrics>,
-    expected: HashMap<usize, usize>,
 }
 
 impl Coordinator {
@@ -94,14 +104,29 @@ impl Coordinator {
         anyhow::ensure!(!batches.is_empty(),
                         "no artifacts for {}/{}b", cfg.model, cfg.bits);
         let metrics = Arc::new(Metrics::default());
+        let registry = Arc::new(ReadRegistry::default());
 
-        let (tx_windows, rx_windows) = channel::<WindowJob>();
-        let (tx_decode, rx_decode) = channel::<DecodeJob>();
-        let (tx_decoded, rx_decoded) = channel::<DecodedWindow>();
-        let (tx_ready, rx_ready) = channel::<Result<()>>();
+        let cap = cfg.queue_cap.max(1);
+        let (tx_windows, rx_windows) = bounded::<WindowJob>(cap);
+        let (tx_decoded, rx_decoded) = bounded::<DecodedWindow>(cap);
+        let (tx_ready, rx_ready) = bounded::<Result<()>>(1);
+
+        // per-worker decode queues, fed round-robin by the DNN stage (no
+        // shared Mutex<Receiver> hot spot).
+        let n_dec = cfg.decode_threads.max(1);
+        let dec_cap = (cap / n_dec).max(8);
+        let mut dec_txs: Vec<Sender<DecodeJob>> = Vec::with_capacity(n_dec);
+        let mut dec_rxs: Vec<Receiver<DecodeJob>> =
+            Vec::with_capacity(n_dec);
+        for _ in 0..n_dec {
+            let (tx, rx) = bounded::<DecodeJob>(dec_cap);
+            dec_txs.push(tx);
+            dec_rxs.push(rx);
+        }
 
         // DNN executor: the PJRT client is not Send, so the engine is both
-        // constructed and used inside its owner thread.
+        // constructed and used inside its owner thread. It owns the decode
+        // senders; when it exits they drop and the pool drains out.
         let m = metrics.clone();
         let c = cfg.clone();
         let dnn_thread = std::thread::spawn(move || -> Result<()> {
@@ -128,55 +153,78 @@ impl Coordinator {
                 }
             };
             let mut batcher = Batcher::new(rx_windows, c.policy);
+            let mut rr = 0usize;
             while let Some(batch) = batcher.next_batch() {
                 let t0 = Instant::now();
-                let sigs: Vec<Vec<f32>> = batch.items.iter()
-                    .map(|j| j.signal.clone())
-                    .collect();
+                let n_items = batch.items.len();
+                // move the signals out of the jobs — no per-window clone
+                let mut keys = Vec::with_capacity(n_items);
+                let mut sigs = Vec::with_capacity(n_items);
+                for j in batch.items {
+                    keys.push((j.read_id, j.window_idx));
+                    sigs.push(j.signal);
+                }
                 let lps = engine.run_windows(&c.model, c.bits, &sigs)?;
                 m.add(&m.batches, 1);
-                m.add(&m.batch_items, batch.items.len() as u64);
+                m.add(&m.batch_items, n_items as u64);
                 if batch.full {
                     m.add(&m.full_batches, 1);
                 }
                 m.add(&m.dnn_micros, t0.elapsed().as_micros() as u64);
-                for (job, lp) in batch.items.into_iter().zip(lps) {
-                    let _ = tx_decode.send(DecodeJob {
-                        read_id: job.read_id,
-                        window_idx: job.window_idx,
+                for ((read_id, window_idx), lp) in
+                    keys.into_iter().zip(lps)
+                {
+                    // skip-over-backlogged round-robin; if every decode
+                    // queue is gone the pipeline has collapsed
+                    // downstream — stop burning inference on it
+                    if !send_round_robin(&dec_txs, &mut rr, DecodeJob {
+                        read_id,
+                        window_idx,
                         lp,
-                    });
+                    }) {
+                        anyhow::bail!("decode stage disconnected mid-run \
+                                       (downstream failure)");
+                    }
                 }
             }
             Ok(())
         });
 
-        // decode pool.
-        let rx_decode = Arc::new(Mutex::new(rx_decode));
-        let mut decode_threads = Vec::new();
-        for _ in 0..cfg.decode_threads.max(1) {
-            let rx = rx_decode.clone();
+        // decode pool: one private queue per worker.
+        let mut decode_threads = Vec::with_capacity(n_dec);
+        for rx in dec_rxs {
             let tx = tx_decoded.clone();
             let m = metrics.clone();
             let beam = cfg.beam_width;
             decode_threads.push(std::thread::spawn(move || {
-                loop {
-                    let job = match rx.lock().unwrap().recv() {
-                        Ok(j) => j,
-                        Err(_) => break,
-                    };
+                while let Ok(job) = rx.recv() {
                     let t0 = Instant::now();
                     let seq = beam_search(&job.lp, beam);
-                    m.add(&m.decode_micros, t0.elapsed().as_micros() as u64);
-                    let _ = tx.send(DecodedWindow {
+                    m.add(&m.decode_micros,
+                          t0.elapsed().as_micros() as u64);
+                    if tx.send(DecodedWindow {
                         read_id: job.read_id,
                         window_idx: job.window_idx,
                         seq,
-                    });
+                    }).is_err() {
+                        break;
+                    }
                 }
             }));
         }
-        drop(tx_decoded);
+        drop(tx_decoded); // decode workers hold the only senders
+
+        // collector: assembles out-of-order windows, votes + splices in
+        // its own worker pool, emits CalledReads eagerly.
+        let collector = Collector::spawn(
+            registry.clone(),
+            rx_decoded,
+            metrics.clone(),
+            CollectorConfig {
+                vote_threads: cfg.vote_threads.max(1),
+                queue_cap: cap,
+            },
+        );
 
         // wait for the engine thread to finish compiling (or fail fast)
         rx_ready.recv()
@@ -185,83 +233,118 @@ impl Coordinator {
         Ok(Coordinator {
             cfg,
             window,
+            registry,
             tx_windows: Some(tx_windows),
             dnn_thread: Some(dnn_thread),
             decode_threads,
-            rx_decoded,
+            collector: Some(collector),
             metrics,
-            expected: HashMap::new(),
         })
     }
 
-    /// Split a read into windows and enqueue them.
+    /// Split a read into windows and enqueue them. Blocks once
+    /// `queue_cap` windows are in flight ahead of the DNN stage
+    /// (backpressure), so raw-signal memory stays bounded for
+    /// arbitrarily long runs. Completed reads accumulate on the
+    /// (unbounded) output queue until taken; interleave `drain_ready()`
+    /// in long submission loops to keep that flat too.
     pub fn submit(&mut self, read: &Read) {
         let ws = windows_from_read(read, self.window, self.cfg.hop);
         self.metrics.add(&self.metrics.reads_in, 1);
         self.metrics.add(&self.metrics.windows, ws.len() as u64);
-        self.expected.insert(read.id, ws.len());
+        if ws.is_empty() {
+            return; // shorter than one window: nothing to call
+        }
+        // register BEFORE the first window enters the pipeline so the
+        // collector always knows the expected count
+        self.registry.register(read.id, ws.len());
         if let Some(tx) = &self.tx_windows {
             for (i, w) in ws.into_iter().enumerate() {
-                let _ = tx.send(WindowJob {
+                if tx.send(WindowJob {
                     read_id: read.id,
                     window_idx: i,
                     signal: w.signal,
-                });
+                }).is_err() {
+                    // DNN stage already exited (mid-run failure). If no
+                    // window of this read got in, drop the registration
+                    // so in_flight() doesn't count it forever.
+                    if i == 0 {
+                        self.registry.unregister(read.id);
+                    }
+                    return;
+                }
             }
         }
     }
 
-    /// Close the intake, drain the pipeline, vote per-read consensus, and
-    /// splice window decodes into called reads.
+    /// Non-blocking: the next read whose last window has decoded, if any.
+    /// Reads stream out mid-run, in completion order (not id order).
+    pub fn try_recv(&self) -> Option<CalledRead> {
+        self.collector.as_ref()?.try_recv()
+    }
+
+    /// Block up to `timeout` for the next completed read.
+    pub fn recv_timeout(&self, timeout: Duration) -> Option<CalledRead> {
+        self.collector.as_ref()?.recv_timeout(timeout)
+    }
+
+    /// Every read that has completed so far, without blocking. Calling
+    /// this inside long submission loops keeps output memory flat; batch
+    /// callers may skip it (the output queue is unbounded, so results
+    /// simply accumulate there until `finish()`).
+    pub fn drain_ready(&self) -> Vec<CalledRead> {
+        let mut out = Vec::new();
+        while let Some(r) = self.try_recv() {
+            out.push(r);
+        }
+        out
+    }
+
+    /// Close the intake and deterministically drain the pipeline: blocks
+    /// until every stage disconnects, then returns the remaining called
+    /// reads sorted by id. Reads already taken via `try_recv`/
+    /// `recv_timeout` are not returned again.
     pub fn finish(mut self) -> Result<Vec<CalledRead>> {
         drop(self.tx_windows.take());
+        // drain first: recv-until-disconnect is the shutdown barrier —
+        // it returns exactly when the last stage has emptied, after
+        // which every join below is immediate.
+        let collected = match self.collector.take() {
+            Some(c) => c.finish(),
+            None => Ok(Vec::new()),
+        };
+        let mut err = None;
         if let Some(h) = self.dnn_thread.take() {
-            h.join().map_err(|_| anyhow::anyhow!("dnn thread panicked"))??;
+            match h.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => err = Some(e),
+                Err(_) => {
+                    err = Some(anyhow::anyhow!("dnn thread panicked"));
+                }
+            }
         }
         for h in self.decode_threads.drain(..) {
-            let _ = h.join();
+            if h.join().is_err() && err.is_none() {
+                err = Some(anyhow::anyhow!("decode worker panicked"));
+            }
         }
-        // collect decoded windows per read
-        let mut per_read: HashMap<usize, Vec<(usize, Vec<u8>)>> =
-            HashMap::new();
-        while let Ok(d) = self.rx_decoded.recv_timeout(Duration::ZERO) {
-            per_read.entry(d.read_id).or_default()
-                .push((d.window_idx, d.seq));
-        }
-        let mut out = Vec::new();
-        for (read_id, mut wins) in per_read {
-            wins.sort_by_key(|(i, _)| *i);
-            let decodes: Vec<Vec<u8>> = wins.into_iter()
-                .map(|(_, s)| s)
-                .collect();
-            let t0 = Instant::now();
-            // within-read voting (the ⌊L/T⌋-reads-per-signal vote of §2.2):
-            // neighbouring windows overlap, so vote each window against its
-            // neighbours before splicing.
-            let voted: Vec<Vec<u8>> = (0..decodes.len())
-                .map(|i| {
-                    let mut nbrs: Vec<&[u8]> = Vec::new();
-                    if i > 0 {
-                        nbrs.push(&decodes[i - 1]);
-                    }
-                    if i + 1 < decodes.len() {
-                        nbrs.push(&decodes[i + 1]);
-                    }
-                    consensus(&decodes[i], &nbrs)
-                })
-                .collect();
-            let seq = crate::basecall::vote::merge_reads(&voted, 6);
-            self.metrics.add(&self.metrics.vote_micros,
-                             t0.elapsed().as_micros() as u64);
-            self.metrics.add(&self.metrics.bases_called, seq.len() as u64);
-            self.metrics.add(&self.metrics.reads_out, 1);
-            out.push(CalledRead { read_id, seq, window_decodes: decodes });
-        }
+        // a collector panic is the root cause of any knock-on DNN
+        // "decode stage disconnected" error, so report it first
+        let mut out = match (collected, err) {
+            (Err(ce), _) => return Err(ce),
+            (Ok(_), Some(e)) => return Err(e),
+            (Ok(v), None) => v,
+        };
         out.sort_by_key(|r| r.read_id);
         Ok(out)
     }
 
     pub fn max_batch(&self) -> usize {
         self.cfg.policy.max_batch
+    }
+
+    /// Reads submitted but not yet emitted.
+    pub fn in_flight(&self) -> usize {
+        self.registry.in_flight()
     }
 }

@@ -70,12 +70,18 @@ fn main() -> Result<()> {
                 ..Default::default()
             })?;
             let t0 = std::time::Instant::now();
+            // stream: collect reads the moment they complete, while later
+            // reads are still being submitted
+            let mut called = Vec::new();
             for r in &run.reads {
                 coord.submit(r);
+                called.extend(coord.drain_ready());
             }
+            let streamed = called.len();
             let max_batch = coord.max_batch();
             let metrics = coord.metrics.clone();
-            let called = coord.finish()?;
+            called.extend(coord.finish()?);
+            called.sort_by_key(|c| c.read_id);
             let dt = t0.elapsed();
             let mut acc = 0.0;
             for c in &called {
@@ -84,7 +90,8 @@ fn main() -> Result<()> {
                 acc += identity(&c.seq,
                                 &truth[..truth.len().min(c.seq.len() + 8)]);
             }
-            println!("called {} reads in {:.2?}", called.len(), dt);
+            println!("called {} reads in {:.2?} ({streamed} streamed out \
+                      before the run ended)", called.len(), dt);
             println!("mean read identity: {:.4}", acc / called.len() as f64);
             println!("{}", metrics.report(max_batch));
         }

@@ -1,0 +1,424 @@
+//! Bounded MPSC channel (in-tree; crossbeam/flume are unavailable in the
+//! offline build). The coordinator's pipeline stages are joined by these
+//! instead of `std::sync::mpsc` so that a slow stage exerts backpressure on
+//! its producer: `send` blocks while the queue is at capacity, which is what
+//! keeps `Coordinator::submit()` from letting the window queue outrun the
+//! DNN stage.
+//!
+//! Why not `std::sync::mpsc::sync_channel`? It covers blocking bounded
+//! send, but the pipeline also wants queue introspection (`len`,
+//! `capacity`) for telemetry and backpressure tests, and one sender/
+//! receiver type that covers both the bounded interior queues and the
+//! unbounded output queue (`unbounded()`), so the stages compose over a
+//! single channel vocabulary we fully control.
+//!
+//! Semantics mirror `std::sync::mpsc` where they overlap: many senders, one
+//! receiver; `recv` returns `Err` only once every sender is dropped AND the
+//! queue is drained; `send` returns the value back in `Err` once the
+//! receiver is gone.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// The receiver disconnected; the unsent value is returned.
+#[derive(Debug, PartialEq, Eq)]
+pub struct SendError<T>(pub T);
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum TrySendError<T> {
+    /// Queue at capacity right now.
+    Full(T),
+    /// Receiver gone.
+    Disconnected(T),
+}
+
+/// All senders disconnected and the queue is drained.
+#[derive(Debug, PartialEq, Eq)]
+pub struct RecvError;
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum TryRecvError {
+    Empty,
+    Disconnected,
+}
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum RecvTimeoutError {
+    Timeout,
+    Disconnected,
+}
+
+struct Inner<T> {
+    buf: VecDeque<T>,
+    cap: usize,
+    senders: usize,
+    rx_alive: bool,
+}
+
+struct Shared<T> {
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+pub struct Sender<T> {
+    shared: Arc<Shared<T>>,
+}
+
+pub struct Receiver<T> {
+    shared: Arc<Shared<T>>,
+}
+
+/// Create a channel holding at most `cap` in-flight items (min 1).
+pub fn bounded<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
+    let shared = Arc::new(Shared {
+        inner: Mutex::new(Inner {
+            buf: VecDeque::new(),
+            cap: cap.max(1),
+            senders: 1,
+            rx_alive: true,
+        }),
+        not_empty: Condvar::new(),
+        not_full: Condvar::new(),
+    });
+    (Sender { shared: shared.clone() }, Receiver { shared })
+}
+
+/// Create a channel with no capacity bound: `send` never blocks. Used for
+/// the coordinator's output queue, where the memory in flight is bounded
+/// by the run's own result set and a cap would turn an undrained batch
+/// caller into a silent deadlock.
+pub fn unbounded<T>() -> (Sender<T>, Receiver<T>) {
+    bounded(usize::MAX)
+}
+
+/// Fan a job out over per-worker queues: round-robin starting at `*rr`,
+/// skipping workers whose queue is full (one slow worker must not
+/// head-of-line block the producer while its siblings idle) or
+/// disconnected. Blocks only when every live queue is full. Returns
+/// `false` iff the job could not be delivered because every worker is
+/// gone — the producer should treat that as downstream shutdown.
+pub fn send_round_robin<T>(txs: &[Sender<T>], rr: &mut usize, job: T)
+                           -> bool {
+    let n = txs.len();
+    if n == 0 {
+        return false;
+    }
+    let mut job = job;
+    let mut full_at: Option<usize> = None;
+    for k in 0..n {
+        let i = (*rr + k) % n;
+        match txs[i].try_send(job) {
+            Ok(()) => {
+                *rr = i + 1;
+                return true;
+            }
+            Err(TrySendError::Full(j)) => {
+                if full_at.is_none() {
+                    full_at = Some(i);
+                }
+                job = j;
+            }
+            Err(TrySendError::Disconnected(j)) => job = j,
+        }
+    }
+    match full_at {
+        // every live queue is at capacity: wait on the first live one
+        Some(i) => {
+            *rr = i + 1;
+            txs[i].send(job).is_ok()
+        }
+        None => false, // every worker queue disconnected
+    }
+}
+
+impl<T> Sender<T> {
+    /// Block until there is room (backpressure), then enqueue.
+    pub fn send(&self, t: T) -> Result<(), SendError<T>> {
+        let mut g = self.shared.inner.lock().unwrap();
+        loop {
+            if !g.rx_alive {
+                return Err(SendError(t));
+            }
+            if g.buf.len() < g.cap {
+                g.buf.push_back(t);
+                self.shared.not_empty.notify_one();
+                return Ok(());
+            }
+            g = self.shared.not_full.wait(g).unwrap();
+        }
+    }
+
+    /// Enqueue without blocking, or report why not.
+    pub fn try_send(&self, t: T) -> Result<(), TrySendError<T>> {
+        let mut g = self.shared.inner.lock().unwrap();
+        if !g.rx_alive {
+            return Err(TrySendError::Disconnected(t));
+        }
+        if g.buf.len() >= g.cap {
+            return Err(TrySendError::Full(t));
+        }
+        g.buf.push_back(t);
+        self.shared.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Items currently queued (racy; for telemetry and tests).
+    pub fn len(&self) -> usize {
+        self.shared.inner.lock().unwrap().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.shared.inner.lock().unwrap().cap
+    }
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        self.shared.inner.lock().unwrap().senders += 1;
+        Sender { shared: self.shared.clone() }
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let mut g = self.shared.inner.lock().unwrap();
+        g.senders -= 1;
+        if g.senders == 0 {
+            // wake a blocked recv so it can observe the disconnect
+            self.shared.not_empty.notify_all();
+        }
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Block until an item arrives or every sender is gone.
+    pub fn recv(&self) -> Result<T, RecvError> {
+        let mut g = self.shared.inner.lock().unwrap();
+        loop {
+            if let Some(t) = g.buf.pop_front() {
+                self.shared.not_full.notify_one();
+                return Ok(t);
+            }
+            if g.senders == 0 {
+                return Err(RecvError);
+            }
+            g = self.shared.not_empty.wait(g).unwrap();
+        }
+    }
+
+    pub fn try_recv(&self) -> Result<T, TryRecvError> {
+        let mut g = self.shared.inner.lock().unwrap();
+        if let Some(t) = g.buf.pop_front() {
+            self.shared.not_full.notify_one();
+            return Ok(t);
+        }
+        if g.senders == 0 {
+            return Err(TryRecvError::Disconnected);
+        }
+        Err(TryRecvError::Empty)
+    }
+
+    pub fn recv_timeout(&self, timeout: Duration)
+                        -> Result<T, RecvTimeoutError> {
+        let deadline = match Instant::now().checked_add(timeout) {
+            Some(d) => d,
+            // effectively infinite timeout
+            None => {
+                return self.recv()
+                    .map_err(|_| RecvTimeoutError::Disconnected);
+            }
+        };
+        let mut g = self.shared.inner.lock().unwrap();
+        loop {
+            if let Some(t) = g.buf.pop_front() {
+                self.shared.not_full.notify_one();
+                return Ok(t);
+            }
+            if g.senders == 0 {
+                return Err(RecvTimeoutError::Disconnected);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(RecvTimeoutError::Timeout);
+            }
+            g = self.shared.not_empty.wait_timeout(g, deadline - now)
+                .unwrap().0;
+        }
+    }
+
+    /// Items currently queued (racy; for telemetry and tests).
+    pub fn len(&self) -> usize {
+        self.shared.inner.lock().unwrap().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.shared.inner.lock().unwrap().cap
+    }
+}
+
+impl<T> Drop for Receiver<T> {
+    fn drop(&mut self) {
+        let mut g = self.shared.inner.lock().unwrap();
+        g.rx_alive = false;
+        // wake blocked senders so they can observe the disconnect
+        self.shared.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::thread;
+
+    #[test]
+    fn fifo_order() {
+        let (tx, rx) = bounded(8);
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        for i in 0..5 {
+            assert_eq!(rx.recv(), Ok(i));
+        }
+        assert_eq!(rx.try_recv(), Err(TryRecvError::Empty));
+    }
+
+    #[test]
+    fn try_send_reports_full() {
+        let (tx, rx) = bounded(2);
+        tx.try_send(1).unwrap();
+        tx.try_send(2).unwrap();
+        assert_eq!(tx.try_send(3), Err(TrySendError::Full(3)));
+        assert_eq!(rx.recv(), Ok(1));
+        tx.try_send(3).unwrap();
+        assert_eq!(rx.recv(), Ok(2));
+        assert_eq!(rx.recv(), Ok(3));
+    }
+
+    #[test]
+    fn backpressure_caps_in_flight() {
+        // a producer racing ahead of the consumer never has more than
+        // `cap` items in flight: the (cap+1)-th send blocks.
+        let (tx, rx) = bounded::<usize>(4);
+        let sent = Arc::new(AtomicUsize::new(0));
+        let s = sent.clone();
+        let h = thread::spawn(move || {
+            for i in 0..32 {
+                tx.send(i).unwrap();
+                s.fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        thread::sleep(Duration::from_millis(100));
+        assert_eq!(sent.load(Ordering::SeqCst), 4, "sender ran past cap");
+        assert_eq!(rx.len(), 4);
+        for i in 0..32 {
+            assert_eq!(rx.recv(), Ok(i));
+        }
+        h.join().unwrap();
+        assert_eq!(sent.load(Ordering::SeqCst), 32);
+    }
+
+    #[test]
+    fn recv_disconnects_after_drain() {
+        let (tx, rx) = bounded(4);
+        tx.send(7).unwrap();
+        let tx2 = tx.clone();
+        drop(tx);
+        tx2.send(8).unwrap();
+        drop(tx2);
+        assert_eq!(rx.recv(), Ok(7));
+        assert_eq!(rx.recv(), Ok(8));
+        assert_eq!(rx.recv(), Err(RecvError));
+        assert_eq!(rx.try_recv(), Err(TryRecvError::Disconnected));
+    }
+
+    #[test]
+    fn send_fails_without_receiver() {
+        let (tx, rx) = bounded(1);
+        drop(rx);
+        assert_eq!(tx.send(5), Err(SendError(5)));
+        assert_eq!(tx.try_send(6), Err(TrySendError::Disconnected(6)));
+    }
+
+    #[test]
+    fn recv_timeout_times_out_then_delivers() {
+        let (tx, rx) = bounded(1);
+        assert_eq!(rx.recv_timeout(Duration::from_millis(10)),
+                   Err(RecvTimeoutError::Timeout));
+        tx.send(9).unwrap();
+        assert_eq!(rx.recv_timeout(Duration::from_millis(10)), Ok(9));
+        drop(tx);
+        assert_eq!(rx.recv_timeout(Duration::from_millis(10)),
+                   Err(RecvTimeoutError::Disconnected));
+    }
+
+    #[test]
+    fn round_robin_skips_full_and_dead_workers() {
+        let (tx1, rx1) = bounded::<u32>(1);
+        let (tx2, rx2) = bounded::<u32>(1);
+        let (tx3, rx3) = bounded::<u32>(1);
+        let txs = vec![tx1, tx2, tx3];
+        let mut rr = 0;
+        // fill worker 0, kill worker 1: job must land on worker 2
+        assert!(send_round_robin(&txs, &mut rr, 10)); // -> worker 0
+        drop(rx2);
+        assert!(send_round_robin(&txs, &mut rr, 11)); // skips 1 -> 2
+        assert_eq!(rx3.recv(), Ok(11));
+        assert_eq!(rx1.recv(), Ok(10));
+        // all receivers gone -> undeliverable
+        drop(rx1);
+        drop(rx3);
+        assert!(!send_round_robin(&txs, &mut rr, 12));
+    }
+
+    #[test]
+    fn round_robin_rotates_over_live_workers() {
+        let (tx1, rx1) = bounded::<u32>(4);
+        let (tx2, rx2) = bounded::<u32>(4);
+        let txs = vec![tx1, tx2];
+        let mut rr = 0;
+        for v in 0..4 {
+            assert!(send_round_robin(&txs, &mut rr, v));
+        }
+        assert_eq!(rx1.len(), 2);
+        assert_eq!(rx2.len(), 2);
+        assert_eq!(rx1.recv(), Ok(0));
+        assert_eq!(rx2.recv(), Ok(1));
+    }
+
+    #[test]
+    fn unbounded_never_blocks() {
+        let (tx, rx) = unbounded();
+        for i in 0..10_000 {
+            tx.send(i).unwrap(); // would deadlock here if capped
+        }
+        assert_eq!(rx.len(), 10_000);
+        assert_eq!(rx.recv(), Ok(0));
+        drop(tx);
+        let mut n = 1;
+        while rx.recv().is_ok() {
+            n += 1;
+        }
+        assert_eq!(n, 10_000);
+    }
+
+    #[test]
+    fn dropping_receiver_unblocks_sender() {
+        let (tx, rx) = bounded::<u32>(1);
+        tx.send(1).unwrap();
+        let h = thread::spawn(move || tx.send(2));
+        thread::sleep(Duration::from_millis(50));
+        drop(rx);
+        assert_eq!(h.join().unwrap(), Err(SendError(2)));
+    }
+}

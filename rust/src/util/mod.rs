@@ -1,7 +1,10 @@
 //! Small in-tree replacements for crates unavailable in the offline build
 //! environment (DESIGN.md §Substitutions): a seeded RNG (`rng`), a JSON
-//! subset parser (`json`), and a property-testing helper (`prop`).
+//! subset parser (`json`), a property-testing helper (`prop`), and a
+//! bounded MPSC channel (`bounded`) used to join the coordinator's
+//! pipeline stages with backpressure.
 
+pub mod bounded;
 pub mod json;
 pub mod prop;
 pub mod rng;

@@ -1,0 +1,220 @@
+//! Integration tests for the streaming coordinator: backpressure from the
+//! bounded channels, out-of-order assembly in the collector, cross-batch
+//! window arrival, and mid-run streaming via try_recv(). The
+//! engine-backed tests skip gracefully when `make artifacts` has not run
+//! (the PJRT artifacts are a build product, not checked in).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use helix::coordinator::{
+    Collector, CollectorConfig, Coordinator, CoordinatorConfig,
+    DecodedWindow, Metrics, ReadRegistry,
+};
+use helix::util::bounded::{bounded, TrySendError};
+
+fn win(read_id: usize, window_idx: usize, fill: u8) -> DecodedWindow {
+    DecodedWindow { read_id, window_idx, seq: vec![fill; 8] }
+}
+
+#[test]
+fn bounded_channel_caps_in_flight_windows() {
+    // the backpressure contract submit() relies on: a producer can never
+    // get more than `cap` items ahead of the consumer.
+    let (tx, rx) = bounded::<usize>(4);
+    for i in 0..4 {
+        tx.try_send(i).unwrap();
+    }
+    assert_eq!(tx.try_send(4), Err(TrySendError::Full(4)),
+               "5th in-flight item must be refused");
+    assert_eq!(rx.len(), 4);
+
+    // a blocked sender makes no progress until the consumer drains
+    let sent = Arc::new(AtomicUsize::new(4));
+    let s = sent.clone();
+    let h = std::thread::spawn(move || {
+        for i in 4..20 {
+            tx.send(i).unwrap();
+            s.fetch_add(1, Ordering::SeqCst);
+        }
+    });
+    std::thread::sleep(Duration::from_millis(100));
+    assert_eq!(sent.load(Ordering::SeqCst), 4, "sender ran past the cap");
+    for i in 0..20 {
+        assert_eq!(rx.recv(), Ok(i));
+    }
+    h.join().unwrap();
+}
+
+#[test]
+fn collector_handles_out_of_order_arrival() {
+    let registry = Arc::new(ReadRegistry::default());
+    let metrics = Arc::new(Metrics::default());
+    let (tx, rx) = bounded(32);
+    let col = Collector::spawn(registry.clone(), rx, metrics,
+                               CollectorConfig::default());
+    registry.register(11, 4);
+    for idx in [3, 0, 2, 1] {
+        tx.send(win(11, idx, idx as u8)).unwrap();
+    }
+    let r = col.recv_timeout(Duration::from_secs(5))
+        .expect("read must complete eagerly, before end-of-run");
+    assert_eq!(r.read_id, 11);
+    let order: Vec<u8> =
+        r.window_decodes.iter().map(|w| w[0]).collect();
+    assert_eq!(order, vec![0, 1, 2, 3]);
+    drop(tx);
+    assert!(col.finish().unwrap().is_empty());
+}
+
+#[test]
+fn collector_assembles_read_spanning_multiple_batches() {
+    // windows of one read arriving in two separated waves, as when a
+    // read's windows land in different DNN batches
+    let registry = Arc::new(ReadRegistry::default());
+    let metrics = Arc::new(Metrics::default());
+    let (tx, rx) = bounded(32);
+    let col = Collector::spawn(registry.clone(), rx, metrics,
+                               CollectorConfig::default());
+    registry.register(5, 5);
+    for idx in 0..3 {
+        tx.send(win(5, idx, 1)).unwrap();
+    }
+    assert!(col.recv_timeout(Duration::from_millis(50)).is_none(),
+            "read must not be emitted before its last window");
+    for idx in 3..5 {
+        tx.send(win(5, idx, 1)).unwrap();
+    }
+    let r = col.recv_timeout(Duration::from_secs(5)).unwrap();
+    assert_eq!(r.read_id, 5);
+    assert_eq!(r.window_decodes.len(), 5);
+    drop(tx);
+    assert!(col.finish().unwrap().is_empty());
+}
+
+#[test]
+fn collector_streams_mid_run_before_finish() {
+    let registry = Arc::new(ReadRegistry::default());
+    let metrics = Arc::new(Metrics::default());
+    let (tx, rx) = bounded(32);
+    let col = Collector::spawn(registry.clone(), rx, metrics,
+                               CollectorConfig::default());
+    for id in 0..3 {
+        registry.register(id, 1);
+        tx.send(win(id, 0, id as u8)).unwrap();
+    }
+    // all three observable while the input channel is still open
+    let mut seen = Vec::new();
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while seen.len() < 3 && Instant::now() < deadline {
+        if let Some(r) = col.try_recv() {
+            seen.push(r.read_id);
+        } else {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+    seen.sort_unstable();
+    assert_eq!(seen, vec![0, 1, 2]);
+    drop(tx);
+    assert!(col.finish().unwrap().is_empty());
+}
+
+// ---- engine-backed tests (need `make artifacts`) ----
+
+fn artifacts() -> Option<String> {
+    let dir = helix::runtime::meta::default_artifacts_dir();
+    if helix::runtime::meta::artifacts_available(&dir) {
+        Some(dir)
+    } else {
+        eprintln!("artifacts not built — skipping engine-backed test");
+        None
+    }
+}
+
+#[test]
+fn coordinator_streams_reads_while_submitting() {
+    let Some(dir) = artifacts() else { return };
+    let pm = helix::genome::pore::PoreModel::load(
+        &format!("{dir}/pore_model.json")).unwrap();
+    let run = helix::genome::synth::SequencingRun::simulate(
+        &pm,
+        helix::genome::synth::RunSpec {
+            genome_len: 1200,
+            coverage: 4,
+            seed: 7,
+            ..Default::default()
+        });
+    let mut coord = Coordinator::new(CoordinatorConfig {
+        model: "guppy".into(),
+        bits: 32,
+        // small batches so reads span several DNN launches
+        policy: helix::coordinator::BatchPolicy {
+            max_batch: 2,
+            max_wait: Duration::from_millis(2),
+        },
+        artifacts_dir: dir,
+        ..Default::default()
+    }).unwrap();
+
+    let mut streamed = Vec::new();
+    for r in &run.reads {
+        coord.submit(r);
+        while let Some(c) = coord.try_recv() {
+            streamed.push(c);
+        }
+    }
+    // give the tail of the pipeline a moment mid-run, still pre-finish
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while streamed.is_empty() && Instant::now() < deadline {
+        if let Some(c) = coord.recv_timeout(Duration::from_millis(50)) {
+            streamed.push(c);
+        }
+    }
+    assert!(!streamed.is_empty(),
+            "at least one read must stream out before finish()");
+    let n_streamed = streamed.len();
+
+    let metrics = coord.metrics.clone();
+    streamed.extend(coord.finish().unwrap());
+    assert_eq!(streamed.len(), run.reads.len());
+    // finish() must not re-deliver streamed reads
+    let mut ids: Vec<usize> = streamed.iter().map(|c| c.read_id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), run.reads.len());
+    assert_eq!(metrics.read_latency.count() as usize, run.reads.len());
+    assert!(n_streamed >= 1);
+    for c in &streamed {
+        assert!(!c.seq.is_empty(), "read {} called empty", c.read_id);
+    }
+}
+
+#[test]
+fn coordinator_finish_without_streaming_matches_batch_usage() {
+    let Some(dir) = artifacts() else { return };
+    let pm = helix::genome::pore::PoreModel::load(
+        &format!("{dir}/pore_model.json")).unwrap();
+    let run = helix::genome::synth::SequencingRun::simulate(
+        &pm,
+        helix::genome::synth::RunSpec {
+            genome_len: 800,
+            coverage: 3,
+            seed: 21,
+            ..Default::default()
+        });
+    let mut coord = Coordinator::new(CoordinatorConfig {
+        artifacts_dir: dir,
+        ..Default::default()
+    }).unwrap();
+    for r in &run.reads {
+        coord.submit(r);
+    }
+    let called = coord.finish().unwrap();
+    assert_eq!(called.len(), run.reads.len());
+    // finish() sorts by read id
+    let ids: Vec<usize> = called.iter().map(|c| c.read_id).collect();
+    let mut sorted = ids.clone();
+    sorted.sort_unstable();
+    assert_eq!(ids, sorted);
+}
