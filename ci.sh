@@ -3,16 +3,26 @@
 # (optionally) the coordinator perf bench that emits
 # BENCH_coordinator.json for the perf trajectory.
 #
-#   ./ci.sh          # build + test + clippy
+#   ./ci.sh          # build + test + clippy (default features: the
+#                    #   self-contained native backend — MUST pass)
 #   ./ci.sh bench    # ... plus `cargo bench --bench coordinator`
-#                    # (needs `make artifacts` for the PJRT artifacts)
+#                    #   (native backend; artifacts self-materialize)
+#   HELIX_CI_XLA=1 ./ci.sh
+#                    # additionally try the `xla` feature build
+#                    #   (best-effort: needs the PJRT binding crate,
+#                    #   which the offline container cannot fetch)
+#
+# The default-feature pipeline needs no network and no pre-built
+# artifacts, so there is nothing left to soft-skip: any failure here is
+# a real failure and exits non-zero.
 set -euo pipefail
 cd "$(dirname "$0")"
 
 if ! command -v cargo >/dev/null 2>&1; then
-    echo "ci.sh: cargo not found on PATH — rust toolchain unavailable in" \
-         "this environment; skipping build/test/lint." >&2
-    exit 0
+    echo "ci.sh: FAIL — cargo not found on PATH. The default build is" \
+         "fully offline (native backend, no registry needed); install" \
+         "the rust toolchain to run tier-1." >&2
+    exit 1
 fi
 
 echo "== cargo build --release"
@@ -28,14 +38,35 @@ else
     echo "ci.sh: clippy not installed; skipping lint" >&2
 fi
 
-if [ "${1:-}" = "bench" ]; then
-    echo "== cargo bench --bench coordinator"
-    # the bench skips itself gracefully when artifacts are missing; it
-    # writes BENCH_coordinator.json next to where it runs
-    cargo bench --bench coordinator
-    if [ -f BENCH_coordinator.json ]; then
-        echo "wrote $(pwd)/BENCH_coordinator.json"
+# xla feature path: the PJRT binding needs a crates.io fetch or a
+# vendored checkout, so this is the ONE soft-skip left.
+if [ "${HELIX_CI_XLA:-0}" = "1" ]; then
+    echo "== cargo build --release -p helix --features xla (best effort)"
+    if cargo build --release -p helix --features xla; then
+        cargo test -q -p helix --features xla
+    else
+        echo "ci.sh: xla feature build unavailable (offline registry?)" \
+             "— skipping the PJRT path" >&2
     fi
+fi
+
+if [ "${1:-}" = "bench" ]; then
+    echo "== cargo bench --bench coordinator (native backend)"
+    # self-contained: the bench materializes the native artifacts on
+    # first run and must emit the perf summary (cargo runs the bench
+    # with cwd = the package root, so normalize to the repo root).
+    # Drop stale summaries first so the existence check below can't be
+    # satisfied by a previous run.
+    rm -f BENCH_coordinator.json rust/BENCH_coordinator.json
+    cargo bench --bench coordinator
+    if [ -f rust/BENCH_coordinator.json ]; then
+        mv rust/BENCH_coordinator.json BENCH_coordinator.json
+    fi
+    if [ ! -f BENCH_coordinator.json ]; then
+        echo "ci.sh: FAIL — BENCH_coordinator.json was not emitted" >&2
+        exit 1
+    fi
+    echo "wrote $(pwd)/BENCH_coordinator.json"
 fi
 
 echo "ci.sh: OK"

@@ -3,9 +3,10 @@
 //! batching -> PJRT DNN -> CTC beam decode pool -> read voting), assemble,
 //! map and polish — the complete Fig 1 pipeline — and report the paper's
 //! headline metrics plus the simulated Helix-chip throughput for the same
-//! workload.
+//! workload. Self-contained on the native backend; HELIX_BACKEND=xla on
+//! a `--features xla` build runs the PJRT artifacts instead.
 //!
-//!     make artifacts && cargo run --release --example end_to_end
+//!     cargo run --release --example end_to_end
 
 use anyhow::Result;
 
@@ -17,9 +18,13 @@ use helix::pim::mapper::Topology;
 use helix::pim::schemes::{evaluate, Scheme};
 use helix::pipeline;
 use helix::runtime::meta::default_artifacts_dir;
+use helix::runtime::BackendKind;
 
 fn main() -> Result<()> {
     let dir = default_artifacts_dir();
+    let kind = BackendKind::from_env()?;
+    kind.prepare(&dir)?;
+    println!("backend: {}", kind.name());
     let pm = PoreModel::load(&format!("{dir}/pore_model.json"))?;
     let spec = RunSpec {
         genome_len: 2500,
@@ -37,6 +42,7 @@ fn main() -> Result<()> {
         let mut coord = Coordinator::new(CoordinatorConfig {
             model: "guppy".into(),
             bits,
+            backend: kind,
             artifacts_dir: dir.clone(),
             ..Default::default()
         })?;

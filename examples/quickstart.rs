@@ -1,7 +1,10 @@
-//! Quickstart: load a base-caller artifact, run one window through the PJRT
-//! runtime, decode it with CTC beam search, and print the called bases.
+//! Quickstart: open an inference backend (native quantized executor by
+//! default — materialized on first run, no `make artifacts` needed; set
+//! HELIX_BACKEND=xla on a `--features xla` build for the PJRT runtime),
+//! run one read's windows through it, decode with CTC beam search, and
+//! print the called bases.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release --example quickstart
 
 use anyhow::Result;
 
@@ -12,11 +15,15 @@ use helix::genome::dataset::windows_from_read;
 use helix::genome::pore::PoreModel;
 use helix::genome::synth::{RunSpec, SequencingRun};
 use helix::runtime::meta::default_artifacts_dir;
-use helix::runtime::Engine;
+use helix::runtime::{Backend, BackendKind};
 
 fn main() -> Result<()> {
     let dir = default_artifacts_dir();
-    let mut engine = Engine::new(&dir)?;
+    let kind = BackendKind::from_env()?;
+    kind.prepare(&dir)?; // native: writes its deterministic artifacts
+    let mut backend = kind.open(&dir)?;
+    println!("backend: {} ({} artifact entries)", kind.name(),
+             backend.meta().entries.len());
 
     // synthesize one read with the shared pore model
     let pm = PoreModel::load(&format!("{dir}/pore_model.json"))?;
@@ -30,12 +37,12 @@ fn main() -> Result<()> {
     println!("simulated read: {} bases, {} raw samples",
              read.seq.len(), read.signal.len());
 
-    // window it, run the DNN (AOT-compiled JAX/Pallas via PJRT), decode
-    let windows = windows_from_read(read, engine.meta.window, 150);
+    // window it, run the DNN through the backend trait, decode
+    let windows = windows_from_read(read, backend.meta().window, 150);
     let signals: Vec<Vec<f32>> = windows.iter()
         .map(|w| w.signal.clone())
         .collect();
-    let lps = engine.run_windows("guppy", 32, &signals)?;
+    let lps = backend.run_windows("guppy", 32, &signals)?;
     println!("\n{:<6} {:<34} {:<34} {:>8}", "win", "called", "truth", "ident");
     let mut total = 0.0;
     for (w, lp) in windows.iter().zip(&lps) {

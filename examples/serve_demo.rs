@@ -1,9 +1,11 @@
 //! Serving demo: drive the coordinator like a sequencer would — reads
 //! arriving over time — and watch called reads STREAM BACK OUT while
 //! submission is still in progress (per-read eager completion), plus the
-//! batching and latency telemetry a deployment would watch.
+//! batching and latency telemetry a deployment would watch. Runs on the
+//! native backend out of the box; HELIX_BACKEND=xla on a `--features
+//! xla` build uses the PJRT artifacts instead.
 //!
-//!     make artifacts && cargo run --release --example serve_demo
+//!     cargo run --release --example serve_demo
 
 use std::time::{Duration, Instant};
 
@@ -13,9 +15,13 @@ use helix::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
 use helix::genome::pore::PoreModel;
 use helix::genome::synth::{RunSpec, SequencingRun};
 use helix::runtime::meta::default_artifacts_dir;
+use helix::runtime::BackendKind;
 
 fn main() -> Result<()> {
     let dir = default_artifacts_dir();
+    let kind = BackendKind::from_env()?;
+    kind.prepare(&dir)?;
+    println!("backend: {}", kind.name());
     let pm = PoreModel::load(&format!("{dir}/pore_model.json"))?;
     let run = SequencingRun::simulate(&pm, RunSpec {
         genome_len: 1500,
@@ -35,6 +41,7 @@ fn main() -> Result<()> {
         let mut coord = Coordinator::new(CoordinatorConfig {
             model: "guppy".into(),
             bits: 32,
+            backend: kind,
             policy,
             artifacts_dir: dir.clone(),
             ..Default::default()

@@ -1,6 +1,9 @@
-//! End-to-end coordinator benchmark: measured host base-calling throughput
-//! through the full PJRT + CTC + vote pipeline (the L3 perf deliverable),
-//! plus batching-policy ablation. Requires `make artifacts`.
+//! End-to-end coordinator benchmark: measured host base-calling
+//! throughput through the full DNN + CTC + vote pipeline (the L3 perf
+//! deliverable), plus batching-policy ablation. Self-contained: runs on
+//! the native quantized backend by default (artifacts are materialized
+//! on first run); HELIX_BACKEND=xla on a `--features xla` build
+//! benchmarks the PJRT engine over `make artifacts` output instead.
 //!
 //!     cargo bench --bench coordinator
 
@@ -11,16 +14,13 @@ use helix::bench::timer::bench;
 use helix::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
 use helix::genome::pore::PoreModel;
 use helix::genome::synth::{RunSpec, SequencingRun};
-use helix::runtime::meta::{artifacts_available, default_artifacts_dir};
-use helix::runtime::Engine;
+use helix::runtime::meta::default_artifacts_dir;
+use helix::runtime::{Backend, BackendKind};
 
 fn main() {
     let dir = default_artifacts_dir();
-    if !artifacts_available(&dir) {
-        println!("artifacts not built — run `make artifacts` first; \
-                  skipping coordinator bench");
-        return;
-    }
+    let kind = BackendKind::from_env().unwrap();
+    kind.prepare(&dir).unwrap();
     let pm = PoreModel::load(&format!("{dir}/pore_model.json")).unwrap();
     let run = SequencingRun::simulate(&pm, RunSpec {
         genome_len: 1200,
@@ -31,16 +31,16 @@ fn main() {
     let total_bases: usize = run.reads.iter().map(|r| r.seq.len()).sum();
 
     // raw DNN executor throughput at each exported batch size
-    println!("== PJRT DNN executor ==");
-    let mut engine = Engine::new(&dir).unwrap();
-    let window = engine.meta.window;
+    println!("== {} DNN executor ==", kind.name());
+    let mut backend = kind.open(&dir).unwrap();
+    let window = backend.meta().window;
     let sig = vec![0.1f32; window];
-    for b in engine.meta.batches("guppy", 32) {
-        let sigs: Vec<&[f32]> = (0..b).map(|_| sig.as_slice()).collect();
-        let exe = engine.load("guppy", 32, b).unwrap();
-        let t = exe.entry.time_steps;
+    for b in backend.meta().batches("guppy", 32) {
+        let sigs: Vec<Vec<f32>> = (0..b).map(|_| sig.clone()).collect();
+        let t = backend.meta().find("guppy", 32, b).unwrap().time_steps;
         let st = bench(&format!("guppy fp32 batch={b} (T={t})"), 400, || {
-            std::hint::black_box(exe.run(&sigs).unwrap());
+            std::hint::black_box(
+                backend.run_windows("guppy", 32, &sigs).unwrap());
         });
         let windows_per_sec = b as f64 / (st.median_ns / 1e9);
         println!("    -> {windows_per_sec:.0} windows/s \
@@ -57,7 +57,7 @@ fn main() {
                 v
             })
             .collect();
-        engine.run_windows("guppy", 32, &sigs).unwrap()
+        backend.run_windows("guppy", 32, &sigs).unwrap()
     };
     bench("beam_search width=10 on real output", 200, || {
         std::hint::black_box(beam_search(&lps[0], 10));
@@ -80,6 +80,7 @@ fn main() {
         let mut coord = Coordinator::new(CoordinatorConfig {
             model: "guppy".into(),
             bits: 32,
+            backend: kind,
             policy,
             artifacts_dir: dir.clone(),
             ..Default::default()
@@ -110,9 +111,9 @@ fn main() {
     }
     // machine-readable summary for the perf trajectory (see ci.sh)
     let json = format!(
-        "{{\"bench\": \"coordinator\", \"reads\": {}, \"bases\": {}, \
-         \"rows\": [{}]}}\n",
-        run.reads.len(), total_bases, rows.join(", "));
+        "{{\"bench\": \"coordinator\", \"backend\": \"{}\", \
+         \"reads\": {}, \"bases\": {}, \"rows\": [{}]}}\n",
+        kind.name(), run.reads.len(), total_bases, rows.join(", "));
     match std::fs::write("BENCH_coordinator.json", &json) {
         Ok(()) => println!("\nwrote BENCH_coordinator.json"),
         Err(e) => println!("\ncould not write BENCH_coordinator.json: {e}"),

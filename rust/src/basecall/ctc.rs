@@ -247,6 +247,13 @@ pub fn beam_search_n(lp: &LogProbs, beam: usize, n: usize)
 /// log p(labels | lp) via the CTC forward algorithm — rust twin of
 /// python/compile/ctc.py, used by tests and the pipeline quality metrics.
 pub fn ctc_log_prob(lp: &LogProbs, labels: &[u8]) -> f32 {
+    if lp.t == 0 {
+        // no emissions: only the empty labelling has mass (p = 1),
+        // consistent with `beam_search_n`, which returns the empty
+        // prefix at log-prob 0.0 for t == 0 — indexing row(0) here
+        // used to panic out of bounds.
+        return if labels.is_empty() { 0.0 } else { f32::NEG_INFINITY };
+    }
     let s_len = 2 * labels.len() + 1;
     let ext = |s: usize| -> usize {
         if s % 2 == 0 { BLANK } else { labels[s / 2] as usize }
@@ -389,5 +396,22 @@ mod tests {
         let lp = uniformish(5, 3);
         let want: f32 = (0..5).map(|t| lp.row(t)[BLANK]).sum();
         assert!((ctc_log_prob(&lp, &[]) - want).abs() < 1e-5);
+    }
+
+    #[test]
+    fn zero_length_input_is_consistent_across_decoders() {
+        // t == 0: every decoder must agree on "the empty read with
+        // probability 1" instead of panicking on row(0).
+        let lp = LogProbs::new(0, Vec::new());
+        assert!(greedy_decode(&lp).is_empty());
+        assert!(beam_search(&lp, 10).is_empty());
+        let top = beam_search_n(&lp, 10, 1);
+        assert_eq!(top.len(), 1);
+        assert!(top[0].0.is_empty());
+        assert_eq!(top[0].1, 0.0);
+        // forward algorithm: p(empty) = 1, p(anything else) = 0
+        assert_eq!(ctc_log_prob(&lp, &[]), 0.0);
+        assert_eq!(ctc_log_prob(&lp, &[0]), f32::NEG_INFINITY);
+        assert_eq!(ctc_log_prob(&lp, &[1, 2, 3]), f32::NEG_INFINITY);
     }
 }

@@ -9,6 +9,13 @@
 
 use super::edit::edit_distance_banded;
 
+/// An overlap of length L tolerates at most `L / OVERLAP_DIVERGENCE_DIV`
+/// edits (20%). The doc comment used to promise "~12% mismatch" while
+/// the code accepted 20% — the code's bound is the intended one (splice
+/// recall on nanopore-grade decodes needs the slack; the edit-count
+/// score term keeps slop-extended overlaps from winning).
+pub const OVERLAP_DIVERGENCE_DIV: usize = 5;
+
 /// Semi-global ("fit") alignment of `other` onto `scaffold`: leading and
 /// trailing scaffold positions are FREE, so a fragment covering only part
 /// of the scaffold aligns where it belongs instead of being stretched
@@ -98,20 +105,22 @@ pub fn consensus(scaffold: &[u8], reads: &[&[u8]]) -> Vec<u8> {
         .collect()
 }
 
-/// Find the best suffix(a)-prefix(b) overlap of length >= `min_len` allowing
-/// up to ~12% mismatch (banded edit distance). Returns the overlap length.
+/// Find the best suffix(a)-prefix(b) overlap of length >= `min_len`,
+/// accepting up to `len / OVERLAP_DIVERGENCE_DIV` edits (banded edit
+/// distance) — i.e. 20% divergence, the nanopore-realistic bound pinned
+/// by `overlap_threshold_is_one_fifth`. Returns the overlap length.
 /// This is the "longest match" primitive of Fig 19(a), also reused by the
 /// pipeline's overlap-finding stage.
 pub fn best_overlap(a: &[u8], b: &[u8], min_len: usize) -> Option<usize> {
     let max_len = a.len().min(b.len());
     let mut best: Option<(usize, f64)> = None;
     for len in (min_len..=max_len).rev() {
-        let band = (len / 5).max(1);
+        let band = (len / OVERLAP_DIVERGENCE_DIV).max(1);
         let d = edit_distance_banded(&a[a.len() - len..], &b[..len], band);
-        // accept up to 20% divergence (nanopore-realistic), but penalize
-        // edits hard so a slop-extended overlap never beats a cleaner,
-        // shorter one (which would silently drop genome bases on splice).
-        if d <= len / 5 {
+        // accept up to 20% divergence, but penalize edits hard so a
+        // slop-extended overlap never beats a cleaner, shorter one
+        // (which would silently drop genome bases on splice).
+        if d <= len / OVERLAP_DIVERGENCE_DIV {
             let score = len as f64 - 16.0 * d as f64;
             if best.map_or(true, |(_, s)| score > s) {
                 best = Some((len, score));
@@ -240,6 +249,24 @@ mod tests {
         let a = vec![0u8, 1, 2, 3, 0, 1, 2, 3];
         let b = vec![0u8, 1, 2, 3, 3, 3, 3];
         assert_eq!(best_overlap(&a, &b, 3), Some(4));
+    }
+
+    #[test]
+    fn overlap_threshold_is_one_fifth() {
+        // pins the 20% divergence bound (the doc used to claim ~12%):
+        // over a length-10 overlap, 2 mismatches (20%) are accepted and
+        // 3 (30%) are rejected. a.len() == min_len forces exactly one
+        // candidate length, so the boundary itself is what's tested.
+        let a = vec![0u8, 1, 2, 3, 0, 1, 2, 3, 0, 1];
+        let mut two_off = a.clone();
+        two_off[1] = (two_off[1] + 1) % 4;
+        two_off[6] = (two_off[6] + 1) % 4;
+        assert_eq!(best_overlap(&a, &two_off, 10), Some(10));
+        let mut three_off = two_off.clone();
+        three_off[8] = (three_off[8] + 1) % 4;
+        assert_eq!(best_overlap(&a, &three_off, 10), None);
+        // (a ~12% bound would already reject the 2-edit overlap: the
+        // accepted case above is what distinguishes 20% from ~12%)
     }
 
     #[test]

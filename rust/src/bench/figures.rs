@@ -558,6 +558,21 @@ mod tests {
     }
 
     #[test]
+    fn fig9_ctc_anchor_holds() {
+        // Fig 9 anchor: CTC decode = 16.7% of 16-bit Guppy on the GPU.
+        // Re-asserted here after dropping the no-op `/ 2.0 * 2.0`
+        // calibration leftover from GPU_CTC_PER_STEP.
+        use crate::pim::schemes as s;
+        let t = Topology::guppy();
+        let dnn16 = t.macs_per_base() / (s::GPU_MAC_RATE_FP32 * 2.0);
+        let ctc = s::GPU_CTC_PER_STEP * t.ctc_steps as f64
+            / t.bases_per_window;
+        let total = dnn16 + ctc + s::GPU_VOTE_PER_BASE;
+        assert!((ctc / total - 0.167).abs() < 0.05,
+                "ctc fraction {}", ctc / total);
+    }
+
+    #[test]
     fn best_window_identity_finds_subsequence() {
         let mut rng = Rng::new(3);
         let genome: Vec<u8> = (0..500).map(|_| rng.base()).collect();

@@ -5,7 +5,8 @@
 //! in-tree bounded channels — same architecture, no async runtime):
 //!
 //!   submit(read) -> [windower] -> [dynamic batcher + DNN executor thread
-//!   (owns the PJRT client)] -> [CTC decode worker pool, per-worker
+//!   (owns a `runtime::Backend`: native quantized executor by default,
+//!   PJRT with the `xla` feature)] -> [CTC decode worker pool, per-worker
 //!   queues] -> [collector router] -> [vote worker pool] -> CalledReads
 //!   stream out via try_recv()/recv_timeout(); finish() drains the rest.
 //!

@@ -1,6 +1,8 @@
 //! The coordinator proper: read router -> window batcher -> DNN executor
-//! (PJRT, single owner thread) -> CTC decode pool (per-worker queues fed
-//! round-robin) -> collector router -> vote worker pool -> output queue.
+//! (a `runtime::Backend` owned by a single thread: the native quantized
+//! executor by default, PJRT under the `xla` feature) -> CTC decode pool
+//! (per-worker queues fed round-robin) -> collector router -> vote
+//! worker pool -> output queue.
 //!
 //! Every interior stage boundary is a bounded channel (`util::bounded`),
 //! so a slow stage backpressures its producer all the way up to
@@ -19,7 +21,7 @@ use anyhow::Result;
 use crate::basecall::ctc::{beam_search, LogProbs};
 use crate::genome::dataset::windows_from_read;
 use crate::genome::synth::Read;
-use crate::runtime::Engine;
+use crate::runtime::{Backend, BackendKind};
 use crate::util::bounded::{bounded, send_round_robin, Receiver, Sender};
 
 use super::batcher::{Batcher, BatchPolicy};
@@ -31,6 +33,9 @@ use super::metrics::Metrics;
 pub struct CoordinatorConfig {
     pub model: String,
     pub bits: u32,
+    /// which inference backend the DNN stage opens (native by default;
+    /// `xla` requires the cargo feature).
+    pub backend: BackendKind,
     /// window hop in samples; window length comes from the artifact meta.
     pub hop: usize,
     pub beam_width: usize,
@@ -48,6 +53,7 @@ impl Default for CoordinatorConfig {
         CoordinatorConfig {
             model: "guppy".into(),
             bits: 32,
+            backend: BackendKind::default(),
             hop: 100,
             beam_width: 10,
             decode_threads: 2,
@@ -98,7 +104,7 @@ pub struct Coordinator {
 impl Coordinator {
     pub fn new(cfg: CoordinatorConfig) -> Result<Coordinator> {
         // validate metadata on the caller thread for early errors
-        let meta = crate::runtime::Meta::load(&cfg.artifacts_dir)?;
+        let meta = cfg.backend.probe_meta(&cfg.artifacts_dir)?;
         let window = meta.window;
         let batches = meta.batches(&cfg.model, cfg.bits);
         anyhow::ensure!(!batches.is_empty(),
@@ -124,28 +130,21 @@ impl Coordinator {
             dec_rxs.push(rx);
         }
 
-        // DNN executor: the PJRT client is not Send, so the engine is both
-        // constructed and used inside its owner thread. It owns the decode
-        // senders; when it exits they drop and the pool drains out.
+        // DNN executor: backends may not be Send (the PJRT client is
+        // not), so the backend is both constructed and used inside its
+        // owner thread. It owns the decode senders; when it exits they
+        // drop and the pool drains out.
         let m = metrics.clone();
         let c = cfg.clone();
         let dnn_thread = std::thread::spawn(move || -> Result<()> {
-            let mut engine = match Engine::new(&c.artifacts_dir) {
-                Ok(mut e) => {
-                    // warm the executable cache; report readiness
-                    let mut init = Ok(());
-                    for b in e.meta.batches(&c.model, c.bits) {
-                        if let Err(err) = e.load(&c.model, c.bits, b) {
-                            init = Err(err);
-                            break;
-                        }
-                    }
-                    let ok = init.is_ok();
-                    let _ = tx_ready.send(init);
-                    if !ok {
-                        return Ok(());
-                    }
-                    e
+            // open + warm (compile cache / weight quantization) so
+            // failures surface through tx_ready at init, not mid-run
+            let mut backend = match c.backend.open(&c.artifacts_dir)
+                .and_then(|mut b| b.warm(&c.model, c.bits).map(|()| b))
+            {
+                Ok(b) => {
+                    let _ = tx_ready.send(Ok(()));
+                    b
                 }
                 Err(err) => {
                     let _ = tx_ready.send(Err(err));
@@ -164,7 +163,7 @@ impl Coordinator {
                     keys.push((j.read_id, j.window_idx));
                     sigs.push(j.signal);
                 }
-                let lps = engine.run_windows(&c.model, c.bits, &sigs)?;
+                let lps = backend.run_windows(&c.model, c.bits, &sigs)?;
                 m.add(&m.batches, 1);
                 m.add(&m.batch_items, n_items as u64);
                 if batch.full {

@@ -42,6 +42,27 @@ impl PoreModel {
         })
     }
 
+    /// Serialize to the `pore_model.json` schema `load` reads — the
+    /// writer half of the artifact contract, used by the native
+    /// backend's exporter (`runtime::native::write_artifacts`).
+    pub fn save(&self, path: &str) -> Result<()> {
+        use std::collections::BTreeMap;
+        let mut o = BTreeMap::new();
+        o.insert("k".to_string(), Json::Num(self.k as f64));
+        o.insert("levels".to_string(),
+                 Json::Arr(self.levels.iter()
+                           .map(|&x| Json::Num(x as f64)).collect()));
+        o.insert("dwell_min".to_string(),
+                 Json::Num(self.dwell_min as f64));
+        o.insert("dwell_max".to_string(),
+                 Json::Num(self.dwell_max as f64));
+        o.insert("noise_sigma".to_string(),
+                 Json::Num(self.noise_sigma as f64));
+        o.insert("window".to_string(), Json::Num(self.window as f64));
+        std::fs::write(path, Json::Obj(o).to_string())
+            .with_context(|| format!("writing pore model {path}"))
+    }
+
     /// Synthetic fallback with the same construction as
     /// `pore.PoreModel.default` (used by unit tests and pure-sim paths that
     /// must not depend on artifacts being built).
@@ -111,6 +132,23 @@ impl PoreModel {
 mod tests {
     use super::*;
     use crate::util::prop;
+
+    #[test]
+    fn save_load_roundtrip() {
+        let pm = PoreModel::synthetic(7);
+        let dir = std::env::temp_dir().join("helix_pore_save_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("pore_model.json");
+        let path = path.to_str().unwrap();
+        pm.save(path).unwrap();
+        let back = PoreModel::load(path).unwrap();
+        assert_eq!(back.k, pm.k);
+        assert_eq!(back.levels, pm.levels);
+        assert_eq!(back.dwell_min, pm.dwell_min);
+        assert_eq!(back.dwell_max, pm.dwell_max);
+        assert_eq!(back.window, pm.window);
+        assert!((back.noise_sigma - pm.noise_sigma).abs() < 1e-7);
+    }
 
     #[test]
     fn synthetic_table_is_standardized() {

@@ -6,9 +6,12 @@
 //! Layer-3 of the three-layer stack: the rust coordinator owns the event
 //! loop, batching, CTC decoding, read voting, the downstream assembly
 //! pipeline, and the cycle-level PIM simulator that reproduces the paper's
-//! architecture evaluation. The DNN forward pass is an AOT-compiled XLA
-//! artifact (JAX/Pallas, built once by `make artifacts`) executed through
-//! PJRT — python is never on the request path.
+//! architecture evaluation. The DNN forward pass runs behind the
+//! `runtime::Backend` trait: by default the pure-Rust quantized native
+//! executor (self-contained, deterministic), or — with the `xla` cargo
+//! feature — an AOT-compiled XLA artifact (JAX/Pallas, built once by
+//! `make artifacts`) executed through PJRT. Python is never on the
+//! request path.
 pub mod util;
 pub mod runtime;
 pub mod basecall;

@@ -15,16 +15,18 @@ use helix::coordinator::{Coordinator, CoordinatorConfig};
 use helix::genome::pore::PoreModel;
 use helix::genome::synth::{RunSpec, SequencingRun};
 use helix::runtime::meta::default_artifacts_dir;
+use helix::runtime::BackendKind;
 
 fn usage() -> ! {
     eprintln!("usage: helix <command> [options]\n\
         commands:\n  \
-        basecall [--model guppy] [--bits 32] [--genome 2000] [--coverage 5]\n  \
+        basecall [--model guppy] [--bits 32] [--genome 2000] [--coverage 5]\n    \
+        [--backend native|xla]\n  \
         simulate [--genome 10000] [--coverage 30]\n  \
         figures <fig2|...|fig26|table1..table5|all>\n  \
         schemes\n  \
         mc [--samples 100000]\n\
-        env: HELIX_ARTIFACTS=artifacts");
+        env: HELIX_ARTIFACTS=artifacts HELIX_BACKEND=native|xla");
     std::process::exit(2);
 }
 
@@ -58,15 +60,26 @@ fn main() -> Result<()> {
                 .map_or(2000, |s| s.parse().unwrap_or(2000));
             let coverage: usize = f.get("coverage")
                 .map_or(5, |s| s.parse().unwrap_or(5));
+            let kind = match f.get("backend").map(|s| s.as_str()) {
+                None => BackendKind::from_env()?,
+                Some("native") => BackendKind::Native,
+                #[cfg(feature = "xla")]
+                Some("xla") => BackendKind::Xla,
+                Some(other) => anyhow::bail!(
+                    "unknown --backend '{other}' (native|xla; xla needs \
+                     a `--features xla` build)"),
+            };
+            kind.prepare(&dir)?;
             let pm = PoreModel::load(&format!("{dir}/pore_model.json"))?;
             let run = SequencingRun::simulate(&pm, RunSpec {
                 genome_len: genome, coverage, ..Default::default()
             });
             println!("basecalling {} reads ({} genome, {:.1}x coverage) \
-                      with {model}/{bits}b ...",
-                     run.reads.len(), genome, run.mean_coverage());
+                      with {model}/{bits}b on the {} backend ...",
+                     run.reads.len(), genome, run.mean_coverage(),
+                     kind.name());
             let mut coord = Coordinator::new(CoordinatorConfig {
-                model, bits, artifacts_dir: dir.clone(),
+                model, bits, backend: kind, artifacts_dir: dir.clone(),
                 ..Default::default()
             })?;
             let t0 = std::time::Instant::now();

@@ -30,7 +30,7 @@ pub const GPU_MAC_RATE_FP32: f64 = 2.0e12;
 pub const CPU_MAC_RATE_FP32: f64 = 1.0e11;
 /// GPU CTC decode cost per CTC step per base-window, at beam width 10.
 /// Anchor: CTC = 16.7% of 16-bit Guppy latency (Fig 9).
-pub const GPU_CTC_PER_STEP: f64 = 5.45e-8 / 2.0 * 2.0; // s per step / window
+pub const GPU_CTC_PER_STEP: f64 = 5.45e-8; // s per step / window
 /// GPU read-vote cost per base. Anchor: vote = 37% of 16-bit Guppy (Fig 9).
 pub const GPU_VOTE_PER_BASE: f64 = 2.4e-7;
 /// CPU CTC/vote penalty vs GPU (poorly parallelized on 8 cores).
@@ -95,6 +95,16 @@ impl Scheme {
             _ => (5, 5),
         }
     }
+}
+
+/// (weight bits, activation bits) the software `runtime::native`
+/// executor uses for a model declared at `model_bits` — the same
+/// datapath mapping the PIM schemes charge: "full-precision" models
+/// execute on the 16-bit fixed-point path (ISAAC stores 16-bit
+/// weights, §5.3), quantized models at their own width.
+pub fn native_datapath_bits(model_bits: u32) -> (u32, u32) {
+    let b = model_bits.clamp(2, 16);
+    (b, b)
 }
 
 /// Evaluation output for one (scheme, base-caller) pair.
@@ -254,7 +264,11 @@ mod tests {
 
     #[test]
     fn fig9_breakdown_16bit_guppy() {
-        // Fig 9: CTC 16.7%, vote 37% of 16-bit Guppy on the GPU.
+        // Fig 9: CTC 16.7%, vote 37% of 16-bit Guppy on the GPU. Pins
+        // the calibration constant directly so a "temporary" rescale of
+        // GPU_CTC_PER_STEP (like the old `/ 2.0 * 2.0` leftover) can't
+        // silently drift the anchor.
+        assert_eq!(GPU_CTC_PER_STEP, 5.45e-8);
         let t = Topology::guppy();
         let dnn16 = t.macs_per_base() / (GPU_MAC_RATE_FP32 * 2.0);
         let ctc = GPU_CTC_PER_STEP * t.ctc_steps as f64 / t.bases_per_window;
@@ -263,6 +277,18 @@ mod tests {
         let fv = GPU_VOTE_PER_BASE / total;
         assert!((fc - 0.167).abs() < 0.05, "ctc frac {fc}");
         assert!((fv - 0.37).abs() < 0.06, "vote frac {fv}");
+    }
+
+    #[test]
+    fn native_datapath_matches_scheme_widths() {
+        // the software executor and the PIM schemes must agree on how a
+        // declared bit-width maps onto the executed datapath
+        assert_eq!(native_datapath_bits(32), (16, 16));
+        assert_eq!(native_datapath_bits(16), (16, 16));
+        assert_eq!(native_datapath_bits(8), (8, 8));
+        assert_eq!(native_datapath_bits(5), (5, 5));
+        assert_eq!(native_datapath_bits(5), Scheme::Seat.dnn_bits());
+        assert_eq!(native_datapath_bits(16), Scheme::Q16.dnn_bits());
     }
 
     #[test]

@@ -1,0 +1,238 @@
+//! The inference backend abstraction: compile/load + batched execution.
+//!
+//! The coordinator's DNN stage is written against `Backend`, not a
+//! concrete engine, so the same submit→window→batch→DNN→decode→collect
+//! →vote pipeline runs on either:
+//!
+//!   * `native` (default) — the pure-Rust quantized executor
+//!     (`runtime::native`), self-contained: no network, no pre-built
+//!     artifacts, deterministic weights. This is what CI runs.
+//!   * `xla` (cargo feature `xla`) — the PJRT engine executing the
+//!     HLO-text artifacts of `make artifacts` (`runtime::executable`).
+//!
+//! Backends are constructed *inside* their owner thread (the PJRT client
+//! is not `Send`), so the coordinator carries a `BackendKind` and calls
+//! `open()` from the DNN thread; `probe_meta()` gives the caller thread
+//! early validation without constructing the real backend where that is
+//! expensive.
+
+use anyhow::{Context, Result};
+
+use crate::basecall::ctc::LogProbs;
+
+use super::meta::{ArtifactEntry, Meta};
+
+/// A loaded inference backend: owns the artifact metadata and executes
+/// fixed-shape batches.
+pub trait Backend {
+    /// Artifact metadata (models, bit-widths, batch sizes, windows).
+    fn meta(&self) -> &Meta;
+
+    /// Prepare every (model, bits) executable up front so failures
+    /// surface at init, not mid-run (compile cache warm-up on xla,
+    /// weight quantization + existence check on native).
+    fn warm(&mut self, model: &str, bits: u32) -> Result<()>;
+
+    /// Run exactly one batch: `signals.len()` must equal `entry.batch`
+    /// and every row must be `entry.window` samples. Returns one
+    /// `LogProbs` (time_steps x NUM_SYMBOLS) per row.
+    fn run_batch(&mut self, entry: &ArtifactEntry, signals: &[&[f32]])
+                 -> Result<Vec<LogProbs>>;
+
+    /// Basecall an arbitrary number of windows by tiling over the
+    /// available batch sizes (smallest batch that covers the tail,
+    /// else the largest).
+    ///
+    /// Contract: the tail batch is padded with zero windows sized to
+    /// the SELECTED entry's window — not the top-level `meta.window`
+    /// default — so artifacts whose per-entry window differs from the
+    /// meta default still execute (regression: `run_windows` used to
+    /// pad with `meta.window` and every tail batch of such an artifact
+    /// failed `run_batch`'s row-length validation).
+    fn run_windows(&mut self, model: &str, bits: u32,
+                   windows: &[Vec<f32>]) -> Result<Vec<LogProbs>> {
+        let batches = self.meta().batches(model, bits);
+        anyhow::ensure!(!batches.is_empty(),
+                        "no artifacts for {model}/{bits}b");
+        let bmax = *batches.last().unwrap();
+        let mut out = Vec::with_capacity(windows.len());
+        let mut i = 0;
+        while i < windows.len() {
+            let remaining = windows.len() - i;
+            // pick the smallest batch size that covers the tail
+            let b = *batches.iter().find(|&&x| x >= remaining)
+                .unwrap_or(&bmax);
+            let entry = self.meta().find(model, bits, b)
+                .with_context(|| format!("no artifact for \
+                                          {model}/{bits}b/b{b}"))?
+                .clone();
+            let take = remaining.min(b);
+            // zero pad only exists for a short tail batch (hot-path
+            // full batches allocate nothing here)
+            let zero = if take < b {
+                Some(vec![0f32; entry.window])
+            } else {
+                None
+            };
+            let mut refs: Vec<&[f32]> = Vec::with_capacity(b);
+            for w in &windows[i..i + take] {
+                refs.push(w.as_slice());
+            }
+            if let Some(z) = &zero {
+                for _ in take..b {
+                    refs.push(z.as_slice());
+                }
+            }
+            let lps = self.run_batch(&entry, &refs)?;
+            out.extend(lps.into_iter().take(take));
+            i += take;
+        }
+        Ok(out)
+    }
+}
+
+/// Which backend the coordinator (or an example/bench) should open.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// Pure-Rust quantized executor; zero external dependencies.
+    #[default]
+    Native,
+    /// PJRT engine over the AOT HLO artifacts (`make artifacts`).
+    #[cfg(feature = "xla")]
+    Xla,
+}
+
+impl BackendKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            #[cfg(feature = "xla")]
+            BackendKind::Xla => "xla",
+        }
+    }
+
+    /// Backend selected by `HELIX_BACKEND` (`native` | `xla`), default
+    /// native. Errors when `xla` is requested but the crate was built
+    /// without the `xla` feature.
+    pub fn from_env() -> Result<BackendKind> {
+        match std::env::var("HELIX_BACKEND").as_deref() {
+            Err(_) | Ok("") | Ok("native") => Ok(BackendKind::Native),
+            #[cfg(feature = "xla")]
+            Ok("xla") => Ok(BackendKind::Xla),
+            #[cfg(not(feature = "xla"))]
+            Ok("xla") => anyhow::bail!(
+                "HELIX_BACKEND=xla but this build has no PJRT runtime — \
+                 rebuild with `--features xla`"),
+            Ok(other) => anyhow::bail!(
+                "unknown HELIX_BACKEND '{other}' (native|xla)"),
+        }
+    }
+
+    /// Construct the backend. Call from the thread that will own it:
+    /// the xla PJRT client is not `Send`.
+    pub fn open(&self, artifacts_dir: &str) -> Result<Box<dyn Backend>> {
+        match self {
+            BackendKind::Native => Ok(Box::new(
+                super::native::NativeBackend::open(artifacts_dir)?)),
+            #[cfg(feature = "xla")]
+            BackendKind::Xla => Ok(Box::new(
+                super::executable::Engine::new(artifacts_dir)?)),
+        }
+    }
+
+    /// Caller-thread validation: the metadata `open()` would see,
+    /// without constructing the backend (no weight generation, no
+    /// PJRT). On-disk artifacts read `meta.json`; the native builtin
+    /// fallback derives its meta from the spec alone.
+    pub fn probe_meta(&self, artifacts_dir: &str) -> Result<Meta> {
+        match self {
+            BackendKind::Native => {
+                if super::meta::artifacts_available(artifacts_dir) {
+                    Meta::load(artifacts_dir)
+                } else {
+                    Ok(super::native::NativeSpec::builtin()
+                        .meta(std::path::Path::new(artifacts_dir)))
+                }
+            }
+            #[cfg(feature = "xla")]
+            BackendKind::Xla => Meta::load(artifacts_dir),
+        }
+    }
+
+    /// Make sure the artifacts the backend needs exist: the native
+    /// backend materializes its deterministic in-tree model (meta.json,
+    /// qmodel weights, pore model) on first use; the xla backend
+    /// requires `make artifacts` to have run.
+    pub fn prepare(&self, artifacts_dir: &str) -> Result<()> {
+        match self {
+            BackendKind::Native => {
+                super::native::ensure_artifacts(artifacts_dir)?;
+                Ok(())
+            }
+            #[cfg(feature = "xla")]
+            BackendKind::Xla => {
+                anyhow::ensure!(
+                    super::meta::artifacts_available(artifacts_dir),
+                    "no artifacts in {artifacts_dir} — run `make artifacts`");
+                Ok(())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::{NativeBackend, NativeModelSpec,
+                                 NativeSpec};
+
+    /// Regression for the tail-batch padding bug: an artifact whose
+    /// per-entry window differs from the top-level meta default must
+    /// still run ragged window counts — the zero pad has to be sized by
+    /// the selected entry, not `meta.window`.
+    #[test]
+    fn tail_batch_pads_with_entry_window() {
+        let spec = NativeSpec {
+            models: vec![
+                NativeModelSpec::new("guppy", &[32], &[1, 8], 300),
+                // entry window 64 != meta default window 300
+                NativeModelSpec::new("tiny", &[8], &[2], 64),
+            ],
+            ..NativeSpec::builtin()
+        };
+        let mut b = NativeBackend::from_spec(&spec);
+        assert_eq!(b.meta().window, 300);
+        assert_eq!(b.meta().find("tiny", 8, 2).unwrap().window, 64);
+        // 5 windows over batch 2: the third batch is a tail of 1 + 1 pad
+        let windows: Vec<Vec<f32>> = (0..5)
+            .map(|k| (0..64).map(|i| ((i + k) as f32 * 0.3).sin()).collect())
+            .collect();
+        let lps = b.run_windows("tiny", 8, &windows).unwrap();
+        assert_eq!(lps.len(), 5);
+        let t = b.meta().find("tiny", 8, 2).unwrap().time_steps;
+        for lp in &lps {
+            assert_eq!(lp.t, t);
+        }
+        // same window decoded alone must match its batched result
+        let single = b.run_windows("tiny", 8, &windows[4..5]).unwrap();
+        for (a, s) in lps[4].data.iter().zip(&single[0].data) {
+            assert!((a - s).abs() < 1e-5, "batch-position dependence");
+        }
+    }
+
+    #[test]
+    fn run_windows_rejects_unknown_model() {
+        let mut b = NativeBackend::builtin();
+        assert!(b.run_windows("nope", 32, &[]).is_err());
+    }
+
+    #[test]
+    fn env_default_is_native() {
+        // (HELIX_BACKEND is unset in the test environment)
+        if std::env::var("HELIX_BACKEND").is_err() {
+            assert_eq!(BackendKind::from_env().unwrap(),
+                       BackendKind::Native);
+        }
+        assert_eq!(BackendKind::default().name(), "native");
+    }
+}

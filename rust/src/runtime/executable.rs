@@ -1,4 +1,5 @@
-//! PJRT executable wrapper: HLO text -> compile -> batched execution.
+//! PJRT executable wrapper: HLO text -> compile -> batched execution
+//! (cargo feature `xla`; the default build uses `runtime::native`).
 //!
 //! Follows the /opt/xla-example/load_hlo pattern: `PjRtClient::cpu()` ->
 //! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
@@ -12,6 +13,7 @@ use anyhow::{Context, Result};
 use crate::basecall::ctc::LogProbs;
 use crate::basecall::NUM_SYMBOLS;
 
+use super::backend::Backend;
 use super::meta::{ArtifactEntry, Meta};
 
 /// One compiled model variant at a fixed batch size.
@@ -85,34 +87,35 @@ impl Engine {
         }
         Ok(&self.cache[&entry.name])
     }
+}
 
-    /// Basecall an arbitrary number of windows by tiling over the largest
-    /// available batch executable (padding the tail batch with zeros).
-    pub fn run_windows(&mut self, model: &str, bits: u32,
-                       windows: &[Vec<f32>]) -> Result<Vec<LogProbs>> {
+/// Batched execution via the shared `Backend` contract: `run_windows`
+/// (the trait's default) tiles over the exported batch sizes and pads
+/// the tail batch with zero windows sized by the SELECTED entry's
+/// window — `ModelExecutable::run` validates each row against
+/// `entry.window`, so padding by the top-level `meta.window` default
+/// broke every tail batch of an artifact whose per-entry window
+/// differed from it.
+impl Backend for Engine {
+    fn meta(&self) -> &Meta {
+        &self.meta
+    }
+
+    /// Warm the executable cache for every exported batch size so
+    /// compile failures surface at init, not mid-run.
+    fn warm(&mut self, model: &str, bits: u32) -> Result<()> {
         let batches = self.meta.batches(model, bits);
-        anyhow::ensure!(!batches.is_empty(), "no artifacts for {model}");
-        let bmax = *batches.last().unwrap();
-        let window = self.meta.window;
-        let zero = vec![0f32; window];
-        let mut out = Vec::with_capacity(windows.len());
-        let mut i = 0;
-        while i < windows.len() {
-            let remaining = windows.len() - i;
-            // pick the smallest batch size that covers the tail
-            let b = *batches.iter().find(|&&b| b >= remaining)
-                .unwrap_or(&bmax);
-            let exe = self.load(model, bits, b)?;
-            let mut refs: Vec<&[f32]> = Vec::with_capacity(b);
-            for k in 0..b {
-                refs.push(windows.get(i + k).map(|w| w.as_slice())
-                          .unwrap_or(&zero));
-            }
-            let lps = exe.run(&refs)?;
-            let take = remaining.min(b);
-            out.extend(lps.into_iter().take(take));
-            i += take;
+        anyhow::ensure!(!batches.is_empty(),
+                        "no artifacts for {model}/{bits}b");
+        for b in batches {
+            self.load(model, bits, b)?;
         }
-        Ok(out)
+        Ok(())
+    }
+
+    fn run_batch(&mut self, entry: &ArtifactEntry, signals: &[&[f32]])
+                 -> Result<Vec<LogProbs>> {
+        let exe = self.load(&entry.model, entry.bits, entry.batch)?;
+        exe.run(signals)
     }
 }

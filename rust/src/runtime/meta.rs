@@ -86,6 +86,34 @@ impl Meta {
         self.root.join(&e.file)
     }
 
+    /// Write `meta.json` into `self.root` — the writer half of the
+    /// artifact contract. The native backend's exporter uses this; the
+    /// python AOT export writes the same schema.
+    pub fn save(&self) -> Result<PathBuf> {
+        use std::collections::BTreeMap;
+        let mut entries = Vec::new();
+        for e in &self.entries {
+            let mut o = BTreeMap::new();
+            o.insert("name".to_string(), Json::Str(e.name.clone()));
+            o.insert("model".to_string(), Json::Str(e.model.clone()));
+            o.insert("bits".to_string(), Json::Num(e.bits as f64));
+            o.insert("batch".to_string(), Json::Num(e.batch as f64));
+            o.insert("window".to_string(), Json::Num(e.window as f64));
+            o.insert("time_steps".to_string(),
+                     Json::Num(e.time_steps as f64));
+            o.insert("pallas".to_string(), Json::Bool(e.pallas));
+            o.insert("file".to_string(), Json::Str(e.file.clone()));
+            entries.push(Json::Obj(o));
+        }
+        let mut top = BTreeMap::new();
+        top.insert("window".to_string(), Json::Num(self.window as f64));
+        top.insert("entries".to_string(), Json::Arr(entries));
+        let path = self.root.join("meta.json");
+        std::fs::write(&path, Json::Obj(top).to_string())
+            .with_context(|| format!("writing {path:?}"))?;
+        Ok(path)
+    }
+
     pub fn pore_model_path(&self) -> PathBuf {
         self.root.join("pore_model.json")
     }
@@ -140,5 +168,30 @@ mod tests {
     fn missing_dir_errors() {
         assert!(Meta::load("/nonexistent/helix").is_err());
         assert!(!artifacts_available("/nonexistent/helix"));
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("helix_meta_save_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_meta(&dir);
+        let m = Meta::load(dir.to_str().unwrap()).unwrap();
+        let out = std::env::temp_dir().join("helix_meta_save_test_out");
+        std::fs::create_dir_all(&out).unwrap();
+        let saved = Meta { root: out.clone(), ..m.clone() };
+        saved.save().unwrap();
+        let back = Meta::load(out.to_str().unwrap()).unwrap();
+        assert_eq!(back.window, m.window);
+        assert_eq!(back.entries.len(), m.entries.len());
+        for (a, b) in back.entries.iter().zip(&m.entries) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.model, b.model);
+            assert_eq!(a.bits, b.bits);
+            assert_eq!(a.batch, b.batch);
+            assert_eq!(a.window, b.window);
+            assert_eq!(a.time_steps, b.time_steps);
+            assert_eq!(a.pallas, b.pallas);
+            assert_eq!(a.file, b.file);
+        }
     }
 }

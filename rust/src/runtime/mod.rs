@@ -1,10 +1,22 @@
-//! PJRT runtime: loads the HLO-text artifacts produced by `make artifacts`
-//! (python/compile/aot.py) and executes them on the CPU PJRT client.
-//! Python is never on this path — the rust binary is self-contained once
-//! artifacts exist.
+//! Model runtime: artifact metadata plus pluggable inference backends
+//! behind the `Backend` trait.
+//!
+//! * `native` (default build): pure-Rust quantized executor with a
+//!   deterministic in-tree model — no network, no pre-built artifacts.
+//! * `executable` (cargo feature `xla`): the PJRT engine that loads the
+//!   HLO-text artifacts produced by `make artifacts`
+//!   (python/compile/aot.py) and executes them on the CPU PJRT client.
+//!
+//! Either way, python is never on the serving path.
 
+pub mod backend;
+#[cfg(feature = "xla")]
 pub mod executable;
 pub mod meta;
+pub mod native;
 
+pub use backend::{Backend, BackendKind};
+#[cfg(feature = "xla")]
 pub use executable::{Engine, ModelExecutable};
 pub use meta::{ArtifactEntry, Meta};
+pub use native::NativeBackend;

@@ -1,0 +1,578 @@
+//! Native inference backend: a pure-Rust quantized executor.
+//!
+//! The default `Backend` (no cargo features, no network, no pre-built
+//! artifacts): a small deterministic base-caller DNN — int8/int16 conv +
+//! matmul kernels whose bit-width semantics follow the PIM datapath
+//! model (`pim::schemes::native_datapath_bits`: "32-bit" models execute
+//! on the 16-bit fixed-point path, quantized ones at their own width) —
+//! producing real, normalized `LogProbs` for the CTC decoders.
+//!
+//! Weights are generated from `util::rng` with a fixed seed, so every
+//! build of the crate computes bit-identical outputs; `write_artifacts`
+//! exports the same model through the `meta.json` artifact contract
+//! (qmodel weight files + pore model), which is what `ci.sh bench` and
+//! the examples materialize on first run.
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::basecall::ctc::LogProbs;
+use crate::basecall::{BLANK, NUM_SYMBOLS};
+use crate::genome::pore::PoreModel;
+use crate::pim::schemes::native_datapath_bits;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::backend::Backend;
+use super::meta::{artifacts_available, ArtifactEntry, Meta};
+
+/// Seed base for the deterministic in-tree weights ("HELIX" << 8).
+pub const NATIVE_SEED: u64 = 0x4845_4C49_5800;
+/// Pore model seed shared with `PoreModel::synthetic` test usage.
+const PORE_SEED: u64 = 7;
+/// qmodel file format tag checked by the loader.
+const QMODEL_FORMAT: &str = "helix-qmodel-v1";
+
+/// One model family in a native artifact set.
+#[derive(Clone, Debug)]
+pub struct NativeModelSpec {
+    pub model: String,
+    /// declared bit-widths to export (quantization follows
+    /// `native_datapath_bits`).
+    pub bits: Vec<u32>,
+    /// batch sizes to expose in the meta (ascending).
+    pub batches: Vec<usize>,
+    pub window: usize,
+    pub kernel: usize,
+    pub stride: usize,
+    pub hidden: usize,
+}
+
+impl NativeModelSpec {
+    pub fn new(model: &str, bits: &[u32], batches: &[usize],
+               window: usize) -> NativeModelSpec {
+        NativeModelSpec {
+            model: model.to_string(),
+            bits: bits.to_vec(),
+            batches: batches.to_vec(),
+            window,
+            kernel: 12,
+            stride: 2,
+            hidden: 16,
+        }
+    }
+
+    fn time_steps(&self) -> usize {
+        assert!(self.window > self.kernel && self.stride > 0,
+                "window {} too small for kernel {}", self.window,
+                self.kernel);
+        (self.window - self.kernel) / self.stride + 1
+    }
+}
+
+/// A full native artifact set (what the writer exports and the builtin
+/// in-memory fallback instantiates).
+#[derive(Clone, Debug)]
+pub struct NativeSpec {
+    pub seed: u64,
+    /// top-level default window recorded in meta.json.
+    pub window: usize,
+    pub models: Vec<NativeModelSpec>,
+}
+
+impl NativeSpec {
+    /// The in-tree default: one "guppy" family at the bit-widths the
+    /// paper evaluates, batch sizes 1/8/32, window 300 → 145 CTC steps
+    /// (the same shape the AOT export uses).
+    pub fn builtin() -> NativeSpec {
+        NativeSpec {
+            seed: NATIVE_SEED,
+            window: 300,
+            models: vec![NativeModelSpec::new(
+                "guppy", &[32, 16, 8, 5], &[1, 8, 32], 300)],
+        }
+    }
+
+    /// The `Meta` this spec exposes — derivable without generating any
+    /// weights (used by `BackendKind::probe_meta` for cheap
+    /// caller-thread validation).
+    pub fn meta(&self, root: &Path) -> Meta {
+        let mut entries = Vec::new();
+        for ms in &self.models {
+            for &bits in &ms.bits {
+                push_entries(&mut entries, ms, bits);
+            }
+        }
+        Meta {
+            root: root.to_path_buf(),
+            window: self.window,
+            entries,
+        }
+    }
+}
+
+/// Float weights as generated/exported (pre-quantization).
+#[derive(Clone, Debug)]
+struct RawModel {
+    window: usize,
+    time_steps: usize,
+    hidden: usize,
+    kernel: usize,
+    stride: usize,
+    /// conv filters, row-major [hidden][kernel] (in-channels = 1).
+    conv_w: Vec<f32>,
+    conv_b: Vec<f32>,
+    /// output projection, row-major [NUM_SYMBOLS][hidden].
+    out_w: Vec<f32>,
+    out_b: Vec<f32>,
+}
+
+fn model_seed(base: u64, model: &str, bits: u32) -> u64 {
+    let mut h = base ^ (bits as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    for b in model.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+impl RawModel {
+    /// Deterministic weights for (model, bits). Different bit-widths get
+    /// different weights — standing in for the per-width finetuned
+    /// checkpoints of the AOT export — and the blank logit bias is
+    /// pinned below every base logit bias so a degenerate input can
+    /// never collapse the decode to the empty read.
+    fn generate(spec: &NativeModelSpec, seed_base: u64, bits: u32)
+                -> RawModel {
+        let mut rng = Rng::new(model_seed(seed_base, &spec.model, bits));
+        let hk = spec.hidden * spec.kernel;
+        let wscale = 1.0 / (spec.kernel as f64).sqrt();
+        let conv_w: Vec<f32> =
+            (0..hk).map(|_| (rng.normal() * wscale) as f32).collect();
+        let conv_b: Vec<f32> =
+            (0..spec.hidden).map(|_| (rng.normal() * 0.1) as f32).collect();
+        let oscale = 1.0 / (spec.hidden as f64).sqrt();
+        let out_w: Vec<f32> = (0..NUM_SYMBOLS * spec.hidden)
+            .map(|_| (rng.normal() * oscale) as f32)
+            .collect();
+        let mut out_b: Vec<f32> = (0..NUM_SYMBOLS)
+            .map(|_| (rng.normal() * 0.2) as f32)
+            .collect();
+        let min_base = out_b[..BLANK].iter().cloned().fold(f32::MAX, f32::min);
+        out_b[BLANK] = min_base - 2.0;
+        RawModel {
+            window: spec.window,
+            time_steps: spec.time_steps(),
+            hidden: spec.hidden,
+            kernel: spec.kernel,
+            stride: spec.stride,
+            conv_w,
+            conv_b,
+            out_w,
+            out_b,
+        }
+    }
+
+    fn to_json(&self, model: &str, bits: u32) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("format".to_string(), Json::Str(QMODEL_FORMAT.into()));
+        o.insert("model".to_string(), Json::Str(model.into()));
+        o.insert("bits".to_string(), Json::Num(bits as f64));
+        o.insert("window".to_string(), Json::Num(self.window as f64));
+        o.insert("time_steps".to_string(),
+                 Json::Num(self.time_steps as f64));
+        o.insert("hidden".to_string(), Json::Num(self.hidden as f64));
+        o.insert("kernel".to_string(), Json::Num(self.kernel as f64));
+        o.insert("stride".to_string(), Json::Num(self.stride as f64));
+        o.insert("conv_w".to_string(), jarr(&self.conv_w));
+        o.insert("conv_b".to_string(), jarr(&self.conv_b));
+        o.insert("out_w".to_string(), jarr(&self.out_w));
+        o.insert("out_b".to_string(), jarr(&self.out_b));
+        Json::Obj(o)
+    }
+
+    fn from_json(j: &Json) -> Result<RawModel> {
+        let fmt = j.get("format").and_then(Json::as_str).unwrap_or("");
+        anyhow::ensure!(fmt == QMODEL_FORMAT,
+                        "not a native qmodel artifact (format '{fmt}')");
+        let field = |k: &str| j.get(k).and_then(Json::as_usize)
+            .with_context(|| format!("qmodel field {k}"));
+        let arr = |k: &str| j.get(k).and_then(Json::as_f32_vec)
+            .with_context(|| format!("qmodel field {k}"));
+        let m = RawModel {
+            window: field("window")?,
+            time_steps: field("time_steps")?,
+            hidden: field("hidden")?,
+            kernel: field("kernel")?,
+            stride: field("stride")?,
+            conv_w: arr("conv_w")?,
+            conv_b: arr("conv_b")?,
+            out_w: arr("out_w")?,
+            out_b: arr("out_b")?,
+        };
+        anyhow::ensure!(m.conv_w.len() == m.hidden * m.kernel
+                        && m.conv_b.len() == m.hidden
+                        && m.out_w.len() == NUM_SYMBOLS * m.hidden
+                        && m.out_b.len() == NUM_SYMBOLS,
+                        "qmodel weight shapes inconsistent");
+        Ok(m)
+    }
+}
+
+fn jarr(v: &[f32]) -> Json {
+    Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+/// Symmetric per-tensor quantization: `w ≈ q * scale`, |q| <= qmax.
+fn quantize(w: &[f32], qmax: i32) -> (Vec<i32>, f32) {
+    let max = w.iter().fold(0f32, |m, &x| m.max(x.abs())).max(1e-12);
+    let scale = max / qmax as f32;
+    let q = w.iter()
+        .map(|&x| (x / scale).round()
+             .clamp(-(qmax as f32), qmax as f32) as i32)
+        .collect();
+    (q, scale)
+}
+
+/// One (model, bits) executable: weights quantized to the datapath
+/// width, run with integer accumulation.
+struct QuantModel {
+    window: usize,
+    time_steps: usize,
+    hidden: usize,
+    kernel: usize,
+    stride: usize,
+    conv_q: Vec<i32>,
+    conv_scale: f32,
+    conv_b: Vec<f32>,
+    out_q: Vec<i32>,
+    out_scale: f32,
+    out_b: Vec<f32>,
+    /// activation clamp from the datapath's activation bits.
+    a_qmax: i32,
+}
+
+impl QuantModel {
+    fn from_raw(raw: &RawModel, bits: u32) -> QuantModel {
+        let (w_bits, a_bits) = native_datapath_bits(bits);
+        let w_qmax = (1i32 << (w_bits - 1)) - 1;
+        let a_qmax = (1i32 << (a_bits - 1)) - 1;
+        let (conv_q, conv_scale) = quantize(&raw.conv_w, w_qmax);
+        let (out_q, out_scale) = quantize(&raw.out_w, w_qmax);
+        QuantModel {
+            window: raw.window,
+            time_steps: raw.time_steps,
+            hidden: raw.hidden,
+            kernel: raw.kernel,
+            stride: raw.stride,
+            conv_q,
+            conv_scale,
+            conv_b: raw.conv_b.clone(),
+            out_q,
+            out_scale,
+            out_b: raw.out_b.clone(),
+            a_qmax,
+        }
+    }
+
+    /// Integer conv → ReLU → integer matmul → log-softmax. Activations
+    /// are quantized per window (dynamic symmetric scale), so a window's
+    /// output never depends on its batch neighbours.
+    fn forward(&self, sig: &[f32]) -> LogProbs {
+        debug_assert_eq!(sig.len(), self.window);
+        let (qx, sx) = quantize(sig, self.a_qmax);
+        let mut hidden = vec![0f32; self.time_steps * self.hidden];
+        for t in 0..self.time_steps {
+            let base = t * self.stride;
+            for c in 0..self.hidden {
+                let w = &self.conv_q[c * self.kernel..(c + 1) * self.kernel];
+                let mut acc: i64 = 0;
+                for (k, &wk) in w.iter().enumerate() {
+                    acc += wk as i64 * qx[base + k] as i64;
+                }
+                let v = acc as f32 * self.conv_scale * sx + self.conv_b[c];
+                hidden[t * self.hidden + c] = v.max(0.0);
+            }
+        }
+        let (qh, sh) = quantize(&hidden, self.a_qmax);
+        let mut data = Vec::with_capacity(self.time_steps * NUM_SYMBOLS);
+        for t in 0..self.time_steps {
+            let row = &qh[t * self.hidden..(t + 1) * self.hidden];
+            let mut logits = [0f32; NUM_SYMBOLS];
+            for (s, logit) in logits.iter_mut().enumerate() {
+                let w = &self.out_q[s * self.hidden..(s + 1) * self.hidden];
+                let mut acc: i64 = 0;
+                for (c, &wc) in w.iter().enumerate() {
+                    acc += wc as i64 * row[c] as i64;
+                }
+                *logit = acc as f32 * self.out_scale * sh + self.out_b[s];
+            }
+            let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let lse = m
+                + logits.iter().map(|z| (z - m).exp()).sum::<f32>().ln();
+            data.extend(logits.iter().map(|z| z - lse));
+        }
+        LogProbs::new(self.time_steps, data)
+    }
+}
+
+/// The native backend: artifact metadata + quantized executables keyed
+/// by (model, bits). Plain data — `Send`, unlike the PJRT client.
+pub struct NativeBackend {
+    meta: Meta,
+    models: HashMap<(String, u32), QuantModel>,
+}
+
+impl NativeBackend {
+    /// Load from an artifacts dir when `meta.json` exists there (it must
+    /// be a native qmodel export), otherwise fall back to the builtin
+    /// in-memory model — the zero-config path the coordinator uses when
+    /// nothing has been materialized on disk.
+    pub fn open(artifacts_dir: &str) -> Result<NativeBackend> {
+        if artifacts_available(artifacts_dir) {
+            NativeBackend::load(artifacts_dir)
+        } else {
+            Ok(NativeBackend::builtin())
+        }
+    }
+
+    pub fn builtin() -> NativeBackend {
+        NativeBackend::from_spec(&NativeSpec::builtin())
+    }
+
+    /// Instantiate a spec fully in memory (no filesystem).
+    pub fn from_spec(spec: &NativeSpec) -> NativeBackend {
+        let mut models = HashMap::new();
+        for ms in &spec.models {
+            for &bits in &ms.bits {
+                let raw = RawModel::generate(ms, spec.seed, bits);
+                models.insert((ms.model.clone(), bits),
+                              QuantModel::from_raw(&raw, bits));
+            }
+        }
+        NativeBackend {
+            meta: spec.meta(Path::new(".")),
+            models,
+        }
+    }
+
+    fn load(dir: &str) -> Result<NativeBackend> {
+        let meta = Meta::load(dir)?;
+        let mut models: HashMap<(String, u32), QuantModel> =
+            HashMap::new();
+        // validate EVERY entry (not just the first per (model, bits)):
+        // conflicting metadata must fail here, at init, not surface as
+        // a run_batch error deep in the DNN thread
+        for e in &meta.entries {
+            anyhow::ensure!(
+                e.file.ends_with(".qmodel.json"),
+                "artifact entry {} is '{}', not a native qmodel — these \
+                 are HLO artifacts; build with `--features xla` and \
+                 HELIX_BACKEND=xla, or regenerate native artifacts",
+                e.name, e.file);
+            let key = (e.model.clone(), e.bits);
+            if !models.contains_key(&key) {
+                let path = meta.path_of(e);
+                let text = std::fs::read_to_string(&path)
+                    .with_context(|| format!("reading {path:?}"))?;
+                let j = Json::parse(&text).map_err(
+                    |err| anyhow::anyhow!("parse {path:?}: {err}"))?;
+                let raw = RawModel::from_json(&j)?;
+                models.insert(key.clone(),
+                              QuantModel::from_raw(&raw, e.bits));
+            }
+            let qm = &models[&key];
+            anyhow::ensure!(qm.window == e.window
+                            && qm.time_steps == e.time_steps,
+                            "qmodel {} shape ({}, {}) disagrees with meta \
+                             ({}, {})", e.name, qm.window, qm.time_steps,
+                            e.window, e.time_steps);
+        }
+        Ok(NativeBackend { meta, models })
+    }
+}
+
+fn qmodel_file(model: &str, bits: u32) -> String {
+    format!("{model}_{bits}.qmodel.json")
+}
+
+fn push_entries(entries: &mut Vec<ArtifactEntry>, ms: &NativeModelSpec,
+                bits: u32) {
+    for &batch in &ms.batches {
+        entries.push(ArtifactEntry {
+            name: format!("{}_{}_b{}", ms.model, bits, batch),
+            model: ms.model.clone(),
+            bits,
+            batch,
+            window: ms.window,
+            time_steps: ms.time_steps(),
+            pallas: false,
+            file: qmodel_file(&ms.model, bits),
+        });
+    }
+}
+
+impl Backend for NativeBackend {
+    fn meta(&self) -> &Meta {
+        &self.meta
+    }
+
+    fn warm(&mut self, model: &str, bits: u32) -> Result<()> {
+        anyhow::ensure!(
+            self.models.contains_key(&(model.to_string(), bits)),
+            "no native model for {model}/{bits}b");
+        Ok(())
+    }
+
+    fn run_batch(&mut self, entry: &ArtifactEntry, signals: &[&[f32]])
+                 -> Result<Vec<LogProbs>> {
+        anyhow::ensure!(signals.len() == entry.batch,
+                        "batch mismatch: got {}, entry wants {}",
+                        signals.len(), entry.batch);
+        let qm = self.models
+            .get(&(entry.model.clone(), entry.bits))
+            .with_context(|| format!("no native model for {}/{}b",
+                                     entry.model, entry.bits))?;
+        anyhow::ensure!(qm.window == entry.window
+                        && qm.time_steps == entry.time_steps,
+                        "entry {} shape disagrees with loaded model",
+                        entry.name);
+        let w = entry.window;
+        let mut out = Vec::with_capacity(signals.len());
+        for s in signals {
+            anyhow::ensure!(s.len() == w, "window length {} != {w}",
+                            s.len());
+            out.push(qm.forward(s));
+        }
+        Ok(out)
+    }
+}
+
+/// Export `spec` through the `meta.json` artifact contract: qmodel
+/// weight files, `meta.json`, and a `pore_model.json` (so the synth /
+/// example / bench paths that read the pore model from the artifacts
+/// dir work without the python export). Overwrites deterministically.
+pub fn write_artifacts(dir: &str, spec: &NativeSpec) -> Result<Meta> {
+    let root = Path::new(dir);
+    std::fs::create_dir_all(root)
+        .with_context(|| format!("creating artifacts dir {dir}"))?;
+    for ms in &spec.models {
+        for &bits in &ms.bits {
+            let raw = RawModel::generate(ms, spec.seed, bits);
+            let path = root.join(qmodel_file(&ms.model, bits));
+            std::fs::write(&path, raw.to_json(&ms.model, bits).to_string())
+                .with_context(|| format!("writing {path:?}"))?;
+        }
+    }
+    let meta = spec.meta(root);
+    meta.save()?;
+    let mut pm = PoreModel::synthetic(PORE_SEED);
+    pm.window = spec.window;
+    pm.save(meta.pore_model_path().to_str().context("pore path")?)?;
+    Ok(meta)
+}
+
+/// Materialize the builtin native artifacts in `dir` unless a meta.json
+/// (native or xla) is already there. Idempotent; returns the meta.
+pub fn ensure_artifacts(dir: &str) -> Result<Meta> {
+    if artifacts_available(dir) {
+        Meta::load(dir)
+    } else {
+        write_artifacts(dir, &NativeSpec::builtin())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::basecall::ctc::greedy_decode;
+
+    fn sig(window: usize, phase: f32) -> Vec<f32> {
+        (0..window).map(|i| ((i as f32) * 0.21 + phase).sin()).collect()
+    }
+
+    #[test]
+    fn builtin_outputs_are_normalized_log_probs() {
+        let mut b = NativeBackend::builtin();
+        let w = b.meta().window;
+        let lps = b.run_windows("guppy", 32, &[sig(w, 0.0)]).unwrap();
+        assert_eq!(lps.len(), 1);
+        assert_eq!(lps[0].t, 145);
+        for t in 0..lps[0].t {
+            let total: f32 = lps[0].row(t).iter().map(|x| x.exp()).sum();
+            assert!((total - 1.0).abs() < 1e-3, "t={t}: sum {total}");
+        }
+    }
+
+    #[test]
+    fn outputs_are_deterministic_across_instances() {
+        let mut a = NativeBackend::builtin();
+        let mut b = NativeBackend::builtin();
+        let w = a.meta().window;
+        let x = sig(w, 1.3);
+        let la = a.run_windows("guppy", 5, &[x.clone()]).unwrap();
+        let lb = b.run_windows("guppy", 5, &[x]).unwrap();
+        assert_eq!(la[0].data, lb[0].data);
+    }
+
+    #[test]
+    fn bit_widths_are_distinct_models() {
+        let mut b = NativeBackend::builtin();
+        let w = b.meta().window;
+        let x = sig(w, 0.7);
+        let fp = b.run_windows("guppy", 32, &[x.clone()]).unwrap();
+        let q5 = b.run_windows("guppy", 5, &[x]).unwrap();
+        let diff: f32 = fp[0].data.iter().zip(&q5[0].data)
+            .map(|(a, c)| (a - c).abs())
+            .sum();
+        assert!(diff > 1e-3, "5-bit model identical to 32-bit?");
+    }
+
+    #[test]
+    fn writer_roundtrip_matches_builtin() {
+        let dir = std::env::temp_dir().join("helix_native_writer_test");
+        let dir = dir.to_str().unwrap().to_string();
+        let meta = write_artifacts(&dir, &NativeSpec::builtin()).unwrap();
+        assert_eq!(meta.batches("guppy", 32), vec![1, 8, 32]);
+        let mut disk = NativeBackend::open(&dir).unwrap();
+        let mut mem = NativeBackend::builtin();
+        let w = mem.meta().window;
+        let x = sig(w, 2.1);
+        let ld = disk.run_windows("guppy", 16, &[x.clone()]).unwrap();
+        let lm = mem.run_windows("guppy", 16, &[x]).unwrap();
+        for (d, m) in ld[0].data.iter().zip(&lm[0].data) {
+            assert!((d - m).abs() < 1e-6, "disk {d} vs builtin {m}");
+        }
+        // the pore model written alongside is loadable and shape-matched
+        let pm = PoreModel::load(
+            meta.pore_model_path().to_str().unwrap()).unwrap();
+        assert_eq!(pm.window, meta.window);
+        // idempotent: a second ensure leaves it loadable
+        let again = ensure_artifacts(&dir).unwrap();
+        assert_eq!(again.entries.len(), meta.entries.len());
+    }
+
+    #[test]
+    fn zero_window_executes() {
+        // the pad path: all-zero activations must not divide by zero
+        let mut b = NativeBackend::builtin();
+        let w = b.meta().window;
+        let lps = b.run_windows("guppy", 8, &[vec![0f32; w]]).unwrap();
+        assert!(lps[0].data.iter().all(|x| x.is_finite() && *x <= 0.0));
+    }
+
+    #[test]
+    fn pore_signal_decodes_nonempty() {
+        // the blank-bias construction guarantees real (non-empty) decodes
+        let pm = PoreModel::synthetic(PORE_SEED);
+        let mut rng = Rng::new(11);
+        let seq: Vec<u8> = (0..80).map(|_| rng.base()).collect();
+        let (signal, _) = pm.simulate(&seq, &mut rng);
+        let mut b = NativeBackend::builtin();
+        let w = b.meta().window;
+        let lps = b.run_windows(
+            "guppy", 32, &[signal[..w].to_vec()]).unwrap();
+        assert!(!greedy_decode(&lps[0]).is_empty());
+    }
+}

@@ -1,8 +1,10 @@
 //! Integration tests for the streaming coordinator: backpressure from the
 //! bounded channels, out-of-order assembly in the collector, cross-batch
 //! window arrival, and mid-run streaming via try_recv(). The
-//! engine-backed tests skip gracefully when `make artifacts` has not run
-//! (the PJRT artifacts are a build product, not checked in).
+//! backend-driven tests run the full submit → window → batch → DNN →
+//! decode → collect → vote pipeline against the native quantized
+//! backend, so they are exercised on every `cargo test` — no artifacts,
+//! no skips.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -120,31 +122,34 @@ fn collector_streams_mid_run_before_finish() {
     assert!(col.finish().unwrap().is_empty());
 }
 
-// ---- engine-backed tests (need `make artifacts`) ----
+// ---- backend-driven tests (native backend: self-contained, no
+// ---- artifacts on disk — the builtin in-memory model) ----
 
-fn artifacts() -> Option<String> {
-    let dir = helix::runtime::meta::default_artifacts_dir();
-    if helix::runtime::meta::artifacts_available(&dir) {
-        Some(dir)
-    } else {
-        eprintln!("artifacts not built — skipping engine-backed test");
-        None
-    }
+/// A directory with no meta.json: the native backend falls back to its
+/// builtin deterministic model; the xla backend would refuse.
+fn no_artifacts_dir() -> String {
+    std::env::temp_dir().join("helix_coordinator_stream_no_artifacts")
+        .join("nonexistent")
+        .to_str().unwrap().to_string()
+}
+
+fn sim_run(genome_len: usize, coverage: usize, seed: u64)
+           -> helix::genome::synth::SequencingRun {
+    // synthetic pore model, window 300 — same shape as the native meta
+    let pm = helix::genome::pore::PoreModel::synthetic(7);
+    helix::genome::synth::SequencingRun::simulate(
+        &pm,
+        helix::genome::synth::RunSpec {
+            genome_len,
+            coverage,
+            seed,
+            ..Default::default()
+        })
 }
 
 #[test]
 fn coordinator_streams_reads_while_submitting() {
-    let Some(dir) = artifacts() else { return };
-    let pm = helix::genome::pore::PoreModel::load(
-        &format!("{dir}/pore_model.json")).unwrap();
-    let run = helix::genome::synth::SequencingRun::simulate(
-        &pm,
-        helix::genome::synth::RunSpec {
-            genome_len: 1200,
-            coverage: 4,
-            seed: 7,
-            ..Default::default()
-        });
+    let run = sim_run(1200, 4, 7);
     let mut coord = Coordinator::new(CoordinatorConfig {
         model: "guppy".into(),
         bits: 32,
@@ -153,7 +158,7 @@ fn coordinator_streams_reads_while_submitting() {
             max_batch: 2,
             max_wait: Duration::from_millis(2),
         },
-        artifacts_dir: dir,
+        artifacts_dir: no_artifacts_dir(),
         ..Default::default()
     }).unwrap();
 
@@ -192,19 +197,9 @@ fn coordinator_streams_reads_while_submitting() {
 
 #[test]
 fn coordinator_finish_without_streaming_matches_batch_usage() {
-    let Some(dir) = artifacts() else { return };
-    let pm = helix::genome::pore::PoreModel::load(
-        &format!("{dir}/pore_model.json")).unwrap();
-    let run = helix::genome::synth::SequencingRun::simulate(
-        &pm,
-        helix::genome::synth::RunSpec {
-            genome_len: 800,
-            coverage: 3,
-            seed: 21,
-            ..Default::default()
-        });
+    let run = sim_run(800, 3, 21);
     let mut coord = Coordinator::new(CoordinatorConfig {
-        artifacts_dir: dir,
+        artifacts_dir: no_artifacts_dir(),
         ..Default::default()
     }).unwrap();
     for r in &run.reads {
@@ -217,4 +212,36 @@ fn coordinator_finish_without_streaming_matches_batch_usage() {
     let mut sorted = ids.clone();
     sorted.sort_unstable();
     assert_eq!(ids, sorted);
+}
+
+#[test]
+fn coordinator_quantized_bits_run_the_same_pipeline() {
+    // the 5-bit (SEAT) native model drives the identical streaming path
+    let run = sim_run(600, 2, 33);
+    let mut coord = Coordinator::new(CoordinatorConfig {
+        model: "guppy".into(),
+        bits: 5,
+        artifacts_dir: no_artifacts_dir(),
+        ..Default::default()
+    }).unwrap();
+    for r in &run.reads {
+        coord.submit(r);
+    }
+    let called = coord.finish().unwrap();
+    assert_eq!(called.len(), run.reads.len());
+    for c in &called {
+        assert!(c.seq.iter().all(|&b| b < 4));
+    }
+}
+
+#[test]
+fn coordinator_unknown_model_fails_at_init() {
+    // warm() runs at init: a model the backend doesn't have must error
+    // from new(), not mid-run
+    let err = Coordinator::new(CoordinatorConfig {
+        model: "no_such_model".into(),
+        artifacts_dir: no_artifacts_dir(),
+        ..Default::default()
+    });
+    assert!(err.is_err());
 }

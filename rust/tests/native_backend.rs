@@ -1,0 +1,101 @@
+//! Integration tests for the native quantized backend — the default
+//! build's twin of `runtime_golden.rs` (which is `--features xla`):
+//! batched execution through the `Backend` trait, the artifact writer
+//! round-trip, and a full coordinator run over on-disk native
+//! artifacts. No skips: everything here is self-contained.
+
+use helix::basecall::NUM_SYMBOLS;
+use helix::coordinator::{Coordinator, CoordinatorConfig};
+use helix::genome::pore::PoreModel;
+use helix::genome::synth::{RunSpec, SequencingRun};
+use helix::runtime::native::ensure_artifacts;
+use helix::runtime::{Backend, BackendKind, NativeBackend};
+
+fn tmp_dir(name: &str) -> String {
+    std::env::temp_dir().join(name).to_str().unwrap().to_string()
+}
+
+#[test]
+fn outputs_are_normalized_log_probs_via_kind_open() {
+    // through the same factory the coordinator's DNN thread uses
+    let dir = tmp_dir("helix_native_it_nonexistent");
+    let mut backend = BackendKind::Native.open(&dir).unwrap();
+    let window = backend.meta().window;
+    let sig = vec![0.25f32; window];
+    let lps = backend.run_windows("guppy", 32, &[sig]).unwrap();
+    let lp = &lps[0];
+    for t in 0..lp.t {
+        let total: f32 = lp.row(t).iter().map(|x| x.exp()).sum();
+        assert!((total - 1.0).abs() < 1e-3, "t={t}: sum {total}");
+        assert_eq!(lp.row(t).len(), NUM_SYMBOLS);
+    }
+}
+
+#[test]
+fn run_windows_handles_ragged_batches() {
+    let mut backend = NativeBackend::builtin();
+    let window = backend.meta().window;
+    // 11 windows over batches [1, 8, 32]: exercises batch tiling + the
+    // per-entry tail padding contract
+    let windows: Vec<Vec<f32>> = (0..11)
+        .map(|k| (0..window).map(|i| ((i + k) as f32 * 0.11).cos()).collect())
+        .collect();
+    let lps = backend.run_windows("guppy", 32, &windows).unwrap();
+    assert_eq!(lps.len(), 11);
+    // same window in different batch positions must give the same output
+    let single = backend.run_windows("guppy", 32, &windows[3..4]).unwrap();
+    for (a, b) in lps[3].data.iter().zip(&single[0].data) {
+        assert!((a - b).abs() < 1e-6, "batch-position dependence: {a} vs {b}");
+    }
+}
+
+#[test]
+fn quantized_artifacts_execute_and_differ() {
+    let mut backend = NativeBackend::builtin();
+    let window = backend.meta().window;
+    let sig: Vec<f32> = (0..window).map(|i| (i as f32 * 0.2).sin()).collect();
+    let fp = backend.run_windows("guppy", 32, &[sig.clone()]).unwrap();
+    let q5 = backend.run_windows("guppy", 5, &[sig]).unwrap();
+    // different weights + coarser quantization: outputs must differ, but
+    // both be valid distributions
+    let diff: f32 = fp[0].data.iter().zip(&q5[0].data)
+        .map(|(a, b)| (a - b).abs())
+        .sum();
+    assert!(diff > 1e-3, "5-bit artifact identical to fp32?");
+    let total: f32 = q5[0].row(0).iter().map(|x| x.exp()).sum();
+    assert!((total - 1.0).abs() < 1e-3);
+}
+
+#[test]
+fn coordinator_end_to_end_over_written_artifacts() {
+    // the full disk path: write artifacts -> coordinator loads them ->
+    // submit -> CalledReads, exactly as ci.sh bench runs it
+    let dir = tmp_dir("helix_native_it_artifacts");
+    let meta = ensure_artifacts(&dir).unwrap();
+    assert!(meta.entries.iter().any(|e| e.bits == 5));
+    let pm = PoreModel::load(meta.pore_model_path().to_str().unwrap())
+        .unwrap();
+    let run = SequencingRun::simulate(&pm, RunSpec {
+        genome_len: 600,
+        coverage: 2,
+        read_len_min: 200,
+        read_len_max: 300,
+        seed: 3,
+    });
+    let mut coord = Coordinator::new(CoordinatorConfig {
+        model: "guppy".into(),
+        bits: 32,
+        artifacts_dir: dir,
+        ..Default::default()
+    }).unwrap();
+    for r in &run.reads {
+        coord.submit(r);
+    }
+    let called = coord.finish().unwrap();
+    assert_eq!(called.len(), run.reads.len());
+    for c in &called {
+        assert!(!c.seq.is_empty(), "read {} decoded empty", c.read_id);
+        assert!(c.seq.iter().all(|&b| b < 4));
+        assert!(!c.window_decodes.is_empty());
+    }
+}

@@ -1,9 +1,12 @@
 //! Integration tests over the real AOT artifacts: HLO text -> PJRT compile
 //! -> execute, checked against golden outputs computed by JAX at export
 //! time, plus the pallas-vs-jnp cross-check and a full coordinator run.
+//! `--features xla` only — the default build's equivalent coverage runs
+//! against the native backend in `native_backend.rs`.
 //!
 //! These tests skip (with a message) when `make artifacts` has not produced
 //! artifacts yet, so `cargo test` stays green on a fresh checkout.
+#![cfg(feature = "xla")]
 
 use helix::basecall::ctc::LogProbs;
 use helix::basecall::NUM_SYMBOLS;
@@ -11,7 +14,7 @@ use helix::coordinator::{Coordinator, CoordinatorConfig};
 use helix::genome::pore::PoreModel;
 use helix::genome::synth::{RunSpec, SequencingRun};
 use helix::runtime::meta::{artifacts_available, default_artifacts_dir};
-use helix::runtime::Engine;
+use helix::runtime::{Backend, BackendKind, Engine};
 use helix::util::json::Json;
 
 fn artifacts() -> Option<String> {
@@ -147,6 +150,7 @@ fn coordinator_end_to_end_calls_reads() {
     let mut coord = Coordinator::new(CoordinatorConfig {
         model: "guppy".into(),
         bits: 32,
+        backend: BackendKind::Xla,
         artifacts_dir: dir,
         ..Default::default()
     }).unwrap();
