@@ -38,6 +38,13 @@ else
     echo "ci.sh: clippy not installed; skipping lint" >&2
 fi
 
+# Doc rot hard-fails alongside build/test: the crate carries
+# #![warn(missing_docs)] and the coordinator README is compiled into
+# the module docs, so a stale doc or broken intra-doc link breaks CI
+# here rather than drifting silently.
+echo '== RUSTDOCFLAGS="-D warnings" cargo doc --no-deps'
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
 # xla feature path: the PJRT binding needs a crates.io fetch or a
 # vendored checkout, so this is the ONE soft-skip left.
 if [ "${HELIX_CI_XLA:-0}" = "1" ]; then

@@ -43,6 +43,9 @@ fn main() -> Result<()> {
             model: "guppy".into(),
             bits,
             backend: kind,
+            // HELIX_SHARDS=N replicates the DNN executor; output is
+            // byte-identical for any shard count
+            dnn_shards: CoordinatorConfig::shards_from_env(),
             artifacts_dir: dir.clone(),
             ..Default::default()
         })?;

@@ -21,7 +21,10 @@ fn main() -> Result<()> {
     let dir = default_artifacts_dir();
     let kind = BackendKind::from_env()?;
     kind.prepare(&dir)?;
-    println!("backend: {}", kind.name());
+    // HELIX_SHARDS=4 fans the DNN stage out over 4 backend replicas
+    let shards = CoordinatorConfig::shards_from_env();
+    println!("backend: {} ({shards} dnn shard{})", kind.name(),
+             if shards == 1 { "" } else { "s" });
     let pm = PoreModel::load(&format!("{dir}/pore_model.json"))?;
     let run = SequencingRun::simulate(&pm, RunSpec {
         genome_len: 1500,
@@ -42,6 +45,7 @@ fn main() -> Result<()> {
             model: "guppy".into(),
             bits: 32,
             backend: kind,
+            dnn_shards: shards,
             policy,
             artifacts_dir: dir.clone(),
             ..Default::default()

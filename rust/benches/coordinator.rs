@@ -1,6 +1,7 @@
 //! End-to-end coordinator benchmark: measured host base-calling
 //! throughput through the full DNN + CTC + vote pipeline (the L3 perf
-//! deliverable), plus batching-policy ablation. Self-contained: runs on
+//! deliverable), plus batching-policy ablation and DNN-shard scaling
+//! (`dnn_shards` 1/2/4 with per-shard utilization). Self-contained: runs on
 //! the native quantized backend by default (artifacts are materialized
 //! on first run); HELIX_BACKEND=xla on a `--features xla` build
 //! benchmarks the PJRT engine over `make artifacts` output instead.
@@ -109,11 +110,72 @@ fn main() {
             bases as f64 / dt,
             metrics.mean_batch_fill(policy.max_batch)));
     }
+    // DNN-shard scaling: a bigger run so there are enough batches to
+    // spread, small batches so the shards interleave. The scaling
+    // number is the DNN *stage* throughput — windows per second of the
+    // busiest shard's forward-pass time — which is the stage's capacity
+    // whether or not the surrounding pipeline (decode-bound on 2 cores)
+    // can consume it.
+    let shard_run = SequencingRun::simulate(&pm, RunSpec {
+        genome_len: 4000,
+        coverage: 10,
+        seed: 131,
+        ..Default::default()
+    });
+    println!("\n== dnn shard scaling ({} reads) ==", shard_run.reads.len());
+    let mut shard_rows: Vec<String> = Vec::new();
+    let mut base_win_per_s = 0.0f64;
+    for shards in [1usize, 2, 4] {
+        let t0 = std::time::Instant::now();
+        let mut coord = Coordinator::new(CoordinatorConfig {
+            model: "guppy".into(),
+            bits: 32,
+            backend: kind,
+            dnn_shards: shards,
+            decode_threads: 4,
+            policy: BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(5),
+            },
+            artifacts_dir: dir.clone(),
+            ..Default::default()
+        }).unwrap();
+        let mut called = Vec::new();
+        for r in &shard_run.reads {
+            coord.submit(r);
+            called.extend(coord.drain_ready());
+        }
+        let metrics = coord.metrics.clone();
+        called.extend(coord.finish().unwrap());
+        let dt = t0.elapsed().as_secs_f64();
+        let win_per_s = metrics.dnn_stage_windows_per_s();
+        if shards == 1 {
+            base_win_per_s = win_per_s;
+        }
+        let utils: Vec<String> = metrics.shard_utilization()
+            .iter().map(|u| format!("{u:.3}")).collect();
+        println!("shards={shards}  {:>8.2}s wall  dnn-stage {:>9.0} \
+                  win/s ({:.2}x)  util [{}]",
+                 dt, win_per_s,
+                 if base_win_per_s > 0.0 { win_per_s / base_win_per_s }
+                 else { 1.0 },
+                 utils.join(" "));
+        shard_rows.push(format!(
+            "{{\"shards\": {shards}, \"wall_s\": {dt:.3}, \
+             \"dnn_stage_win_per_s\": {win_per_s:.0}, \
+             \"speedup_vs_1\": {:.3}, \"shard_util\": [{}]}}",
+            if base_win_per_s > 0.0 { win_per_s / base_win_per_s }
+            else { 1.0 },
+            utils.join(", ")));
+    }
+
     // machine-readable summary for the perf trajectory (see ci.sh)
     let json = format!(
         "{{\"bench\": \"coordinator\", \"backend\": \"{}\", \
-         \"reads\": {}, \"bases\": {}, \"rows\": [{}]}}\n",
-        kind.name(), run.reads.len(), total_bases, rows.join(", "));
+         \"reads\": {}, \"bases\": {}, \"rows\": [{}], \
+         \"shard_rows\": [{}]}}\n",
+        kind.name(), run.reads.len(), total_bases, rows.join(", "),
+        shard_rows.join(", "));
     match std::fs::write("BENCH_coordinator.json", &json) {
         Ok(()) => println!("\nwrote BENCH_coordinator.json"),
         Err(e) => println!("\ncould not write BENCH_coordinator.json: {e}"),

@@ -16,6 +16,7 @@ pub struct Accuracy {
     pub systematic_errors: usize,
     /// positions wrong in some read but fixed by the vote (random).
     pub random_errors: usize,
+    /// truth positions evaluated.
     pub positions: usize,
 }
 

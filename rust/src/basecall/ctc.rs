@@ -54,16 +54,21 @@ type FastMap<K, V> = HashMap<K, V, BuildHasherDefault<U64MulHasher>>;
 /// Per-window log-probabilities, row-major (T, NUM_SYMBOLS).
 #[derive(Clone, Debug)]
 pub struct LogProbs {
+    /// number of CTC time steps.
     pub t: usize,
+    /// row-major payload, `t * NUM_SYMBOLS` log-probabilities.
     pub data: Vec<f32>,
 }
 
 impl LogProbs {
+    /// Wrap a row-major payload; panics if its length is not
+    /// `t * NUM_SYMBOLS`.
     pub fn new(t: usize, data: Vec<f32>) -> Self {
         assert_eq!(data.len(), t * NUM_SYMBOLS, "bad logprob payload");
         LogProbs { t, data }
     }
 
+    /// The NUM_SYMBOLS log-probabilities at time step `t`.
     #[inline]
     pub fn row(&self, t: usize) -> &[f32] {
         &self.data[t * NUM_SYMBOLS..(t + 1) * NUM_SYMBOLS]
@@ -128,7 +133,7 @@ pub fn beam_search(lp: &LogProbs, beam: usize) -> Vec<u8> {
 
 /// Prefix trie node: prefixes live in an arena and are deduplicated via a
 /// (parent, symbol) -> child map, so every logical prefix has exactly ONE
-/// u32 id. This removes the per-candidate Vec<u8> clone + hash of the naive
+/// u32 id. This removes the per-candidate `Vec<u8>` clone + hash of the naive
 /// implementation (§Perf pass: ~6x faster at width 10, see EXPERIMENTS.md).
 struct PrefixArena {
     /// (parent, sym) per node; root = u32::MAX parent.

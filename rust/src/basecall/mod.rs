@@ -15,7 +15,9 @@ pub mod vote;
 
 /// Alphabet shared with the python side: 0=A 1=C 2=G 3=T, 4=blank.
 pub const NUM_BASES: usize = 4;
+/// Symbol id of the CTC blank.
 pub const BLANK: usize = 4;
+/// Output alphabet size: the four bases plus the CTC blank.
 pub const NUM_SYMBOLS: usize = 5;
 
 /// Render a base-id sequence as an ACGT string (for logs/examples).

@@ -46,6 +46,7 @@ fn hr(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// Fig 2: read vs vote accuracy of the evaluated base-callers.
 pub fn fig2(dir: &str) -> Result<()> {
     hr("Figure 2: base-caller comparison (accuracy & modeled GPU speed)");
     let tr = load_train_results(dir)?;
@@ -61,6 +62,7 @@ pub fn fig2(dir: &str) -> Result<()> {
     Ok(())
 }
 
+/// Fig 3: random vs systematic error split of read votes.
 pub fn fig3() -> Result<()> {
     hr("Figure 3: random vs systematic errors under read voting");
     let truth: Vec<u8> = vec![0, 1, 2, 3, 0, 1, 2, 3, 0, 1];
@@ -78,6 +80,7 @@ pub fn fig3() -> Result<()> {
     Ok(())
 }
 
+/// Fig 7: quantization accuracy sweep (with and without SEAT).
 pub fn fig7(dir: &str) -> Result<()> {
     hr("Figure 7: accuracy & speed of quantized Guppy (no SEAT, GPU)");
     let tr = load_train_results(dir)?;
@@ -106,6 +109,7 @@ pub fn fig7(dir: &str) -> Result<()> {
     Ok(())
 }
 
+/// Fig 8: power breakdown of an NVM dot-product engine.
 pub fn fig8() -> Result<()> {
     hr("Figure 8: ADC share of NVM dot-product engine power/area");
     println!("{:<10} {:>12} {:>12}", "tech", "ADC power %", "ADC area %");
@@ -116,6 +120,7 @@ pub fn fig8() -> Result<()> {
     Ok(())
 }
 
+/// Fig 9: latency breakdown (DNN / CTC decode / read vote).
 pub fn fig9() -> Result<()> {
     hr("Figure 9: execution-time breakdown of 16-bit quantized Guppy (GPU)");
     let topo = Topology::guppy();
@@ -131,6 +136,7 @@ pub fn fig9() -> Result<()> {
     Ok(())
 }
 
+/// Fig 10: training with the plain vs SEAT-aware loss.
 pub fn fig10(dir: &str) -> Result<()> {
     hr("Figure 10: training with loss_0 vs loss_1 (SEAT)");
     let text = std::fs::read_to_string(format!("{dir}/curves_fig10.csv"))
@@ -152,6 +158,7 @@ pub fn fig10(dir: &str) -> Result<()> {
     Ok(())
 }
 
+/// Fig 13: VCMA write-threshold vs read bit-line voltage.
 pub fn fig13() -> Result<()> {
     hr("Figure 13: SOT-MRAM write threshold vs RBL voltage (VCMA)");
     println!("{:>10} {:>16}", "V_RBL (V)", "write Vth (V)");
@@ -161,6 +168,7 @@ pub fn fig13() -> Result<()> {
     Ok(())
 }
 
+/// Fig 14: SOT-MRAM ADC transfer function (thermometer code).
 pub fn fig14() -> Result<()> {
     hr("Figure 14: switching probability vs write voltage x pulse duration");
     let d = DeviceParams::default();
@@ -181,6 +189,7 @@ pub fn fig14() -> Result<()> {
     Ok(())
 }
 
+/// Fig 15: write-duration Monte-Carlo histogram.
 pub fn fig15() -> Result<()> {
     hr("Figure 15: write-duration distribution at 60F^2 (Monte-Carlo)");
     let st = variation::duration_mc(60.0, variation::ADC_WRITE_VOLTAGE,
@@ -198,6 +207,7 @@ pub fn fig15() -> Result<()> {
     Ok(())
 }
 
+/// Fig 16: cell size vs worst-case write duration.
 pub fn fig16() -> Result<()> {
     hr("Figure 16: worst-case write duration vs cell size");
     let sizes = [20.0, 30.0, 40.0, 50.0, 60.0, 70.0, 80.0];
@@ -212,6 +222,7 @@ pub fn fig16() -> Result<()> {
     Ok(())
 }
 
+/// Fig 21: SEAT vs naive quantization on Guppy (vote accuracy).
 pub fn fig21(dir: &str) -> Result<()> {
     hr("Figure 21: SEAT vs naive quantization on Guppy (vote accuracy)");
     let tr = load_train_results(dir)?;
@@ -230,6 +241,7 @@ pub fn fig21(dir: &str) -> Result<()> {
     Ok(())
 }
 
+/// Fig 22: SEAT quantization across base-callers (vote accuracy).
 pub fn fig22(dir: &str) -> Result<()> {
     hr("Figure 22: quantization with SEAT across base-callers (vote acc)");
     let tr = load_train_results(dir)?;
@@ -304,6 +316,7 @@ fn best_window_identity(seq: &[u8], genome: &[u8]) -> f64 {
     }
 }
 
+/// Fig 23: end-to-end pipeline accuracy (basecall through polish).
 pub fn fig23(dir: &str) -> Result<()> {
     hr("Figure 23: base-call / draft / polished accuracy through the \
         full pipeline");
@@ -328,6 +341,7 @@ pub fn fig23(dir: &str) -> Result<()> {
     Ok(())
 }
 
+/// Fig 24: throughput / power / area across the eight schemes.
 pub fn fig24() -> Result<()> {
     hr("Figure 24: throughput / per-Watt / per-mm^2 across schemes");
     for topo in Topology::all() {
@@ -366,6 +380,7 @@ pub fn fig24() -> Result<()> {
     Ok(())
 }
 
+/// Fig 25: SOT-MRAM ADC arrays vs low-resolution CMOS ADCs.
 pub fn fig25() -> Result<()> {
     hr("Figure 25: SOT-MRAM ADC arrays vs low-resolution CMOS ADCs");
     println!("{:<22} {:>12} {:>12}", "datapath", "bp/s/W", "bp/s/mm2");
@@ -385,6 +400,7 @@ pub fn fig25() -> Result<()> {
     Ok(())
 }
 
+/// Fig 26: crossbar CTC engine sensitivity to beam width.
 pub fn fig26() -> Result<()> {
     hr("Figure 26: sensitivity of the crossbar CTC engine to beam width");
     println!("{:>6} {:>14} {:>14} {:>10}", "width", "ADC kbp/s",
@@ -399,6 +415,7 @@ pub fn fig26() -> Result<()> {
     Ok(())
 }
 
+/// Table 1: SOT-MRAM process-variation parameters.
 pub fn table1() -> Result<()> {
     hr("Table 1: SOT-MRAM process-variation parameters");
     let d = DeviceParams::default();
@@ -413,6 +430,7 @@ pub fn table1() -> Result<()> {
     Ok(())
 }
 
+/// Table 2: Helix area and power rollup.
 pub fn table2() -> Result<()> {
     hr("Table 2: area and power of Helix (model rollup)");
     let (pp, pa): (f64, f64) = power::tile_peripherals().iter()
@@ -441,6 +459,7 @@ pub fn table2() -> Result<()> {
     Ok(())
 }
 
+/// Table 3: full-size base-caller architectures as mapped.
 pub fn table3() -> Result<()> {
     hr("Table 3: base-caller architectures (full-size, as mapped)");
     println!("{:<10} {:>12} {:>12} {:>10} {:>8}", "model", "MACs/window",
@@ -453,6 +472,7 @@ pub fn table3() -> Result<()> {
     Ok(())
 }
 
+/// Table 4: dataset stand-ins (synthetic equivalents).
 pub fn table4() -> Result<()> {
     hr("Table 4: datasets (synthetic equivalents; DESIGN.md §Substitutions)");
     let pm = PoreModel::synthetic(7);
@@ -481,6 +501,7 @@ pub fn table4() -> Result<()> {
     Ok(())
 }
 
+/// Table 5: CPU vs GPU vs Helix summary.
 pub fn table5() -> Result<()> {
     hr("Table 5: CPU vs GPU vs Helix");
     use crate::pim::schemes as s;

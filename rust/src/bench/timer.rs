@@ -3,20 +3,27 @@
 
 use std::time::Instant;
 
+/// Timing summary of one benchmarked closure.
 #[derive(Clone, Copy, Debug)]
 pub struct Stats {
+    /// timed iterations (after warmup).
     pub iters: usize,
+    /// mean per-iteration time in ns.
     pub mean_ns: f64,
+    /// median per-iteration time in ns (the headline number).
     pub median_ns: f64,
+    /// 95th-percentile per-iteration time in ns.
     pub p95_ns: f64,
 }
 
 impl Stats {
+    /// Human-readable median per-iteration time.
     pub fn per_iter(&self) -> String {
         fmt_ns(self.median_ns)
     }
 }
 
+/// Render nanoseconds with an adaptive unit (ns/µs/ms/s).
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
         format!("{ns:.0} ns")

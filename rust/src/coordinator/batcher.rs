@@ -22,6 +22,7 @@ impl Default for BatchPolicy {
 /// A collected batch plus queueing telemetry.
 #[derive(Debug)]
 pub struct Batch<T> {
+    /// the collected jobs, in arrival order.
     pub items: Vec<T>,
     /// how long the oldest item waited before launch.
     pub oldest_wait: Duration,
@@ -41,10 +42,13 @@ pub struct Batcher<T> {
 }
 
 impl<T> Batcher<T> {
+    /// Wrap the stage's input channel with a batching policy.
     pub fn new(rx: Receiver<T>, policy: BatchPolicy) -> Self {
         Batcher { rx, policy, closed: false }
     }
 
+    /// Block for the next batch (size or deadline triggered); `None`
+    /// once the channel is closed and drained.
     pub fn next_batch(&mut self) -> Option<Batch<T>> {
         if self.closed {
             return None;

@@ -32,8 +32,11 @@ const SPLICE_MIN_OVERLAP: usize = 6;
 /// One decoded window en route from the decode pool to the collector.
 #[derive(Clone, Debug)]
 pub struct DecodedWindow {
+    /// read this window belongs to.
     pub read_id: usize,
+    /// position of the window within the read.
     pub window_idx: usize,
+    /// decoded base fragment.
     pub seq: Vec<u8>,
 }
 
@@ -52,6 +55,8 @@ pub struct ReadRegistry {
 }
 
 impl ReadRegistry {
+    /// Record a read's expected window count (call BEFORE its first
+    /// window enters the pipeline).
     pub fn register(&self, read_id: usize, expected: usize) {
         self.inner.lock().unwrap().insert(read_id, ReadEntry {
             expected,
@@ -88,8 +93,10 @@ impl ReadRegistry {
     }
 }
 
+/// Collector stage sizing.
 #[derive(Clone, Copy, Debug)]
 pub struct CollectorConfig {
+    /// vote/splice worker count.
     pub vote_threads: usize,
     /// sizes the per-worker vote-job queues (shared with the rest of the
     /// pipeline's queue bound); the output queue is uncapped.
@@ -123,6 +130,8 @@ pub struct Collector {
 }
 
 impl Collector {
+    /// Start the router thread and vote pool over a decoded-window
+    /// stream; results surface through the returned handle.
     pub fn spawn(registry: Arc<ReadRegistry>,
                  rx_decoded: Receiver<DecodedWindow>,
                  metrics: Arc<Metrics>,

@@ -27,6 +27,7 @@ impl LatencyHistogram {
         (63 - (us | 1).leading_zeros() as usize).min(NUM_BUCKETS - 1)
     }
 
+    /// Record one latency sample, in microseconds.
     pub fn record(&self, us: u64) {
         self.buckets[Self::bucket_of(us)].fetch_add(1, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
@@ -34,10 +35,12 @@ impl LatencyHistogram {
         self.max_micros.fetch_max(us, Ordering::Relaxed);
     }
 
+    /// Number of samples recorded so far.
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
     }
 
+    /// Mean latency in µs over every sample (0.0 when empty).
     pub fn mean_micros(&self) -> f64 {
         let n = self.count();
         if n == 0 {
@@ -46,12 +49,16 @@ impl LatencyHistogram {
         self.sum_micros.load(Ordering::Relaxed) as f64 / n as f64
     }
 
+    /// Largest latency sample seen so far, in µs.
     pub fn max_micros(&self) -> u64 {
         self.max_micros.load(Ordering::Relaxed)
     }
 
     /// Approximate quantile in µs: the upper edge of the bucket where the
-    /// cumulative count crosses `q`, clamped to the observed max.
+    /// cumulative count crosses `q`, clamped to the observed max. The
+    /// last bucket is open-ended (it absorbs everything past `2^39` µs),
+    /// so a quantile landing there reports the observed max instead of a
+    /// fabricated bucket edge.
     pub fn quantile_micros(&self, q: f64) -> u64 {
         let n = self.count();
         if n == 0 {
@@ -62,7 +69,10 @@ impl LatencyHistogram {
         for (i, b) in self.buckets.iter().enumerate() {
             cum += b.load(Ordering::Relaxed);
             if cum >= target {
-                let upper = 1u64 << (i as u32 + 1).min(63);
+                if i + 1 >= NUM_BUCKETS {
+                    return self.max_micros(); // saturated top bucket
+                }
+                let upper = 1u64 << (i as u64 + 1);
                 return upper.min(self.max_micros());
             }
         }
@@ -81,25 +91,58 @@ impl Default for LatencyHistogram {
     }
 }
 
+/// Counters for one DNN executor shard (one backend replica). All of
+/// them are written by exactly one shard thread and read by `report()`
+/// / the benches, so `Relaxed` ordering is sufficient.
+#[derive(Debug, Default)]
+pub struct ShardStats {
+    /// batches this shard executed.
+    pub batches: AtomicU64,
+    /// windows (batch rows, padding excluded) this shard executed.
+    pub windows: AtomicU64,
+    /// wall-micros this shard spent inside the backend forward pass.
+    pub busy_micros: AtomicU64,
+}
+
+/// Aggregate pipeline telemetry shared by every stage thread.
 #[derive(Debug)]
 pub struct Metrics {
     start: Instant,
+    /// reads accepted by `submit()`.
     pub reads_in: AtomicU64,
+    /// `CalledRead`s emitted by the vote pool.
     pub reads_out: AtomicU64,
+    /// windows produced by the windower.
     pub windows: AtomicU64,
+    /// DNN batches launched (all shards).
     pub batches: AtomicU64,
+    /// windows carried by those batches (all shards).
     pub batch_items: AtomicU64,
+    /// batches launched by the size trigger rather than the deadline.
     pub full_batches: AtomicU64,
+    /// total bases across emitted consensus sequences.
     pub bases_called: AtomicU64,
+    /// wall-micros spent in the DNN forward pass, summed over shards.
     pub dnn_micros: AtomicU64,
+    /// wall-micros spent in CTC beam search, summed over workers.
     pub decode_micros: AtomicU64,
+    /// wall-micros spent in vote + splice, summed over workers.
     pub vote_micros: AtomicU64,
     /// per-read end-to-end latency, submit() -> CalledRead emitted.
     pub read_latency: LatencyHistogram,
+    /// per-shard DNN counters; length = the pipeline's `dnn_shards`.
+    pub shards: Vec<ShardStats>,
 }
 
 impl Default for Metrics {
     fn default() -> Self {
+        Metrics::with_shards(1)
+    }
+}
+
+impl Metrics {
+    /// Metrics for a pipeline running `n` DNN executor shards (min 1).
+    pub fn with_shards(n: usize) -> Metrics {
         Metrics {
             start: Instant::now(),
             reads_in: AtomicU64::new(0),
@@ -113,15 +156,43 @@ impl Default for Metrics {
             decode_micros: AtomicU64::new(0),
             vote_micros: AtomicU64::new(0),
             read_latency: LatencyHistogram::default(),
+            shards: (0..n.max(1)).map(|_| ShardStats::default()).collect(),
         }
     }
-}
 
-impl Metrics {
+    /// Bump a counter (any of the public `AtomicU64` fields, including
+    /// the per-shard ones).
     pub fn add(&self, counter: &AtomicU64, n: u64) {
         counter.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Per-shard busy fraction of wall time so far (0.0–1.0 each).
+    pub fn shard_utilization(&self) -> Vec<f64> {
+        let wall = self.start.elapsed().as_micros().max(1) as f64;
+        self.shards.iter()
+            .map(|s| s.busy_micros.load(Ordering::Relaxed) as f64 / wall)
+            .collect()
+    }
+
+    /// DNN-stage throughput: windows executed per second of the busiest
+    /// shard's forward-pass time. With one shard this is plain
+    /// windows-per-DNN-second; with N balanced shards the busiest shard
+    /// holds ~1/N of the work, so the stage's capacity scales — this is
+    /// the scaling number `ci.sh bench` records.
+    pub fn dnn_stage_windows_per_s(&self) -> f64 {
+        let max_busy = self.shards.iter()
+            .map(|s| s.busy_micros.load(Ordering::Relaxed))
+            .max()
+            .unwrap_or(0);
+        if max_busy == 0 {
+            return 0.0;
+        }
+        self.batch_items.load(Ordering::Relaxed) as f64
+            / (max_busy as f64 / 1e6)
+    }
+
+    /// Mean batch occupancy relative to `max_batch` (1.0 = every batch
+    /// launched full).
     pub fn mean_batch_fill(&self, max_batch: usize) -> f64 {
         let b = self.batches.load(Ordering::Relaxed);
         if b == 0 {
@@ -137,6 +208,8 @@ impl Metrics {
         self.bases_called.load(Ordering::Relaxed) as f64 / secs
     }
 
+    /// One-line human-readable summary of every counter, including the
+    /// per-shard DNN utilization split when more than one shard ran.
     pub fn report(&self, max_batch: usize) -> String {
         let mut s = format!(
             "reads {}->{}  windows {}  batches {} (fill {:.2})  bases {}  \
@@ -158,6 +231,17 @@ impl Metrics {
                 self.read_latency.quantile_micros(0.50) as f64 / 1e3,
                 self.read_latency.quantile_micros(0.99) as f64 / 1e3,
             ));
+        }
+        if self.batch_items.load(Ordering::Relaxed) > 0 {
+            s.push_str(&format!("  dnn-stage {:.0} win/s",
+                                self.dnn_stage_windows_per_s()));
+        }
+        if self.shards.len() > 1 {
+            let utils: Vec<String> = self.shard_utilization()
+                .iter()
+                .map(|u| format!("{u:.2}"))
+                .collect();
+            s.push_str(&format!("  shard-util [{}]", utils.join(" ")));
         }
         s
     }
@@ -219,6 +303,92 @@ mod tests {
         assert_eq!(LatencyHistogram::bucket_of(3), 1);
         assert_eq!(LatencyHistogram::bucket_of(4), 2);
         assert_eq!(LatencyHistogram::bucket_of(u64::MAX), 39);
+    }
+
+    #[test]
+    fn empty_histogram_is_all_zero() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean_micros(), 0.0);
+        assert_eq!(h.max_micros(), 0);
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile_micros(q), 0, "q={q}");
+        }
+    }
+
+    #[test]
+    fn single_sample_pins_every_quantile() {
+        let h = LatencyHistogram::default();
+        h.record(777);
+        assert_eq!(h.count(), 1);
+        assert!((h.mean_micros() - 777.0).abs() < 1e-9);
+        // every quantile of a one-sample histogram is that sample
+        // (bucket upper edge clamped to the observed max)
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile_micros(q), 777, "q={q}");
+        }
+    }
+
+    #[test]
+    fn saturating_sample_lands_in_top_bucket() {
+        let h = LatencyHistogram::default();
+        // bucket_of(u64::MAX) == 39: the top bucket absorbs overflow
+        // instead of indexing out of bounds, and the quantile clamps
+        // its 2^40 upper edge to the recorded max
+        h.record(u64::MAX);
+        assert_eq!(h.quantile_micros(0.5), u64::MAX);
+        assert_eq!(h.max_micros(), u64::MAX);
+        // a second ordinary sample keeps the lower quantiles sane
+        h.record(10);
+        assert!(h.quantile_micros(0.25) <= 16);
+        assert_eq!(h.quantile_micros(1.0), u64::MAX);
+    }
+
+    #[test]
+    fn zero_micros_sample_counts() {
+        let h = LatencyHistogram::default();
+        h.record(0);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.quantile_micros(0.5), 0,
+                   "upper edge must clamp to the observed max of 0");
+    }
+
+    #[test]
+    fn shard_counters_are_independent() {
+        let m = Metrics::with_shards(4);
+        assert_eq!(m.shards.len(), 4);
+        m.add(&m.shards[0].batches, 2);
+        m.add(&m.shards[3].windows, 64);
+        m.add(&m.shards[3].busy_micros, 500);
+        assert_eq!(m.shards[0].batches.load(Ordering::Relaxed), 2);
+        assert_eq!(m.shards[1].batches.load(Ordering::Relaxed), 0);
+        assert_eq!(m.shards[3].windows.load(Ordering::Relaxed), 64);
+        // default stays single-shard, and with_shards clamps 0 to 1
+        assert_eq!(Metrics::default().shards.len(), 1);
+        assert_eq!(Metrics::with_shards(0).shards.len(), 1);
+    }
+
+    #[test]
+    fn dnn_stage_throughput_uses_busiest_shard() {
+        let m = Metrics::with_shards(2);
+        assert_eq!(m.dnn_stage_windows_per_s(), 0.0, "no work yet");
+        m.add(&m.batch_items, 100);
+        m.add(&m.shards[0].busy_micros, 1_000_000);
+        m.add(&m.shards[1].busy_micros, 500_000);
+        // 100 windows / 1.0s of busiest-shard time
+        assert!((m.dnn_stage_windows_per_s() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn report_shows_shard_util_only_when_sharded() {
+        let m = Metrics::with_shards(2);
+        m.add(&m.batch_items, 8);
+        m.add(&m.shards[0].busy_micros, 100);
+        let r = m.report(32);
+        assert!(r.contains("shard-util ["), "{r}");
+        assert!(r.contains("dnn-stage"), "{r}");
+        let single = Metrics::default();
+        assert!(!single.report(32).contains("shard-util"));
     }
 
     #[test]

@@ -1,22 +1,11 @@
-//! Layer-3 coordinator: the serving front of the system.
+//! Layer-3 coordinator: the serving front of the system — a staged,
+//! threaded, *streaming* pipeline (tokio is unavailable in the offline
+//! build, so stages are OS threads joined by in-tree bounded channels —
+//! same architecture, no async runtime). The full stage/queue map below
+//! is `README.md` in this directory, rendered as module docs so its
+//! usage snippet compiles and runs under `cargo test`.
 //!
-//! A staged, threaded, *streaming* pipeline (DESIGN.md; tokio is
-//! unavailable in the offline build, so stages are OS threads joined by
-//! in-tree bounded channels — same architecture, no async runtime):
-//!
-//!   submit(read) -> [windower] -> [dynamic batcher + DNN executor thread
-//!   (owns a `runtime::Backend`: native quantized executor by default,
-//!   PJRT with the `xla` feature)] -> [CTC decode worker pool, per-worker
-//!   queues] -> [collector router] -> [vote worker pool] -> CalledReads
-//!   stream out via try_recv()/recv_timeout(); finish() drains the rest.
-//!
-//! Every interior stage boundary is bounded, so `submit()` backpressures
-//! instead of buffering a whole run's raw signal; only the output queue
-//! is uncapped (its occupancy is the run's own result set), and each
-//! read is emitted the moment its last window decodes. The batcher implements the size-or-deadline policy of
-//! serving systems (vLLM-style): a batch launches when full OR when the
-//! oldest queued window exceeds the deadline. See `README.md` in this
-//! directory for the stage/queue map.
+#![doc = include_str!("README.md")]
 
 pub mod batcher;
 pub mod collector;
@@ -26,5 +15,5 @@ pub mod server;
 pub use batcher::{Batch, Batcher, BatchPolicy};
 pub use collector::{Collector, CollectorConfig, DecodedWindow,
                     ReadRegistry};
-pub use metrics::{LatencyHistogram, Metrics};
+pub use metrics::{LatencyHistogram, Metrics, ShardStats};
 pub use server::{CalledRead, Coordinator, CoordinatorConfig};

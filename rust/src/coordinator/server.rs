@@ -1,8 +1,8 @@
-//! The coordinator proper: read router -> window batcher -> DNN executor
-//! (a `runtime::Backend` owned by a single thread: the native quantized
-//! executor by default, PJRT under the `xla` feature) -> CTC decode pool
-//! (per-worker queues fed round-robin) -> collector router -> vote
-//! worker pool -> output queue.
+//! The coordinator proper: read router -> window batcher -> sharded DNN
+//! executor pool (each shard thread owns its own `runtime::Backend`
+//! replica: the native quantized executor by default, PJRT under the
+//! `xla` feature) -> CTC decode pool (per-worker queues fed
+//! round-robin) -> collector router -> vote worker pool -> output queue.
 //!
 //! Every interior stage boundary is a bounded channel (`util::bounded`),
 //! so a slow stage backpressures its producer all the way up to
@@ -11,6 +11,14 @@
 //! moment its last window decodes (`try_recv`/`recv_timeout`);
 //! `finish()` is a thin drain-the-rest shim for batch callers. See
 //! `coordinator/README.md` for the stage/queue map.
+//!
+//! The DNN stage fans out over `CoordinatorConfig::dnn_shards` backend
+//! replicas: the batcher dispatches each finished batch to the
+//! least-loaded shard queue, and because every replica computes
+//! identical `LogProbs` for a given window (the native weights are
+//! deterministic; windows never see their batch neighbours), the
+//! called result set is byte-identical for any shard count (mid-run
+//! emission order remains completion order, as with one shard).
 
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -21,30 +29,55 @@ use anyhow::Result;
 use crate::basecall::ctc::{beam_search, LogProbs};
 use crate::genome::dataset::windows_from_read;
 use crate::genome::synth::Read;
-use crate::runtime::{Backend, BackendKind};
-use crate::util::bounded::{bounded, send_round_robin, Receiver, Sender};
+use crate::runtime::{Backend, BackendKind, NativeBackend};
+use crate::util::bounded::{bounded, send_least_loaded, send_round_robin,
+                           Receiver, Sender};
 
 use super::batcher::{Batcher, BatchPolicy};
 use super::collector::{Collector, CollectorConfig, DecodedWindow,
                        ReadRegistry};
 use super::metrics::Metrics;
 
+/// Batches a shard can hold QUEUED ahead of its forward pass (the
+/// executing batch has already been dequeued): one staged batch while
+/// one executes — classic double buffering — keeps a replica busy
+/// without parking a deep backlog of signal memory behind a slow shard
+/// (the window queue is the intended buffering point — it
+/// backpressures `submit()`).
+const SHARD_QUEUE_DEPTH: usize = 1;
+
+/// Everything the `Coordinator` needs to open a pipeline: model
+/// selection, backend kind, stage widths, and queue bounds.
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
+    /// model family to execute (e.g. "guppy").
     pub model: String,
+    /// bit-width variant of the model (32 = the fp32-trained baseline).
     pub bits: u32,
     /// which inference backend the DNN stage opens (native by default;
     /// `xla` requires the cargo feature).
     pub backend: BackendKind,
     /// window hop in samples; window length comes from the artifact meta.
     pub hop: usize,
+    /// CTC beam width used by the decode pool.
     pub beam_width: usize,
+    /// number of DNN executor shards. Each shard owns an independent
+    /// `Backend` replica (in-memory clone for native, `open_shard` for
+    /// non-`Send` backends) fed through its own bounded batch queue by
+    /// least-loaded dispatch; 1 reproduces the single-owner layout.
+    /// The called result set is byte-identical for any value.
+    pub dnn_shards: usize,
+    /// CTC decode worker count.
     pub decode_threads: usize,
+    /// vote/splice worker count.
     pub vote_threads: usize,
     /// bound on in-flight windows per queue: `submit()` blocks once the
     /// window queue holds this many undecoded windows (backpressure).
     pub queue_cap: usize,
+    /// size-or-deadline batching policy for the DNN stage.
     pub policy: BatchPolicy,
+    /// artifact directory (meta.json + weights; the native backend
+    /// falls back to its builtin model when absent).
     pub artifacts_dir: String,
 }
 
@@ -56,6 +89,7 @@ impl Default for CoordinatorConfig {
             backend: BackendKind::default(),
             hop: 100,
             beam_width: 10,
+            dnn_shards: 1,
             decode_threads: 2,
             vote_threads: 2,
             queue_cap: 256,
@@ -65,11 +99,24 @@ impl Default for CoordinatorConfig {
     }
 }
 
+impl CoordinatorConfig {
+    /// Shard count selected by `HELIX_SHARDS` (default 1; zero or an
+    /// unparsable value also fall back to 1).
+    pub fn shards_from_env() -> usize {
+        std::env::var("HELIX_SHARDS").ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or(1)
+    }
+}
+
 /// A fully base-called read: per-window decodes voted into a consensus and
 /// spliced into one sequence.
 #[derive(Clone, Debug)]
 pub struct CalledRead {
+    /// id of the submitted `Read` this call answers.
     pub read_id: usize,
+    /// consensus base sequence (values 0–3, one per called base).
     pub seq: Vec<u8>,
     /// per-window decoded fragments (pre-splice), for accuracy accounting.
     pub window_decodes: Vec<Vec<u8>>,
@@ -79,6 +126,15 @@ struct WindowJob {
     read_id: usize,
     window_idx: usize,
     signal: Vec<f32>,
+}
+
+/// One batch en route from the batcher to a DNN shard: the window keys
+/// and their signals, split so a shard can hand the signal block to the
+/// backend without re-walking the jobs.
+struct ShardBatch {
+    keys: Vec<(usize, usize)>,
+    sigs: Vec<Vec<f32>>,
+    full: bool,
 }
 
 struct DecodeJob {
@@ -95,13 +151,19 @@ pub struct Coordinator {
     window: usize,
     registry: Arc<ReadRegistry>,
     tx_windows: Option<Sender<WindowJob>>,
-    dnn_thread: Option<JoinHandle<Result<()>>>,
+    batcher_thread: Option<JoinHandle<()>>,
+    shard_threads: Vec<JoinHandle<Result<()>>>,
     decode_threads: Vec<JoinHandle<()>>,
     collector: Option<Collector>,
+    /// live pipeline telemetry (readable mid-run; see `Metrics`).
     pub metrics: Arc<Metrics>,
 }
 
 impl Coordinator {
+    /// Open the full pipeline: probe the artifact metadata, spawn the
+    /// batcher, the DNN shard pool, the decode pool, and the collector,
+    /// and block until every shard's backend has opened and warmed (so
+    /// compile/load failures surface here, not mid-run).
     pub fn new(cfg: CoordinatorConfig) -> Result<Coordinator> {
         // validate metadata on the caller thread for early errors
         let meta = cfg.backend.probe_meta(&cfg.artifacts_dir)?;
@@ -109,15 +171,17 @@ impl Coordinator {
         let batches = meta.batches(&cfg.model, cfg.bits);
         anyhow::ensure!(!batches.is_empty(),
                         "no artifacts for {}/{}b", cfg.model, cfg.bits);
-        let metrics = Arc::new(Metrics::default());
+        let n_shards = cfg.dnn_shards.max(1);
+        let metrics = Arc::new(Metrics::with_shards(n_shards));
         let registry = Arc::new(ReadRegistry::default());
 
         let cap = cfg.queue_cap.max(1);
         let (tx_windows, rx_windows) = bounded::<WindowJob>(cap);
         let (tx_decoded, rx_decoded) = bounded::<DecodedWindow>(cap);
-        let (tx_ready, rx_ready) = bounded::<Result<()>>(1);
+        // every shard reports open+warm exactly once
+        let (tx_ready, rx_ready) = bounded::<Result<()>>(n_shards);
 
-        // per-worker decode queues, fed round-robin by the DNN stage (no
+        // per-worker decode queues, fed round-robin by the DNN shards (no
         // shared Mutex<Receiver> hot spot).
         let n_dec = cfg.decode_threads.max(1);
         let dec_cap = (cap / n_dec).max(8);
@@ -130,64 +194,146 @@ impl Coordinator {
             dec_rxs.push(rx);
         }
 
-        // DNN executor: backends may not be Send (the PJRT client is
-        // not), so the backend is both constructed and used inside its
-        // owner thread. It owns the decode senders; when it exits they
-        // drop and the pool drains out.
-        let m = metrics.clone();
-        let c = cfg.clone();
-        let dnn_thread = std::thread::spawn(move || -> Result<()> {
-            // open + warm (compile cache / weight quantization) so
-            // failures surface through tx_ready at init, not mid-run
-            let mut backend = match c.backend.open(&c.artifacts_dir)
-                .and_then(|mut b| b.warm(&c.model, c.bits).map(|()| b))
-            {
-                Ok(b) => {
-                    let _ = tx_ready.send(Ok(()));
-                    b
-                }
-                Err(err) => {
-                    let _ = tx_ready.send(Err(err));
-                    return Ok(());
-                }
-            };
-            let mut batcher = Batcher::new(rx_windows, c.policy);
-            let mut rr = 0usize;
-            while let Some(batch) = batcher.next_batch() {
-                let t0 = Instant::now();
-                let n_items = batch.items.len();
-                // move the signals out of the jobs — no per-window clone
-                let mut keys = Vec::with_capacity(n_items);
-                let mut sigs = Vec::with_capacity(n_items);
-                for j in batch.items {
-                    keys.push((j.read_id, j.window_idx));
-                    sigs.push(j.signal);
-                }
-                let lps = backend.run_windows(&c.model, c.bits, &sigs)?;
-                m.add(&m.batches, 1);
-                m.add(&m.batch_items, n_items as u64);
-                if batch.full {
-                    m.add(&m.full_batches, 1);
-                }
-                m.add(&m.dnn_micros, t0.elapsed().as_micros() as u64);
-                for ((read_id, window_idx), lp) in
-                    keys.into_iter().zip(lps)
-                {
-                    // skip-over-backlogged round-robin; if every decode
-                    // queue is gone the pipeline has collapsed
-                    // downstream — stop burning inference on it
-                    if !send_round_robin(&dec_txs, &mut rr, DecodeJob {
-                        read_id,
-                        window_idx,
-                        lp,
+        // per-shard batch queues, fed by least-loaded dispatch
+        let mut shard_txs: Vec<Sender<ShardBatch>> =
+            Vec::with_capacity(n_shards);
+        let mut shard_rxs: Vec<Receiver<ShardBatch>> =
+            Vec::with_capacity(n_shards);
+        for _ in 0..n_shards {
+            let (tx, rx) = bounded::<ShardBatch>(SHARD_QUEUE_DEPTH);
+            shard_txs.push(tx);
+            shard_rxs.push(rx);
+        }
+
+        // batcher: drains the window queue with the size-or-deadline
+        // policy and hands each finished batch to the shallowest shard
+        // queue. It owns the only shard senders, so when it exits the
+        // shard pool drains out.
+        let batcher_thread = {
+            let policy = cfg.policy;
+            std::thread::spawn(move || {
+                let mut batcher = Batcher::new(rx_windows, policy);
+                let mut rr = 0usize;
+                while let Some(batch) = batcher.next_batch() {
+                    let n_items = batch.items.len();
+                    // move the signals out of the jobs — no per-window
+                    // clone on this hot path
+                    let mut keys = Vec::with_capacity(n_items);
+                    let mut sigs = Vec::with_capacity(n_items);
+                    for j in batch.items {
+                        keys.push((j.read_id, j.window_idx));
+                        sigs.push(j.signal);
+                    }
+                    if !send_least_loaded(&shard_txs, &mut rr, ShardBatch {
+                        keys,
+                        sigs,
+                        full: batch.full,
                     }) {
-                        anyhow::bail!("decode stage disconnected mid-run \
-                                       (downstream failure)");
+                        // every shard is gone (all replicas failed):
+                        // stop pulling windows so submit() sees the
+                        // disconnect instead of feeding a dead stage
+                        break;
                     }
                 }
+            })
+        };
+
+        // Native replicas are plain `Send` data: open ONE backend on
+        // the caller thread and stamp out in-memory clones
+        // (`NativeBackend::clone_for_shard`), so N shards cost one
+        // artifact load + quantization instead of N. Non-`Send`
+        // backends (the PJRT client) get `None` here and are
+        // constructed inside their shard thread via `open_shard`.
+        let mut prebuilt: Vec<Option<NativeBackend>> =
+            (0..n_shards).map(|_| None).collect();
+        if cfg.backend == BackendKind::Native {
+            let first = NativeBackend::open(&cfg.artifacts_dir)?;
+            for slot in prebuilt.iter_mut().skip(1) {
+                *slot = Some(first.clone_for_shard());
             }
-            Ok(())
-        });
+            prebuilt[0] = Some(first);
+        }
+
+        // DNN shard pool: each shard thread owns its own backend
+        // replica (moved in when prebuilt, constructed in-thread
+        // otherwise). Shards hold clones of the decode senders; when
+        // the last shard exits they drop and the decode pool drains
+        // out.
+        let mut shard_threads = Vec::with_capacity(n_shards);
+        for (shard_id, rx_batch) in shard_rxs.into_iter().enumerate() {
+            let m = metrics.clone();
+            let c = cfg.clone();
+            let dec = dec_txs.clone();
+            let ready = tx_ready.clone();
+            let pre = prebuilt[shard_id].take();
+            shard_threads.push(std::thread::spawn(
+                move || -> Result<()> {
+                // open + warm (compile cache / weight quantization) so
+                // failures surface through the ready channel at init,
+                // not mid-run
+                let opened = match pre {
+                    Some(replica) => {
+                        Ok(Box::new(replica) as Box<dyn Backend>)
+                    }
+                    None => c.backend
+                        .open_shard(&c.artifacts_dir, shard_id),
+                }
+                    .and_then(|mut b| {
+                        b.warm(&c.model, c.bits).map(|()| b)
+                    });
+                let mut backend = match opened {
+                    Ok(b) => {
+                        let _ = ready.send(Ok(()));
+                        drop(ready); // init handshake complete
+                        b
+                    }
+                    Err(err) => {
+                        let _ = ready.send(Err(err));
+                        return Ok(());
+                    }
+                };
+                // spread the decode round-robin start points so shards
+                // do not gang up on decode worker 0
+                let mut rr = shard_id;
+                let stats = &m.shards[shard_id];
+                while let Ok(batch) = rx_batch.recv() {
+                    let t0 = Instant::now();
+                    let lps = backend.run_windows(&c.model, c.bits,
+                                                  &batch.sigs)?;
+                    let busy = t0.elapsed().as_micros() as u64;
+                    let n_items = batch.keys.len();
+                    m.add(&m.batches, 1);
+                    m.add(&m.batch_items, n_items as u64);
+                    if batch.full {
+                        m.add(&m.full_batches, 1);
+                    }
+                    m.add(&m.dnn_micros, busy);
+                    m.add(&stats.batches, 1);
+                    m.add(&stats.windows, n_items as u64);
+                    m.add(&stats.busy_micros, busy);
+                    for ((read_id, window_idx), lp) in
+                        batch.keys.into_iter().zip(lps)
+                    {
+                        // skip-over-backlogged round-robin; if every
+                        // decode queue is gone the pipeline has
+                        // collapsed downstream — stop burning
+                        // inference on it
+                        if !send_round_robin(&dec, &mut rr, DecodeJob {
+                            read_id,
+                            window_idx,
+                            lp,
+                        }) {
+                            anyhow::bail!("decode stage disconnected \
+                                           mid-run (downstream failure)");
+                        }
+                    }
+                }
+                Ok(())
+            }));
+        }
+        // the shards hold the only decode senders and ready senders now
+        drop(dec_txs);
+        drop(tx_ready);
 
         // decode pool: one private queue per worker.
         let mut decode_threads = Vec::with_capacity(n_dec);
@@ -225,16 +371,23 @@ impl Coordinator {
             },
         );
 
-        // wait for the engine thread to finish compiling (or fail fast)
-        rx_ready.recv()
-            .map_err(|_| anyhow::anyhow!("engine thread died during init"))??;
+        // wait for every shard to finish opening + warming (or fail
+        // fast: the first shard error aborts construction, and the
+        // channel cascade tears the other stages down as this frame's
+        // senders drop)
+        for _ in 0..n_shards {
+            rx_ready.recv()
+                .map_err(|_| anyhow::anyhow!(
+                    "a dnn shard thread died during init"))??;
+        }
 
         Ok(Coordinator {
             cfg,
             window,
             registry,
             tx_windows: Some(tx_windows),
-            dnn_thread: Some(dnn_thread),
+            batcher_thread: Some(batcher_thread),
+            shard_threads,
             decode_threads,
             collector: Some(collector),
             metrics,
@@ -313,12 +466,24 @@ impl Coordinator {
             None => Ok(Vec::new()),
         };
         let mut err = None;
-        if let Some(h) = self.dnn_thread.take() {
+        if let Some(h) = self.batcher_thread.take() {
+            if h.join().is_err() {
+                err = Some(anyhow::anyhow!("batcher thread panicked"));
+            }
+        }
+        for h in self.shard_threads.drain(..) {
             match h.join() {
                 Ok(Ok(())) => {}
-                Ok(Err(e)) => err = Some(e),
+                Ok(Err(e)) => {
+                    if err.is_none() {
+                        err = Some(e);
+                    }
+                }
                 Err(_) => {
-                    err = Some(anyhow::anyhow!("dnn thread panicked"));
+                    if err.is_none() {
+                        err = Some(anyhow::anyhow!(
+                            "dnn shard thread panicked"));
+                    }
                 }
             }
         }
@@ -338,8 +503,14 @@ impl Coordinator {
         Ok(out)
     }
 
+    /// The batching policy's size trigger (for batch-fill accounting).
     pub fn max_batch(&self) -> usize {
         self.cfg.policy.max_batch
+    }
+
+    /// Number of DNN executor shards this pipeline is running.
+    pub fn dnn_shards(&self) -> usize {
+        self.cfg.dnn_shards.max(1)
     }
 
     /// Reads submitted but not yet emitted.

@@ -6,11 +6,13 @@ use super::synth::Read;
 /// One model input window plus its ground truth.
 #[derive(Clone, Debug)]
 pub struct Window {
+    /// id of the read this window was cut from.
     pub read_id: usize,
     /// offset of the window start in the read signal.
     pub sample_start: usize,
     /// offset of the first labeled base within the read.
     pub base_start: usize,
+    /// raw signal slice, exactly the model input length.
     pub signal: Vec<f32>,
     /// ground-truth bases fully contained in the window.
     pub truth: Vec<u8>,

@@ -5,19 +5,26 @@ use anyhow::{Context, Result};
 
 use crate::util::{json::Json, rng::Rng};
 
+/// k-mer current table + dwell/noise parameters of a simulated pore.
 #[derive(Clone, Debug)]
 pub struct PoreModel {
+    /// k-mer context length.
     pub k: usize,
     /// 4^k standardized current levels, indexed by k-mer id.
     pub levels: Vec<f32>,
+    /// minimum samples the pore dwells on one base.
     pub dwell_min: u32,
+    /// maximum samples the pore dwells on one base.
     pub dwell_max: u32,
+    /// gaussian noise added to each emitted sample.
     pub noise_sigma: f32,
     /// samples per base-calling window (the model input length).
     pub window: usize,
 }
 
 impl PoreModel {
+    /// Load the `pore_model.json` schema written by `save` (and by the
+    /// python training path).
     pub fn load(path: &str) -> Result<PoreModel> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading pore model {path}"))?;
@@ -101,8 +108,8 @@ impl PoreModel {
         id
     }
 
-    /// Emit a raw signal for `seq`. Returns (signal, owner) where owner[s]
-    /// is the base index held by the pore at sample s.
+    /// Emit a raw signal for `seq`. Returns (signal, owner) where
+    /// `owner[s]` is the base index held by the pore at sample `s`.
     pub fn simulate(&self, seq: &[u8], rng: &mut Rng) -> (Vec<f32>, Vec<u32>) {
         let mut signal = Vec::with_capacity(seq.len() * 9);
         let mut owner = Vec::with_capacity(seq.len() * 9);

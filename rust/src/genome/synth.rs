@@ -13,6 +13,7 @@ pub fn random_genome(n: usize, rng: &mut Rng) -> Vec<u8> {
 /// A simulated nanopore read: the true subsequence plus its raw signal.
 #[derive(Clone, Debug)]
 pub struct Read {
+    /// run-unique read id (what `CalledRead::read_id` answers).
     pub id: usize,
     /// start offset in the genome.
     pub start: usize,
@@ -20,18 +21,22 @@ pub struct Read {
     pub seq: Vec<u8>,
     /// raw normalized signal.
     pub signal: Vec<f32>,
-    /// owner[s] = index into `seq` of the base held at sample s.
+    /// `owner[s]` = index into `seq` of the base held at sample `s`.
     pub owner: Vec<u32>,
 }
 
 /// Parameters of a simulated sequencing run.
 #[derive(Clone, Copy, Debug)]
 pub struct RunSpec {
+    /// genome length in bases.
     pub genome_len: usize,
     /// target coverage (mean reads crossing a position), 30-50 in the paper.
     pub coverage: usize,
+    /// shortest read to draw.
     pub read_len_min: usize,
+    /// longest read to draw.
     pub read_len_max: usize,
+    /// rng seed: equal specs simulate bit-identical runs.
     pub seed: u64,
 }
 
@@ -50,11 +55,15 @@ impl Default for RunSpec {
 /// A full sequencing run: one genome + enough reads for the coverage target.
 #[derive(Clone, Debug)]
 pub struct SequencingRun {
+    /// the simulated ground-truth genome.
     pub genome: Vec<u8>,
+    /// reads drawn from it, sorted by genome start position.
     pub reads: Vec<Read>,
 }
 
 impl SequencingRun {
+    /// Simulate a run: draw reads to the coverage target and emit each
+    /// one's pore signal. Deterministic in `spec.seed`.
     pub fn simulate(pm: &PoreModel, spec: RunSpec) -> SequencingRun {
         let mut rng = Rng::new(spec.seed);
         let genome = random_genome(spec.genome_len, &mut rng);

@@ -12,6 +12,51 @@
 //! feature — an AOT-compiled XLA artifact (JAX/Pallas, built once by
 //! `make artifacts`) executed through PJRT. Python is never on the
 //! request path.
+//!
+//! A paper-section-to-module map lives in the repo-root
+//! `ARCHITECTURE.md`; the serving pipeline's stage/queue diagram is in
+//! `src/coordinator/README.md`.
+//!
+//! ## Quickstart (native backend, zero artifacts)
+//!
+//! The default backend needs nothing on disk — pointing the coordinator
+//! at a directory with no `meta.json` selects the builtin deterministic
+//! quantized model, so this example runs on a bare checkout:
+//!
+//! ```
+//! use helix::coordinator::{Coordinator, CoordinatorConfig};
+//! use helix::genome::pore::PoreModel;
+//! use helix::genome::synth::{RunSpec, SequencingRun};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! // simulate a tiny sequencing run
+//! let pm = PoreModel::synthetic(7);
+//! let run = SequencingRun::simulate(&pm, RunSpec {
+//!     genome_len: 400,
+//!     coverage: 1,
+//!     ..Default::default()
+//! });
+//!
+//! let mut coord = Coordinator::new(CoordinatorConfig {
+//!     dnn_shards: 2,       // replicate the DNN executor across 2 shards
+//!     artifacts_dir: "does-not-exist".into(), // builtin in-memory model
+//!     ..Default::default()
+//! })?;
+//! for read in &run.reads {
+//!     coord.submit(read);
+//! }
+//! let called = coord.finish()?;
+//! assert_eq!(called.len(), run.reads.len());
+//! assert!(called.iter().all(|c| !c.seq.is_empty()));
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! Reads also stream out *mid-run* — `Coordinator::try_recv` /
+//! `recv_timeout` return each `CalledRead` the moment its last window
+//! decodes; `finish()` is only the end-of-run drain.
+#![warn(missing_docs)]
+
 pub mod util;
 pub mod runtime;
 pub mod basecall;

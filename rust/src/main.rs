@@ -21,12 +21,13 @@ fn usage() -> ! {
     eprintln!("usage: helix <command> [options]\n\
         commands:\n  \
         basecall [--model guppy] [--bits 32] [--genome 2000] [--coverage 5]\n    \
-        [--backend native|xla]\n  \
+        [--backend native|xla] [--shards N]\n  \
         simulate [--genome 10000] [--coverage 30]\n  \
         figures <fig2|...|fig26|table1..table5|all>\n  \
         schemes\n  \
         mc [--samples 100000]\n\
-        env: HELIX_ARTIFACTS=artifacts HELIX_BACKEND=native|xla");
+        env: HELIX_ARTIFACTS=artifacts HELIX_BACKEND=native|xla \
+        HELIX_SHARDS=N");
     std::process::exit(2);
 }
 
@@ -69,17 +70,31 @@ fn main() -> Result<()> {
                     "unknown --backend '{other}' (native|xla; xla needs \
                      a `--features xla` build)"),
             };
+            // DNN shard count: --shards beats HELIX_SHARDS beats 1.
+            // An explicit flag that doesn't parse is an error (like
+            // --backend), not a silent single-shard fallback.
+            let shards: usize = match f.get("shards") {
+                Some(s) => match s.parse::<usize>() {
+                    Ok(n) if n >= 1 => n,
+                    _ => anyhow::bail!(
+                        "invalid --shards '{s}' (want a positive \
+                         integer)"),
+                },
+                None => CoordinatorConfig::shards_from_env(),
+            };
             kind.prepare(&dir)?;
             let pm = PoreModel::load(&format!("{dir}/pore_model.json"))?;
             let run = SequencingRun::simulate(&pm, RunSpec {
                 genome_len: genome, coverage, ..Default::default()
             });
             println!("basecalling {} reads ({} genome, {:.1}x coverage) \
-                      with {model}/{bits}b on the {} backend ...",
+                      with {model}/{bits}b on the {} backend \
+                      ({shards} dnn shard{}) ...",
                      run.reads.len(), genome, run.mean_coverage(),
-                     kind.name());
+                     kind.name(), if shards == 1 { "" } else { "s" });
             let mut coord = Coordinator::new(CoordinatorConfig {
                 model, bits, backend: kind, artifacts_dir: dir.clone(),
+                dnn_shards: shards,
                 ..Default::default()
             })?;
             let t0 = std::time::Instant::now();

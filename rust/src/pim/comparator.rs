@@ -25,10 +25,13 @@ pub fn encode(sym: u8) -> [u8; 3] {
 /// 6 cells = 3 bit-pairs).
 #[derive(Clone, Debug)]
 pub struct ComparatorArray {
+    /// array rows (one candidate sequence per row).
     pub rows: usize,
+    /// array columns, counted in cells.
     pub cols: usize,
     /// per-cell read upset probability (from `variation::cell_error_rate`).
     pub cell_error: f64,
+    /// comparison frequency in MHz.
     pub freq_mhz: f64,
 }
 

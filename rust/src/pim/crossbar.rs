@@ -14,11 +14,17 @@ use super::adc::ideal_quantize;
 /// Geometry/precision of one crossbar array.
 #[derive(Clone, Copy, Debug)]
 pub struct ArrayConfig {
+    /// wordlines (inputs).
     pub rows: usize,
+    /// bitlines (outputs).
     pub cols: usize,
+    /// storage bits per memristor cell.
     pub bits_per_cell: u32,
+    /// input DAC resolution.
     pub dac_bits: u32,
+    /// output ADC resolution.
     pub adc_bits: u32,
+    /// array cycle frequency in MHz.
     pub freq_mhz: f64,
 }
 

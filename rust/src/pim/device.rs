@@ -40,11 +40,17 @@ impl Default for DeviceParams {
 /// Relative sigmas of Table 1 (fractions of the mean).
 #[derive(Clone, Copy, Debug)]
 pub struct VariationSigmas {
+    /// write-transistor width sigma.
     pub w_wt: f64,
+    /// write-transistor length sigma.
     pub l_wt: f64,
+    /// transistor threshold-voltage sigma.
     pub v_th: f64,
+    /// MTJ resistance-area product sigma.
     pub ra: f64,
+    /// MTJ area sigma.
     pub area: f64,
+    /// thermal stability factor sigma.
     pub delta: f64,
 }
 

@@ -5,13 +5,20 @@
 use super::crossbar::ArrayConfig;
 use super::power::{self, ChipBudget};
 
+/// A full accelerator configuration (tile/IMA/array geometry + budget).
 #[derive(Clone, Debug)]
 pub struct Chip {
+    /// config name for tables and logs.
     pub name: &'static str,
+    /// tile count.
     pub tiles: usize,
+    /// in-situ multiply-accumulate units per tile.
     pub imas_per_tile: usize,
+    /// crossbar arrays per IMA.
     pub arrays_per_ima: usize,
+    /// geometry/precision of each crossbar array.
     pub array: ArrayConfig,
+    /// power/area rollup (Table 2).
     pub budget: ChipBudget,
     /// true when the ADC stage is the SOT-MRAM array design.
     pub sot_adc: bool,
@@ -20,6 +27,7 @@ pub struct Chip {
 }
 
 impl Chip {
+    /// The ISAAC baseline geometry (Table 2 top: CMOS ADCs).
     pub fn isaac() -> Chip {
         Chip {
             name: "isaac",
@@ -56,6 +64,7 @@ impl Chip {
         }
     }
 
+    /// Crossbar arrays on the whole chip (the "core #" of Table 5).
     pub fn total_arrays(&self) -> usize {
         self.tiles * self.imas_per_tile * self.arrays_per_ima
     }

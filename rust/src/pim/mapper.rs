@@ -8,14 +8,18 @@ use super::crossbar::ArrayConfig;
 /// steps that bounds single-window latency (not batched throughput).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum LayerKind {
+    /// convolution (parallel over time steps).
     Conv,
+    /// recurrent (sequential over time steps).
     Rnn,
+    /// fully connected.
     Fc,
 }
 
 /// One layer of a base-caller (full-size Table 3 numbers).
 #[derive(Clone, Copy, Debug)]
 pub struct Layer {
+    /// what kind of layer this is (drives latency accounting).
     pub kind: LayerKind,
     /// multiply-accumulates per 300-sample input window.
     pub macs: f64,
@@ -32,7 +36,9 @@ pub struct Layer {
 /// A full-size base-caller topology (Table 3).
 #[derive(Clone, Debug)]
 pub struct Topology {
+    /// base-caller name (Table 3 column).
     pub name: &'static str,
+    /// layers in execution order.
     pub layers: Vec<Layer>,
     /// CTC decoder time steps per window (output rows of Table 3).
     pub ctc_steps: usize,
@@ -92,22 +98,27 @@ impl Topology {
         }
     }
 
+    /// Every Table 3 topology.
     pub fn all() -> Vec<Topology> {
         vec![Topology::guppy(), Topology::scrappie(), Topology::chiron()]
     }
 
+    /// Look a topology up by its Table 3 name.
     pub fn by_name(name: &str) -> Option<Topology> {
         Topology::all().into_iter().find(|t| t.name == name)
     }
 
+    /// Multiply-accumulates per window, summed over layers.
     pub fn total_macs(&self) -> f64 {
         self.layers.iter().map(|l| l.macs).sum()
     }
 
+    /// Weight parameters, summed over layers.
     pub fn total_params(&self) -> f64 {
         self.layers.iter().map(|l| l.params).sum()
     }
 
+    /// Compute cost normalized per called base.
     pub fn macs_per_base(&self) -> f64 {
         self.total_macs() / self.bases_per_window
     }

@@ -6,8 +6,11 @@ use super::adc::{CmosAdc, SotAdcArray};
 /// One line of Table 2.
 #[derive(Clone, Debug)]
 pub struct Component {
+    /// component label (Table 2 row).
     pub name: &'static str,
+    /// power draw in mW.
     pub power_mw: f64,
+    /// silicon area in mm^2.
     pub area_mm2: f64,
 }
 
@@ -60,14 +63,21 @@ pub fn ima_with_sot_adc() -> (f64, f64) {
 /// Full-chip rollup.
 #[derive(Clone, Copy, Debug)]
 pub struct ChipBudget {
+    /// tile count.
     pub tiles: usize,
+    /// IMAs per tile.
     pub imas_per_tile: usize,
+    /// per-tile power in mW (peripherals + IMAs).
     pub tile_power_mw: f64,
+    /// per-tile area in mm^2.
     pub tile_area_mm2: f64,
+    /// whole-chip power in W (incl. chip-level extras).
     pub power_w: f64,
+    /// whole-chip area in mm^2.
     pub area_mm2: f64,
 }
 
+/// Roll tiles x (peripherals + IMAs) + chip-level extras into a budget.
 pub fn chip(tiles: usize, imas_per_tile: usize, ima_pa: (f64, f64),
             extra: &[Component]) -> ChipBudget {
     let (pp, pa) = sum(&tile_peripherals());

@@ -35,18 +35,24 @@ pub const GPU_CTC_PER_STEP: f64 = 5.45e-8; // s per step / window
 pub const GPU_VOTE_PER_BASE: f64 = 2.4e-7;
 /// CPU CTC/vote penalty vs GPU (poorly parallelized on 8 cores).
 pub const CPU_SERIAL_PENALTY: f64 = 4.0;
-/// Read length (bases) per voting group and coverage (reads per position).
+/// Read length (bases) per voting group.
 pub const VOTE_GROUP_LEN: f64 = 30.0;
+/// Coverage: reads voting on each position.
 pub const VOTE_COVERAGE: f64 = 30.0;
 /// Tile bus feeding the comparator block: 384 wires @ 10 MHz (Table 2).
 pub const VOTE_BUS_BITS_PER_SEC: f64 = 384.0 * 10.0e6;
 
-/// Machine envelopes (Table 5).
+/// Machine envelopes (Table 5): Xeon TDP.
 pub const CPU_TDP_W: f64 = 135.0;
+/// Xeon die area (Table 5).
 pub const CPU_AREA_MM2: f64 = 450.0;
+/// Tesla T4 TDP (Table 5).
 pub const GPU_TDP_W: f64 = 70.0;
+/// Tesla T4 die area (Table 5).
 pub const GPU_AREA_MM2: f64 = 515.0;
 
+/// The eight evaluated configurations of Fig 24 (cumulative left to
+/// right: each scheme adds one Helix technique to the previous one).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Scheme {
     /// Xeon CPU, full precision, everything in software.
@@ -69,11 +75,13 @@ pub enum Scheme {
 }
 
 impl Scheme {
+    /// Every scheme, in Fig 24's cumulative order.
     pub fn all() -> [Scheme; 8] {
         [Scheme::Cpu, Scheme::Gpu, Scheme::Isaac, Scheme::Q16,
          Scheme::Seat, Scheme::Adc, Scheme::Ctc, Scheme::Helix]
     }
 
+    /// Fig 24 x-axis label.
     pub fn name(&self) -> &'static str {
         match self {
             Scheme::Cpu => "CPU",
@@ -110,14 +118,20 @@ pub fn native_datapath_bits(model_bits: u32) -> (u32, u32) {
 /// Evaluation output for one (scheme, base-caller) pair.
 #[derive(Clone, Copy, Debug)]
 pub struct Eval {
+    /// seconds of DNN forward pass per called base.
     pub t_dnn: f64,
+    /// seconds of CTC decode per called base.
     pub t_ctc: f64,
+    /// seconds of read voting per called base.
     pub t_vote: f64,
+    /// power envelope charged to the scheme.
     pub power_w: f64,
+    /// area envelope charged to the scheme.
     pub area_mm2: f64,
 }
 
 impl Eval {
+    /// Total seconds per called base.
     pub fn t_total(&self) -> f64 {
         self.t_dnn + self.t_ctc + self.t_vote
     }
@@ -127,10 +141,12 @@ impl Eval {
         1.0 / self.t_total()
     }
 
+    /// Bases/s/W (Fig 24 middle panel).
     pub fn throughput_per_watt(&self) -> f64 {
         self.throughput() / self.power_w
     }
 
+    /// Bases/s/mm^2 (Fig 24 right panel).
     pub fn throughput_per_mm2(&self) -> f64 {
         self.throughput() / self.area_mm2
     }

@@ -24,9 +24,13 @@ pub fn sample_device(nominal: &DeviceParams, sig: &VariationSigmas,
 /// Result of a write-duration Monte-Carlo (Fig 15).
 #[derive(Clone, Debug)]
 pub struct DurationStats {
+    /// Monte-Carlo sample count.
     pub samples: usize,
+    /// mean write duration in ns.
     pub mean_ns: f64,
+    /// standard deviation in ns.
     pub sigma_ns: f64,
+    /// 99.9th percentile in ns.
     pub p999_ns: f64,
     /// extrapolated worst case at the paper's 10^10-sample scale
     /// (mean + 6.4 sigma of log-duration, the Spectre-MC equivalent).

@@ -25,6 +25,7 @@ pub struct DraftIndex {
 }
 
 impl DraftIndex {
+    /// Index every k-mer position of the draft for seed lookups.
     pub fn build(draft: &[u8]) -> DraftIndex {
         let k = SEED_K;
         let mut index: HashMap<u64, Vec<usize>> = HashMap::new();

@@ -8,8 +8,11 @@ use crate::basecall::vote::best_overlap;
 /// One suffix(a)-prefix(b) overlap edge of the overlap graph.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Overlap {
+    /// index of the read whose suffix matches.
     pub a: usize,
+    /// index of the read whose prefix matches.
     pub b: usize,
+    /// overlap length in bases.
     pub len: usize,
 }
 

@@ -103,6 +103,7 @@ pub enum BackendKind {
 }
 
 impl BackendKind {
+    /// Stable lowercase name ("native" / "xla") for logs and env vars.
     pub fn name(&self) -> &'static str {
         match self {
             BackendKind::Native => "native",
@@ -138,6 +139,23 @@ impl BackendKind {
             BackendKind::Xla => Ok(Box::new(
                 super::executable::Engine::new(artifacts_dir)?)),
         }
+    }
+
+    /// Factory path for the sharded DNN executor pool: construct this
+    /// shard's own backend replica from scratch. MUST be called from
+    /// the shard thread that will own the replica (PJRT clients are
+    /// not `Send`); `xla` opens an independent engine handle over the
+    /// same artifacts. The coordinator only uses this for backends it
+    /// cannot pre-build on the caller thread — `native` replicas are
+    /// plain `Send` data and are stamped out in memory with
+    /// `NativeBackend::clone_for_shard` instead (one artifact load for
+    /// N shards). Either way every replica computes bit-identical
+    /// `LogProbs` for the same window.
+    pub fn open_shard(&self, artifacts_dir: &str, shard: usize)
+                      -> Result<Box<dyn Backend>> {
+        self.open(artifacts_dir).with_context(
+            || format!("opening {} backend replica for shard {shard}",
+                       self.name()))
     }
 
     /// Caller-thread validation: the metadata `open()` would see,

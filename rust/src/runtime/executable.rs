@@ -18,6 +18,7 @@ use super::meta::{ArtifactEntry, Meta};
 
 /// One compiled model variant at a fixed batch size.
 pub struct ModelExecutable {
+    /// the artifact this executable was compiled from.
     pub entry: ArtifactEntry,
     exe: xla::PjRtLoadedExecutable,
 }
@@ -54,12 +55,15 @@ impl ModelExecutable {
 
 /// The runtime engine: one PJRT client + a cache of compiled executables.
 pub struct Engine {
+    /// the artifact set this engine compiles from.
     pub meta: Meta,
     client: xla::PjRtClient,
     cache: HashMap<String, ModelExecutable>,
 }
 
 impl Engine {
+    /// Open a CPU PJRT client over `make artifacts` output. Not `Send`:
+    /// construct inside the thread that will run it.
     pub fn new(artifacts_dir: &str) -> Result<Engine> {
         let meta = Meta::load(artifacts_dir)?;
         let client = xla::PjRtClient::cpu()

@@ -9,25 +9,37 @@ use crate::util::json::Json;
 /// One exported (model, bits, seat, batch) HLO artifact.
 #[derive(Clone, Debug)]
 pub struct ArtifactEntry {
+    /// unique artifact name, e.g. `guppy_32_b8`.
     pub name: String,
+    /// model family this executable belongs to.
     pub model: String,
+    /// bit-width variant.
     pub bits: u32,
+    /// fixed batch size the executable was exported with.
     pub batch: usize,
+    /// input window length in samples.
     pub window: usize,
+    /// CTC time steps the executable emits.
     pub time_steps: usize,
+    /// whether this is the pallas (kernel-bearing) build.
     pub pallas: bool,
+    /// weight/HLO file name relative to the artifacts root.
     pub file: String,
 }
 
 /// Parsed meta.json + artifact directory root.
 #[derive(Clone, Debug)]
 pub struct Meta {
+    /// artifacts directory the entries' files live in.
     pub root: PathBuf,
+    /// default window length (entries may override per-artifact).
     pub window: usize,
+    /// every exported executable.
     pub entries: Vec<ArtifactEntry>,
 }
 
 impl Meta {
+    /// Parse `<dir>/meta.json` (the schema `save` writes).
     pub fn load(dir: &str) -> Result<Meta> {
         let root = PathBuf::from(dir);
         let text = std::fs::read_to_string(root.join("meta.json"))
@@ -82,6 +94,7 @@ impl Meta {
         b
     }
 
+    /// Absolute path of an entry's artifact file.
     pub fn path_of(&self, e: &ArtifactEntry) -> PathBuf {
         self.root.join(&e.file)
     }
@@ -114,6 +127,7 @@ impl Meta {
         Ok(path)
     }
 
+    /// Where the artifact set keeps its pore model.
     pub fn pore_model_path(&self) -> PathBuf {
         self.root.join("pore_model.json")
     }

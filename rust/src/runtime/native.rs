@@ -38,19 +38,26 @@ const QMODEL_FORMAT: &str = "helix-qmodel-v1";
 /// One model family in a native artifact set.
 #[derive(Clone, Debug)]
 pub struct NativeModelSpec {
+    /// model family name (e.g. "guppy").
     pub model: String,
     /// declared bit-widths to export (quantization follows
     /// `native_datapath_bits`).
     pub bits: Vec<u32>,
     /// batch sizes to expose in the meta (ascending).
     pub batches: Vec<usize>,
+    /// input window length in samples.
     pub window: usize,
+    /// conv kernel width.
     pub kernel: usize,
+    /// conv stride (sets the CTC time-step count).
     pub stride: usize,
+    /// conv channel count / matmul input width.
     pub hidden: usize,
 }
 
 impl NativeModelSpec {
+    /// Spec with the default conv shape (kernel 12, stride 2, hidden
+    /// 16) for the given family/bit-widths/batch-sizes/window.
     pub fn new(model: &str, bits: &[u32], batches: &[usize],
                window: usize) -> NativeModelSpec {
         NativeModelSpec {
@@ -76,9 +83,11 @@ impl NativeModelSpec {
 /// in-memory fallback instantiates).
 #[derive(Clone, Debug)]
 pub struct NativeSpec {
+    /// weight-generation seed (`NATIVE_SEED` for the builtin).
     pub seed: u64,
     /// top-level default window recorded in meta.json.
     pub window: usize,
+    /// the model families this artifact set exports.
     pub models: Vec<NativeModelSpec>,
 }
 
@@ -121,10 +130,10 @@ struct RawModel {
     hidden: usize,
     kernel: usize,
     stride: usize,
-    /// conv filters, row-major [hidden][kernel] (in-channels = 1).
+    /// conv filters, row-major `[hidden][kernel]` (in-channels = 1).
     conv_w: Vec<f32>,
     conv_b: Vec<f32>,
-    /// output projection, row-major [NUM_SYMBOLS][hidden].
+    /// output projection, row-major `[NUM_SYMBOLS][hidden]`.
     out_w: Vec<f32>,
     out_b: Vec<f32>,
 }
@@ -237,6 +246,7 @@ fn quantize(w: &[f32], qmax: i32) -> (Vec<i32>, f32) {
 
 /// One (model, bits) executable: weights quantized to the datapath
 /// width, run with integer accumulation.
+#[derive(Clone)]
 struct QuantModel {
     window: usize,
     time_steps: usize,
@@ -318,7 +328,9 @@ impl QuantModel {
 }
 
 /// The native backend: artifact metadata + quantized executables keyed
-/// by (model, bits). Plain data — `Send`, unlike the PJRT client.
+/// by (model, bits). Plain data — `Send` and `Clone`, unlike the PJRT
+/// client, so shard replicas can be stamped out in memory.
+#[derive(Clone)]
 pub struct NativeBackend {
     meta: Meta,
     models: HashMap<(String, u32), QuantModel>,
@@ -337,6 +349,7 @@ impl NativeBackend {
         }
     }
 
+    /// The zero-config in-memory backend (`NativeSpec::builtin`).
     pub fn builtin() -> NativeBackend {
         NativeBackend::from_spec(&NativeSpec::builtin())
     }
@@ -355,6 +368,20 @@ impl NativeBackend {
             meta: spec.meta(Path::new(".")),
             models,
         }
+    }
+
+    /// Replicate this backend for another DNN shard: duplicates the
+    /// already-quantized weights in memory, so a replica is cheaper
+    /// than a fresh `open()` (no disk reads, no re-quantization) and
+    /// guaranteed bit-identical — every shard computes the same
+    /// `LogProbs` for the same window, which is what lets the
+    /// coordinator promise shard-count-independent output. This is how
+    /// the coordinator builds its native shard pool (one `open()`, N-1
+    /// clones); non-`Send` backends go through the
+    /// `BackendKind::open_shard` factory inside each shard thread
+    /// instead.
+    pub fn clone_for_shard(&self) -> NativeBackend {
+        self.clone()
     }
 
     fn load(dir: &str) -> Result<NativeBackend> {
@@ -503,6 +530,18 @@ mod tests {
             let total: f32 = lps[0].row(t).iter().map(|x| x.exp()).sum();
             assert!((total - 1.0).abs() < 1e-3, "t={t}: sum {total}");
         }
+    }
+
+    #[test]
+    fn shard_replica_is_bit_identical() {
+        let mut a = NativeBackend::builtin();
+        let mut b = a.clone_for_shard();
+        let w = a.meta().window;
+        let x = sig(w, 0.9);
+        let la = a.run_windows("guppy", 8, &[x.clone()]).unwrap();
+        let lb = b.run_windows("guppy", 8, &[x]).unwrap();
+        assert_eq!(la[0].data, lb[0].data,
+                   "replica diverged from its source backend");
     }
 
     #[test]

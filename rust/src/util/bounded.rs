@@ -25,6 +25,7 @@ use std::time::{Duration, Instant};
 #[derive(Debug, PartialEq, Eq)]
 pub struct SendError<T>(pub T);
 
+/// Why a `try_send` did not enqueue.
 #[derive(Debug, PartialEq, Eq)]
 pub enum TrySendError<T> {
     /// Queue at capacity right now.
@@ -37,15 +38,21 @@ pub enum TrySendError<T> {
 #[derive(Debug, PartialEq, Eq)]
 pub struct RecvError;
 
+/// Why a `try_recv` returned nothing.
 #[derive(Debug, PartialEq, Eq)]
 pub enum TryRecvError {
+    /// Queue empty right now (senders still alive).
     Empty,
+    /// Every sender dropped and the queue is drained.
     Disconnected,
 }
 
+/// Why a `recv_timeout` returned nothing.
 #[derive(Debug, PartialEq, Eq)]
 pub enum RecvTimeoutError {
+    /// Nothing arrived before the deadline.
     Timeout,
+    /// Every sender dropped and the queue is drained.
     Disconnected,
 }
 
@@ -62,10 +69,12 @@ struct Shared<T> {
     not_full: Condvar,
 }
 
+/// Producer half of a channel; clone freely (MPSC).
 pub struct Sender<T> {
     shared: Arc<Shared<T>>,
 }
 
+/// Consumer half of a channel; exactly one per channel.
 pub struct Receiver<T> {
     shared: Arc<Shared<T>>,
 }
@@ -96,9 +105,11 @@ pub fn unbounded<T>() -> (Sender<T>, Receiver<T>) {
 /// Fan a job out over per-worker queues: round-robin starting at `*rr`,
 /// skipping workers whose queue is full (one slow worker must not
 /// head-of-line block the producer while its siblings idle) or
-/// disconnected. Blocks only when every live queue is full. Returns
-/// `false` iff the job could not be delivered because every worker is
-/// gone — the producer should treat that as downstream shutdown.
+/// disconnected. Blocks only when every live queue is full. A queue
+/// that disconnects while we are blocked on it does not fail the
+/// dispatch — the surviving workers are retried. Returns `false` iff
+/// the job could not be delivered because every worker is gone — the
+/// producer should treat that as downstream shutdown.
 pub fn send_round_robin<T>(txs: &[Sender<T>], rr: &mut usize, job: T)
                            -> bool {
     let n = txs.len();
@@ -106,30 +117,93 @@ pub fn send_round_robin<T>(txs: &[Sender<T>], rr: &mut usize, job: T)
         return false;
     }
     let mut job = job;
-    let mut full_at: Option<usize> = None;
-    for k in 0..n {
-        let i = (*rr + k) % n;
-        match txs[i].try_send(job) {
-            Ok(()) => {
-                *rr = i + 1;
-                return true;
-            }
-            Err(TrySendError::Full(j)) => {
-                if full_at.is_none() {
-                    full_at = Some(i);
+    loop {
+        let mut full_at: Option<usize> = None;
+        for k in 0..n {
+            let i = (*rr + k) % n;
+            match txs[i].try_send(job) {
+                Ok(()) => {
+                    *rr = i + 1;
+                    return true;
                 }
-                job = j;
+                Err(TrySendError::Full(j)) => {
+                    if full_at.is_none() {
+                        full_at = Some(i);
+                    }
+                    job = j;
+                }
+                Err(TrySendError::Disconnected(j)) => job = j,
             }
-            Err(TrySendError::Disconnected(j)) => job = j,
+        }
+        match full_at {
+            // every live queue is at capacity: wait on the first live
+            // one. If it dies while we wait, take the job back and
+            // retry the survivors instead of reporting collapse.
+            Some(i) => {
+                *rr = i + 1;
+                match txs[i].send(job) {
+                    Ok(()) => return true,
+                    Err(SendError(j)) => job = j,
+                }
+            }
+            None => return false, // every worker queue disconnected
         }
     }
-    match full_at {
-        // every live queue is at capacity: wait on the first live one
-        Some(i) => {
-            *rr = i + 1;
-            txs[i].send(job).is_ok()
+}
+
+/// Fan a job out over per-shard queues by queue depth: try the live
+/// queue with the fewest queued items first (least-loaded dispatch),
+/// falling back to deeper queues, and blocking on the shallowest live
+/// queue only when every live queue is at capacity. `*rr` rotates the
+/// tie-break so equally-loaded (e.g. all-idle) shards are fed
+/// round-robin instead of always hitting shard 0. A queue that
+/// disconnects while we are blocked on it does not fail the dispatch —
+/// the surviving queues are retried. Returns `false` iff every queue
+/// has disconnected — the producer should treat that as downstream
+/// shutdown.
+pub fn send_least_loaded<T>(txs: &[Sender<T>], rr: &mut usize, job: T)
+                            -> bool {
+    let n = txs.len();
+    if n == 0 {
+        return false;
+    }
+    let start = *rr % n;
+    *rr = rr.wrapping_add(1);
+    let mut job = job;
+    loop {
+        // snapshot each depth ONCE (len() is racy and takes the queue
+        // lock; a stale ordering only costs dispatch quality, while
+        // re-reading inside a sort comparator could violate its total
+        // order), then sort by (depth, rotated position) so ties keep
+        // the rotation.
+        let mut order: Vec<(usize, usize)> = (0..n)
+            .map(|k| (txs[(start + k) % n].len(), k))
+            .collect();
+        order.sort_unstable();
+        let mut shallowest_full: Option<usize> = None;
+        for &(_, k) in &order {
+            let i = (start + k) % n;
+            match txs[i].try_send(job) {
+                Ok(()) => return true,
+                Err(TrySendError::Full(j)) => {
+                    if shallowest_full.is_none() {
+                        shallowest_full = Some(i);
+                    }
+                    job = j;
+                }
+                Err(TrySendError::Disconnected(j)) => job = j,
+            }
         }
-        None => false, // every worker queue disconnected
+        match shallowest_full {
+            // every live queue is at capacity: block on the shallowest.
+            // If that queue dies while we wait, take the job back and
+            // retry the survivors instead of reporting collapse.
+            Some(i) => match txs[i].send(job) {
+                Ok(()) => return true,
+                Err(SendError(j)) => job = j,
+            },
+            None => return false, // every shard queue disconnected
+        }
     }
 }
 
@@ -169,10 +243,12 @@ impl<T> Sender<T> {
         self.shared.inner.lock().unwrap().buf.len()
     }
 
+    /// True when nothing is queued right now (racy, like `len`).
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// The channel's capacity bound (`usize::MAX` for unbounded).
     pub fn capacity(&self) -> usize {
         self.shared.inner.lock().unwrap().cap
     }
@@ -212,6 +288,7 @@ impl<T> Receiver<T> {
         }
     }
 
+    /// Take the next item without blocking, or say why not.
     pub fn try_recv(&self) -> Result<T, TryRecvError> {
         let mut g = self.shared.inner.lock().unwrap();
         if let Some(t) = g.buf.pop_front() {
@@ -224,6 +301,7 @@ impl<T> Receiver<T> {
         Err(TryRecvError::Empty)
     }
 
+    /// Block up to `timeout` for the next item.
     pub fn recv_timeout(&self, timeout: Duration)
                         -> Result<T, RecvTimeoutError> {
         let deadline = match Instant::now().checked_add(timeout) {
@@ -257,10 +335,12 @@ impl<T> Receiver<T> {
         self.shared.inner.lock().unwrap().buf.len()
     }
 
+    /// True when nothing is queued right now (racy, like `len`).
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// The channel's capacity bound (`usize::MAX` for unbounded).
     pub fn capacity(&self) -> usize {
         self.shared.inner.lock().unwrap().cap
     }
@@ -394,6 +474,98 @@ mod tests {
         assert_eq!(rx2.len(), 2);
         assert_eq!(rx1.recv(), Ok(0));
         assert_eq!(rx2.recv(), Ok(1));
+    }
+
+    #[test]
+    fn least_loaded_prefers_shallowest_queue() {
+        let (tx1, rx1) = bounded::<u32>(4);
+        let (tx2, rx2) = bounded::<u32>(4);
+        let txs = vec![tx1, tx2];
+        // preload queue 0 so queue 1 is strictly shallower
+        txs[0].send(0).unwrap();
+        txs[0].send(1).unwrap();
+        let mut rr = 0;
+        assert!(send_least_loaded(&txs, &mut rr, 10));
+        assert!(send_least_loaded(&txs, &mut rr, 11));
+        assert_eq!(rx2.len(), 2, "both jobs must land on the idle queue");
+        assert_eq!(rx2.recv(), Ok(10));
+        assert_eq!(rx2.recv(), Ok(11));
+        assert_eq!(rx1.recv(), Ok(0));
+    }
+
+    #[test]
+    fn least_loaded_ties_rotate() {
+        let (tx1, rx1) = bounded::<u32>(4);
+        let (tx2, rx2) = bounded::<u32>(4);
+        let txs = vec![tx1, tx2];
+        let mut rr = 0;
+        // drain after each dispatch so every call sees an all-idle tie
+        assert!(send_least_loaded(&txs, &mut rr, 0));
+        assert_eq!(rx1.recv(), Ok(0));
+        assert!(send_least_loaded(&txs, &mut rr, 1));
+        assert_eq!(rx2.recv(), Ok(1));
+        assert!(send_least_loaded(&txs, &mut rr, 2));
+        assert_eq!(rx1.recv(), Ok(2));
+    }
+
+    #[test]
+    fn least_loaded_skips_dead_and_reports_collapse() {
+        let (tx1, rx1) = bounded::<u32>(1);
+        let (tx2, rx2) = bounded::<u32>(1);
+        let txs = vec![tx1, tx2];
+        let mut rr = 0;
+        drop(rx1);
+        assert!(send_least_loaded(&txs, &mut rr, 5));
+        assert_eq!(rx2.recv(), Ok(5));
+        drop(rx2);
+        assert!(!send_least_loaded(&txs, &mut rr, 6),
+                "all shards gone must report undeliverable");
+    }
+
+    #[test]
+    fn round_robin_survives_death_of_blocked_queue() {
+        // regression (mirrors the least-loaded case): all queues full
+        // -> dispatch blocks; the blocked queue's receiver dies -> the
+        // job must reach a surviving worker, not be dropped.
+        let (tx1, rx1) = bounded::<u32>(1);
+        let (tx2, rx2) = bounded::<u32>(1);
+        tx1.send(0).unwrap();
+        tx2.send(1).unwrap();
+        let txs = vec![tx1, tx2];
+        let h = thread::spawn(move || {
+            let mut rr = 0; // blocks on worker 0 first
+            send_round_robin(&txs, &mut rr, 9)
+        });
+        thread::sleep(Duration::from_millis(50));
+        drop(rx1);
+        thread::sleep(Duration::from_millis(50));
+        assert_eq!(rx2.recv(), Ok(1)); // make room on the survivor
+        assert!(h.join().unwrap(),
+                "dispatch must survive the death of the blocked queue");
+        assert_eq!(rx2.recv(), Ok(9));
+    }
+
+    #[test]
+    fn least_loaded_survives_death_of_blocked_queue() {
+        // regression: both queues full -> dispatch blocks on the
+        // shallowest; that queue's receiver dies -> the job must be
+        // re-routed to the survivor, not dropped as "all collapsed".
+        let (tx1, rx1) = bounded::<u32>(1);
+        let (tx2, rx2) = bounded::<u32>(1);
+        tx1.send(0).unwrap();
+        tx2.send(1).unwrap();
+        let txs = vec![tx1, tx2];
+        let h = thread::spawn(move || {
+            let mut rr = 0; // start=0: blocks on queue 0 first
+            send_least_loaded(&txs, &mut rr, 9)
+        });
+        thread::sleep(Duration::from_millis(50));
+        drop(rx1); // kill the queue the dispatcher is blocked on
+        thread::sleep(Duration::from_millis(50));
+        assert_eq!(rx2.recv(), Ok(1)); // make room on the survivor
+        assert!(h.join().unwrap(),
+                "dispatch must survive the death of the blocked queue");
+        assert_eq!(rx2.recv(), Ok(9));
     }
 
     #[test]

@@ -6,17 +6,25 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
+/// One parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`
     Null,
+    /// `true` / `false`
     Bool(bool),
+    /// any JSON number (always kept as f64)
     Num(f64),
+    /// string
     Str(String),
+    /// array
     Arr(Vec<Json>),
+    /// object, key-sorted for deterministic serialization
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Parse a complete JSON document (trailing data is an error).
     pub fn parse(text: &str) -> Result<Json, String> {
         let mut p = Parser { b: text.as_bytes(), i: 0 };
         p.ws();
@@ -28,6 +36,7 @@ impl Json {
         Ok(v)
     }
 
+    /// Object field lookup (`None` on non-objects / missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -35,6 +44,7 @@ impl Json {
         }
     }
 
+    /// The number value, if this is a `Num`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -42,10 +52,12 @@ impl Json {
         }
     }
 
+    /// The number value truncated to usize, if this is a `Num`.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|x| x as usize)
     }
 
+    /// The string value, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -53,6 +65,7 @@ impl Json {
         }
     }
 
+    /// The boolean value, if this is a `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -60,6 +73,7 @@ impl Json {
         }
     }
 
+    /// The elements, if this is an `Arr`.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -67,12 +81,13 @@ impl Json {
         }
     }
 
-    /// Array of numbers -> Vec<f64> (the common artifact payload).
+    /// Array of numbers -> `Vec<f64>` (the common artifact payload).
     pub fn as_f64_vec(&self) -> Option<Vec<f64>> {
         self.as_arr()
             .map(|v| v.iter().filter_map(|x| x.as_f64()).collect())
     }
 
+    /// Array of numbers -> `Vec<f32>` (weight/level payloads).
     pub fn as_f32_vec(&self) -> Option<Vec<f32>> {
         self.as_arr()
             .map(|v| v.iter().filter_map(|x| x.as_f64().map(|y| y as f32)).collect())

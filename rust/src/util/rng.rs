@@ -20,12 +20,14 @@ fn splitmix64(state: &mut u64) -> u64 {
 }
 
 impl Rng {
+    /// Seed the generator (splitmix64-expanded; any seed is fine).
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;
         Rng { s: [splitmix64(&mut sm), splitmix64(&mut sm),
                   splitmix64(&mut sm), splitmix64(&mut sm)] }
     }
 
+    /// Next raw 64-bit output of the generator.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[0]

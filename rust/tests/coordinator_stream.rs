@@ -4,7 +4,9 @@
 //! backend-driven tests run the full submit → window → batch → DNN →
 //! decode → collect → vote pipeline against the native quantized
 //! backend, so they are exercised on every `cargo test` — no artifacts,
-//! no skips.
+//! no skips. The sharding tests pin the executor-pool invariant:
+//! byte-identical `CalledRead` output for any `dnn_shards` count, with
+//! per-shard counters that partition the aggregate totals.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -232,6 +234,96 @@ fn coordinator_quantized_bits_run_the_same_pipeline() {
     for c in &called {
         assert!(c.seq.iter().all(|&b| b < 4));
     }
+}
+
+/// Run one workload through the pipeline at a given shard count and
+/// return the finished reads (sorted by id by `finish()`).
+fn call_run_with_shards(run: &helix::genome::synth::SequencingRun,
+                        shards: usize)
+                        -> (Vec<helix::coordinator::CalledRead>,
+                            Arc<Metrics>) {
+    let mut coord = Coordinator::new(CoordinatorConfig {
+        model: "guppy".into(),
+        bits: 32,
+        dnn_shards: shards,
+        // small batches so the run spans many DNN launches and the
+        // least-loaded dispatch actually has batches to spread
+        policy: helix::coordinator::BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+        },
+        artifacts_dir: no_artifacts_dir(),
+        ..Default::default()
+    }).unwrap();
+    assert_eq!(coord.dnn_shards(), shards.max(1));
+    for r in &run.reads {
+        coord.submit(r);
+    }
+    let metrics = coord.metrics.clone();
+    let called = coord.finish().unwrap();
+    (called, metrics)
+}
+
+#[test]
+fn called_reads_are_identical_across_shard_counts() {
+    // THE sharding invariant: replicas compute bit-identical LogProbs
+    // and the collector reassembles by (read, window) index, so the
+    // output must be byte-identical for any shard count.
+    let run = sim_run(900, 3, 41);
+    let (base, _m) = call_run_with_shards(&run, 1);
+    assert_eq!(base.len(), run.reads.len());
+    for shards in [2usize, 4] {
+        let (called, _m) = call_run_with_shards(&run, shards);
+        assert_eq!(called.len(), base.len(), "shards={shards}");
+        for (a, b) in base.iter().zip(&called) {
+            assert_eq!(a.read_id, b.read_id, "shards={shards}");
+            assert_eq!(a.seq, b.seq,
+                       "read {} consensus diverged at shards={shards}",
+                       a.read_id);
+            assert_eq!(a.window_decodes, b.window_decodes,
+                       "read {} window decodes diverged at \
+                        shards={shards}", a.read_id);
+        }
+    }
+}
+
+#[test]
+fn shard_counters_account_for_every_batch() {
+    let run = sim_run(900, 3, 55);
+    let (called, m) = call_run_with_shards(&run, 4);
+    assert_eq!(called.len(), run.reads.len());
+    assert_eq!(m.shards.len(), 4);
+    let total = m.batches.load(Ordering::SeqCst);
+    let per_shard: u64 = m.shards.iter()
+        .map(|s| s.batches.load(Ordering::SeqCst))
+        .sum();
+    assert_eq!(per_shard, total,
+               "per-shard batch counters must partition the total");
+    let windows: u64 = m.shards.iter()
+        .map(|s| s.windows.load(Ordering::SeqCst))
+        .sum();
+    assert_eq!(windows, m.batch_items.load(Ordering::SeqCst));
+    // least-loaded dispatch rotates ties, so a multi-batch run cannot
+    // collapse onto a single replica
+    let active = m.shards.iter()
+        .filter(|s| s.batches.load(Ordering::SeqCst) > 0)
+        .count();
+    assert!(total < 2 || active >= 2,
+            "{total} batches all landed on one of 4 shards");
+    // the busiest shard carried less than all the forward-pass time
+    assert!(m.dnn_stage_windows_per_s() > 0.0);
+}
+
+#[test]
+fn single_shard_pipeline_reports_single_shard_metrics() {
+    let run = sim_run(600, 2, 61);
+    let (called, m) = call_run_with_shards(&run, 1);
+    assert_eq!(called.len(), run.reads.len());
+    assert_eq!(m.shards.len(), 1);
+    assert_eq!(m.shards[0].batches.load(Ordering::SeqCst),
+               m.batches.load(Ordering::SeqCst));
+    assert!(!m.report(4).contains("shard-util"),
+            "single-shard report must not print a shard split");
 }
 
 #[test]
