@@ -45,6 +45,37 @@ fi
 echo '== RUSTDOCFLAGS="-D warnings" cargo doc --no-deps'
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
+# Markdown link rot hard-fails too: every RELATIVE link in the
+# top-level docs must resolve to a real file/directory (http(s) links
+# and pure #anchors are skipped — no network in CI).
+echo "== markdown link check"
+rm -f .linkcheck_failed
+for doc in README.md ARCHITECTURE.md docs/TUNING.md \
+           rust/src/coordinator/README.md; do
+    if [ ! -f "$doc" ]; then
+        echo "ci.sh: FAIL — $doc is missing (link-checked doc set)" >&2
+        exit 1
+    fi
+    docdir=$(dirname "$doc")
+    # pull out ](target) link targets, drop anchors and absolute URLs
+    grep -oE '\]\([^)]+\)' "$doc" 2>/dev/null \
+        | sed -E 's/^\]\(//; s/\)$//; s/#.*$//' \
+        | grep -vE '^(https?:|mailto:)' \
+        | grep -v '^$' \
+        | sort -u \
+        | while read -r target; do
+            if [ ! -e "$docdir/$target" ]; then
+                echo "ci.sh: broken link in $doc -> $target" >&2
+                echo broken >> .linkcheck_failed
+            fi
+        done
+done
+if [ -f .linkcheck_failed ]; then
+    rm -f .linkcheck_failed
+    echo "ci.sh: FAIL — broken relative markdown links (see above)" >&2
+    exit 1
+fi
+
 # xla feature path: the PJRT binding needs a crates.io fetch or a
 # vendored checkout, so this is the ONE soft-skip left.
 if [ "${HELIX_CI_XLA:-0}" = "1" ]; then
@@ -71,6 +102,13 @@ if [ "${1:-}" = "bench" ]; then
     fi
     if [ ! -f BENCH_coordinator.json ]; then
         echo "ci.sh: FAIL — BENCH_coordinator.json was not emitted" >&2
+        exit 1
+    fi
+    # the adaptive-autoscaling section is a hard deliverable: a bench
+    # run that silently drops the scale-event trace is a regression
+    if ! grep -q '"autoscale_rows"' BENCH_coordinator.json; then
+        echo "ci.sh: FAIL — BENCH_coordinator.json has no" \
+             "autoscale_rows section (adaptive shard bench missing)" >&2
         exit 1
     fi
     echo "wrote $(pwd)/BENCH_coordinator.json"

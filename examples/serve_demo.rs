@@ -11,7 +11,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use helix::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
+use helix::coordinator::{AutoscaleConfig, BatchPolicy, Coordinator,
+                         CoordinatorConfig};
 use helix::genome::pore::PoreModel;
 use helix::genome::synth::{RunSpec, SequencingRun};
 use helix::runtime::meta::default_artifacts_dir;
@@ -21,10 +22,20 @@ fn main() -> Result<()> {
     let dir = default_artifacts_dir();
     let kind = BackendKind::from_env()?;
     kind.prepare(&dir)?;
-    // HELIX_SHARDS=4 fans the DNN stage out over 4 backend replicas
+    // HELIX_SHARDS=4 fans the DNN stage out over 4 backend replicas;
+    // HELIX_MAX_SHARDS=4 (plus optional HELIX_MIN_SHARDS /
+    // HELIX_AUTOSCALE_TICK_MS) lets the pool resize itself instead
     let shards = CoordinatorConfig::shards_from_env();
-    println!("backend: {} ({shards} dnn shard{})", kind.name(),
-             if shards == 1 { "" } else { "s" });
+    let autoscale = AutoscaleConfig::from_env();
+    match &autoscale {
+        Some(a) => println!("backend: {} ({shards} dnn shard{}, \
+                             autoscale {}..{})",
+                            kind.name(),
+                            if shards == 1 { "" } else { "s" },
+                            a.min_shards, a.max_shards),
+        None => println!("backend: {} ({shards} dnn shard{})", kind.name(),
+                         if shards == 1 { "" } else { "s" }),
+    }
     let pm = PoreModel::load(&format!("{dir}/pore_model.json"))?;
     let run = SequencingRun::simulate(&pm, RunSpec {
         genome_len: 1500,
@@ -46,6 +57,7 @@ fn main() -> Result<()> {
             bits: 32,
             backend: kind,
             dnn_shards: shards,
+            autoscale,
             policy,
             artifacts_dir: dir.clone(),
             ..Default::default()

@@ -1,18 +1,23 @@
 //! End-to-end coordinator benchmark: measured host base-calling
 //! throughput through the full DNN + CTC + vote pipeline (the L3 perf
-//! deliverable), plus batching-policy ablation and DNN-shard scaling
-//! (`dnn_shards` 1/2/4 with per-shard utilization). Self-contained: runs on
-//! the native quantized backend by default (artifacts are materialized
-//! on first run); HELIX_BACKEND=xla on a `--features xla` build
-//! benchmarks the PJRT engine over `make artifacts` output instead.
+//! deliverable), plus batching-policy ablation, DNN-shard scaling
+//! (`dnn_shards` 1/2/4 with per-shard utilization), and adaptive
+//! autoscaling under a bursty synthetic load (`autoscale_rows`: the
+//! scale-event trace showing the pool converging upward). Self-contained:
+//! runs on the native quantized backend by default (artifacts are
+//! materialized on first run); HELIX_BACKEND=xla on a `--features xla`
+//! build benchmarks the PJRT engine over `make artifacts` output instead.
 //!
 //!     cargo bench --bench coordinator
+//!
+//! Knob-to-paper-figure mapping for every emitted field: docs/TUNING.md.
 
 use std::time::Duration;
 
 use helix::basecall::ctc::beam_search;
 use helix::bench::timer::bench;
-use helix::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
+use helix::coordinator::{AutoscaleConfig, BatchPolicy, Coordinator,
+                         CoordinatorConfig, ScaleAction};
 use helix::genome::pore::PoreModel;
 use helix::genome::synth::{RunSpec, SequencingRun};
 use helix::runtime::meta::default_artifacts_dir;
@@ -169,13 +174,94 @@ fn main() {
             utils.join(", ")));
     }
 
-    // machine-readable summary for the perf trajectory (see ci.sh)
+    // adaptive autoscaling under a BURSTY load: reads arrive in waves
+    // with idle gaps, starting from one live shard. The deliverable is
+    // the scale-event trace (autoscale_rows): under the bursts the
+    // controller must converge the pool upward from min_shards, and the
+    // summary records where it landed. Determinism of the called output
+    // is pinned separately in tests/coordinator_stream.rs; this section
+    // is about convergence speed and final shape.
+    println!("\n== adaptive autoscaling (bursty load, {} reads) ==",
+             shard_run.reads.len());
+    let mut autoscale_rows: Vec<String> = Vec::new();
+    let autoscale_summary;
+    {
+        let acfg = AutoscaleConfig {
+            min_shards: 1,
+            max_shards: 4,
+            tick: Duration::from_millis(10),
+            high_util: 0.40,
+            low_util: 0.05,
+            up_ticks: 1,
+            down_ticks: 5,
+            cooldown_ticks: 1,
+        };
+        let t0 = std::time::Instant::now();
+        let mut coord = Coordinator::new(CoordinatorConfig {
+            model: "guppy".into(),
+            bits: 32,
+            backend: kind,
+            dnn_shards: 1,
+            decode_threads: 4,
+            policy: BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(5),
+            },
+            autoscale: Some(acfg),
+            artifacts_dir: dir.clone(),
+            ..Default::default()
+        }).unwrap();
+        let mut called = Vec::new();
+        for (i, r) in shard_run.reads.iter().enumerate() {
+            coord.submit(r);
+            called.extend(coord.drain_ready());
+            if i % 48 == 47 {
+                // inter-burst gap: long enough for utilization to dip,
+                // short enough that the next burst re-saturates
+                std::thread::sleep(Duration::from_millis(25));
+            }
+        }
+        let final_live = coord.live_dnn_shards();
+        let metrics = coord.metrics.clone();
+        called.extend(coord.finish().unwrap());
+        let dt = t0.elapsed().as_secs_f64();
+        assert_eq!(called.len(), shard_run.reads.len());
+        let events = metrics.scale_events();
+        let ups = events.iter()
+            .filter(|e| e.action == ScaleAction::Up).count();
+        let downs = events.iter()
+            .filter(|e| e.action == ScaleAction::Down).count();
+        let peak_live = events.iter()
+            .map(|e| e.live_after).max().unwrap_or(1);
+        for e in &events {
+            autoscale_rows.push(format!(
+                "{{\"t_ms\": {:.1}, \"action\": \"{}\", \
+                 \"slot\": {}, \"live\": {}}}",
+                e.at_micros as f64 / 1e3, e.action.name(), e.slot,
+                e.live_after));
+        }
+        println!("min 1 / max 4, tick 10ms: {} scale events \
+                  (+{ups}/-{downs}), peak live {peak_live}, live at \
+                  end-of-submission {final_live}, {dt:.2}s wall",
+                 events.len());
+        println!("{}", metrics.report(8));
+        autoscale_summary = format!(
+            "{{\"min_shards\": 1, \"max_shards\": 4, \
+             \"tick_ms\": 10, \"ups\": {ups}, \"downs\": {downs}, \
+             \"peak_live\": {peak_live}, \"final_live\": {final_live}, \
+             \"wall_s\": {dt:.3}}}");
+    }
+
+    // machine-readable summary for the perf trajectory (see ci.sh);
+    // field semantics are documented in docs/TUNING.md
     let json = format!(
         "{{\"bench\": \"coordinator\", \"backend\": \"{}\", \
          \"reads\": {}, \"bases\": {}, \"rows\": [{}], \
-         \"shard_rows\": [{}]}}\n",
+         \"shard_rows\": [{}], \"autoscale\": {}, \
+         \"autoscale_rows\": [{}]}}\n",
         kind.name(), run.reads.len(), total_bases, rows.join(", "),
-        shard_rows.join(", "));
+        shard_rows.join(", "), autoscale_summary,
+        autoscale_rows.join(", "));
     match std::fs::write("BENCH_coordinator.json", &json) {
         Ok(()) => println!("\nwrote BENCH_coordinator.json"),
         Err(e) => println!("\ncould not write BENCH_coordinator.json: {e}"),

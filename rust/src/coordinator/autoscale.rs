@@ -1,0 +1,459 @@
+//! Adaptive shard autoscaling: a control loop that sizes the DNN
+//! executor pool from *observed* utilization instead of a startup
+//! constant.
+//!
+//! The paper's throughput claim rests on keeping every compute array
+//! busy; the serving-side analogue is keeping every backend replica
+//! busy without parking idle ones on cores the decode/vote pools could
+//! use. A fixed `dnn_shards` forces the operator to guess that balance
+//! per workload. This module closes the loop instead:
+//!
+//! ```text
+//!        every `tick`
+//!   ┌───────────────────────────────────────────────────────────┐
+//!   │  SAMPLE   per-live-shard busy-micros delta / tick wall    │
+//!   │           + window-queue backlog fraction                 │
+//!   │                         │                                 │
+//!   │                         ▼                                 │
+//!   │  DECIDE   Controller::observe — hysteresis (consecutive   │
+//!   │           hot/cold ticks + post-event cooldown) around    │
+//!   │           high_util / low_util thresholds                 │
+//!   │                 │               │                         │
+//!   │            ScaleUp          ScaleDown                     │
+//!   │                 ▼               ▼                         │
+//!   │  ACT      spawn replica     retire the least-busy shard   │
+//!   │           into a free       (drop its queue sender; the   │
+//!   │           slot (factory     shard drains what is staged   │
+//!   │           clone / late      and exits — the same skip-    │
+//!   │           open_shard)       dead path a crash takes)      │
+//!   └───────────────────────────────────────────────────────────┘
+//! ```
+//!
+//! **Determinism contract:** scaling changes *when* windows run and on
+//! *which* replica — never what they produce. Every replica computes
+//! bit-identical `LogProbs` for a given window and the collector
+//! reassembles by `(read_id, window_idx)`, so a run under the
+//! autoscaler calls byte-identical reads to a fixed-shard run over the
+//! same input (integration-pinned in `tests/coordinator_stream.rs`).
+//!
+//! The decision core (`Controller`) is a pure function of the sampled
+//! trace — no threads, no clocks — so the unit tests below drive it
+//! with synthetic utilization traces: saturation must scale up,
+//! idleness must scale down, and oscillation around a threshold must
+//! NOT flap.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::metrics::{Metrics, ScaleAction};
+use crate::util::bounded::{Receiver, RecvTimeoutError};
+
+/// Tuning knobs for the adaptive shard controller. Construct with
+/// struct-update syntax over `Default::default()` (or `from_env`) and
+/// pass via `CoordinatorConfig::autoscale`; `normalized()` is applied
+/// before use so inverted bounds cannot wedge the pool.
+#[derive(Clone, Copy, Debug)]
+pub struct AutoscaleConfig {
+    /// floor on live shards; the controller never retires below this.
+    pub min_shards: usize,
+    /// ceiling on live shards; also the slot count (`Metrics::shards`
+    /// length) the pipeline pre-allocates.
+    pub max_shards: usize,
+    /// control-loop sampling period.
+    pub tick: Duration,
+    /// mean live-shard utilization above which a tick counts as *hot*.
+    pub high_util: f64,
+    /// mean live-shard utilization below which a tick counts as *cold*.
+    pub low_util: f64,
+    /// consecutive hot ticks required before scaling up (hysteresis).
+    pub up_ticks: u32,
+    /// consecutive cold ticks required before scaling down
+    /// (hysteresis; larger than `up_ticks` by default so the pool
+    /// grows eagerly and shrinks reluctantly).
+    pub down_ticks: u32,
+    /// ticks to hold after any scale event before reconsidering, so
+    /// the pool's reaction to its own resize settles into the samples.
+    pub cooldown_ticks: u32,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig {
+            min_shards: 1,
+            max_shards: 4,
+            tick: Duration::from_millis(50),
+            high_util: 0.75,
+            low_util: 0.20,
+            up_ticks: 2,
+            down_ticks: 4,
+            cooldown_ticks: 2,
+        }
+    }
+}
+
+impl AutoscaleConfig {
+    /// Clamp the knobs into a usable shape: bounds at least 1 with
+    /// `max >= min`, a non-zero tick, threshold order `low <= high`,
+    /// and streak lengths of at least one tick.
+    pub fn normalized(mut self) -> AutoscaleConfig {
+        self.min_shards = self.min_shards.max(1);
+        self.max_shards = self.max_shards.max(self.min_shards);
+        if self.tick.is_zero() {
+            self.tick = Duration::from_millis(1);
+        }
+        if self.low_util > self.high_util {
+            self.low_util = self.high_util;
+        }
+        self.up_ticks = self.up_ticks.max(1);
+        self.down_ticks = self.down_ticks.max(1);
+        self
+    }
+
+    /// Autoscaling selected by environment: enabled iff
+    /// `HELIX_MAX_SHARDS` parses to a positive shard ceiling;
+    /// `HELIX_MIN_SHARDS` and `HELIX_AUTOSCALE_TICK_MS` then refine
+    /// the floor and the sampling period (unparsable values keep the
+    /// defaults). Returns `None` — autoscaling off — otherwise.
+    pub fn from_env() -> Option<AutoscaleConfig> {
+        let max = std::env::var("HELIX_MAX_SHARDS").ok()?
+            .parse::<usize>().ok()
+            .filter(|&n| n >= 1)?;
+        let mut cfg = AutoscaleConfig {
+            max_shards: max,
+            ..AutoscaleConfig::default()
+        };
+        if let Some(n) = std::env::var("HELIX_MIN_SHARDS").ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+        {
+            cfg.min_shards = n;
+        }
+        if let Some(ms) = std::env::var("HELIX_AUTOSCALE_TICK_MS").ok()
+            .and_then(|s| s.parse::<u64>().ok())
+            .filter(|&ms| ms >= 1)
+        {
+            cfg.tick = Duration::from_millis(ms);
+        }
+        Some(cfg.normalized())
+    }
+}
+
+/// One control-loop observation of the pool.
+#[derive(Clone, Copy, Debug)]
+pub struct Sample {
+    /// live shard count when the sample was taken.
+    pub live: usize,
+    /// mean per-live-shard busy fraction over the last tick (0–1).
+    pub mean_util: f64,
+    /// window-queue occupancy fraction (0–1): the pipeline's
+    /// backpressure point. A saturated window queue is treated as hot
+    /// even when shard utilization reads low (e.g. the tick landed
+    /// between batches), because blocked `submit()` callers are the
+    /// symptom the autoscaler exists to fix.
+    pub backlog: f64,
+}
+
+/// What the controller wants done after an observation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Decision {
+    /// spawn one more shard (pool below `max_shards` and hot).
+    ScaleUp,
+    /// retire one shard (pool above `min_shards` and cold).
+    ScaleDown,
+    /// leave the pool alone.
+    Hold,
+}
+
+/// Pure decision core: feed it one `Sample` per tick, act on the
+/// returned `Decision`. Holds only the hysteresis state (hot/cold
+/// streak lengths and the post-event cooldown), so identical traces
+/// always produce identical decision sequences.
+pub struct Controller {
+    cfg: AutoscaleConfig,
+    hot_streak: u32,
+    cold_streak: u32,
+    cooldown: u32,
+}
+
+impl Controller {
+    /// Controller with fresh hysteresis state (cfg is normalized here).
+    pub fn new(cfg: AutoscaleConfig) -> Controller {
+        Controller {
+            cfg: cfg.normalized(),
+            hot_streak: 0,
+            cold_streak: 0,
+            cooldown: 0,
+        }
+    }
+
+    /// Observe one tick and decide. Hysteresis rules:
+    /// * during cooldown, always `Hold` (and streaks reset, so the
+    ///   post-resize transient cannot count toward the next event);
+    /// * a *hot* tick (mean util above `high_util`, or the window
+    ///   queue ≥95% full) extends the hot streak and resets the cold
+    ///   one — and vice versa for *cold* (util below `low_util` while
+    ///   the backlog is under half); a tick that is neither resets
+    ///   both, which is what stops threshold oscillation from ever
+    ///   accumulating a streak (no flapping);
+    /// * `ScaleUp` needs `up_ticks` consecutive hot ticks and headroom
+    ///   below `max_shards`; `ScaleDown` needs `down_ticks` cold ticks
+    ///   and slack above `min_shards`; both start the cooldown.
+    pub fn observe(&mut self, s: Sample) -> Decision {
+        if self.cooldown > 0 {
+            self.cooldown -= 1;
+            self.hot_streak = 0;
+            self.cold_streak = 0;
+            return Decision::Hold;
+        }
+        let hot = s.mean_util > self.cfg.high_util || s.backlog >= 0.95;
+        let cold = !hot
+            && s.mean_util < self.cfg.low_util
+            && s.backlog < 0.5;
+        if hot {
+            self.hot_streak += 1;
+            self.cold_streak = 0;
+        } else if cold {
+            self.cold_streak += 1;
+            self.hot_streak = 0;
+        } else {
+            self.hot_streak = 0;
+            self.cold_streak = 0;
+        }
+        if hot && self.hot_streak >= self.cfg.up_ticks
+            && s.live < self.cfg.max_shards
+        {
+            self.hot_streak = 0;
+            self.cooldown = self.cfg.cooldown_ticks;
+            return Decision::ScaleUp;
+        }
+        if cold && self.cold_streak >= self.cfg.down_ticks
+            && s.live > self.cfg.min_shards
+        {
+            self.cold_streak = 0;
+            self.cooldown = self.cfg.cooldown_ticks;
+            return Decision::ScaleDown;
+        }
+        Decision::Hold
+    }
+}
+
+/// What the control loop needs from the shard-pool host. Implemented
+/// by the coordinator's pool internals; kept as a trait so the loop —
+/// and its failure modes — can be exercised against a fake pool
+/// without spinning up backends.
+pub trait ShardPool: Send + Sync {
+    /// total slot count (== `max_shards`).
+    fn slots(&self) -> usize;
+    /// slot ids with a live shard, ascending.
+    fn live_slots(&self) -> Vec<usize>;
+    /// cumulative forward-pass busy-micros of the slot's shard.
+    fn busy_micros(&self, slot: usize) -> u64;
+    /// window-queue occupancy fraction (0–1).
+    fn backlog(&self) -> f64;
+    /// spawn a shard into a free slot; `None` when no slot is free.
+    fn scale_up(&self) -> Option<usize>;
+    /// retire the slot's shard (close its queue). `false` if already
+    /// free.
+    fn retire(&self, slot: usize) -> bool;
+}
+
+/// The control loop the coordinator spawns when
+/// `CoordinatorConfig::autoscale` is set: sample → decide → act, every
+/// `cfg.tick`, until `stop` is signalled (or its sender drops) or the
+/// pool collapses. Scale-up/-down events are appended to
+/// `metrics.scale_events()`; the scale-down victim is the live shard
+/// with the smallest busy-delta this tick (ties retire the highest
+/// slot id, keeping slot 0 — the tail-batch magnet — alive longest).
+pub fn run(pool: Arc<dyn ShardPool>, cfg: AutoscaleConfig,
+           metrics: Arc<Metrics>, stop: Receiver<()>) {
+    let cfg = cfg.normalized();
+    let mut ctl = Controller::new(cfg);
+    let n_slots = pool.slots();
+    let mut prev_busy: Vec<u64> =
+        (0..n_slots).map(|s| pool.busy_micros(s)).collect();
+    let mut last = Instant::now();
+    loop {
+        match stop.recv_timeout(cfg.tick) {
+            Err(RecvTimeoutError::Timeout) => {}
+            // explicit stop or the coordinator dropped the stop sender
+            Ok(()) | Err(RecvTimeoutError::Disconnected) => return,
+        }
+        let now = Instant::now();
+        let wall = now.duration_since(last).as_micros().max(1) as f64;
+        last = now;
+        let live = pool.live_slots();
+        if live.is_empty() {
+            return; // every replica failed: nothing left to control
+        }
+        let mut utils: Vec<(usize, f64)> = Vec::with_capacity(live.len());
+        for &slot in &live {
+            let busy = pool.busy_micros(slot);
+            let delta = busy.saturating_sub(prev_busy[slot]);
+            prev_busy[slot] = busy;
+            utils.push((slot, (delta as f64 / wall).min(1.0)));
+        }
+        let mean_util = utils.iter().map(|(_, u)| *u).sum::<f64>()
+            / utils.len() as f64;
+        let sample = Sample {
+            live: live.len(),
+            mean_util,
+            backlog: pool.backlog().clamp(0.0, 1.0),
+        };
+        match ctl.observe(sample) {
+            Decision::ScaleUp => {
+                if let Some(slot) = pool.scale_up() {
+                    // refresh the baseline so a recycled slot's old
+                    // cumulative count does not read as a burst
+                    prev_busy[slot] = pool.busy_micros(slot);
+                    metrics.record_scale(ScaleAction::Up, slot,
+                                         pool.live_slots().len());
+                }
+            }
+            Decision::ScaleDown => {
+                let mut victim = utils[0];
+                for &(slot, u) in &utils[1..] {
+                    if u < victim.1 || (u <= victim.1 && slot > victim.0) {
+                        victim = (slot, u);
+                    }
+                }
+                if pool.retire(victim.0) {
+                    metrics.record_scale(ScaleAction::Down, victim.0,
+                                         pool.live_slots().len());
+                }
+            }
+            Decision::Hold => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_cfg() -> AutoscaleConfig {
+        AutoscaleConfig {
+            min_shards: 1,
+            max_shards: 4,
+            high_util: 0.75,
+            low_util: 0.25,
+            up_ticks: 2,
+            down_ticks: 3,
+            cooldown_ticks: 1,
+            ..AutoscaleConfig::default()
+        }
+    }
+
+    fn s(live: usize, util: f64) -> Sample {
+        Sample { live, mean_util: util, backlog: 0.0 }
+    }
+
+    #[test]
+    fn normalized_clamps_degenerate_config() {
+        let c = AutoscaleConfig {
+            min_shards: 0,
+            max_shards: 0,
+            tick: Duration::ZERO,
+            high_util: 0.3,
+            low_util: 0.9, // inverted
+            up_ticks: 0,
+            down_ticks: 0,
+            cooldown_ticks: 0,
+        }.normalized();
+        assert_eq!(c.min_shards, 1);
+        assert_eq!(c.max_shards, 1);
+        assert!(!c.tick.is_zero());
+        assert!(c.low_util <= c.high_util);
+        assert_eq!(c.up_ticks, 1);
+        assert_eq!(c.down_ticks, 1);
+        // min above max: max follows min
+        let c2 = AutoscaleConfig {
+            min_shards: 8,
+            max_shards: 2,
+            ..AutoscaleConfig::default()
+        }.normalized();
+        assert_eq!(c2.min_shards, 8);
+        assert_eq!(c2.max_shards, 8);
+    }
+
+    #[test]
+    fn saturation_trace_scales_up_after_streak() {
+        let mut ctl = Controller::new(fast_cfg());
+        // tick 1 hot: streak too short
+        assert_eq!(ctl.observe(s(1, 0.95)), Decision::Hold);
+        // tick 2 hot: streak reached -> up
+        assert_eq!(ctl.observe(s(1, 0.98)), Decision::ScaleUp);
+        // cooldown tick holds even though still saturated
+        assert_eq!(ctl.observe(s(2, 0.97)), Decision::Hold);
+        // streak rebuilds after cooldown
+        assert_eq!(ctl.observe(s(2, 0.96)), Decision::Hold);
+        assert_eq!(ctl.observe(s(2, 0.99)), Decision::ScaleUp);
+    }
+
+    #[test]
+    fn saturated_backlog_counts_as_hot_even_with_idle_shards() {
+        let mut ctl = Controller::new(fast_cfg());
+        // shards read idle (tick landed between batches) but submit()
+        // is blocked on a full window queue: that is saturation
+        let jam = Sample { live: 1, mean_util: 0.0, backlog: 1.0 };
+        assert_eq!(ctl.observe(jam), Decision::Hold);
+        assert_eq!(ctl.observe(jam), Decision::ScaleUp);
+    }
+
+    #[test]
+    fn idle_trace_scales_down_after_longer_streak() {
+        let mut ctl = Controller::new(fast_cfg());
+        assert_eq!(ctl.observe(s(3, 0.05)), Decision::Hold);
+        assert_eq!(ctl.observe(s(3, 0.02)), Decision::Hold);
+        assert_eq!(ctl.observe(s(3, 0.04)), Decision::ScaleDown);
+        // cooldown, then the streak must rebuild from zero
+        assert_eq!(ctl.observe(s(2, 0.01)), Decision::Hold);
+        assert_eq!(ctl.observe(s(2, 0.01)), Decision::Hold);
+        assert_eq!(ctl.observe(s(2, 0.02)), Decision::Hold);
+        assert_eq!(ctl.observe(s(2, 0.03)), Decision::ScaleDown);
+    }
+
+    #[test]
+    fn oscillation_around_threshold_never_flaps() {
+        // utilization bouncing across high_util every other tick: the
+        // neither-hot-nor-cold ticks reset the streak, so a controller
+        // needing 2 consecutive hot ticks must never fire.
+        let mut ctl = Controller::new(fast_cfg());
+        for _ in 0..50 {
+            assert_eq!(ctl.observe(s(2, 0.80)), Decision::Hold); // hot
+            assert_eq!(ctl.observe(s(2, 0.50)), Decision::Hold); // mid
+        }
+        // same story around low_util: cold streaks keep resetting
+        for _ in 0..50 {
+            assert_eq!(ctl.observe(s(2, 0.20)), Decision::Hold); // cold
+            assert_eq!(ctl.observe(s(2, 0.50)), Decision::Hold); // mid
+        }
+    }
+
+    #[test]
+    fn bounds_cap_scaling_in_both_directions() {
+        let mut ctl = Controller::new(fast_cfg());
+        // at max_shards even a sustained-hot trace holds
+        for _ in 0..10 {
+            assert_eq!(ctl.observe(s(4, 1.0)), Decision::Hold,
+                       "must not scale past max_shards");
+        }
+        // at min_shards even a sustained-cold trace holds
+        let mut ctl = Controller::new(fast_cfg());
+        for _ in 0..10 {
+            assert_eq!(ctl.observe(s(1, 0.0)), Decision::Hold,
+                       "must not retire below min_shards");
+        }
+    }
+
+    #[test]
+    fn backlogged_cold_utilization_does_not_scale_down() {
+        // util is low but the window queue is half-full-or-more: work
+        // is arriving faster than batches launch, so shrinking now
+        // would amplify the jam. Cold requires an empty-ish backlog.
+        let mut ctl = Controller::new(fast_cfg());
+        let draining = Sample { live: 3, mean_util: 0.1, backlog: 0.6 };
+        for _ in 0..10 {
+            assert_eq!(ctl.observe(draining), Decision::Hold);
+        }
+    }
+}

@@ -30,6 +30,20 @@ pub struct Batch<T> {
     pub full: bool,
 }
 
+impl<T> Batch<T> {
+    /// A *tail* batch: launched by the deadline before filling up.
+    /// The coordinator routes these differently from full batches —
+    /// full batches go to the least-loaded shard (spread the heavy
+    /// work), tail batches go to the *busiest* live shard, so a
+    /// trickle of small deadline-triggered launches rides along on the
+    /// replica that is already hot instead of fragmenting the pool and
+    /// keeping idle shards from being retired (or, under the
+    /// autoscaler, from staying retired).
+    pub fn is_tail(&self) -> bool {
+        !self.full
+    }
+}
+
 /// Pulls batches off a bounded channel according to the policy. Returns
 /// None when the channel is closed and drained. Because the feeding
 /// channel is bounded, a batcher that falls behind backpressures
@@ -101,6 +115,7 @@ mod tests {
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.items, vec![0, 1, 2, 3]);
         assert!(batch.full);
+        assert!(!batch.is_tail());
         assert_eq!(b.next_batch().unwrap().items, vec![4, 5, 6, 7]);
     }
 
@@ -115,6 +130,7 @@ mod tests {
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.items, vec![1, 2]);
         assert!(!batch.full);
+        assert!(batch.is_tail(), "deadline-triggered launch is a tail");
         assert!(batch.oldest_wait >= Duration::from_millis(9));
     }
 

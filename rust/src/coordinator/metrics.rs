@@ -2,7 +2,8 @@
 //! fixed-bucket latency histogram for per-read end-to-end latency
 //! (submit -> CalledRead emitted by the collector).
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::time::Instant;
 
 /// Buckets in the latency histogram: bucket `i` covers `[2^i, 2^(i+1))`
@@ -91,9 +92,13 @@ impl Default for LatencyHistogram {
     }
 }
 
-/// Counters for one DNN executor shard (one backend replica). All of
-/// them are written by exactly one shard thread and read by `report()`
-/// / the benches, so `Relaxed` ordering is sufficient.
+/// Counters for one DNN executor shard (one backend replica). The
+/// numeric counters are written by exactly one shard thread and read by
+/// `report()` / the benches, so `Relaxed` ordering is sufficient. With
+/// the autoscaler enabled a slot can outlive its first shard: the
+/// lifecycle flags record whether the slot was ever spawned and whether
+/// it is currently retired, and the counters stay cumulative across a
+/// retire/respawn of the same slot (`spawns` counts the generations).
 #[derive(Debug, Default)]
 pub struct ShardStats {
     /// batches this shard executed.
@@ -102,6 +107,68 @@ pub struct ShardStats {
     pub windows: AtomicU64,
     /// wall-micros this shard spent inside the backend forward pass.
     pub busy_micros: AtomicU64,
+    /// a shard thread was launched into this slot at least once.
+    pub spawned: AtomicBool,
+    /// the slot is currently retired (scaled down or spawn failed).
+    pub retired: AtomicBool,
+    /// shard generations launched into this slot (1 for a fixed pool).
+    pub spawns: AtomicU64,
+}
+
+impl ShardStats {
+    /// Record a shard (re)launch into this slot.
+    pub fn mark_spawned(&self) {
+        self.spawned.store(true, Ordering::Relaxed);
+        self.retired.store(false, Ordering::Relaxed);
+        self.spawns.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record this slot's shard retiring (scale-down or spawn failure).
+    pub fn mark_retired(&self) {
+        self.retired.store(true, Ordering::Relaxed);
+    }
+
+    /// Spawned and not retired.
+    pub fn is_live(&self) -> bool {
+        self.spawned.load(Ordering::Relaxed)
+            && !self.retired.load(Ordering::Relaxed)
+    }
+}
+
+/// What an autoscale event did to the shard pool.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleAction {
+    /// a new shard was spawned into the slot.
+    Up,
+    /// the slot's shard was retired (queue closed, drained gracefully).
+    Down,
+    /// a scale-up was attempted but the replica failed to open/warm;
+    /// the slot was retired again without ever serving a batch.
+    SpawnFailed,
+}
+
+impl ScaleAction {
+    /// Stable lowercase name for logs and the bench JSON.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScaleAction::Up => "up",
+            ScaleAction::Down => "down",
+            ScaleAction::SpawnFailed => "spawn-failed",
+        }
+    }
+}
+
+/// One entry in the autoscaler's scale-event log.
+#[derive(Clone, Copy, Debug)]
+pub struct ScaleEvent {
+    /// µs since the pipeline's metrics epoch (`Metrics` construction).
+    pub at_micros: u64,
+    /// what happened.
+    pub action: ScaleAction,
+    /// the slot acted on.
+    pub slot: usize,
+    /// live shard count after the event was applied.
+    pub live_after: usize,
 }
 
 /// Aggregate pipeline telemetry shared by every stage thread.
@@ -130,8 +197,13 @@ pub struct Metrics {
     pub vote_micros: AtomicU64,
     /// per-read end-to-end latency, submit() -> CalledRead emitted.
     pub read_latency: LatencyHistogram,
-    /// per-shard DNN counters; length = the pipeline's `dnn_shards`.
+    /// per-shard DNN counters, one per shard *slot*: the pipeline's
+    /// `dnn_shards` for a fixed pool, `max_shards` under the
+    /// autoscaler (slots the autoscaler never filled stay all-zero and
+    /// unspawned).
     pub shards: Vec<ShardStats>,
+    /// autoscaler scale-event log (empty for a fixed shard pool).
+    scale_events: Mutex<Vec<ScaleEvent>>,
 }
 
 impl Default for Metrics {
@@ -157,7 +229,31 @@ impl Metrics {
             vote_micros: AtomicU64::new(0),
             read_latency: LatencyHistogram::default(),
             shards: (0..n.max(1)).map(|_| ShardStats::default()).collect(),
+            scale_events: Mutex::new(Vec::new()),
         }
+    }
+
+    /// Append a scale event, stamped with µs since the metrics epoch.
+    pub fn record_scale(&self, action: ScaleAction, slot: usize,
+                        live_after: usize) {
+        let at_micros = self.start.elapsed().as_micros() as u64;
+        self.scale_events.lock().unwrap().push(ScaleEvent {
+            at_micros,
+            action,
+            slot,
+            live_after,
+        });
+    }
+
+    /// Snapshot of the autoscaler's scale-event log, in order.
+    pub fn scale_events(&self) -> Vec<ScaleEvent> {
+        self.scale_events.lock().unwrap().clone()
+    }
+
+    /// Slots currently live (spawned and not retired). For a fixed
+    /// pool this is simply the shard count.
+    pub fn live_shards(&self) -> usize {
+        self.shards.iter().filter(|s| s.is_live()).count()
     }
 
     /// Bump a counter (any of the public `AtomicU64` fields, including
@@ -237,11 +333,42 @@ impl Metrics {
                                 self.dnn_stage_windows_per_s()));
         }
         if self.shards.len() > 1 {
-            let utils: Vec<String> = self.shard_utilization()
-                .iter()
-                .map(|u| format!("{u:.2}"))
+            // one row per slot that ever ran a shard, in a consistent
+            // percent format; retired slots keep their row, explicitly
+            // tagged, instead of silently vanishing from the split.
+            // (Metrics built outside a coordinator never mark spawns,
+            // so an all-unspawned table prints every slot, as before.)
+            let any_spawned = self.shards.iter()
+                .any(|st| st.spawned.load(Ordering::Relaxed));
+            let utils = self.shard_utilization();
+            let rows: Vec<String> = self.shards.iter().enumerate()
+                .filter(|(_, st)| {
+                    !any_spawned || st.spawned.load(Ordering::Relaxed)
+                })
+                .map(|(i, st)| {
+                    let pct = utils[i] * 100.0;
+                    if st.retired.load(Ordering::Relaxed) {
+                        format!("{i}:{pct:.1}%(retired)")
+                    } else {
+                        format!("{i}:{pct:.1}%")
+                    }
+                })
                 .collect();
-            s.push_str(&format!("  shard-util [{}]", utils.join(" ")));
+            s.push_str(&format!("  shard-util [{}]", rows.join(" ")));
+        }
+        let events = self.scale_events.lock().unwrap();
+        if !events.is_empty() {
+            let ups = events.iter()
+                .filter(|e| e.action == ScaleAction::Up).count();
+            let downs = events.iter()
+                .filter(|e| e.action == ScaleAction::Down).count();
+            let fails = events.iter()
+                .filter(|e| e.action == ScaleAction::SpawnFailed).count();
+            s.push_str(&format!("  autoscale +{ups}/-{downs} live {}",
+                                self.live_shards()));
+            if fails > 0 {
+                s.push_str(&format!(" ({fails} spawn-failed)"));
+            }
         }
         s
     }
@@ -389,6 +516,67 @@ mod tests {
         assert!(r.contains("dnn-stage"), "{r}");
         let single = Metrics::default();
         assert!(!single.report(32).contains("shard-util"));
+    }
+
+    #[test]
+    fn shard_lifecycle_flags_track_spawn_and_retire() {
+        let st = ShardStats::default();
+        assert!(!st.is_live(), "unspawned slot is not live");
+        st.mark_spawned();
+        assert!(st.is_live());
+        assert_eq!(st.spawns.load(Ordering::Relaxed), 1);
+        st.mark_retired();
+        assert!(!st.is_live());
+        // a respawn into the recycled slot revives it (generation 2)
+        st.mark_spawned();
+        assert!(st.is_live());
+        assert_eq!(st.spawns.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn scale_events_accumulate_in_order() {
+        let m = Metrics::with_shards(4);
+        assert!(m.scale_events().is_empty());
+        m.record_scale(ScaleAction::Up, 1, 2);
+        m.record_scale(ScaleAction::Down, 1, 1);
+        let ev = m.scale_events();
+        assert_eq!(ev.len(), 2);
+        assert_eq!(ev[0].action, ScaleAction::Up);
+        assert_eq!(ev[0].slot, 1);
+        assert_eq!(ev[0].live_after, 2);
+        assert_eq!(ev[1].action, ScaleAction::Down);
+        assert!(ev[0].at_micros <= ev[1].at_micros);
+        assert_eq!(ScaleAction::SpawnFailed.name(), "spawn-failed");
+    }
+
+    #[test]
+    fn report_lists_retired_shards_with_percent_format() {
+        let m = Metrics::with_shards(3);
+        m.shards[0].mark_spawned();
+        m.shards[1].mark_spawned();
+        m.shards[1].mark_retired();
+        m.add(&m.shards[0].busy_micros, 100);
+        let r = m.report(32);
+        assert!(r.contains("shard-util ["), "{r}");
+        // spawned slots print a percent; the retired one stays listed
+        assert!(r.contains("0:"), "{r}");
+        assert!(r.contains("%(retired)"), "{r}");
+        // slot 2 was never spawned: no row for it
+        assert!(!r.contains("2:"), "{r}");
+        assert_eq!(m.live_shards(), 1);
+    }
+
+    #[test]
+    fn report_appends_autoscale_summary_when_events_exist() {
+        let m = Metrics::with_shards(2);
+        assert!(!m.report(32).contains("autoscale"));
+        m.shards[0].mark_spawned();
+        m.shards[1].mark_spawned();
+        m.record_scale(ScaleAction::Up, 1, 2);
+        let r = m.report(32);
+        assert!(r.contains("autoscale +1/-0 live 2"), "{r}");
+        m.record_scale(ScaleAction::SpawnFailed, 1, 1);
+        assert!(m.report(32).contains("spawn-failed"));
     }
 
     #[test]

@@ -7,13 +7,17 @@
 //!
 #![doc = include_str!("README.md")]
 
+pub mod autoscale;
 pub mod batcher;
 pub mod collector;
 pub mod metrics;
 pub mod server;
 
+pub use autoscale::{AutoscaleConfig, Controller, Decision, Sample,
+                    ShardPool};
 pub use batcher::{Batch, Batcher, BatchPolicy};
 pub use collector::{Collector, CollectorConfig, DecodedWindow,
                     ReadRegistry};
-pub use metrics::{LatencyHistogram, Metrics, ShardStats};
+pub use metrics::{LatencyHistogram, Metrics, ScaleAction, ScaleEvent,
+                  ShardStats};
 pub use server::{CalledRead, Coordinator, CoordinatorConfig};

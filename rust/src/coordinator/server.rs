@@ -12,15 +12,24 @@
 //! `finish()` is a thin drain-the-rest shim for batch callers. See
 //! `coordinator/README.md` for the stage/queue map.
 //!
-//! The DNN stage fans out over `CoordinatorConfig::dnn_shards` backend
-//! replicas: the batcher dispatches each finished batch to the
-//! least-loaded shard queue, and because every replica computes
-//! identical `LogProbs` for a given window (the native weights are
-//! deterministic; windows never see their batch neighbours), the
-//! called result set is byte-identical for any shard count (mid-run
+//! The DNN stage fans out over a pool of backend replicas reached
+//! through a [`QueueSet`] of per-shard queues. Dispatch is
+//! *batch-size-aware*: full (size-triggered) batches go to the
+//! least-loaded live shard, small deadline-triggered tail batches go to
+//! the *busiest* live shard so the heavy batches stay unsplit and idle
+//! replicas stay genuinely idle. With `CoordinatorConfig::autoscale`
+//! set, a controller thread (`coordinator::autoscale`) resizes the live
+//! pool between `min_shards` and `max_shards` from observed
+//! utilization — spawning replicas through the [`ShardFactory`] and
+//! retiring them by closing their queue so they drain out through the
+//! same skip-dead dispatch a crashed replica exercises. Because every
+//! replica computes identical `LogProbs` for a given window (windows
+//! never see their batch neighbours), the called result set is
+//! byte-identical for any shard count, fixed or adaptive (mid-run
 //! emission order remains completion order, as with one shard).
 
-use std::sync::Arc;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -29,21 +38,24 @@ use anyhow::Result;
 use crate::basecall::ctc::{beam_search, LogProbs};
 use crate::genome::dataset::windows_from_read;
 use crate::genome::synth::Read;
-use crate::runtime::{Backend, BackendKind, NativeBackend};
-use crate::util::bounded::{bounded, send_least_loaded, send_round_robin,
+use crate::runtime::{Backend, BackendKind, ShardFactory};
+use crate::util::bounded::{bounded, send_round_robin, QueueSet,
                            Receiver, Sender};
 
+use super::autoscale::{self, AutoscaleConfig, ShardPool};
 use super::batcher::{Batcher, BatchPolicy};
 use super::collector::{Collector, CollectorConfig, DecodedWindow,
                        ReadRegistry};
-use super::metrics::Metrics;
+use super::metrics::{Metrics, ScaleAction};
 
 /// Batches a shard can hold QUEUED ahead of its forward pass (the
 /// executing batch has already been dequeued): one staged batch while
 /// one executes — classic double buffering — keeps a replica busy
 /// without parking a deep backlog of signal memory behind a slow shard
 /// (the window queue is the intended buffering point — it
-/// backpressures `submit()`).
+/// backpressures `submit()`). Depth 1 is also what makes retirement
+/// cheap: a closed queue drains at most one staged batch before the
+/// shard thread sees the disconnect and exits.
 const SHARD_QUEUE_DEPTH: usize = 1;
 
 /// Everything the `Coordinator` needs to open a pipeline: model
@@ -62,9 +74,11 @@ pub struct CoordinatorConfig {
     /// CTC beam width used by the decode pool.
     pub beam_width: usize,
     /// number of DNN executor shards. Each shard owns an independent
-    /// `Backend` replica (in-memory clone for native, `open_shard` for
-    /// non-`Send` backends) fed through its own bounded batch queue by
-    /// least-loaded dispatch; 1 reproduces the single-owner layout.
+    /// `Backend` replica (built by the [`ShardFactory`]: an in-memory
+    /// clone for native, `open_shard` in-thread for non-`Send`
+    /// backends) fed through its own bounded batch queue; 1 reproduces
+    /// the single-owner layout. With `autoscale` set this is only the
+    /// *initial* live count (clamped into `[min_shards, max_shards]`).
     /// The called result set is byte-identical for any value.
     pub dnn_shards: usize,
     /// CTC decode worker count.
@@ -76,6 +90,12 @@ pub struct CoordinatorConfig {
     pub queue_cap: usize,
     /// size-or-deadline batching policy for the DNN stage.
     pub policy: BatchPolicy,
+    /// adaptive shard autoscaling: `None` (default) pins the pool at
+    /// `dnn_shards` for the whole run; `Some(cfg)` starts a controller
+    /// thread that resizes the live pool between `cfg.min_shards` and
+    /// `cfg.max_shards` from observed utilization (see
+    /// `coordinator::autoscale`). Scaling never changes called output.
+    pub autoscale: Option<AutoscaleConfig>,
     /// artifact directory (meta.json + weights; the native backend
     /// falls back to its builtin model when absent).
     pub artifacts_dir: String,
@@ -94,6 +114,7 @@ impl Default for CoordinatorConfig {
             vote_threads: 2,
             queue_cap: 256,
             policy: BatchPolicy::default(),
+            autoscale: None,
             artifacts_dir: crate::runtime::meta::default_artifacts_dir(),
         }
     }
@@ -143,6 +164,171 @@ struct DecodeJob {
     lp: LogProbs,
 }
 
+/// Shard-pool state shared by everyone who touches the pool: the
+/// batcher dispatches through `queues`, the autoscaler (when enabled)
+/// adds and retires slots through the [`ShardPool`] impl, and
+/// `Coordinator::finish` drains `handles`. Shard threads hold only the
+/// individual Arcs they need (factory, queue set, metrics) — never
+/// this struct — so teardown has no reference cycles: once the
+/// controller is joined and the coordinator drops its host Arc, the
+/// host's window/decode senders drop and the stage-by-stage disconnect
+/// cascade proceeds exactly as in the fixed-pool design.
+struct ShardHost {
+    factory: Arc<ShardFactory>,
+    model: String,
+    bits: u32,
+    queues: Arc<QueueSet<ShardBatch>>,
+    dec_txs: Vec<Sender<DecodeJob>>,
+    metrics: Arc<Metrics>,
+    handles: Mutex<Vec<JoinHandle<Result<()>>>>,
+    window_tx: Sender<WindowJob>,
+    window_cap: usize,
+}
+
+impl ShardHost {
+    /// Spawn the shard thread that owns slot `slot`'s backend replica.
+    /// The replica is opened + warmed *inside* the thread (it may not
+    /// be `Send`). `ready` carries the outcome for init-time shards so
+    /// `Coordinator::new` fails fast; autoscaled spawns pass `None` —
+    /// on failure they retire *their own installation* of the slot
+    /// (generation-checked, so a slow failing spawn can never close a
+    /// successor that recycled the slot) and log a `SpawnFailed` scale
+    /// event, degrading the pool instead of failing the run.
+    fn launch(&self, slot: usize, generation: u64,
+              rx: Receiver<ShardBatch>,
+              ready: Option<Sender<Result<()>>>) {
+        self.metrics.shards[slot].mark_spawned();
+        let factory = self.factory.clone();
+        let queues = self.queues.clone();
+        let dec = self.dec_txs.clone();
+        let m = self.metrics.clone();
+        let model = self.model.clone();
+        let bits = self.bits;
+        let handle = std::thread::spawn(move || -> Result<()> {
+            let opened = factory.replica(slot)
+                .and_then(|mut b| b.warm(&model, bits).map(|()| b));
+            let mut backend = match opened {
+                Ok(b) => {
+                    if let Some(tx) = &ready {
+                        let _ = tx.send(Ok(()));
+                    }
+                    b
+                }
+                Err(err) => {
+                    match ready {
+                        Some(tx) => {
+                            let _ = tx.send(Err(err));
+                        }
+                        None => {
+                            // only touch the slot if this thread's
+                            // installation still owns it — it may have
+                            // been retired (and even recycled by a
+                            // healthy successor) while we were opening
+                            if queues.retire_generation(slot,
+                                                        generation) {
+                                m.shards[slot].mark_retired();
+                                let live = queues.live_count();
+                                m.record_scale(ScaleAction::SpawnFailed,
+                                               slot, live);
+                            }
+                        }
+                    }
+                    return Ok(());
+                }
+            };
+            drop(ready); // init handshake complete
+            // spread the decode round-robin start points so shards
+            // do not gang up on decode worker 0
+            let mut rr = slot;
+            let stats = &m.shards[slot];
+            while let Ok(batch) = rx.recv() {
+                let t0 = Instant::now();
+                let lps = backend.run_windows(&model, bits, &batch.sigs)?;
+                let busy = t0.elapsed().as_micros() as u64;
+                let n_items = batch.keys.len();
+                m.add(&m.batches, 1);
+                m.add(&m.batch_items, n_items as u64);
+                if batch.full {
+                    m.add(&m.full_batches, 1);
+                }
+                m.add(&m.dnn_micros, busy);
+                m.add(&stats.batches, 1);
+                m.add(&stats.windows, n_items as u64);
+                m.add(&stats.busy_micros, busy);
+                for ((read_id, window_idx), lp) in
+                    batch.keys.into_iter().zip(lps)
+                {
+                    // skip-over-backlogged round-robin; if every
+                    // decode queue is gone the pipeline has
+                    // collapsed downstream — stop burning
+                    // inference on it
+                    if !send_round_robin(&dec, &mut rr, DecodeJob {
+                        read_id,
+                        window_idx,
+                        lp,
+                    }) {
+                        anyhow::bail!("decode stage disconnected \
+                                       mid-run (downstream failure)");
+                    }
+                }
+            }
+            Ok(())
+        });
+        self.handles.lock().unwrap().push(handle);
+    }
+}
+
+impl ShardPool for ShardHost {
+    fn slots(&self) -> usize {
+        self.queues.slots()
+    }
+
+    fn live_slots(&self) -> Vec<usize> {
+        self.queues.live_slots()
+    }
+
+    fn busy_micros(&self, slot: usize) -> u64 {
+        self.metrics.shards[slot].busy_micros.load(Ordering::Relaxed)
+    }
+
+    fn backlog(&self) -> f64 {
+        self.window_tx.len() as f64 / self.window_cap.max(1) as f64
+    }
+
+    fn scale_up(&self) -> Option<usize> {
+        // add() fails once the batcher has sealed the set at shutdown
+        // (or total pool collapse), so a racing scale-up can never
+        // install a queue that nobody will close again
+        let (tx, rx) = bounded::<ShardBatch>(SHARD_QUEUE_DEPTH);
+        let slot = self.queues.add(tx)?;
+        let generation = self.queues.generation(slot);
+        self.launch(slot, generation, rx, None);
+        Some(slot)
+    }
+
+    fn retire(&self, slot: usize) -> bool {
+        if self.queues.retire(slot) {
+            self.metrics.shards[slot].mark_retired();
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Live slots ranked busiest-first for tail-batch routing: descending
+/// cumulative forward-pass micros, ties toward the lower slot id so the
+/// ranking is total. Small deadline-triggered batches consistently pile
+/// onto the hottest replica, leaving the rest free to take full batches
+/// (and, under the autoscaler, free to be retired).
+fn rank_busiest(m: &Metrics, qs: &QueueSet<ShardBatch>) -> Vec<usize> {
+    let mut live = qs.live_slots();
+    live.sort_by_key(|&s| {
+        (u64::MAX - m.shards[s].busy_micros.load(Ordering::Relaxed), s)
+    });
+    live
+}
+
 /// Staged streaming pipeline coordinator. Construct, `submit` reads, pull
 /// completed reads mid-run with `try_recv`/`recv_timeout`, then `finish`
 /// to drain the rest.
@@ -152,7 +338,9 @@ pub struct Coordinator {
     registry: Arc<ReadRegistry>,
     tx_windows: Option<Sender<WindowJob>>,
     batcher_thread: Option<JoinHandle<()>>,
-    shard_threads: Vec<JoinHandle<Result<()>>>,
+    host: Option<Arc<ShardHost>>,
+    autoscale_stop: Option<Sender<()>>,
+    autoscale_thread: Option<JoinHandle<()>>,
     decode_threads: Vec<JoinHandle<()>>,
     collector: Option<Collector>,
     /// live pipeline telemetry (readable mid-run; see `Metrics`).
@@ -160,10 +348,12 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Open the full pipeline: probe the artifact metadata, spawn the
-    /// batcher, the DNN shard pool, the decode pool, and the collector,
-    /// and block until every shard's backend has opened and warmed (so
-    /// compile/load failures surface here, not mid-run).
+    /// Open the full pipeline: probe the artifact metadata, build the
+    /// shard factory, spawn the batcher, the DNN shard pool, the decode
+    /// pool, the collector, and (when configured) the autoscale
+    /// controller, and block until every *initial* shard's backend has
+    /// opened and warmed (so compile/load failures surface here, not
+    /// mid-run).
     pub fn new(cfg: CoordinatorConfig) -> Result<Coordinator> {
         // validate metadata on the caller thread for early errors
         let meta = cfg.backend.probe_meta(&cfg.artifacts_dir)?;
@@ -171,15 +361,29 @@ impl Coordinator {
         let batches = meta.batches(&cfg.model, cfg.bits);
         anyhow::ensure!(!batches.is_empty(),
                         "no artifacts for {}/{}b", cfg.model, cfg.bits);
-        let n_shards = cfg.dnn_shards.max(1);
-        let metrics = Arc::new(Metrics::with_shards(n_shards));
+        // the factory front-loads the one artifact load every replica
+        // is cloned from (native), so open errors also surface here
+        let factory = Arc::new(
+            ShardFactory::new(cfg.backend, &cfg.artifacts_dir)?);
+
+        // shard plan: a fixed pool runs `dnn_shards` slots, all live;
+        // an adaptive pool pre-allocates `max_shards` slots and starts
+        // with `dnn_shards` clamped into [min_shards, max_shards].
+        let auto = cfg.autoscale.map(|a| a.normalized());
+        let (n_slots, n_initial) = match &auto {
+            Some(a) => (a.max_shards,
+                        cfg.dnn_shards.clamp(a.min_shards, a.max_shards)),
+            None => {
+                let n = cfg.dnn_shards.max(1);
+                (n, n)
+            }
+        };
+        let metrics = Arc::new(Metrics::with_shards(n_slots));
         let registry = Arc::new(ReadRegistry::default());
 
         let cap = cfg.queue_cap.max(1);
         let (tx_windows, rx_windows) = bounded::<WindowJob>(cap);
         let (tx_decoded, rx_decoded) = bounded::<DecodedWindow>(cap);
-        // every shard reports open+warm exactly once
-        let (tx_ready, rx_ready) = bounded::<Result<()>>(n_shards);
 
         // per-worker decode queues, fed round-robin by the DNN shards (no
         // shared Mutex<Receiver> hot spot).
@@ -194,27 +398,35 @@ impl Coordinator {
             dec_rxs.push(rx);
         }
 
-        // per-shard batch queues, fed by least-loaded dispatch
-        let mut shard_txs: Vec<Sender<ShardBatch>> =
-            Vec::with_capacity(n_shards);
-        let mut shard_rxs: Vec<Receiver<ShardBatch>> =
-            Vec::with_capacity(n_shards);
-        for _ in 0..n_shards {
+        // per-shard batch queues live in a QueueSet so the autoscaler
+        // can add/retire slots mid-run. Install the initial queues
+        // BEFORE the batcher spawns: dispatch must never observe an
+        // empty set at startup (it would read as pool collapse).
+        let queues = Arc::new(QueueSet::<ShardBatch>::with_slots(n_slots));
+        let mut initial: Vec<(usize, u64, Receiver<ShardBatch>)> =
+            Vec::with_capacity(n_initial);
+        for _ in 0..n_initial {
             let (tx, rx) = bounded::<ShardBatch>(SHARD_QUEUE_DEPTH);
-            shard_txs.push(tx);
-            shard_rxs.push(rx);
+            let slot = queues.add(tx)
+                .expect("a fresh queue set has a slot per initial shard");
+            initial.push((slot, queues.generation(slot), rx));
         }
 
         // batcher: drains the window queue with the size-or-deadline
-        // policy and hands each finished batch to the shallowest shard
-        // queue. It owns the only shard senders, so when it exits the
-        // shard pool drains out.
+        // policy and routes each finished batch by size — full batches
+        // to the least-loaded live shard, tail batches to the busiest.
+        // On exit it closes every shard queue (the host and autoscaler
+        // also hold the set, so merely dropping this thread's Arc
+        // would not disconnect the shard receivers).
         let batcher_thread = {
             let policy = cfg.policy;
+            let qs = queues.clone();
+            let m = metrics.clone();
             std::thread::spawn(move || {
                 let mut batcher = Batcher::new(rx_windows, policy);
                 let mut rr = 0usize;
                 while let Some(batch) = batcher.next_batch() {
+                    let tail = batch.is_tail();
                     let n_items = batch.items.len();
                     // move the signals out of the jobs — no per-window
                     // clone on this hot path
@@ -224,116 +436,46 @@ impl Coordinator {
                         keys.push((j.read_id, j.window_idx));
                         sigs.push(j.signal);
                     }
-                    if !send_least_loaded(&shard_txs, &mut rr, ShardBatch {
-                        keys,
-                        sigs,
-                        full: batch.full,
-                    }) {
+                    let job = ShardBatch { keys, sigs, full: !tail };
+                    let delivered = if tail {
+                        // batch-size-aware dispatch: a small deadline
+                        // batch rides on the already-hot replica so
+                        // full batches stay unsplit across idle shards
+                        qs.send_preferring(&rank_busiest(&m, &qs), job)
+                    } else {
+                        qs.send_least_loaded(&mut rr, job)
+                    };
+                    if !delivered {
                         // every shard is gone (all replicas failed):
                         // stop pulling windows so submit() sees the
                         // disconnect instead of feeding a dead stage
                         break;
                     }
                 }
+                qs.close_all();
             })
         };
 
-        // Native replicas are plain `Send` data: open ONE backend on
-        // the caller thread and stamp out in-memory clones
-        // (`NativeBackend::clone_for_shard`), so N shards cost one
-        // artifact load + quantization instead of N. Non-`Send`
-        // backends (the PJRT client) get `None` here and are
-        // constructed inside their shard thread via `open_shard`.
-        let mut prebuilt: Vec<Option<NativeBackend>> =
-            (0..n_shards).map(|_| None).collect();
-        if cfg.backend == BackendKind::Native {
-            let first = NativeBackend::open(&cfg.artifacts_dir)?;
-            for slot in prebuilt.iter_mut().skip(1) {
-                *slot = Some(first.clone_for_shard());
-            }
-            prebuilt[0] = Some(first);
-        }
+        let host = Arc::new(ShardHost {
+            factory,
+            model: cfg.model.clone(),
+            bits: cfg.bits,
+            queues: queues.clone(),
+            dec_txs: dec_txs.clone(),
+            metrics: metrics.clone(),
+            handles: Mutex::new(Vec::new()),
+            window_tx: tx_windows.clone(),
+            window_cap: cap,
+        });
+        drop(dec_txs); // host + shard threads hold the decode senders
 
-        // DNN shard pool: each shard thread owns its own backend
-        // replica (moved in when prebuilt, constructed in-thread
-        // otherwise). Shards hold clones of the decode senders; when
-        // the last shard exits they drop and the decode pool drains
-        // out.
-        let mut shard_threads = Vec::with_capacity(n_shards);
-        for (shard_id, rx_batch) in shard_rxs.into_iter().enumerate() {
-            let m = metrics.clone();
-            let c = cfg.clone();
-            let dec = dec_txs.clone();
-            let ready = tx_ready.clone();
-            let pre = prebuilt[shard_id].take();
-            shard_threads.push(std::thread::spawn(
-                move || -> Result<()> {
-                // open + warm (compile cache / weight quantization) so
-                // failures surface through the ready channel at init,
-                // not mid-run
-                let opened = match pre {
-                    Some(replica) => {
-                        Ok(Box::new(replica) as Box<dyn Backend>)
-                    }
-                    None => c.backend
-                        .open_shard(&c.artifacts_dir, shard_id),
-                }
-                    .and_then(|mut b| {
-                        b.warm(&c.model, c.bits).map(|()| b)
-                    });
-                let mut backend = match opened {
-                    Ok(b) => {
-                        let _ = ready.send(Ok(()));
-                        drop(ready); // init handshake complete
-                        b
-                    }
-                    Err(err) => {
-                        let _ = ready.send(Err(err));
-                        return Ok(());
-                    }
-                };
-                // spread the decode round-robin start points so shards
-                // do not gang up on decode worker 0
-                let mut rr = shard_id;
-                let stats = &m.shards[shard_id];
-                while let Ok(batch) = rx_batch.recv() {
-                    let t0 = Instant::now();
-                    let lps = backend.run_windows(&c.model, c.bits,
-                                                  &batch.sigs)?;
-                    let busy = t0.elapsed().as_micros() as u64;
-                    let n_items = batch.keys.len();
-                    m.add(&m.batches, 1);
-                    m.add(&m.batch_items, n_items as u64);
-                    if batch.full {
-                        m.add(&m.full_batches, 1);
-                    }
-                    m.add(&m.dnn_micros, busy);
-                    m.add(&stats.batches, 1);
-                    m.add(&stats.windows, n_items as u64);
-                    m.add(&stats.busy_micros, busy);
-                    for ((read_id, window_idx), lp) in
-                        batch.keys.into_iter().zip(lps)
-                    {
-                        // skip-over-backlogged round-robin; if every
-                        // decode queue is gone the pipeline has
-                        // collapsed downstream — stop burning
-                        // inference on it
-                        if !send_round_robin(&dec, &mut rr, DecodeJob {
-                            read_id,
-                            window_idx,
-                            lp,
-                        }) {
-                            anyhow::bail!("decode stage disconnected \
-                                           mid-run (downstream failure)");
-                        }
-                    }
-                }
-                Ok(())
-            }));
+        // initial shard pool; every shard reports open+warm exactly once
+        let (tx_ready, rx_ready) =
+            bounded::<Result<()>>(n_initial.max(1));
+        for (slot, generation, rx) in initial {
+            host.launch(slot, generation, rx, Some(tx_ready.clone()));
         }
-        // the shards hold the only decode senders and ready senders now
-        drop(dec_txs);
-        drop(tx_ready);
+        drop(tx_ready); // shard threads hold the only ready senders
 
         // decode pool: one private queue per worker.
         let mut decode_threads = Vec::with_capacity(n_dec);
@@ -371,15 +513,36 @@ impl Coordinator {
             },
         );
 
-        // wait for every shard to finish opening + warming (or fail
-        // fast: the first shard error aborts construction, and the
+        // wait for every initial shard to finish opening + warming (or
+        // fail fast: the first shard error aborts construction, and the
         // channel cascade tears the other stages down as this frame's
         // senders drop)
-        for _ in 0..n_shards {
+        for _ in 0..n_initial {
             rx_ready.recv()
                 .map_err(|_| anyhow::anyhow!(
                     "a dnn shard thread died during init"))??;
         }
+        if auto.is_none() {
+            // fixed pool: no further replica will ever be built, so
+            // release the factory's native prototype instead of
+            // carrying an (N+1)-th model copy for the whole run
+            host.factory.discard_prototype();
+        }
+
+        // adaptive controller: sample → decide → scale/retire, every
+        // tick, until finish() signals stop (see coordinator::autoscale)
+        let (autoscale_stop, autoscale_thread) = match auto {
+            Some(a) => {
+                let (stop_tx, stop_rx) = bounded::<()>(1);
+                let pool: Arc<dyn ShardPool> = host.clone();
+                let m = metrics.clone();
+                let h = std::thread::spawn(move || {
+                    autoscale::run(pool, a, m, stop_rx);
+                });
+                (Some(stop_tx), Some(h))
+            }
+            None => (None, None),
+        };
 
         Ok(Coordinator {
             cfg,
@@ -387,7 +550,9 @@ impl Coordinator {
             registry,
             tx_windows: Some(tx_windows),
             batcher_thread: Some(batcher_thread),
-            shard_threads,
+            host: Some(host),
+            autoscale_stop,
+            autoscale_thread,
             decode_threads,
             collector: Some(collector),
             metrics,
@@ -457,6 +622,21 @@ impl Coordinator {
     /// reads sorted by id. Reads already taken via `try_recv`/
     /// `recv_timeout` are not returned again.
     pub fn finish(mut self) -> Result<Vec<CalledRead>> {
+        // halt the autoscaler FIRST: once its thread is joined no scale
+        // event can race the drain, and no new shard handle can appear
+        // after we take them below.
+        drop(self.autoscale_stop.take());
+        if let Some(h) = self.autoscale_thread.take() {
+            let _ = h.join();
+        }
+        // release the host's channel handles (window + decode senders):
+        // the recv-until-disconnect barrier below relies on every
+        // sender dropping. The controller's host Arc is already gone.
+        let mut shard_handles: Vec<JoinHandle<Result<()>>> = Vec::new();
+        if let Some(host) = self.host.take() {
+            shard_handles = host.handles.lock().unwrap()
+                .drain(..).collect();
+        }
         drop(self.tx_windows.take());
         // drain first: recv-until-disconnect is the shutdown barrier —
         // it returns exactly when the last stage has emptied, after
@@ -471,7 +651,7 @@ impl Coordinator {
                 err = Some(anyhow::anyhow!("batcher thread panicked"));
             }
         }
-        for h in self.shard_threads.drain(..) {
+        for h in shard_handles {
             match h.join() {
                 Ok(Ok(())) => {}
                 Ok(Err(e)) => {
@@ -508,9 +688,17 @@ impl Coordinator {
         self.cfg.policy.max_batch
     }
 
-    /// Number of DNN executor shards this pipeline is running.
+    /// The *configured* DNN shard count: the fixed pool size, or the
+    /// initial live count before the autoscaler takes over.
     pub fn dnn_shards(&self) -> usize {
         self.cfg.dnn_shards.max(1)
+    }
+
+    /// DNN shards live right now: equals `dnn_shards()` for a fixed
+    /// pool (until a replica dies), varies between the autoscale
+    /// bounds under the controller. 0 once the pipeline is torn down.
+    pub fn live_dnn_shards(&self) -> usize {
+        self.host.as_ref().map_or(0, |h| h.queues.live_count())
     }
 
     /// Reads submitted but not yet emitted.

@@ -55,6 +55,12 @@
 //! Reads also stream out *mid-run* — `Coordinator::try_recv` /
 //! `recv_timeout` return each `CalledRead` the moment its last window
 //! decodes; `finish()` is only the end-of-run drain.
+//!
+//! The DNN executor pool can also size *itself*: setting
+//! `CoordinatorConfig::autoscale` (see `coordinator::autoscale`) runs
+//! a sample→decide→scale control loop that grows the pool under
+//! saturation and retires idle replicas, without ever changing called
+//! output — byte-identical to a fixed-shard run over the same input.
 #![warn(missing_docs)]
 
 pub mod util;

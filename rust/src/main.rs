@@ -11,7 +11,7 @@ use anyhow::Result;
 
 use helix::basecall::edit::identity;
 use helix::bench::figures;
-use helix::coordinator::{Coordinator, CoordinatorConfig};
+use helix::coordinator::{AutoscaleConfig, Coordinator, CoordinatorConfig};
 use helix::genome::pore::PoreModel;
 use helix::genome::synth::{RunSpec, SequencingRun};
 use helix::runtime::meta::default_artifacts_dir;
@@ -21,13 +21,19 @@ fn usage() -> ! {
     eprintln!("usage: helix <command> [options]\n\
         commands:\n  \
         basecall [--model guppy] [--bits 32] [--genome 2000] [--coverage 5]\n    \
-        [--backend native|xla] [--shards N]\n  \
+        [--backend native|xla] [--shards N]\n    \
+        [--max-shards N [--min-shards N] [--autoscale-tick-ms MS]]\n  \
         simulate [--genome 10000] [--coverage 30]\n  \
         figures <fig2|...|fig26|table1..table5|all>\n  \
         schemes\n  \
         mc [--samples 100000]\n\
         env: HELIX_ARTIFACTS=artifacts HELIX_BACKEND=native|xla \
-        HELIX_SHARDS=N");
+        HELIX_SHARDS=N\n     \
+        HELIX_MAX_SHARDS=N HELIX_MIN_SHARDS=N HELIX_AUTOSCALE_TICK_MS=MS\n\
+        --max-shards (or HELIX_MAX_SHARDS) enables adaptive shard \
+        autoscaling:\n\
+        the pool resizes between the min/max bounds from observed \
+        utilization.");
     std::process::exit(2);
 }
 
@@ -82,19 +88,78 @@ fn main() -> Result<()> {
                 },
                 None => CoordinatorConfig::shards_from_env(),
             };
+            // adaptive autoscaling: enabled by --max-shards or
+            // HELIX_MAX_SHARDS (the flag beats the env trio when both
+            // name the ceiling); --min-shards / --autoscale-tick-ms
+            // then refine whichever base enabled it. Like --shards, an
+            // explicit flag that doesn't parse is an error, not a
+            // silent fallback.
+            let base: Option<AutoscaleConfig> = match f.get("max-shards")
+            {
+                Some(s) => match s.parse::<usize>() {
+                    Ok(n) if n >= 1 => Some(AutoscaleConfig {
+                        max_shards: n,
+                        ..AutoscaleConfig::default()
+                    }),
+                    _ => anyhow::bail!(
+                        "invalid --max-shards '{s}' (want a positive \
+                         integer)"),
+                },
+                None => AutoscaleConfig::from_env(),
+            };
+            let autoscale: Option<AutoscaleConfig> = match base {
+                Some(mut a) => {
+                    if let Some(v) = f.get("min-shards") {
+                        a.min_shards = match v.parse::<usize>() {
+                            Ok(n) if n >= 1 => n,
+                            _ => anyhow::bail!(
+                                "invalid --min-shards '{v}' (want a \
+                                 positive integer)"),
+                        };
+                    }
+                    if let Some(v) = f.get("autoscale-tick-ms") {
+                        a.tick = match v.parse::<u64>() {
+                            Ok(ms) if ms >= 1 => {
+                                std::time::Duration::from_millis(ms)
+                            }
+                            _ => anyhow::bail!(
+                                "invalid --autoscale-tick-ms '{v}' \
+                                 (want positive milliseconds)"),
+                        };
+                    }
+                    Some(a.normalized())
+                }
+                None => {
+                    if f.contains_key("min-shards")
+                        || f.contains_key("autoscale-tick-ms")
+                    {
+                        anyhow::bail!(
+                            "--min-shards/--autoscale-tick-ms need \
+                             autoscaling enabled via --max-shards or \
+                             HELIX_MAX_SHARDS");
+                    }
+                    None
+                }
+            };
             kind.prepare(&dir)?;
             let pm = PoreModel::load(&format!("{dir}/pore_model.json"))?;
             let run = SequencingRun::simulate(&pm, RunSpec {
                 genome_len: genome, coverage, ..Default::default()
             });
+            let scale_note = match &autoscale {
+                Some(a) => format!(", autoscale {}..{} every {:?}",
+                                   a.min_shards, a.max_shards, a.tick),
+                None => String::new(),
+            };
             println!("basecalling {} reads ({} genome, {:.1}x coverage) \
                       with {model}/{bits}b on the {} backend \
-                      ({shards} dnn shard{}) ...",
+                      ({shards} dnn shard{}{scale_note}) ...",
                      run.reads.len(), genome, run.mean_coverage(),
                      kind.name(), if shards == 1 { "" } else { "s" });
             let mut coord = Coordinator::new(CoordinatorConfig {
                 model, bits, backend: kind, artifacts_dir: dir.clone(),
                 dnn_shards: shards,
+                autoscale,
                 ..Default::default()
             })?;
             let t0 = std::time::Instant::now();

@@ -198,6 +198,81 @@ impl BackendKind {
     }
 }
 
+/// Replica factory for the DNN shard pool — the piece that makes *late*
+/// shard construction possible: the coordinator's autoscaler spawns
+/// shards mid-run, long after `Coordinator::new` returned, so the
+/// recipe for building a replica has to outlive construction and be
+/// shippable to a controller thread.
+///
+/// For the native backend the factory opens ONE prototype up front
+/// (one artifact load + quantization) and every replica — initial or
+/// autoscaled — is an in-memory `NativeBackend::clone_for_shard` of
+/// it, guaranteed bit-identical. For non-`Send` backends (the PJRT
+/// client) the factory carries only `(kind, artifacts_dir)` and
+/// `replica()` constructs the engine from scratch; it MUST then be
+/// called on the shard thread that will own the replica.
+///
+/// A pool that will never build another replica (fixed shard count, no
+/// autoscaler) should call `discard_prototype()` once its initial
+/// replicas are up, so the run carries N model copies instead of N+1;
+/// a replica requested afterwards anyway falls back to a fresh
+/// `open_shard`, which is bit-identical because the native weights are
+/// deterministic.
+pub struct ShardFactory {
+    kind: BackendKind,
+    artifacts_dir: String,
+    prototype: std::sync::Mutex<Option<super::native::NativeBackend>>,
+}
+
+impl ShardFactory {
+    /// Build the factory; for the native backend this performs the one
+    /// artifact load every replica will be cloned from, so open errors
+    /// surface here (at coordinator construction), not mid-run.
+    pub fn new(kind: BackendKind, artifacts_dir: &str)
+               -> Result<ShardFactory> {
+        let prototype = match kind {
+            BackendKind::Native => {
+                Some(super::native::NativeBackend::open(artifacts_dir)?)
+            }
+            #[cfg(feature = "xla")]
+            BackendKind::Xla => None,
+        };
+        Ok(ShardFactory {
+            kind,
+            artifacts_dir: artifacts_dir.to_string(),
+            prototype: std::sync::Mutex::new(prototype),
+        })
+    }
+
+    /// The backend kind replicas are built for.
+    pub fn kind(&self) -> BackendKind {
+        self.kind
+    }
+
+    /// Construct one shard replica. Native: a cheap in-memory clone of
+    /// the prototype (no disk, no re-quantization). Otherwise this
+    /// falls through to `BackendKind::open_shard` and must run on the
+    /// thread that will own the replica (PJRT clients are not `Send`).
+    pub fn replica(&self, shard: usize) -> Result<Box<dyn Backend>> {
+        {
+            let proto = self.prototype.lock().unwrap();
+            if let Some(p) = proto.as_ref() {
+                return Ok(Box::new(p.clone_for_shard()));
+            }
+        }
+        self.kind.open_shard(&self.artifacts_dir, shard)
+    }
+
+    /// Release the native prototype. Call when no further replica will
+    /// (normally) be built — a fixed pool after its initial shards are
+    /// up — so the run does not carry an extra model copy for its
+    /// whole lifetime. Safe even if a replica is requested later: the
+    /// `open_shard` fallback rebuilds the same deterministic model.
+    pub fn discard_prototype(&self) {
+        *self.prototype.lock().unwrap() = None;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -242,6 +317,41 @@ mod tests {
     fn run_windows_rejects_unknown_model() {
         let mut b = NativeBackend::builtin();
         assert!(b.run_windows("nope", 32, &[]).is_err());
+    }
+
+    /// The autoscaler's late-construction contract: every replica the
+    /// factory hands out — whenever it is built — computes bit-identical
+    /// LogProbs, so scaling mid-run can never change called output.
+    #[test]
+    fn shard_factory_builds_identical_native_replicas() {
+        let f = ShardFactory::new(BackendKind::Native,
+                                  "does-not-exist-factory").unwrap();
+        assert_eq!(f.kind(), BackendKind::Native);
+        let mut a = f.replica(0).unwrap();
+        let mut b = f.replica(7).unwrap();
+        a.warm("guppy", 32).unwrap();
+        b.warm("guppy", 32).unwrap();
+        let w = a.meta().window;
+        let sig: Vec<Vec<f32>> =
+            vec![(0..w).map(|i| (i as f32 * 0.1).sin()).collect()];
+        let la = a.run_windows("guppy", 32, &sig).unwrap();
+        let lb = b.run_windows("guppy", 32, &sig).unwrap();
+        assert_eq!(la.len(), 1);
+        assert_eq!(la[0].t, lb[0].t);
+        for (x, y) in la[0].data.iter().zip(&lb[0].data) {
+            assert_eq!(x.to_bits(), y.to_bits(),
+                       "replicas must be bit-identical");
+        }
+        // after discarding the prototype (fixed-pool memory release),
+        // the open_shard fallback must still produce the same model
+        f.discard_prototype();
+        let mut c = f.replica(3).unwrap();
+        c.warm("guppy", 32).unwrap();
+        let lc = c.run_windows("guppy", 32, &sig).unwrap();
+        for (x, y) in la[0].data.iter().zip(&lc[0].data) {
+            assert_eq!(x.to_bits(), y.to_bits(),
+                       "fallback replica must be bit-identical too");
+        }
     }
 
     #[test]

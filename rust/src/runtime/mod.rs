@@ -15,7 +15,7 @@ pub mod executable;
 pub mod meta;
 pub mod native;
 
-pub use backend::{Backend, BackendKind};
+pub use backend::{Backend, BackendKind, ShardFactory};
 #[cfg(feature = "xla")]
 pub use executable::{Engine, ModelExecutable};
 pub use meta::{ArtifactEntry, Meta};

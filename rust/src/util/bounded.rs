@@ -207,6 +207,238 @@ pub fn send_least_loaded<T>(txs: &[Sender<T>], rr: &mut usize, job: T)
     }
 }
 
+/// Fan a job out over worker queues in a caller-chosen preference
+/// order: try each listed queue once (skipping full or disconnected
+/// ones), and when every live queue is at capacity, block on the most
+/// preferred live one. This is the primitive behind the coordinator's
+/// *tail-batch* routing, where the preference order is
+/// busiest-shard-first (so small deadline-triggered batches pile onto
+/// the shard already working instead of waking an idle replica that
+/// least-loaded dispatch is keeping clear for full batches). A queue
+/// that disconnects while we are blocked on it does not fail the
+/// dispatch — the surviving queues are retried. Returns `false` iff
+/// every queue has disconnected.
+pub fn send_in_order<T>(txs: &[Sender<T>], order: &[usize], job: T)
+                        -> bool {
+    if txs.is_empty() || order.is_empty() {
+        return false;
+    }
+    let mut job = job;
+    loop {
+        let mut preferred_full: Option<usize> = None;
+        for &i in order {
+            if i >= txs.len() {
+                continue; // stale preference entry: ignore
+            }
+            match txs[i].try_send(job) {
+                Ok(()) => return true,
+                Err(TrySendError::Full(j)) => {
+                    if preferred_full.is_none() {
+                        preferred_full = Some(i);
+                    }
+                    job = j;
+                }
+                Err(TrySendError::Disconnected(j)) => job = j,
+            }
+        }
+        match preferred_full {
+            // every live queue is at capacity: block on the most
+            // preferred live one. If it dies while we wait, take the
+            // job back and retry the survivors.
+            Some(i) => match txs[i].send(job) {
+                Ok(()) => return true,
+                Err(SendError(j)) => job = j,
+            },
+            None => return false, // every listed queue disconnected
+        }
+    }
+}
+
+/// One slot of a [`QueueSet`]: the live sender (if any) plus a
+/// generation counter that increments on every `add`, so a stale actor
+/// (e.g. a shard thread whose spawn failed long after its slot was
+/// recycled) can prove it still owns the slot before retiring it.
+struct QueueSlot<T> {
+    tx: Option<Sender<T>>,
+    generation: u64,
+}
+
+struct QueueTable<T> {
+    slots: Vec<QueueSlot<T>>,
+    /// set by `close_all`: the set is shutting down and must never
+    /// accept another queue (a late `add` would install a queue nobody
+    /// will ever close again).
+    sealed: bool,
+}
+
+/// A fixed table of queue slots whose membership can change *mid-run*:
+/// the coordinator's autoscaler adds a slot when it spawns a DNN shard
+/// and retires a slot (dropping the `Sender`, so the shard's receiver
+/// drains what is queued and then disconnects) when it scales down.
+/// Producers dispatch through the set without ever seeing membership
+/// edits — a retired queue simply stops accepting and the skip-dead
+/// dispatch routes around it, which is exactly the degradation path a
+/// crashed shard already exercises.
+///
+/// Slot ids are stable for the lifetime of the set and bounded by the
+/// slot count fixed at construction, so they can index parallel
+/// per-slot state (e.g. `Metrics::shards`). A retired slot can be
+/// reused by a later `add` (slot ids are recycled, lowest-free-first);
+/// each `add` bumps the slot's generation, and `retire_generation`
+/// lets an asynchronous owner retire *its own* installation without
+/// ever touching a successor that recycled the slot. `close_all`
+/// seals the set: every queue closes and no further `add` succeeds,
+/// so shutdown cannot race a scale-up into an orphaned queue.
+pub struct QueueSet<T> {
+    table: Mutex<QueueTable<T>>,
+}
+
+impl<T> QueueSet<T> {
+    /// An empty set with `n` (min 1) slots, all free.
+    pub fn with_slots(n: usize) -> QueueSet<T> {
+        QueueSet {
+            table: Mutex::new(QueueTable {
+                slots: (0..n.max(1))
+                    .map(|_| QueueSlot { tx: None, generation: 0 })
+                    .collect(),
+                sealed: false,
+            }),
+        }
+    }
+
+    /// Total slot count (fixed at construction).
+    pub fn slots(&self) -> usize {
+        self.table.lock().unwrap().slots.len()
+    }
+
+    /// Install a sender into the lowest free slot and return its slot
+    /// id, or `None` when every slot is occupied or the set has been
+    /// sealed by `close_all`.
+    pub fn add(&self, tx: Sender<T>) -> Option<usize> {
+        let mut g = self.table.lock().unwrap();
+        if g.sealed {
+            return None;
+        }
+        for (i, slot) in g.slots.iter_mut().enumerate() {
+            if slot.tx.is_none() {
+                slot.tx = Some(tx);
+                slot.generation += 1;
+                return Some(i);
+            }
+        }
+        None
+    }
+
+    /// The slot's current generation (bumped on every `add`; 0 means
+    /// never occupied). Read this right after `add` to get a token
+    /// that `retire_generation` will honour.
+    pub fn generation(&self, slot: usize) -> u64 {
+        self.table.lock().unwrap().slots.get(slot)
+            .map_or(0, |s| s.generation)
+    }
+
+    /// Drop the slot's sender so its receiver drains and disconnects
+    /// (graceful retirement). Returns `false` when the slot was already
+    /// free.
+    pub fn retire(&self, slot: usize) -> bool {
+        let mut g = self.table.lock().unwrap();
+        match g.slots.get_mut(slot) {
+            Some(s) => s.tx.take().is_some(),
+            None => false,
+        }
+    }
+
+    /// Retire the slot only if it still holds the installation that
+    /// `add` returned `generation` for. A stale owner (the slot was
+    /// since retired and/or recycled) gets `false` and must not touch
+    /// the slot's parallel state.
+    pub fn retire_generation(&self, slot: usize, generation: u64)
+                             -> bool {
+        let mut g = self.table.lock().unwrap();
+        match g.slots.get_mut(slot) {
+            Some(s) if s.generation == generation => {
+                s.tx.take().is_some()
+            }
+            _ => false,
+        }
+    }
+
+    /// Retire every occupied slot and **seal** the set: all receivers
+    /// drain out and every later `add` fails. Shutdown only.
+    pub fn close_all(&self) {
+        let mut g = self.table.lock().unwrap();
+        g.sealed = true;
+        for s in g.slots.iter_mut() {
+            s.tx = None;
+        }
+    }
+
+    /// Slot ids currently occupied, ascending.
+    pub fn live_slots(&self) -> Vec<usize> {
+        self.table.lock().unwrap().slots.iter().enumerate()
+            .filter_map(|(i, s)| s.tx.as_ref().map(|_| i))
+            .collect()
+    }
+
+    /// Number of occupied slots.
+    pub fn live_count(&self) -> usize {
+        self.table.lock().unwrap().slots.iter()
+            .filter(|s| s.tx.is_some())
+            .count()
+    }
+
+    /// Clone the live senders (and their slot ids) so dispatch can run
+    /// without holding the set lock. A clone taken here keeps a queue
+    /// deliverable even if the slot is retired mid-dispatch; the
+    /// receiver still drains every delivered item before it observes
+    /// the disconnect, so no job is lost to the race.
+    fn snapshot(&self) -> (Vec<Sender<T>>, Vec<usize>) {
+        let g = self.table.lock().unwrap();
+        let mut txs = Vec::new();
+        let mut ids = Vec::new();
+        for (i, s) in g.slots.iter().enumerate() {
+            if let Some(tx) = &s.tx {
+                txs.push(tx.clone());
+                ids.push(i);
+            }
+        }
+        (txs, ids)
+    }
+
+    /// Least-loaded dispatch over the live slots (see
+    /// [`send_least_loaded`]). Returns `false` iff no slot could take
+    /// the job (set empty or every live queue disconnected).
+    pub fn send_least_loaded(&self, rr: &mut usize, job: T) -> bool {
+        let (txs, _ids) = self.snapshot();
+        send_least_loaded(&txs, rr, job)
+    }
+
+    /// Preference-ordered dispatch over the live slots (see
+    /// [`send_in_order`]): `ranked_slots` lists slot ids most-preferred
+    /// first; live slots missing from the ranking are tried last, in
+    /// slot order. Returns `false` iff no slot could take the job.
+    pub fn send_preferring(&self, ranked_slots: &[usize], job: T) -> bool {
+        let (txs, ids) = self.snapshot();
+        if txs.is_empty() {
+            return false;
+        }
+        let mut order: Vec<usize> = Vec::with_capacity(txs.len());
+        for &slot in ranked_slots {
+            if let Some(pos) = ids.iter().position(|&id| id == slot) {
+                if !order.contains(&pos) {
+                    order.push(pos);
+                }
+            }
+        }
+        for pos in 0..txs.len() {
+            if !order.contains(&pos) {
+                order.push(pos);
+            }
+        }
+        send_in_order(&txs, &order, job)
+    }
+}
+
 impl<T> Sender<T> {
     /// Block until there is room (backpressure), then enqueue.
     pub fn send(&self, t: T) -> Result<(), SendError<T>> {
@@ -582,6 +814,144 @@ mod tests {
             n += 1;
         }
         assert_eq!(n, 10_000);
+    }
+
+    #[test]
+    fn send_in_order_respects_preference() {
+        let (tx1, rx1) = bounded::<u32>(4);
+        let (tx2, rx2) = bounded::<u32>(4);
+        let txs = vec![tx1, tx2];
+        // preference says queue 1 first, even though queue 0 is idle too
+        assert!(send_in_order(&txs, &[1, 0], 7));
+        assert_eq!(rx2.recv(), Ok(7));
+        assert!(rx1.is_empty());
+    }
+
+    #[test]
+    fn send_in_order_skips_full_and_dead() {
+        let (tx1, rx1) = bounded::<u32>(1);
+        let (tx2, rx2) = bounded::<u32>(1);
+        let (tx3, rx3) = bounded::<u32>(1);
+        tx1.send(0).unwrap(); // preferred queue full
+        drop(rx2); // second choice dead
+        let txs = vec![tx1, tx2, tx3];
+        assert!(send_in_order(&txs, &[0, 1, 2], 9));
+        assert_eq!(rx3.recv(), Ok(9));
+        // stale out-of-range preference entries are ignored
+        assert!(send_in_order(&txs, &[17, 2], 10));
+        assert_eq!(rx3.recv(), Ok(10));
+        drop(rx1);
+        drop(rx3);
+        assert!(!send_in_order(&txs, &[0, 1, 2], 11),
+                "all queues gone must report undeliverable");
+    }
+
+    #[test]
+    fn send_in_order_survives_death_of_blocked_queue() {
+        // both queues full -> dispatch blocks on the preferred one; its
+        // receiver dies -> the job must reach the survivor.
+        let (tx1, rx1) = bounded::<u32>(1);
+        let (tx2, rx2) = bounded::<u32>(1);
+        tx1.send(0).unwrap();
+        tx2.send(1).unwrap();
+        let txs = vec![tx1, tx2];
+        let h = thread::spawn(move || send_in_order(&txs, &[0, 1], 9));
+        thread::sleep(Duration::from_millis(50));
+        drop(rx1); // kill the queue the dispatcher is blocked on
+        thread::sleep(Duration::from_millis(50));
+        assert_eq!(rx2.recv(), Ok(1)); // make room on the survivor
+        assert!(h.join().unwrap(),
+                "dispatch must survive the death of the blocked queue");
+        assert_eq!(rx2.recv(), Ok(9));
+    }
+
+    #[test]
+    fn queue_set_adds_into_lowest_free_slot() {
+        let set = QueueSet::<u32>::with_slots(3);
+        assert_eq!(set.slots(), 3);
+        assert_eq!(set.live_count(), 0);
+        assert_eq!(set.generation(0), 0, "never-occupied slot is gen 0");
+        let (tx_a, _rx_a) = bounded::<u32>(1);
+        let (tx_b, _rx_b) = bounded::<u32>(1);
+        assert_eq!(set.add(tx_a), Some(0));
+        assert_eq!(set.add(tx_b), Some(1));
+        assert_eq!(set.live_slots(), vec![0, 1]);
+        assert_eq!(set.generation(0), 1);
+        // retiring frees the slot for reuse (lowest-free-first)
+        assert!(set.retire(0));
+        assert!(!set.retire(0), "double retire must report already-free");
+        let (tx_c, _rx_c) = bounded::<u32>(1);
+        assert_eq!(set.add(tx_c), Some(0));
+        assert_eq!(set.generation(0), 2, "recycling bumps the generation");
+        let (tx_d, _rx_d) = bounded::<u32>(1);
+        assert_eq!(set.add(tx_d), Some(2));
+        let (tx_e, _rx_e) = bounded::<u32>(1);
+        assert_eq!(set.add(tx_e), None, "full set must refuse");
+        set.close_all();
+        assert_eq!(set.live_count(), 0);
+        // close_all seals: a racing late add must not install a queue
+        // that nobody will ever close again
+        let (tx_f, _rx_f) = bounded::<u32>(1);
+        assert_eq!(set.add(tx_f), None, "sealed set must refuse adds");
+    }
+
+    #[test]
+    fn queue_set_retire_generation_ignores_stale_owners() {
+        let set = QueueSet::<u32>::with_slots(2);
+        let (tx_a, _rx_a) = bounded::<u32>(1);
+        let slot = set.add(tx_a).unwrap();
+        let stale_gen = set.generation(slot);
+        // the slot is retired and recycled before the first owner acts
+        assert!(set.retire(slot));
+        let (tx_b, rx_b) = bounded::<u32>(1);
+        assert_eq!(set.add(tx_b), Some(slot));
+        // the stale owner's conditional retire must be a no-op...
+        assert!(!set.retire_generation(slot, stale_gen),
+                "stale generation must not retire the successor");
+        assert_eq!(set.live_slots(), vec![slot]);
+        let mut rr = 0;
+        assert!(set.send_least_loaded(&mut rr, 9));
+        assert_eq!(rx_b.recv(), Ok(9));
+        // ...while the current owner's succeeds
+        let cur_gen = set.generation(slot);
+        assert!(set.retire_generation(slot, cur_gen));
+        assert_eq!(set.live_count(), 0);
+    }
+
+    #[test]
+    fn queue_set_retire_disconnects_receiver_after_drain() {
+        let set = QueueSet::<u32>::with_slots(2);
+        let (tx, rx) = bounded::<u32>(2);
+        let slot = set.add(tx).unwrap();
+        let mut rr = 0;
+        assert!(set.send_least_loaded(&mut rr, 5));
+        set.retire(slot);
+        // the queued item survives retirement, then the disconnect lands
+        assert_eq!(rx.recv(), Ok(5));
+        assert_eq!(rx.recv(), Err(RecvError));
+        // an empty set cannot deliver
+        assert!(!set.send_least_loaded(&mut rr, 6));
+        assert!(!set.send_preferring(&[0, 1], 6));
+    }
+
+    #[test]
+    fn queue_set_send_preferring_routes_to_ranked_slot() {
+        let set = QueueSet::<u32>::with_slots(3);
+        let (tx0, rx0) = bounded::<u32>(4);
+        let (tx1, rx1) = bounded::<u32>(4);
+        let (tx2, rx2) = bounded::<u32>(4);
+        assert_eq!(set.add(tx0), Some(0));
+        assert_eq!(set.add(tx1), Some(1));
+        assert_eq!(set.add(tx2), Some(2));
+        // rank slot 2 busiest-first: tail jobs pile onto it
+        assert!(set.send_preferring(&[2, 0], 1));
+        assert!(set.send_preferring(&[2, 0], 2));
+        assert_eq!(rx2.len(), 2);
+        // a ranking naming only retired slots falls back to live ones
+        set.retire(2);
+        assert!(set.send_preferring(&[2], 3));
+        assert_eq!(rx0.len() + rx1.len(), 1);
+        assert_eq!(rx2.len(), 2, "retired queue must take no new jobs");
     }
 
     #[test]

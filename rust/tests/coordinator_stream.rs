@@ -6,7 +6,11 @@
 //! backend, so they are exercised on every `cargo test` — no artifacts,
 //! no skips. The sharding tests pin the executor-pool invariant:
 //! byte-identical `CalledRead` output for any `dnn_shards` count, with
-//! per-shard counters that partition the aggregate totals.
+//! per-shard counters that partition the aggregate totals. The
+//! autoscale tests extend that invariant to the *adaptive* pool: a run
+//! whose shard count changes mid-flight (scale-up under load,
+//! retirement when idle) must call byte-identical reads to a
+//! fixed-shard run over the same input.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -324,6 +328,186 @@ fn single_shard_pipeline_reports_single_shard_metrics() {
                m.batches.load(Ordering::SeqCst));
     assert!(!m.report(4).contains("shard-util"),
             "single-shard report must not print a shard split");
+}
+
+// ---- adaptive autoscaling (coordinator::autoscale) ----
+
+use helix::coordinator::{AutoscaleConfig, ScaleAction};
+
+/// THE autoscale acceptance invariant: a run whose shard pool is
+/// resized mid-flight by the controller calls byte-identical reads to
+/// a fixed-shard run over the same input. Scaling changes *when*
+/// windows run and on which replica — never what they produce. The
+/// adaptive config here is deliberately churny (tiny tick, thresholds
+/// close together, no cooldown) so the pool actually moves during the
+/// run rather than sitting at its initial size.
+#[test]
+fn called_reads_identical_fixed_vs_adaptive() {
+    let run = sim_run(900, 3, 77);
+    let (fixed, _m) = call_run_with_shards(&run, 2);
+    assert_eq!(fixed.len(), run.reads.len());
+
+    let mut coord = Coordinator::new(CoordinatorConfig {
+        model: "guppy".into(),
+        bits: 32,
+        dnn_shards: 1,
+        policy: helix::coordinator::BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+        },
+        autoscale: Some(AutoscaleConfig {
+            min_shards: 1,
+            max_shards: 4,
+            tick: Duration::from_millis(3),
+            high_util: 0.30,
+            low_util: 0.25,
+            up_ticks: 1,
+            down_ticks: 2,
+            cooldown_ticks: 0,
+        }),
+        artifacts_dir: no_artifacts_dir(),
+        ..Default::default()
+    }).unwrap();
+    for r in &run.reads {
+        coord.submit(r);
+    }
+    let adaptive = coord.finish().unwrap();
+
+    assert_eq!(adaptive.len(), fixed.len());
+    for (a, b) in fixed.iter().zip(&adaptive) {
+        assert_eq!(a.read_id, b.read_id);
+        assert_eq!(a.seq, b.seq,
+                   "read {} consensus diverged under autoscaling",
+                   a.read_id);
+        assert_eq!(a.window_decodes, b.window_decodes,
+                   "read {} window decodes diverged under autoscaling",
+                   a.read_id);
+    }
+}
+
+/// Sustained saturation from one initial shard must grow the pool:
+/// with an always-hot threshold the controller scales up on every
+/// non-cooldown tick until `max_shards`, and the scale-event log plus
+/// the per-slot spawn flags record it.
+#[test]
+fn autoscaler_scales_up_under_sustained_load() {
+    let run = sim_run(1500, 4, 83);
+    let mut coord = Coordinator::new(CoordinatorConfig {
+        model: "guppy".into(),
+        bits: 32,
+        dnn_shards: 1,
+        decode_threads: 4,
+        policy: helix::coordinator::BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+        },
+        autoscale: Some(AutoscaleConfig {
+            min_shards: 1,
+            max_shards: 3,
+            tick: Duration::from_millis(2),
+            // any nonzero utilization reads as hot: the pool must
+            // converge upward while the run is in flight
+            high_util: 0.0,
+            low_util: 0.0,
+            up_ticks: 1,
+            down_ticks: 1,
+            cooldown_ticks: 0,
+        }),
+        artifacts_dir: no_artifacts_dir(),
+        ..Default::default()
+    }).unwrap();
+    assert_eq!(coord.live_dnn_shards(), 1, "pool starts at dnn_shards");
+    for r in &run.reads {
+        coord.submit(r);
+    }
+    let metrics = coord.metrics.clone();
+    let called = coord.finish().unwrap();
+    assert_eq!(called.len(), run.reads.len());
+
+    let events = metrics.scale_events();
+    let ups = events.iter()
+        .filter(|e| e.action == ScaleAction::Up)
+        .count();
+    assert!(ups >= 1,
+            "sustained load must scale the pool up (events: {events:?})");
+    let spawned = metrics.shards.iter()
+        .filter(|s| s.spawned.load(Ordering::SeqCst))
+        .count();
+    assert!(spawned >= 2,
+            "at least one extra shard slot must have spawned");
+    assert!(events.iter()
+                .all(|e| e.action != ScaleAction::SpawnFailed),
+            "native replicas must not fail to spawn");
+    // every batch is still accounted to some slot
+    let total = metrics.batches.load(Ordering::SeqCst);
+    let per_slot: u64 = metrics.shards.iter()
+        .map(|s| s.batches.load(Ordering::SeqCst))
+        .sum();
+    assert_eq!(per_slot, total);
+}
+
+/// Idleness must shrink the pool back to `min_shards`: retired shards
+/// drain their depth-1 queue and exit through the same skip-dead
+/// dispatch path a crashed replica takes, the report keeps their rows
+/// (tagged retired, percent format), and the run's output is complete.
+#[test]
+fn autoscaler_retires_idle_shards_to_min() {
+    // deliberately small: the window queue must never approach its cap,
+    // so no backlog spike can read as hot and re-grow the pool (the
+    // retirement count below is exact)
+    let run = sim_run(400, 1, 91);
+    let mut coord = Coordinator::new(CoordinatorConfig {
+        model: "guppy".into(),
+        bits: 32,
+        dnn_shards: 4,
+        autoscale: Some(AutoscaleConfig {
+            min_shards: 1,
+            max_shards: 4,
+            tick: Duration::from_millis(2),
+            // nothing is ever hot; anything under-utilized is cold
+            high_util: 2.0,
+            low_util: 1.5,
+            up_ticks: 1,
+            down_ticks: 2,
+            cooldown_ticks: 0,
+        }),
+        artifacts_dir: no_artifacts_dir(),
+        ..Default::default()
+    }).unwrap();
+    assert_eq!(coord.live_dnn_shards(), 4);
+    let mut called = Vec::new();
+    for r in &run.reads {
+        coord.submit(r);
+        called.extend(coord.drain_ready());
+    }
+    // idle the pipeline (keep draining) until the controller has
+    // walked the pool down to the floor
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while coord.live_dnn_shards() > 1 && Instant::now() < deadline {
+        called.extend(coord.drain_ready());
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(coord.live_dnn_shards(), 1,
+               "idle pool must shrink to min_shards");
+    let metrics = coord.metrics.clone();
+    called.extend(coord.finish().unwrap());
+    assert_eq!(called.len(), run.reads.len(),
+               "retirement must not lose reads");
+
+    let events = metrics.scale_events();
+    let downs = events.iter()
+        .filter(|e| e.action == ScaleAction::Down)
+        .count();
+    assert_eq!(downs, 3, "4 -> 1 shards is exactly three retirements");
+    let retired = metrics.shards.iter()
+        .filter(|s| s.retired.load(Ordering::SeqCst))
+        .count();
+    assert_eq!(retired, 3);
+    assert_eq!(metrics.live_shards(), 1);
+    let report = metrics.report(32);
+    assert!(report.contains("%(retired)"),
+            "retired slots must stay listed: {report}");
+    assert!(report.contains("autoscale +0/-3 live 1"), "{report}");
 }
 
 #[test]
