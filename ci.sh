@@ -76,6 +76,16 @@ if [ -f .linkcheck_failed ]; then
     exit 1
 fi
 
+# opt-in long-run soak/chaos pass: sustained bursty load with the
+# autoscaler churning every stage while output must stay byte-identical
+# and no read may be lost. The short variant of the same test runs in
+# the normal `cargo test` above; HELIX_CI_SOAK=1 sizes it up.
+if [ "${HELIX_CI_SOAK:-0}" = "1" ]; then
+    echo "== HELIX_CI_SOAK=1 cargo test --release soak (long variant)"
+    HELIX_CI_SOAK=1 cargo test -q --release --test coordinator_stream \
+        soak
+fi
+
 # xla feature path: the PJRT binding needs a crates.io fetch or a
 # vendored checkout, so this is the ONE soft-skip left.
 if [ "${HELIX_CI_XLA:-0}" = "1" ]; then
@@ -109,6 +119,14 @@ if [ "${1:-}" = "bench" ]; then
     if ! grep -q '"autoscale_rows"' BENCH_coordinator.json; then
         echo "ci.sh: FAIL — BENCH_coordinator.json has no" \
              "autoscale_rows section (adaptive shard bench missing)" >&2
+        exit 1
+    fi
+    # ... and so is the SLO-breach trace: the latency-driven scaling
+    # scenario (trickle load, p99 over the SLO at ~0 utilization) must
+    # emit its scale events
+    if ! grep -q '"slo_rows"' BENCH_coordinator.json; then
+        echo "ci.sh: FAIL — BENCH_coordinator.json has no slo_rows" \
+             "section (SLO-driven scaling bench missing)" >&2
         exit 1
     fi
     echo "wrote $(pwd)/BENCH_coordinator.json"

@@ -24,15 +24,22 @@ fn main() -> Result<()> {
     kind.prepare(&dir)?;
     // HELIX_SHARDS=4 fans the DNN stage out over 4 backend replicas;
     // HELIX_MAX_SHARDS=4 (plus optional HELIX_MIN_SHARDS /
-    // HELIX_AUTOSCALE_TICK_MS) lets the pool resize itself instead
+    // HELIX_AUTOSCALE_TICK_MS) lets the pool resize itself instead.
+    // HELIX_SLO_MS=20 adds the latency objective (p99 over it scales
+    // up even when utilization is low) and HELIX_AUTOSCALE_DECODE=1 /
+    // HELIX_AUTOSCALE_VOTE=1 put those pools under the same controller.
     let shards = CoordinatorConfig::shards_from_env();
     let autoscale = AutoscaleConfig::from_env();
     match &autoscale {
         Some(a) => println!("backend: {} ({shards} dnn shard{}, \
-                             autoscale {}..{})",
+                             autoscale {}..{}{})",
                             kind.name(),
                             if shards == 1 { "" } else { "s" },
-                            a.min_shards, a.max_shards),
+                            a.min_shards, a.max_shards,
+                            match a.slo {
+                                Some(slo) => format!(", slo p99<{slo:?}"),
+                                None => String::new(),
+                            }),
         None => println!("backend: {} ({shards} dnn shard{})", kind.name(),
                          if shards == 1 { "" } else { "s" }),
     }

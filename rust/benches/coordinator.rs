@@ -195,6 +195,7 @@ fn main() {
             up_ticks: 1,
             down_ticks: 5,
             cooldown_ticks: 1,
+            ..AutoscaleConfig::default()
         };
         let t0 = std::time::Instant::now();
         let mut coord = Coordinator::new(CoordinatorConfig {
@@ -235,10 +236,10 @@ fn main() {
             .map(|e| e.live_after).max().unwrap_or(1);
         for e in &events {
             autoscale_rows.push(format!(
-                "{{\"t_ms\": {:.1}, \"action\": \"{}\", \
-                 \"slot\": {}, \"live\": {}}}",
-                e.at_micros as f64 / 1e3, e.action.name(), e.slot,
-                e.live_after));
+                "{{\"t_ms\": {:.1}, \"stage\": \"{}\", \
+                 \"action\": \"{}\", \"slot\": {}, \"live\": {}}}",
+                e.at_micros as f64 / 1e3, e.stage.name(),
+                e.action.name(), e.slot, e.live_after));
         }
         println!("min 1 / max 4, tick 10ms: {} scale events \
                   (+{ups}/-{downs}), peak live {peak_live}, live at \
@@ -252,16 +253,99 @@ fn main() {
              \"wall_s\": {dt:.3}}}");
     }
 
+    // SLO-driven scaling under a latency-sensitive TRICKLE load: one
+    // small read at a time with idle gaps, so shard utilization stays
+    // near zero — but a wide batch with a long deadline makes every
+    // window wait out max_wait, so the p99 of each tick's completions
+    // breaches the SLO and the controller must grow the pool on the
+    // latency signal alone (utilization thresholds are set so they can
+    // never fire). The deliverable is slo_rows: the stage-tagged
+    // scale-event trace of a pool scaling up while "idle".
+    println!("\n== SLO-driven scaling (trickle load, utilization ~0) ==");
+    let mut slo_rows: Vec<String> = Vec::new();
+    let slo_summary;
+    {
+        let slo = Duration::from_millis(5);
+        let acfg = AutoscaleConfig {
+            min_shards: 1,
+            max_shards: 4,
+            tick: Duration::from_millis(10),
+            high_util: 2.0, // unreachable: never hot by utilization
+            low_util: 0.0,  // unreachable: never cold either
+            up_ticks: 1,
+            down_ticks: 1,
+            cooldown_ticks: 1,
+            slo: Some(slo),
+            ..AutoscaleConfig::default()
+        };
+        let t0 = std::time::Instant::now();
+        let mut coord = Coordinator::new(CoordinatorConfig {
+            model: "guppy".into(),
+            bits: 32,
+            backend: kind,
+            dnn_shards: 1,
+            policy: BatchPolicy {
+                max_batch: 64,
+                max_wait: Duration::from_millis(25),
+            },
+            autoscale: Some(acfg),
+            artifacts_dir: dir.clone(),
+            ..Default::default()
+        }).unwrap();
+        let mut called = Vec::new();
+        let n_trickle = run.reads.len().min(30);
+        for r in run.reads.iter().take(n_trickle) {
+            coord.submit(r);
+            called.extend(coord.drain_ready());
+            std::thread::sleep(Duration::from_millis(12));
+        }
+        let final_live = coord.live_dnn_shards();
+        let metrics = coord.metrics.clone();
+        called.extend(coord.finish().unwrap());
+        let dt = t0.elapsed().as_secs_f64();
+        assert_eq!(called.len(), n_trickle);
+        let events = metrics.scale_events();
+        let ups = events.iter()
+            .filter(|e| e.action == ScaleAction::Up).count();
+        assert!(ups >= 1,
+                "p99 {}µs over the {slo:?} SLO must scale the pool up \
+                 even at ~0 utilization (events: {events:?})",
+                metrics.read_latency.quantile_micros(0.99));
+        for e in &events {
+            slo_rows.push(format!(
+                "{{\"t_ms\": {:.1}, \"stage\": \"{}\", \
+                 \"action\": \"{}\", \"slot\": {}, \"live\": {}}}",
+                e.at_micros as f64 / 1e3, e.stage.name(),
+                e.action.name(), e.slot, e.live_after));
+        }
+        let p99_ms = metrics.read_latency.quantile_micros(0.99)
+            as f64 / 1e3;
+        let mean_util = {
+            let u = metrics.shard_utilization();
+            u.iter().sum::<f64>() / u.len().max(1) as f64
+        };
+        println!("slo p99<{slo:?}, tick 10ms: {} scale events \
+                  (+{ups}), run p99 {p99_ms:.1}ms, mean util \
+                  {mean_util:.3}, live at end {final_live}, \
+                  {dt:.2}s wall", events.len());
+        println!("{}", metrics.report(64));
+        slo_summary = format!(
+            "{{\"slo_ms\": 5, \"p99_ms\": {p99_ms:.1}, \
+             \"mean_util\": {mean_util:.3}, \"ups\": {ups}, \
+             \"final_live\": {final_live}, \"wall_s\": {dt:.3}}}");
+    }
+
     // machine-readable summary for the perf trajectory (see ci.sh);
     // field semantics are documented in docs/TUNING.md
     let json = format!(
         "{{\"bench\": \"coordinator\", \"backend\": \"{}\", \
          \"reads\": {}, \"bases\": {}, \"rows\": [{}], \
          \"shard_rows\": [{}], \"autoscale\": {}, \
-         \"autoscale_rows\": [{}]}}\n",
+         \"autoscale_rows\": [{}], \"slo\": {}, \
+         \"slo_rows\": [{}]}}\n",
         kind.name(), run.reads.len(), total_bases, rows.join(", "),
         shard_rows.join(", "), autoscale_summary,
-        autoscale_rows.join(", "));
+        autoscale_rows.join(", "), slo_summary, slo_rows.join(", "));
     match std::fs::write("BENCH_coordinator.json", &json) {
         Ok(()) => println!("\nwrote BENCH_coordinator.json"),
         Err(e) => println!("\ncould not write BENCH_coordinator.json: {e}"),

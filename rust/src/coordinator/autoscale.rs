@@ -1,69 +1,89 @@
-//! Adaptive shard autoscaling: a control loop that sizes the DNN
-//! executor pool from *observed* utilization instead of a startup
-//! constant.
+//! Adaptive stage autoscaling: a control loop that sizes the
+//! pipeline's worker pools from *observed* utilization and tail
+//! latency instead of startup constants.
 //!
 //! The paper's throughput claim rests on keeping every compute array
 //! busy; the serving-side analogue is keeping every backend replica
-//! busy without parking idle ones on cores the decode/vote pools could
-//! use. A fixed `dnn_shards` forces the operator to guess that balance
-//! per workload. This module closes the loop instead:
+//! and worker busy without parking idle ones on cores another stage
+//! could use. A fixed `dnn_shards`/`decode_threads`/`vote_threads`
+//! forces the operator to guess that balance per workload. This module
+//! closes the loop instead — one controller thread, one decision core,
+//! N stage pools:
 //!
 //! ```text
-//!        every `tick`
+//!        every `tick`, for EACH controlled stage pool
 //!   ┌───────────────────────────────────────────────────────────┐
-//!   │  SAMPLE   per-live-shard busy-micros delta / tick wall    │
-//!   │           + window-queue backlog fraction                 │
+//!   │  SAMPLE   per-live-slot busy-micros delta / tick wall     │
+//!   │           + input-queue backlog fraction                  │
+//!   │           + interval p99 of per-read latency (shared)     │
 //!   │                         │                                 │
 //!   │                         ▼                                 │
 //!   │  DECIDE   Controller::observe — hysteresis (consecutive   │
 //!   │           hot/cold ticks + post-event cooldown) around    │
-//!   │           high_util / low_util thresholds                 │
+//!   │           high_util / low_util; p99 over the SLO counts   │
+//!   │           as hot even when utilization reads low          │
 //!   │                 │               │                         │
 //!   │            ScaleUp          ScaleDown                     │
 //!   │                 ▼               ▼                         │
-//!   │  ACT      spawn replica     retire the least-busy shard   │
+//!   │  ACT      spawn a worker    retire the least-busy slot    │
 //!   │           into a free       (drop its queue sender; the   │
-//!   │           slot (factory     shard drains what is staged   │
+//!   │           slot (factory     worker drains what is staged  │
 //!   │           clone / late      and exits — the same skip-    │
-//!   │           open_shard)       dead path a crash takes)      │
+//!   │           open_shard, or    dead path a crash takes)      │
+//!   │           a plain respawn                                 │
+//!   │           for cheap decode/vote workers)                  │
 //!   └───────────────────────────────────────────────────────────┘
 //! ```
 //!
+//! The **SLO signal** is what makes the controller latency-aware:
+//! utilization alone is blind to a trickle load where every read eats
+//! the full batching deadline — shards look idle while p99 blows
+//! through the budget. `AutoscaleConfig::slo` compares the p99 of the
+//! *last tick's* completions (interval snapshots of
+//! `Metrics::read_latency`, not the run-cumulative histogram an early
+//! burst would pin forever) against the budget, and a breach counts
+//! the tick as hot. An interval with no completions reports no signal
+//! (not a breach): a stalled pipeline is the backlog signal's job.
+//!
 //! **Determinism contract:** scaling changes *when* windows run and on
-//! *which* replica — never what they produce. Every replica computes
-//! bit-identical `LogProbs` for a given window and the collector
-//! reassembles by `(read_id, window_idx)`, so a run under the
-//! autoscaler calls byte-identical reads to a fixed-shard run over the
-//! same input (integration-pinned in `tests/coordinator_stream.rs`).
+//! *which* replica/worker — never what they produce. Every replica
+//! computes bit-identical `LogProbs` for a given window and the
+//! collector reassembles by `(read_id, window_idx)`, so a run under
+//! the autoscaler calls byte-identical reads to a fixed-pool run over
+//! the same input (integration-pinned in `tests/coordinator_stream.rs`,
+//! including SLO-scaled runs).
 //!
 //! The decision core (`Controller`) is a pure function of the sampled
 //! trace — no threads, no clocks — so the unit tests below drive it
-//! with synthetic utilization traces: saturation must scale up,
-//! idleness must scale down, and oscillation around a threshold must
-//! NOT flap.
+//! with synthetic traces: saturation must scale up, idleness must
+//! scale down, an SLO breach must scale up even at zero utilization,
+//! and oscillation around a threshold must NOT flap.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use super::metrics::{Metrics, ScaleAction};
-use crate::util::bounded::{Receiver, RecvTimeoutError};
+use super::metrics::{Metrics, ScaleAction, StageId, StageStats};
+use crate::util::bounded::{bounded, QueueSet, Receiver,
+                           RecvTimeoutError};
 
-/// Tuning knobs for the adaptive shard controller. Construct with
+/// Tuning knobs for the adaptive stage controller. Construct with
 /// struct-update syntax over `Default::default()` (or `from_env`) and
 /// pass via `CoordinatorConfig::autoscale`; `normalized()` is applied
 /// before use so inverted bounds cannot wedge the pool.
 #[derive(Clone, Copy, Debug)]
 pub struct AutoscaleConfig {
-    /// floor on live shards; the controller never retires below this.
+    /// floor on live DNN shards; the controller never retires below
+    /// this.
     pub min_shards: usize,
-    /// ceiling on live shards; also the slot count (`Metrics::shards`
-    /// length) the pipeline pre-allocates.
+    /// ceiling on live DNN shards; also the slot count
+    /// (`Metrics::shards` length) the pipeline pre-allocates.
     pub max_shards: usize,
     /// control-loop sampling period.
     pub tick: Duration,
-    /// mean live-shard utilization above which a tick counts as *hot*.
+    /// mean live-slot utilization above which a tick counts as *hot*.
     pub high_util: f64,
-    /// mean live-shard utilization below which a tick counts as *cold*.
+    /// mean live-slot utilization below which a tick counts as *cold*.
     pub low_util: f64,
     /// consecutive hot ticks required before scaling up (hysteresis).
     pub up_ticks: u32,
@@ -74,6 +94,19 @@ pub struct AutoscaleConfig {
     /// ticks to hold after any scale event before reconsidering, so
     /// the pool's reaction to its own resize settles into the samples.
     pub cooldown_ticks: u32,
+    /// per-read p99 latency objective: when set, a tick whose
+    /// *interval* p99 (completions since the previous tick) exceeds
+    /// this counts as hot — even when utilization reads low — so a
+    /// latency-sensitive trickle load still grows the pool. `None`
+    /// scales on utilization/backlog alone.
+    pub slo: Option<Duration>,
+    /// also size the CTC decode pool with this controller. Its slot
+    /// ceiling is `CoordinatorConfig::decode_threads` (the configured
+    /// width becomes the ceiling; floor 1).
+    pub scale_decode: bool,
+    /// also size the vote/splice pool with this controller (ceiling
+    /// `CoordinatorConfig::vote_threads`, floor 1).
+    pub scale_vote: bool,
 }
 
 impl Default for AutoscaleConfig {
@@ -87,6 +120,9 @@ impl Default for AutoscaleConfig {
             up_ticks: 2,
             down_ticks: 4,
             cooldown_ticks: 2,
+            slo: None,
+            scale_decode: false,
+            scale_vote: false,
         }
     }
 }
@@ -94,7 +130,8 @@ impl Default for AutoscaleConfig {
 impl AutoscaleConfig {
     /// Clamp the knobs into a usable shape: bounds at least 1 with
     /// `max >= min`, a non-zero tick, threshold order `low <= high`,
-    /// and streak lengths of at least one tick.
+    /// streak lengths of at least one tick, and a non-zero SLO (a
+    /// zero SLO would read every completed read as a breach).
     pub fn normalized(mut self) -> AutoscaleConfig {
         self.min_shards = self.min_shards.max(1);
         self.max_shards = self.max_shards.max(self.min_shards);
@@ -106,14 +143,20 @@ impl AutoscaleConfig {
         }
         self.up_ticks = self.up_ticks.max(1);
         self.down_ticks = self.down_ticks.max(1);
+        if self.slo == Some(Duration::ZERO) {
+            self.slo = None;
+        }
         self
     }
 
     /// Autoscaling selected by environment: enabled iff
     /// `HELIX_MAX_SHARDS` parses to a positive shard ceiling;
     /// `HELIX_MIN_SHARDS` and `HELIX_AUTOSCALE_TICK_MS` then refine
-    /// the floor and the sampling period (unparsable values keep the
-    /// defaults). Returns `None` — autoscaling off — otherwise.
+    /// the floor and the sampling period, `HELIX_SLO_MS` sets the p99
+    /// latency objective, and `HELIX_AUTOSCALE_DECODE=1` /
+    /// `HELIX_AUTOSCALE_VOTE=1` extend the controller to the decode
+    /// and vote pools (unparsable values keep the defaults). Returns
+    /// `None` — autoscaling off — otherwise.
     pub fn from_env() -> Option<AutoscaleConfig> {
         let max = std::env::var("HELIX_MAX_SHARDS").ok()?
             .parse::<usize>().ok()
@@ -134,31 +177,45 @@ impl AutoscaleConfig {
         {
             cfg.tick = Duration::from_millis(ms);
         }
+        if let Some(ms) = std::env::var("HELIX_SLO_MS").ok()
+            .and_then(|s| s.parse::<u64>().ok())
+            .filter(|&ms| ms >= 1)
+        {
+            cfg.slo = Some(Duration::from_millis(ms));
+        }
+        cfg.scale_decode = std::env::var("HELIX_AUTOSCALE_DECODE")
+            .is_ok_and(|v| v == "1" || v == "true");
+        cfg.scale_vote = std::env::var("HELIX_AUTOSCALE_VOTE")
+            .is_ok_and(|v| v == "1" || v == "true");
         Some(cfg.normalized())
     }
 }
 
-/// One control-loop observation of the pool.
+/// One control-loop observation of a stage pool.
 #[derive(Clone, Copy, Debug)]
 pub struct Sample {
-    /// live shard count when the sample was taken.
+    /// live slot count when the sample was taken.
     pub live: usize,
-    /// mean per-live-shard busy fraction over the last tick (0–1).
+    /// mean per-live-slot busy fraction over the last tick (0–1).
     pub mean_util: f64,
-    /// window-queue occupancy fraction (0–1): the pipeline's
-    /// backpressure point. A saturated window queue is treated as hot
-    /// even when shard utilization reads low (e.g. the tick landed
-    /// between batches), because blocked `submit()` callers are the
-    /// symptom the autoscaler exists to fix.
+    /// input-queue occupancy fraction (0–1): the stage's backpressure
+    /// point. A saturated queue is treated as hot even when worker
+    /// utilization reads low (e.g. the tick landed between batches),
+    /// because blocked producers are the symptom the autoscaler exists
+    /// to fix.
     pub backlog: f64,
+    /// p99 of per-read end-to-end latency over the completions of the
+    /// last tick, in µs (0 = no completions this tick, i.e. no
+    /// signal). Compared against `AutoscaleConfig::slo` when set.
+    pub p99_micros: u64,
 }
 
 /// What the controller wants done after an observation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Decision {
-    /// spawn one more shard (pool below `max_shards` and hot).
+    /// spawn one more worker (pool below its ceiling and hot).
     ScaleUp,
-    /// retire one shard (pool above `min_shards` and cold).
+    /// retire one worker (pool above its floor and cold).
     ScaleDown,
     /// leave the pool alone.
     Hold,
@@ -167,7 +224,9 @@ pub enum Decision {
 /// Pure decision core: feed it one `Sample` per tick, act on the
 /// returned `Decision`. Holds only the hysteresis state (hot/cold
 /// streak lengths and the post-event cooldown), so identical traces
-/// always produce identical decision sequences.
+/// always produce identical decision sequences. Each controlled stage
+/// gets its own `Controller` (with that stage's bounds in the config),
+/// all fed from the same sampling pass.
 pub struct Controller {
     cfg: AutoscaleConfig,
     hot_streak: u32,
@@ -189,12 +248,14 @@ impl Controller {
     /// Observe one tick and decide. Hysteresis rules:
     /// * during cooldown, always `Hold` (and streaks reset, so the
     ///   post-resize transient cannot count toward the next event);
-    /// * a *hot* tick (mean util above `high_util`, or the window
-    ///   queue ≥95% full) extends the hot streak and resets the cold
-    ///   one — and vice versa for *cold* (util below `low_util` while
-    ///   the backlog is under half); a tick that is neither resets
-    ///   both, which is what stops threshold oscillation from ever
-    ///   accumulating a streak (no flapping);
+    /// * a *hot* tick (mean util above `high_util`, or the input
+    ///   queue ≥95% full, or — with an SLO configured — interval p99
+    ///   over the SLO) extends the hot streak and resets the cold one
+    ///   — and vice versa for *cold* (util below `low_util` while the
+    ///   backlog is under half; an SLO breach vetoes cold via hot); a
+    ///   tick that is neither resets both, which is what stops
+    ///   threshold oscillation from ever accumulating a streak (no
+    ///   flapping);
     /// * `ScaleUp` needs `up_ticks` consecutive hot ticks and headroom
     ///   below `max_shards`; `ScaleDown` needs `down_ticks` cold ticks
     ///   and slack above `min_shards`; both start the cooldown.
@@ -205,7 +266,12 @@ impl Controller {
             self.cold_streak = 0;
             return Decision::Hold;
         }
-        let hot = s.mean_util > self.cfg.high_util || s.backlog >= 0.95;
+        let slo_breach = self.cfg.slo
+            .is_some_and(|slo| s.p99_micros > 0
+                         && s.p99_micros as u128 > slo.as_micros());
+        let hot = s.mean_util > self.cfg.high_util
+            || s.backlog >= 0.95
+            || slo_breach;
         let cold = !hot
             && s.mean_util < self.cfg.low_util
             && s.backlog < 0.5;
@@ -237,40 +303,197 @@ impl Controller {
     }
 }
 
-/// What the control loop needs from the shard-pool host. Implemented
-/// by the coordinator's pool internals; kept as a trait so the loop —
-/// and its failure modes — can be exercised against a fake pool
-/// without spinning up backends.
-pub trait ShardPool: Send + Sync {
-    /// total slot count (== `max_shards`).
+/// What the control loop needs from a resizable stage pool. The DNN
+/// shard host implements it over backend replicas (factory-built); the
+/// decode/vote pools implement it through [`WorkerPool`] (cheap thread
+/// respawns). Kept as a trait so the loop — and its failure modes —
+/// can be exercised against a fake pool without spinning up backends.
+pub trait StagePool: Send + Sync {
+    /// total slot count (== the stage's ceiling).
     fn slots(&self) -> usize;
-    /// slot ids with a live shard, ascending.
+    /// slot ids with a live worker, ascending.
     fn live_slots(&self) -> Vec<usize>;
-    /// cumulative forward-pass busy-micros of the slot's shard.
+    /// cumulative busy-micros of the slot's worker.
     fn busy_micros(&self, slot: usize) -> u64;
-    /// window-queue occupancy fraction (0–1).
+    /// input-queue occupancy fraction (0–1).
     fn backlog(&self) -> f64;
-    /// spawn a shard into a free slot; `None` when no slot is free.
+    /// spawn a worker into a free slot; `None` when no slot is free.
     fn scale_up(&self) -> Option<usize>;
-    /// retire the slot's shard (close its queue). `false` if already
+    /// retire the slot's worker (close its queue). `false` if already
     /// free.
     fn retire(&self, slot: usize) -> bool;
 }
 
+/// Thread-spawning callback for a [`WorkerPool`] slot: given the slot
+/// id and the slot's queue receiver, start the worker thread.
+pub type SpawnWorker<T> =
+    Box<dyn Fn(usize, Receiver<T>) -> JoinHandle<()> + Send + Sync>;
+
+/// A resizable pool of cheap worker threads (CTC decode, vote/splice)
+/// behind a [`QueueSet`]: the same slot mechanics as the DNN shard
+/// host — stable slot ids indexing per-slot `StageStats`, retire by
+/// closing the slot's queue so the worker drains and exits through the
+/// skip-dead dispatch path — minus the backend factory, because a
+/// decode or vote worker is a plain thread the spawn callback can
+/// recreate at will. Producers dispatch through `queues()` and never
+/// observe membership edits.
+pub struct WorkerPool<T> {
+    stage: StageId,
+    metrics: Arc<Metrics>,
+    queues: Arc<QueueSet<T>>,
+    per_worker_cap: usize,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    spawn: SpawnWorker<T>,
+}
+
+impl<T: Send> WorkerPool<T> {
+    /// Build the pool and spawn a worker into every one of its `slots`
+    /// (the stage starts at full configured width; the controller can
+    /// then retire down to its floor and respawn back up). `stage`
+    /// selects which of `Metrics::decode_workers` /
+    /// `Metrics::vote_workers` the per-slot counters land in; a
+    /// `Metrics` without slots for this stage (e.g. `default()`)
+    /// simply records no per-slot stats.
+    pub fn new(stage: StageId, metrics: Arc<Metrics>, slots: usize,
+               per_worker_cap: usize, spawn: SpawnWorker<T>)
+               -> Arc<WorkerPool<T>> {
+        let pool = Arc::new(WorkerPool {
+            stage,
+            metrics,
+            queues: Arc::new(QueueSet::with_slots(slots.max(1))),
+            per_worker_cap: per_worker_cap.max(1),
+            handles: Mutex::new(Vec::new()),
+            spawn,
+        });
+        for _ in 0..slots.max(1) {
+            let _ = pool.scale_up(); // a fresh set has a slot per worker
+        }
+        pool
+    }
+
+    fn stats(&self, slot: usize) -> Option<&StageStats> {
+        match self.stage {
+            StageId::Decode => self.metrics.decode_workers.get(slot),
+            StageId::Vote => self.metrics.vote_workers.get(slot),
+            StageId::Dnn => None, // DNN slots live in Metrics::shards
+        }
+    }
+
+    /// The queue set producers dispatch through (clone the `Arc`;
+    /// membership edits stay invisible to dispatch).
+    pub fn queues(&self) -> Arc<QueueSet<T>> {
+        self.queues.clone()
+    }
+
+    /// Workers live right now.
+    pub fn live_count(&self) -> usize {
+        self.queues.live_count()
+    }
+
+    /// Take every worker `JoinHandle` spawned so far (for joining at
+    /// shutdown). Call only after the controller is stopped, so no new
+    /// handle can appear afterwards.
+    pub fn take_handles(&self) -> Vec<JoinHandle<()>> {
+        self.handles.lock().unwrap().drain(..).collect()
+    }
+}
+
+impl<T: Send> StagePool for WorkerPool<T> {
+    fn slots(&self) -> usize {
+        self.queues.slots()
+    }
+
+    fn live_slots(&self) -> Vec<usize> {
+        self.queues.live_slots()
+    }
+
+    fn busy_micros(&self, slot: usize) -> u64 {
+        self.stats(slot).map_or(0, |s| {
+            s.busy_micros.load(std::sync::atomic::Ordering::Relaxed)
+        })
+    }
+
+    fn backlog(&self) -> f64 {
+        self.queues.occupancy()
+    }
+
+    fn scale_up(&self) -> Option<usize> {
+        // add() fails once the set is sealed (shutdown), so a racing
+        // scale-up can never install a queue nobody will close
+        let (tx, rx) = bounded::<T>(self.per_worker_cap);
+        let slot = self.queues.add(tx)?;
+        if let Some(st) = self.stats(slot) {
+            st.mark_spawned(self.metrics.epoch_micros());
+        }
+        let handle = (self.spawn)(slot, rx);
+        self.handles.lock().unwrap().push(handle);
+        Some(slot)
+    }
+
+    fn retire(&self, slot: usize) -> bool {
+        if self.queues.retire(slot) {
+            if let Some(st) = self.stats(slot) {
+                st.mark_retired(self.metrics.epoch_micros());
+            }
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// One stage under the controller: its pool, identity, and bounds.
+/// The bounds override the config's `min_shards`/`max_shards` for this
+/// stage (the DNN stage passes those through; decode/vote pass
+/// `1..=configured width`).
+pub struct StageControl {
+    /// which stage this is (tags its scale events and report rows).
+    pub stage: StageId,
+    /// the pool the controller sizes.
+    pub pool: Arc<dyn StagePool>,
+    /// floor on live workers for this stage.
+    pub min: usize,
+    /// ceiling on live workers for this stage.
+    pub max: usize,
+}
+
+struct StageState {
+    ctl: Controller,
+    prev_busy: Vec<u64>,
+}
+
 /// The control loop the coordinator spawns when
-/// `CoordinatorConfig::autoscale` is set: sample → decide → act, every
-/// `cfg.tick`, until `stop` is signalled (or its sender drops) or the
-/// pool collapses. Scale-up/-down events are appended to
-/// `metrics.scale_events()`; the scale-down victim is the live shard
-/// with the smallest busy-delta this tick (ties retire the highest
-/// slot id, keeping slot 0 — the tail-batch magnet — alive longest).
-pub fn run(pool: Arc<dyn ShardPool>, cfg: AutoscaleConfig,
+/// `CoordinatorConfig::autoscale` is set: sample → decide → act for
+/// every controlled stage, once per `cfg.tick`, until `stop` is
+/// signalled (or its sender drops) or the primary pool collapses.
+/// `stages[0]` is the primary (DNN) pool — the loop exits when it has
+/// no live slot, because a pipeline without its hot stage is dead.
+/// Each stage runs its own hysteresis `Controller` (bounds from its
+/// `StageControl`), all fed the same shared interval-p99 signal from
+/// `metrics.read_latency` snapshots. Scale events are appended to
+/// `metrics.scale_events()` tagged with the stage; the scale-down
+/// victim is the live slot with the smallest busy-delta this tick
+/// (ties retire the highest slot id, keeping slot 0 — the tail-batch
+/// magnet — alive longest).
+pub fn run(stages: Vec<StageControl>, cfg: AutoscaleConfig,
            metrics: Arc<Metrics>, stop: Receiver<()>) {
     let cfg = cfg.normalized();
-    let mut ctl = Controller::new(cfg);
-    let n_slots = pool.slots();
-    let mut prev_busy: Vec<u64> =
-        (0..n_slots).map(|s| pool.busy_micros(s)).collect();
+    if stages.is_empty() {
+        return;
+    }
+    let mut states: Vec<StageState> = stages.iter()
+        .map(|st| StageState {
+            ctl: Controller::new(AutoscaleConfig {
+                min_shards: st.min,
+                max_shards: st.max,
+                ..cfg
+            }),
+            prev_busy: (0..st.pool.slots())
+                .map(|s| st.pool.busy_micros(s))
+                .collect(),
+        })
+        .collect();
+    let mut prev_lat = metrics.read_latency.snapshot();
     let mut last = Instant::now();
     loop {
         match stop.recv_timeout(cfg.tick) {
@@ -281,47 +504,62 @@ pub fn run(pool: Arc<dyn ShardPool>, cfg: AutoscaleConfig,
         let now = Instant::now();
         let wall = now.duration_since(last).as_micros().max(1) as f64;
         last = now;
-        let live = pool.live_slots();
-        if live.is_empty() {
-            return; // every replica failed: nothing left to control
+        // shared latency signal: p99 of the reads completed this tick
+        let cur_lat = metrics.read_latency.snapshot();
+        let p99_micros = cur_lat.quantile_since(&prev_lat, 0.99);
+        prev_lat = cur_lat;
+        if stages[0].pool.live_slots().is_empty() {
+            return; // every primary replica failed: pipeline is dead
         }
-        let mut utils: Vec<(usize, f64)> = Vec::with_capacity(live.len());
-        for &slot in &live {
-            let busy = pool.busy_micros(slot);
-            let delta = busy.saturating_sub(prev_busy[slot]);
-            prev_busy[slot] = busy;
-            utils.push((slot, (delta as f64 / wall).min(1.0)));
-        }
-        let mean_util = utils.iter().map(|(_, u)| *u).sum::<f64>()
-            / utils.len() as f64;
-        let sample = Sample {
-            live: live.len(),
-            mean_util,
-            backlog: pool.backlog().clamp(0.0, 1.0),
-        };
-        match ctl.observe(sample) {
-            Decision::ScaleUp => {
-                if let Some(slot) = pool.scale_up() {
-                    // refresh the baseline so a recycled slot's old
-                    // cumulative count does not read as a burst
-                    prev_busy[slot] = pool.busy_micros(slot);
-                    metrics.record_scale(ScaleAction::Up, slot,
-                                         pool.live_slots().len());
-                }
+        for (st, state) in stages.iter().zip(states.iter_mut()) {
+            let live = st.pool.live_slots();
+            if live.is_empty() {
+                continue; // nothing to control (and nothing to retire)
             }
-            Decision::ScaleDown => {
-                let mut victim = utils[0];
-                for &(slot, u) in &utils[1..] {
-                    if u < victim.1 || (u <= victim.1 && slot > victim.0) {
-                        victim = (slot, u);
+            let mut utils: Vec<(usize, f64)> =
+                Vec::with_capacity(live.len());
+            for &slot in &live {
+                let busy = st.pool.busy_micros(slot);
+                let delta = busy.saturating_sub(state.prev_busy[slot]);
+                state.prev_busy[slot] = busy;
+                utils.push((slot, (delta as f64 / wall).min(1.0)));
+            }
+            let mean_util = utils.iter().map(|(_, u)| *u).sum::<f64>()
+                / utils.len() as f64;
+            let sample = Sample {
+                live: live.len(),
+                mean_util,
+                backlog: st.pool.backlog().clamp(0.0, 1.0),
+                p99_micros,
+            };
+            match state.ctl.observe(sample) {
+                Decision::ScaleUp => {
+                    if let Some(slot) = st.pool.scale_up() {
+                        // refresh the baseline so a recycled slot's old
+                        // cumulative count does not read as a burst
+                        state.prev_busy[slot] = st.pool.busy_micros(slot);
+                        metrics.record_scale(st.stage, ScaleAction::Up,
+                                             slot,
+                                             st.pool.live_slots().len());
                     }
                 }
-                if pool.retire(victim.0) {
-                    metrics.record_scale(ScaleAction::Down, victim.0,
-                                         pool.live_slots().len());
+                Decision::ScaleDown => {
+                    let mut victim = utils[0];
+                    for &(slot, u) in &utils[1..] {
+                        if u < victim.1
+                            || (u <= victim.1 && slot > victim.0)
+                        {
+                            victim = (slot, u);
+                        }
+                    }
+                    if st.pool.retire(victim.0) {
+                        metrics.record_scale(st.stage, ScaleAction::Down,
+                                             victim.0,
+                                             st.pool.live_slots().len());
+                    }
                 }
+                Decision::Hold => {}
             }
-            Decision::Hold => {}
         }
     }
 }
@@ -329,6 +567,7 @@ pub fn run(pool: Arc<dyn ShardPool>, cfg: AutoscaleConfig,
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::Ordering;
 
     fn fast_cfg() -> AutoscaleConfig {
         AutoscaleConfig {
@@ -344,7 +583,7 @@ mod tests {
     }
 
     fn s(live: usize, util: f64) -> Sample {
-        Sample { live, mean_util: util, backlog: 0.0 }
+        Sample { live, mean_util: util, backlog: 0.0, p99_micros: 0 }
     }
 
     #[test]
@@ -358,6 +597,8 @@ mod tests {
             up_ticks: 0,
             down_ticks: 0,
             cooldown_ticks: 0,
+            slo: Some(Duration::ZERO), // degenerate: every read breaches
+            ..AutoscaleConfig::default()
         }.normalized();
         assert_eq!(c.min_shards, 1);
         assert_eq!(c.max_shards, 1);
@@ -365,6 +606,7 @@ mod tests {
         assert!(c.low_util <= c.high_util);
         assert_eq!(c.up_ticks, 1);
         assert_eq!(c.down_ticks, 1);
+        assert_eq!(c.slo, None, "a zero SLO is dropped, not enforced");
         // min above max: max follows min
         let c2 = AutoscaleConfig {
             min_shards: 8,
@@ -394,9 +636,80 @@ mod tests {
         let mut ctl = Controller::new(fast_cfg());
         // shards read idle (tick landed between batches) but submit()
         // is blocked on a full window queue: that is saturation
-        let jam = Sample { live: 1, mean_util: 0.0, backlog: 1.0 };
+        let jam = Sample {
+            live: 1, mean_util: 0.0, backlog: 1.0, p99_micros: 0,
+        };
         assert_eq!(ctl.observe(jam), Decision::Hold);
         assert_eq!(ctl.observe(jam), Decision::ScaleUp);
+    }
+
+    #[test]
+    fn slo_breach_counts_as_hot_at_zero_utilization() {
+        // THE tentpole scenario: a latency-sensitive trickle load —
+        // utilization and backlog both ~0, but the reads that did
+        // complete this tick blew the p99 budget. Utilization-only
+        // control would call this idle (and even scale DOWN); with an
+        // SLO the tick is hot and the pool grows.
+        let mut ctl = Controller::new(AutoscaleConfig {
+            slo: Some(Duration::from_millis(10)),
+            ..fast_cfg()
+        });
+        let breach = Sample {
+            live: 1, mean_util: 0.0, backlog: 0.0, p99_micros: 50_000,
+        };
+        assert_eq!(ctl.observe(breach), Decision::Hold);
+        assert_eq!(ctl.observe(breach), Decision::ScaleUp);
+    }
+
+    #[test]
+    fn slo_breach_vetoes_scale_down() {
+        // cold utilization + breached SLO must never shrink the pool
+        let mut ctl = Controller::new(AutoscaleConfig {
+            min_shards: 1,
+            max_shards: 4,
+            high_util: 0.75,
+            low_util: 0.25,
+            up_ticks: 100, // never actually scale up in this test
+            down_ticks: 2,
+            cooldown_ticks: 0,
+            slo: Some(Duration::from_millis(10)),
+            ..AutoscaleConfig::default()
+        });
+        let breach = Sample {
+            live: 3, mean_util: 0.01, backlog: 0.0, p99_micros: 90_000,
+        };
+        for _ in 0..20 {
+            assert_eq!(ctl.observe(breach), Decision::Hold,
+                       "breached SLO must veto cold ticks");
+        }
+        // same trace with p99 inside the budget: scales down normally
+        let ok = Sample {
+            live: 3, mean_util: 0.01, backlog: 0.0, p99_micros: 2_000,
+        };
+        assert_eq!(ctl.observe(ok), Decision::Hold);
+        assert_eq!(ctl.observe(ok), Decision::ScaleDown);
+    }
+
+    #[test]
+    fn empty_interval_p99_is_no_signal() {
+        // p99_micros == 0 means "no completions this tick", which must
+        // not read as an SLO breach (nor veto a cold streak)
+        let mut ctl = Controller::new(AutoscaleConfig {
+            min_shards: 1,
+            max_shards: 4,
+            high_util: 0.75,
+            low_util: 0.25,
+            up_ticks: 1,
+            down_ticks: 2,
+            cooldown_ticks: 0,
+            slo: Some(Duration::from_millis(10)),
+            ..AutoscaleConfig::default()
+        });
+        let idle = Sample {
+            live: 2, mean_util: 0.0, backlog: 0.0, p99_micros: 0,
+        };
+        assert_eq!(ctl.observe(idle), Decision::Hold);
+        assert_eq!(ctl.observe(idle), Decision::ScaleDown);
     }
 
     #[test]
@@ -451,9 +764,50 @@ mod tests {
         // is arriving faster than batches launch, so shrinking now
         // would amplify the jam. Cold requires an empty-ish backlog.
         let mut ctl = Controller::new(fast_cfg());
-        let draining = Sample { live: 3, mean_util: 0.1, backlog: 0.6 };
+        let draining = Sample {
+            live: 3, mean_util: 0.1, backlog: 0.6, p99_micros: 0,
+        };
         for _ in 0..10 {
             assert_eq!(ctl.observe(draining), Decision::Hold);
         }
+    }
+
+    #[test]
+    fn worker_pool_scales_and_retires_through_stage_pool() {
+        // the WorkerPool implements the same StagePool contract the
+        // DNN host does: spawn into the lowest free slot, retire by
+        // closing the queue, per-slot stats with lifecycle marks
+        let m = Arc::new(Metrics::for_pipeline(1, 3, 1));
+        let pool = WorkerPool::<u32>::new(
+            StageId::Decode, m.clone(), 3, 4,
+            Box::new(|_slot, rx: Receiver<u32>| {
+                std::thread::spawn(move || {
+                    while rx.recv().is_ok() {}
+                })
+            }));
+        assert_eq!(pool.slots(), 3);
+        assert_eq!(pool.live_slots(), vec![0, 1, 2]);
+        assert_eq!(pool.live_count(), 3);
+        assert!(m.decode_workers.iter().all(|s| s.is_live()));
+        // retire slot 2: the worker drains its queue and exits
+        assert!(pool.retire(2));
+        assert!(!pool.retire(2), "double retire reports already-free");
+        assert_eq!(pool.live_slots(), vec![0, 1]);
+        assert!(!m.decode_workers[2].is_live());
+        // respawn recycles the freed slot (generation 2)
+        assert_eq!(pool.scale_up(), Some(2));
+        assert_eq!(m.decode_workers[2].spawns.load(Ordering::Relaxed), 2);
+        assert!(m.decode_workers[2].is_live());
+        // dispatch reaches the live workers
+        let mut rr = 0;
+        let q = pool.queues();
+        assert!(q.send_round_robin(&mut rr, 7));
+        // shutdown: seal the set, workers drain out, handles join
+        q.close_all();
+        for h in pool.take_handles() {
+            h.join().unwrap();
+        }
+        assert_eq!(pool.live_count(), 0);
+        assert!(pool.scale_up().is_none(), "sealed set refuses spawns");
     }
 }

@@ -49,16 +49,38 @@ impl<T> Batch<T> {
 /// channel is bounded, a batcher that falls behind backpressures
 /// `Coordinator::submit()` instead of letting the queue grow without
 /// limit.
+///
+/// The deadline clock starts at the batch's first item's **enqueue**
+/// time when the items carry one (`with_stamp`), falling back to
+/// first-dequeue time otherwise (`new`). The distinction matters under
+/// backpressure: an item that sat queued for 30ms behind a slow run
+/// has already spent its latency budget, so the deadline is treated as
+/// elapsed — the batch launches with whatever is queued instead of
+/// waiting another `max_wait` — and `Batch::oldest_wait` reports the
+/// true queue-to-launch wait.
 pub struct Batcher<T> {
     rx: Receiver<T>,
     policy: BatchPolicy,
     closed: bool,
+    stamp: Option<fn(&T) -> Instant>,
 }
 
 impl<T> Batcher<T> {
-    /// Wrap the stage's input channel with a batching policy.
+    /// Wrap the stage's input channel with a batching policy; the
+    /// deadline clock starts when the first item of each batch is
+    /// dequeued (blind to queue wait — prefer `with_stamp` when the
+    /// item type records its enqueue time).
     pub fn new(rx: Receiver<T>, policy: BatchPolicy) -> Self {
-        Batcher { rx, policy, closed: false }
+        Batcher { rx, policy, closed: false, stamp: None }
+    }
+
+    /// Like `new`, but `stamp` extracts each item's enqueue timestamp
+    /// and the deadline clock starts at the batch's first item's
+    /// enqueue — time spent queued behind backpressure counts against
+    /// `max_wait` and shows up in `Batch::oldest_wait`.
+    pub fn with_stamp(rx: Receiver<T>, policy: BatchPolicy,
+                      stamp: fn(&T) -> Instant) -> Self {
+        Batcher { rx, policy, closed: false, stamp: Some(stamp) }
     }
 
     /// Block for the next batch (size or deadline triggered); `None`
@@ -75,7 +97,10 @@ impl<T> Batcher<T> {
                 return None;
             }
         };
-        let start = Instant::now();
+        let start = match self.stamp {
+            Some(f) => f(&first),
+            None => Instant::now(),
+        };
         let mut items = vec![first];
         let mut full = false;
         while items.len() < self.policy.max_batch {
@@ -132,6 +157,49 @@ mod tests {
         assert!(!batch.full);
         assert!(batch.is_tail(), "deadline-triggered launch is a tail");
         assert!(batch.oldest_wait >= Duration::from_millis(9));
+    }
+
+    #[test]
+    fn stamped_batcher_counts_queue_wait_toward_deadline() {
+        // regression: the deadline clock used to start at first
+        // DEQUEUE, so items queued behind backpressure waited a full
+        // extra max_wait and oldest_wait under-reported their latency.
+        struct J(Instant);
+        let (tx, rx) = bounded::<J>(16);
+        // pre-fill the queue BEFORE the batcher ever drains it
+        for _ in 0..3 {
+            tx.send(J(Instant::now())).unwrap();
+        }
+        std::thread::sleep(Duration::from_millis(30));
+        let mut b = Batcher::with_stamp(rx, BatchPolicy {
+            max_batch: 100,
+            max_wait: Duration::from_millis(20),
+        }, |j: &J| j.0);
+        let batch = b.next_batch().unwrap();
+        // the 30ms already spent queued blew the 20ms budget: the
+        // batch launches with what is queued, reporting the true wait
+        assert_eq!(batch.items.len(), 3);
+        assert!(batch.is_tail());
+        assert!(batch.oldest_wait >= Duration::from_millis(29),
+                "oldest_wait {:?} must include time queued before the \
+                 first dequeue", batch.oldest_wait);
+    }
+
+    #[test]
+    fn unstamped_batcher_keeps_dequeue_clock() {
+        // without a stamp the old semantics hold: the clock starts at
+        // first dequeue, so a pre-filled queue still waits max_wait
+        let (tx, rx) = bounded::<u32>(16);
+        tx.send(1).unwrap();
+        std::thread::sleep(Duration::from_millis(40));
+        let mut b = Batcher::new(rx, BatchPolicy {
+            max_batch: 100,
+            max_wait: Duration::from_millis(10),
+        });
+        let batch = b.next_batch().unwrap();
+        assert!(batch.oldest_wait < Duration::from_millis(40),
+                "unstamped oldest_wait {:?} starts at dequeue, not at \
+                 the 40ms-old enqueue", batch.oldest_wait);
     }
 
     #[test]

@@ -19,10 +19,10 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::basecall::vote::vote_and_splice;
-use crate::util::bounded::{bounded, send_round_robin, unbounded,
-                           Receiver, Sender};
+use crate::util::bounded::{unbounded, Receiver};
 
-use super::metrics::Metrics;
+use super::autoscale::{StagePool, WorkerPool};
+use super::metrics::{Metrics, StageId};
 use super::server::CalledRead;
 
 /// Overlap floor for splicing neighbouring window decodes (samples the
@@ -125,13 +125,17 @@ struct Assembly {
 /// Handle over the router thread + vote worker pool + output queue.
 pub struct Collector {
     router: Option<JoinHandle<()>>,
-    vote_workers: Vec<JoinHandle<()>>,
+    vote_pool: Option<Arc<WorkerPool<VoteJob>>>,
     rx_out: Receiver<CalledRead>,
 }
 
 impl Collector {
     /// Start the router thread and vote pool over a decoded-window
-    /// stream; results surface through the returned handle.
+    /// stream; results surface through the returned handle. The vote
+    /// workers live in a [`WorkerPool`] (QueueSet-backed slots), so
+    /// the autoscale controller can retire and respawn them mid-run
+    /// exactly like DNN shards; per-worker busy time lands in
+    /// `Metrics::vote_workers` when the `Metrics` carries vote slots.
     pub fn spawn(registry: Arc<ReadRegistry>,
                  rx_decoded: Receiver<DecodedWindow>,
                  metrics: Arc<Metrics>,
@@ -144,37 +148,47 @@ impl Collector {
         // whole-pipeline deadlock once a run outgrows the cap.
         let (tx_out, rx_out) = unbounded::<CalledRead>();
 
-        let mut vote_txs: Vec<Sender<VoteJob>> = Vec::with_capacity(n_vote);
-        let mut vote_workers = Vec::with_capacity(n_vote);
-        for _ in 0..n_vote {
-            let (tx, rx) = bounded::<VoteJob>(vote_cap);
-            vote_txs.push(tx);
-            let out = tx_out.clone();
+        // tx_out moves into the respawn closure, which clones it into
+        // each spawned worker. The closure's prototype sender is the
+        // reason finish() drops the pool before draining: the output
+        // queue disconnects only when every sender is gone.
+        let vote_pool = {
             let m = metrics.clone();
-            vote_workers.push(std::thread::spawn(move || {
-                while let Ok(job) = rx.recv() {
-                    let t0 = Instant::now();
-                    let seq = vote_and_splice(&job.decodes,
-                                              SPLICE_MIN_OVERLAP);
-                    m.add(&m.vote_micros, t0.elapsed().as_micros() as u64);
-                    m.add(&m.bases_called, seq.len() as u64);
-                    m.add(&m.reads_out, 1);
-                    if let Some(t) = job.submitted_at {
-                        m.read_latency
-                            .record(t.elapsed().as_micros() as u64);
-                    }
-                    if out.send(CalledRead {
-                        read_id: job.read_id,
-                        seq,
-                        window_decodes: job.decodes,
-                    }).is_err() {
-                        break; // output receiver gone: shutting down
-                    }
-                }
-            }));
-        }
-        drop(tx_out); // vote workers hold the only output senders
+            WorkerPool::new(
+                StageId::Vote, metrics, n_vote, vote_cap,
+                Box::new(move |slot, rx: Receiver<VoteJob>| {
+                    let out = tx_out.clone();
+                    let m = m.clone();
+                    std::thread::spawn(move || {
+                        while let Ok(job) = rx.recv() {
+                            let t0 = Instant::now();
+                            let seq = vote_and_splice(&job.decodes,
+                                                      SPLICE_MIN_OVERLAP);
+                            let busy = t0.elapsed().as_micros() as u64;
+                            m.add(&m.vote_micros, busy);
+                            if let Some(st) = m.vote_workers.get(slot) {
+                                m.add(&st.jobs, 1);
+                                m.add(&st.busy_micros, busy);
+                            }
+                            m.add(&m.bases_called, seq.len() as u64);
+                            m.add(&m.reads_out, 1);
+                            if let Some(t) = job.submitted_at {
+                                m.read_latency
+                                    .record(t.elapsed().as_micros() as u64);
+                            }
+                            if out.send(CalledRead {
+                                read_id: job.read_id,
+                                seq,
+                                window_decodes: job.decodes,
+                            }).is_err() {
+                                break; // output receiver gone
+                            }
+                        }
+                    })
+                }))
+        };
 
+        let vote_queues = vote_pool.queues();
         let router = std::thread::spawn(move || {
             let mut pending: HashMap<usize, Assembly> = HashMap::new();
             let mut rr = 0usize;
@@ -184,7 +198,7 @@ impl Collector {
             let dispatch = |read_id: usize, a: Assembly, rr: &mut usize| {
                 let decodes: Vec<Vec<u8>> =
                     a.wins.into_iter().flatten().collect();
-                send_round_robin(&vote_txs, rr, VoteJob {
+                vote_queues.send_round_robin(rr, VoteJob {
                     read_id,
                     decodes,
                     submitted_at: registry.take_submitted_at(read_id),
@@ -222,11 +236,29 @@ impl Collector {
             // failure before their first window decoded) can never
             // complete now — drop them so in_flight() settles at 0.
             registry.clear();
-            // vote_txs drop here -> vote workers drain and exit -> the
-            // output queue disconnects once the last CalledRead is taken.
+            // seal the vote queue set: the workers drain and exit, and
+            // the output queue disconnects once finish() has also
+            // dropped the pool's respawn closure (the last sender).
+            vote_queues.close_all();
         });
 
-        Collector { router: Some(router), vote_workers, rx_out }
+        Collector {
+            router: Some(router),
+            vote_pool: Some(vote_pool),
+            rx_out,
+        }
+    }
+
+    /// The vote pool as a controller-facing stage pool, for the
+    /// coordinator to register under `AutoscaleConfig::scale_vote`.
+    pub(super) fn vote_stage_pool(&self) -> Option<Arc<dyn StagePool>> {
+        self.vote_pool.clone()
+            .map(|p| p as Arc<dyn StagePool>)
+    }
+
+    /// Vote workers live right now (telemetry/tests).
+    pub(super) fn live_vote_workers(&self) -> usize {
+        self.vote_pool.as_ref().map_or(0, |p| p.live_count())
     }
 
     /// Non-blocking: a read whose last window has decoded, if any.
@@ -246,6 +278,16 @@ impl Collector {
     /// blocks until they are. A router or vote-worker panic surfaces as
     /// `Err` instead of silently returning a short result set.
     pub fn finish(mut self) -> Result<Vec<CalledRead>> {
+        // release the vote pool FIRST: its respawn closure holds the
+        // output queue's prototype sender, and the drain below ends
+        // only when every sender (workers + closure) is gone. The
+        // autoscale controller — the only other pool holder — is
+        // always joined before Coordinator::finish reaches this point,
+        // so no new worker can spawn under us.
+        let vote_handles = match self.vote_pool.take() {
+            Some(pool) => pool.take_handles(),
+            None => Vec::new(),
+        };
         let mut out = Vec::new();
         while let Ok(r) = self.rx_out.recv() {
             out.push(r);
@@ -254,7 +296,7 @@ impl Collector {
         if let Some(h) = self.router.take() {
             panicked |= h.join().is_err();
         }
-        for h in self.vote_workers.drain(..) {
+        for h in vote_handles {
             panicked |= h.join().is_err();
         }
         anyhow::ensure!(!panicked,
@@ -267,6 +309,7 @@ impl Collector {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::bounded::{bounded, Sender};
 
     fn spawn_collector(queue_cap: usize)
         -> (Arc<ReadRegistry>, Sender<DecodedWindow>, Collector,

@@ -79,6 +79,86 @@ impl LatencyHistogram {
         }
         self.max_micros()
     }
+
+    /// Point-in-time copy of the bucket counts, for *interval*
+    /// quantiles: two snapshots bracket a window of samples, and
+    /// [`LatencySnapshot::quantile_since`] reads the quantile of only
+    /// the samples recorded between them. This is what lets the
+    /// autoscale controller act on the p99 of the last tick instead of
+    /// the run-cumulative p99 (which an early burst would pin forever).
+    /// The copy is not atomic across buckets — a sample recorded
+    /// mid-snapshot may or may not be included — which costs at most
+    /// one sample of accuracy per interval, fine for a control signal.
+    pub fn snapshot(&self) -> LatencySnapshot {
+        // read `count` BEFORE the buckets: record() bumps the bucket
+        // first and the count second, so this order can only
+        // UNDER-count a racing sample (it shows up next interval). The
+        // opposite order could capture the new count with the old
+        // bucket — an interval whose quantile walk finds fewer bucketed
+        // samples than `count_since` claims, falls off the end, and
+        // reports the run-wide max as the interval p99 (a spurious SLO
+        // breach).
+        let count = self.count();
+        LatencySnapshot {
+            count,
+            buckets: std::array::from_fn(
+                |i| self.buckets[i].load(Ordering::Relaxed)),
+            max_micros: self.max_micros(),
+        }
+    }
+}
+
+/// Frozen copy of a [`LatencyHistogram`]'s counts (see
+/// [`LatencyHistogram::snapshot`]). Delta arithmetic between two
+/// snapshots of the SAME histogram yields interval statistics.
+#[derive(Clone, Debug)]
+pub struct LatencySnapshot {
+    buckets: [u64; NUM_BUCKETS],
+    count: u64,
+    max_micros: u64,
+}
+
+impl LatencySnapshot {
+    /// Samples recorded up to this snapshot.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Samples recorded between `prev` (the older snapshot) and this
+    /// one.
+    pub fn count_since(&self, prev: &LatencySnapshot) -> u64 {
+        self.count.saturating_sub(prev.count)
+    }
+
+    /// Approximate quantile in µs over only the samples recorded
+    /// between `prev` and this snapshot: bucket-delta counts, upper
+    /// bucket edge, clamped to the histogram's observed max (the
+    /// global max, not the interval's — an octave-grade approximation,
+    /// like `quantile_micros`). Returns 0 when the interval holds no
+    /// samples, which callers must treat as *no signal*, not as "p99
+    /// is zero" (a stalled pipeline completes nothing and therefore
+    /// reports nothing here).
+    pub fn quantile_since(&self, prev: &LatencySnapshot, q: f64) -> u64 {
+        let n = self.count_since(prev);
+        if n == 0 {
+            return 0;
+        }
+        let target = ((q * n as f64).ceil() as u64).clamp(1, n);
+        let mut cum = 0u64;
+        for (i, (cur, old)) in
+            self.buckets.iter().zip(prev.buckets.iter()).enumerate()
+        {
+            cum += cur.saturating_sub(*old);
+            if cum >= target {
+                if i + 1 >= NUM_BUCKETS {
+                    return self.max_micros; // saturated top bucket
+                }
+                let upper = 1u64 << (i as u64 + 1);
+                return upper.min(self.max_micros);
+            }
+        }
+        self.max_micros
+    }
 }
 
 impl Default for LatencyHistogram {
@@ -113,25 +193,150 @@ pub struct ShardStats {
     pub retired: AtomicBool,
     /// shard generations launched into this slot (1 for a fixed pool).
     pub spawns: AtomicU64,
+    /// epoch-micros when the current generation spawned (meaningful
+    /// while live).
+    live_since_micros: AtomicU64,
+    /// accumulated live wall-micros of completed (retired) generations.
+    live_micros_acc: AtomicU64,
 }
 
 impl ShardStats {
-    /// Record a shard (re)launch into this slot.
-    pub fn mark_spawned(&self) {
+    /// Record a shard (re)launch into this slot, `at_micros` past the
+    /// metrics epoch (`Metrics::epoch_micros`). The timestamp starts
+    /// the slot's live window, which is the denominator
+    /// `Metrics::shard_utilization` divides busy time by — a slot
+    /// spawned mid-run is measured over the wall time it actually
+    /// existed, not over the whole run.
+    pub fn mark_spawned(&self, at_micros: u64) {
+        self.live_since_micros.store(at_micros, Ordering::Relaxed);
         self.spawned.store(true, Ordering::Relaxed);
         self.retired.store(false, Ordering::Relaxed);
         self.spawns.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// Record this slot's shard retiring (scale-down or spawn failure).
-    pub fn mark_retired(&self) {
-        self.retired.store(true, Ordering::Relaxed);
+    /// Record this slot's shard retiring (scale-down or spawn failure)
+    /// `at_micros` past the metrics epoch: the live window closes, so
+    /// a retired slot's utilization freezes instead of decaying toward
+    /// zero for the rest of the run.
+    pub fn mark_retired(&self, at_micros: u64) {
+        if !self.retired.swap(true, Ordering::Relaxed) {
+            let since = self.live_since_micros.load(Ordering::Relaxed);
+            self.live_micros_acc.fetch_add(
+                at_micros.saturating_sub(since), Ordering::Relaxed);
+        }
     }
 
     /// Spawned and not retired.
     pub fn is_live(&self) -> bool {
         self.spawned.load(Ordering::Relaxed)
             && !self.retired.load(Ordering::Relaxed)
+    }
+
+    /// Wall-micros this slot has been live up to `now_micros` (epoch
+    /// time), summed across generations. A slot never marked spawned
+    /// reports the full wall time — `Metrics` built outside a
+    /// coordinator (no lifecycle marks) keep the original
+    /// busy-over-total-wall utilization semantics.
+    pub fn live_micros(&self, now_micros: u64) -> u64 {
+        if !self.spawned.load(Ordering::Relaxed) {
+            return now_micros;
+        }
+        let acc = self.live_micros_acc.load(Ordering::Relaxed);
+        if self.retired.load(Ordering::Relaxed) {
+            acc
+        } else {
+            let since = self.live_since_micros.load(Ordering::Relaxed);
+            acc + now_micros.saturating_sub(since)
+        }
+    }
+}
+
+/// Which pipeline stage a pool, scale event, or stats row belongs to.
+/// The DNN executor pool was the only resizable stage through PR 4;
+/// the decode and vote pools now sit behind the same stage-pool
+/// mechanics, so events and telemetry carry the stage explicitly.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StageId {
+    /// the DNN executor shard pool.
+    Dnn,
+    /// the CTC decode worker pool.
+    Decode,
+    /// the vote/splice worker pool.
+    Vote,
+}
+
+impl StageId {
+    /// Stable lowercase name for logs and the bench JSON.
+    pub fn name(&self) -> &'static str {
+        match self {
+            StageId::Dnn => "dnn",
+            StageId::Decode => "decode",
+            StageId::Vote => "vote",
+        }
+    }
+}
+
+/// Counters for one worker slot of a resizable *cheap-worker* stage
+/// pool (CTC decode, vote/splice): the `ShardStats` lifecycle story —
+/// per-slot work counters, spawn/retire flags, and a live-wall-time
+/// window for honest utilization — minus the DNN-specific batch
+/// accounting. Written by exactly one worker thread, read by
+/// `report()` and the autoscale controller, so `Relaxed` suffices.
+#[derive(Debug, Default)]
+pub struct StageStats {
+    /// jobs (windows decoded / reads voted) this worker processed.
+    pub jobs: AtomicU64,
+    /// wall-micros this worker spent inside its kernel.
+    pub busy_micros: AtomicU64,
+    /// a worker thread was launched into this slot at least once.
+    pub spawned: AtomicBool,
+    /// the slot is currently retired.
+    pub retired: AtomicBool,
+    /// worker generations launched into this slot.
+    pub spawns: AtomicU64,
+    live_since_micros: AtomicU64,
+    live_micros_acc: AtomicU64,
+}
+
+impl StageStats {
+    /// Record a worker (re)launch into this slot at epoch `at_micros`
+    /// (see `ShardStats::mark_spawned`).
+    pub fn mark_spawned(&self, at_micros: u64) {
+        self.live_since_micros.store(at_micros, Ordering::Relaxed);
+        self.spawned.store(true, Ordering::Relaxed);
+        self.retired.store(false, Ordering::Relaxed);
+        self.spawns.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record this slot's worker retiring at epoch `at_micros` (see
+    /// `ShardStats::mark_retired`).
+    pub fn mark_retired(&self, at_micros: u64) {
+        if !self.retired.swap(true, Ordering::Relaxed) {
+            let since = self.live_since_micros.load(Ordering::Relaxed);
+            self.live_micros_acc.fetch_add(
+                at_micros.saturating_sub(since), Ordering::Relaxed);
+        }
+    }
+
+    /// Spawned and not retired.
+    pub fn is_live(&self) -> bool {
+        self.spawned.load(Ordering::Relaxed)
+            && !self.retired.load(Ordering::Relaxed)
+    }
+
+    /// Wall-micros this slot has been live up to `now_micros` (see
+    /// `ShardStats::live_micros`).
+    pub fn live_micros(&self, now_micros: u64) -> u64 {
+        if !self.spawned.load(Ordering::Relaxed) {
+            return now_micros;
+        }
+        let acc = self.live_micros_acc.load(Ordering::Relaxed);
+        if self.retired.load(Ordering::Relaxed) {
+            acc
+        } else {
+            let since = self.live_since_micros.load(Ordering::Relaxed);
+            acc + now_micros.saturating_sub(since)
+        }
     }
 }
 
@@ -163,11 +368,13 @@ impl ScaleAction {
 pub struct ScaleEvent {
     /// µs since the pipeline's metrics epoch (`Metrics` construction).
     pub at_micros: u64,
+    /// which stage pool was resized.
+    pub stage: StageId,
     /// what happened.
     pub action: ScaleAction,
     /// the slot acted on.
     pub slot: usize,
-    /// live shard count after the event was applied.
+    /// live worker count of that stage after the event was applied.
     pub live_after: usize,
 }
 
@@ -202,6 +409,12 @@ pub struct Metrics {
     /// autoscaler (slots the autoscaler never filled stay all-zero and
     /// unspawned).
     pub shards: Vec<ShardStats>,
+    /// per-worker CTC decode counters, one per decode pool slot (empty
+    /// for `Metrics` built outside a coordinator, e.g. `default()`).
+    pub decode_workers: Vec<StageStats>,
+    /// per-worker vote/splice counters, one per vote pool slot (empty
+    /// for `Metrics` built outside a coordinator).
+    pub vote_workers: Vec<StageStats>,
     /// autoscaler scale-event log (empty for a fixed shard pool).
     scale_events: Mutex<Vec<ScaleEvent>>,
 }
@@ -213,8 +426,17 @@ impl Default for Metrics {
 }
 
 impl Metrics {
-    /// Metrics for a pipeline running `n` DNN executor shards (min 1).
+    /// Metrics for a pipeline running `n` DNN executor shards (min 1),
+    /// with no per-worker decode/vote slots (stage pools record only
+    /// their aggregate counters against such a `Metrics`).
     pub fn with_shards(n: usize) -> Metrics {
+        Metrics::for_pipeline(n, 0, 0)
+    }
+
+    /// Metrics sized for a full pipeline: `n` DNN shard slots (min 1)
+    /// plus `n_decode` decode-worker and `n_vote` vote-worker slots.
+    pub fn for_pipeline(n: usize, n_decode: usize, n_vote: usize)
+                        -> Metrics {
         Metrics {
             start: Instant::now(),
             reads_in: AtomicU64::new(0),
@@ -229,16 +451,29 @@ impl Metrics {
             vote_micros: AtomicU64::new(0),
             read_latency: LatencyHistogram::default(),
             shards: (0..n.max(1)).map(|_| ShardStats::default()).collect(),
+            decode_workers: (0..n_decode)
+                .map(|_| StageStats::default()).collect(),
+            vote_workers: (0..n_vote)
+                .map(|_| StageStats::default()).collect(),
             scale_events: Mutex::new(Vec::new()),
         }
     }
 
-    /// Append a scale event, stamped with µs since the metrics epoch.
-    pub fn record_scale(&self, action: ScaleAction, slot: usize,
-                        live_after: usize) {
-        let at_micros = self.start.elapsed().as_micros() as u64;
+    /// µs elapsed since this `Metrics` was constructed — the epoch all
+    /// lifecycle timestamps (`mark_spawned`/`mark_retired`) and scale
+    /// events are stamped against.
+    pub fn epoch_micros(&self) -> u64 {
+        self.start.elapsed().as_micros() as u64
+    }
+
+    /// Append a scale event for `stage`, stamped with µs since the
+    /// metrics epoch.
+    pub fn record_scale(&self, stage: StageId, action: ScaleAction,
+                        slot: usize, live_after: usize) {
+        let at_micros = self.epoch_micros();
         self.scale_events.lock().unwrap().push(ScaleEvent {
             at_micros,
+            stage,
             action,
             slot,
             live_after,
@@ -262,11 +497,28 @@ impl Metrics {
         counter.fetch_add(n, Ordering::Relaxed);
     }
 
-    /// Per-shard busy fraction of wall time so far (0.0–1.0 each).
+    /// Per-shard busy fraction (0.0–1.0 each) of each slot's **live**
+    /// wall time — the time a shard actually occupied the slot, not
+    /// the time since `Metrics` construction. A shard the autoscaler
+    /// spawns mid-run is no longer diluted by wall time it did not
+    /// exist for, and a retired slot's fraction freezes at retirement
+    /// instead of decaying for the rest of the run. (Slots never
+    /// marked spawned — `Metrics` built outside a coordinator — fall
+    /// back to total wall time, the pre-lifecycle behavior.)
     pub fn shard_utilization(&self) -> Vec<f64> {
-        let wall = self.start.elapsed().as_micros().max(1) as f64;
+        self.shard_utilization_at(self.epoch_micros())
+    }
+
+    /// `shard_utilization` evaluated at an explicit epoch timestamp
+    /// (µs since construction); `report()` and tests use this to pin
+    /// the live-window arithmetic without racing the wall clock.
+    pub fn shard_utilization_at(&self, now_micros: u64) -> Vec<f64> {
         self.shards.iter()
-            .map(|s| s.busy_micros.load(Ordering::Relaxed) as f64 / wall)
+            .map(|s| {
+                let live = s.live_micros(now_micros).max(1) as f64;
+                (s.busy_micros.load(Ordering::Relaxed) as f64 / live)
+                    .min(1.0)
+            })
             .collect()
     }
 
@@ -355,6 +607,29 @@ impl Metrics {
                 })
                 .collect();
             s.push_str(&format!("  shard-util [{}]", rows.join(" ")));
+        }
+        // per-stage worker splits (decode/vote pools), same percent
+        // format as the shard split: busy over the slot's live window,
+        // retired slots listed explicitly
+        let now = self.epoch_micros();
+        for (label, workers) in [("decode-util", &self.decode_workers),
+                                 ("vote-util", &self.vote_workers)] {
+            if workers.len() <= 1 {
+                continue;
+            }
+            let rows: Vec<String> = workers.iter().enumerate()
+                .map(|(i, st)| {
+                    let live = st.live_micros(now).max(1) as f64;
+                    let pct = (st.busy_micros.load(Ordering::Relaxed)
+                               as f64 / live).min(1.0) * 100.0;
+                    if st.retired.load(Ordering::Relaxed) {
+                        format!("{i}:{pct:.1}%(retired)")
+                    } else {
+                        format!("{i}:{pct:.1}%")
+                    }
+                })
+                .collect();
+            s.push_str(&format!("  {label} [{}]", rows.join(" ")));
         }
         let events = self.scale_events.lock().unwrap();
         if !events.is_empty() {
@@ -522,29 +797,87 @@ mod tests {
     fn shard_lifecycle_flags_track_spawn_and_retire() {
         let st = ShardStats::default();
         assert!(!st.is_live(), "unspawned slot is not live");
-        st.mark_spawned();
+        st.mark_spawned(0);
         assert!(st.is_live());
         assert_eq!(st.spawns.load(Ordering::Relaxed), 1);
-        st.mark_retired();
+        st.mark_retired(10);
         assert!(!st.is_live());
         // a respawn into the recycled slot revives it (generation 2)
-        st.mark_spawned();
+        st.mark_spawned(20);
         assert!(st.is_live());
         assert_eq!(st.spawns.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn live_micros_spans_generations_and_freezes_on_retire() {
+        let st = ShardStats::default();
+        // never spawned: full wall time (standalone-Metrics fallback)
+        assert_eq!(st.live_micros(500), 500);
+        st.mark_spawned(100);
+        assert_eq!(st.live_micros(300), 200, "live window starts at spawn");
+        st.mark_retired(400);
+        assert_eq!(st.live_micros(1_000), 300, "retire freezes the window");
+        // double retire must not double-count
+        st.mark_retired(900);
+        assert_eq!(st.live_micros(1_000), 300);
+        // a second generation accumulates on top of the first
+        st.mark_spawned(1_000);
+        assert_eq!(st.live_micros(1_250), 550);
+        st.mark_retired(1_500);
+        assert_eq!(st.live_micros(9_999), 800);
+    }
+
+    #[test]
+    fn late_spawned_slot_utilization_uses_live_window() {
+        // regression: utilization used to divide cumulative busy-micros
+        // by wall time since Metrics construction, so a slot the
+        // autoscaler spawned mid-run read as diluted forever
+        let m = Metrics::with_shards(2);
+        m.shards[0].mark_spawned(0);
+        m.shards[1].mark_spawned(800); // spawned 80% into the run
+        m.add(&m.shards[0].busy_micros, 100);
+        m.add(&m.shards[1].busy_micros, 100);
+        let u = m.shard_utilization_at(1_000);
+        assert!((u[0] - 0.1).abs() < 1e-9, "{u:?}");
+        assert!((u[1] - 0.5).abs() < 1e-9,
+                "late spawn must not dilute utilization: {u:?}");
+        // retirement freezes the fraction instead of decaying it
+        m.shards[1].mark_retired(1_000);
+        let u2 = m.shard_utilization_at(100_000);
+        assert!((u2[1] - 0.5).abs() < 1e-9,
+                "retired slot must not decay: {u2:?}");
+    }
+
+    #[test]
+    fn stage_stats_mirror_shard_lifecycle() {
+        let st = StageStats::default();
+        assert!(!st.is_live());
+        st.mark_spawned(50);
+        assert!(st.is_live());
+        assert_eq!(st.spawns.load(Ordering::Relaxed), 1);
+        assert_eq!(st.live_micros(150), 100);
+        st.mark_retired(200);
+        assert!(!st.is_live());
+        assert_eq!(st.live_micros(9_000), 150);
+        assert_eq!(StageId::Dnn.name(), "dnn");
+        assert_eq!(StageId::Decode.name(), "decode");
+        assert_eq!(StageId::Vote.name(), "vote");
     }
 
     #[test]
     fn scale_events_accumulate_in_order() {
         let m = Metrics::with_shards(4);
         assert!(m.scale_events().is_empty());
-        m.record_scale(ScaleAction::Up, 1, 2);
-        m.record_scale(ScaleAction::Down, 1, 1);
+        m.record_scale(StageId::Dnn, ScaleAction::Up, 1, 2);
+        m.record_scale(StageId::Decode, ScaleAction::Down, 1, 1);
         let ev = m.scale_events();
         assert_eq!(ev.len(), 2);
         assert_eq!(ev[0].action, ScaleAction::Up);
+        assert_eq!(ev[0].stage, StageId::Dnn);
         assert_eq!(ev[0].slot, 1);
         assert_eq!(ev[0].live_after, 2);
         assert_eq!(ev[1].action, ScaleAction::Down);
+        assert_eq!(ev[1].stage, StageId::Decode);
         assert!(ev[0].at_micros <= ev[1].at_micros);
         assert_eq!(ScaleAction::SpawnFailed.name(), "spawn-failed");
     }
@@ -552,9 +885,9 @@ mod tests {
     #[test]
     fn report_lists_retired_shards_with_percent_format() {
         let m = Metrics::with_shards(3);
-        m.shards[0].mark_spawned();
-        m.shards[1].mark_spawned();
-        m.shards[1].mark_retired();
+        m.shards[0].mark_spawned(0);
+        m.shards[1].mark_spawned(0);
+        m.shards[1].mark_retired(m.epoch_micros());
         m.add(&m.shards[0].busy_micros, 100);
         let r = m.report(32);
         assert!(r.contains("shard-util ["), "{r}");
@@ -567,16 +900,71 @@ mod tests {
     }
 
     #[test]
+    fn report_shows_stage_worker_splits_when_pooled() {
+        let m = Metrics::for_pipeline(1, 2, 2);
+        m.decode_workers[0].mark_spawned(0);
+        m.decode_workers[1].mark_spawned(0);
+        m.vote_workers[0].mark_spawned(0);
+        m.vote_workers[1].mark_spawned(0);
+        m.vote_workers[1].mark_retired(m.epoch_micros());
+        m.add(&m.decode_workers[0].busy_micros, 50);
+        let r = m.report(32);
+        assert!(r.contains("decode-util ["), "{r}");
+        assert!(r.contains("vote-util ["), "{r}");
+        assert!(r.contains("%(retired)"), "{r}");
+        // stage splits only print for actual pools (>1 slot)
+        let single = Metrics::for_pipeline(1, 1, 1);
+        let rs = single.report(32);
+        assert!(!rs.contains("decode-util"), "{rs}");
+        assert!(!rs.contains("vote-util"), "{rs}");
+        // and never for standalone Metrics (no stage slots at all)
+        assert!(!Metrics::default().report(32).contains("decode-util"));
+    }
+
+    #[test]
     fn report_appends_autoscale_summary_when_events_exist() {
         let m = Metrics::with_shards(2);
         assert!(!m.report(32).contains("autoscale"));
-        m.shards[0].mark_spawned();
-        m.shards[1].mark_spawned();
-        m.record_scale(ScaleAction::Up, 1, 2);
+        m.shards[0].mark_spawned(0);
+        m.shards[1].mark_spawned(0);
+        m.record_scale(StageId::Dnn, ScaleAction::Up, 1, 2);
         let r = m.report(32);
         assert!(r.contains("autoscale +1/-0 live 2"), "{r}");
-        m.record_scale(ScaleAction::SpawnFailed, 1, 1);
+        m.record_scale(StageId::Dnn, ScaleAction::SpawnFailed, 1, 1);
         assert!(m.report(32).contains("spawn-failed"));
+    }
+
+    #[test]
+    fn snapshot_deltas_expose_interval_quantiles() {
+        let h = LatencyHistogram::default();
+        let empty = h.snapshot();
+        assert_eq!(empty.count(), 0);
+        assert_eq!(empty.quantile_since(&empty, 0.99), 0,
+                   "empty interval is no-signal zero");
+        // interval 1: fast samples only
+        for _ in 0..50 {
+            h.record(100);
+        }
+        let s1 = h.snapshot();
+        assert_eq!(s1.count_since(&empty), 50);
+        let p99_fast = s1.quantile_since(&empty, 0.99);
+        assert!(p99_fast <= 128, "fast interval p99 {p99_fast}");
+        // interval 2: slow samples — the CUMULATIVE p99 stays pinned
+        // low by the 50 fast samples, but the interval p99 must see
+        // the regression immediately
+        for _ in 0..10 {
+            h.record(100_000);
+        }
+        let s2 = h.snapshot();
+        assert_eq!(s2.count_since(&s1), 10);
+        let p99_slow = s2.quantile_since(&s1, 0.99);
+        assert!(p99_slow >= 65_536,
+                "interval p99 {p99_slow} must reflect only new samples");
+        // an interval with no samples reads 0 again
+        let s3 = h.snapshot();
+        assert_eq!(s3.quantile_since(&s2, 0.99), 0);
+        // cumulative view for contrast: p50 still in the fast bucket
+        assert!(h.quantile_micros(0.50) <= 128);
     }
 
     #[test]

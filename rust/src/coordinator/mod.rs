@@ -14,10 +14,11 @@ pub mod metrics;
 pub mod server;
 
 pub use autoscale::{AutoscaleConfig, Controller, Decision, Sample,
-                    ShardPool};
+                    SpawnWorker, StageControl, StagePool, WorkerPool};
 pub use batcher::{Batch, Batcher, BatchPolicy};
 pub use collector::{Collector, CollectorConfig, DecodedWindow,
                     ReadRegistry};
-pub use metrics::{LatencyHistogram, Metrics, ScaleAction, ScaleEvent,
-                  ShardStats};
+pub use metrics::{LatencyHistogram, LatencySnapshot, Metrics,
+                  ScaleAction, ScaleEvent, ShardStats, StageId,
+                  StageStats};
 pub use server::{CalledRead, Coordinator, CoordinatorConfig};

@@ -39,14 +39,14 @@ use crate::basecall::ctc::{beam_search, LogProbs};
 use crate::genome::dataset::windows_from_read;
 use crate::genome::synth::Read;
 use crate::runtime::{Backend, BackendKind, ShardFactory};
-use crate::util::bounded::{bounded, send_round_robin, QueueSet,
-                           Receiver, Sender};
+use crate::util::bounded::{bounded, Feeder, QueueSet, Receiver, Sender};
 
-use super::autoscale::{self, AutoscaleConfig, ShardPool};
+use super::autoscale::{self, AutoscaleConfig, StageControl, StagePool,
+                       WorkerPool};
 use super::batcher::{Batcher, BatchPolicy};
 use super::collector::{Collector, CollectorConfig, DecodedWindow,
                        ReadRegistry};
-use super::metrics::{Metrics, ScaleAction};
+use super::metrics::{Metrics, ScaleAction, StageId};
 
 /// Batches a shard can hold QUEUED ahead of its forward pass (the
 /// executing batch has already been dequeued): one staged batch while
@@ -147,6 +147,11 @@ struct WindowJob {
     read_id: usize,
     window_idx: usize,
     signal: Vec<f32>,
+    /// stamped by `submit()` as the window enters the window queue, so
+    /// the batcher's deadline clock (and `Batch::oldest_wait`) counts
+    /// time spent queued behind backpressure, not just time since the
+    /// batcher's first dequeue.
+    enqueued_at: Instant,
 }
 
 /// One batch en route from the batcher to a DNN shard: the window keys
@@ -166,7 +171,7 @@ struct DecodeJob {
 
 /// Shard-pool state shared by everyone who touches the pool: the
 /// batcher dispatches through `queues`, the autoscaler (when enabled)
-/// adds and retires slots through the [`ShardPool`] impl, and
+/// adds and retires slots through the [`StagePool`] impl, and
 /// `Coordinator::finish` drains `handles`. Shard threads hold only the
 /// individual Arcs they need (factory, queue set, metrics) — never
 /// this struct — so teardown has no reference cycles: once the
@@ -178,7 +183,11 @@ struct ShardHost {
     model: String,
     bits: u32,
     queues: Arc<QueueSet<ShardBatch>>,
-    dec_txs: Vec<Sender<DecodeJob>>,
+    /// producer guard over the decode pool's queue set: every shard
+    /// thread holds a clone, and the last holder's drop seals the set
+    /// so the decode workers disconnect exactly when no shard remains
+    /// (the host itself is dropped by `finish()` before the drain).
+    dec: Feeder<DecodeJob>,
     metrics: Arc<Metrics>,
     handles: Mutex<Vec<JoinHandle<Result<()>>>>,
     window_tx: Sender<WindowJob>,
@@ -197,10 +206,11 @@ impl ShardHost {
     fn launch(&self, slot: usize, generation: u64,
               rx: Receiver<ShardBatch>,
               ready: Option<Sender<Result<()>>>) {
-        self.metrics.shards[slot].mark_spawned();
+        self.metrics.shards[slot]
+            .mark_spawned(self.metrics.epoch_micros());
         let factory = self.factory.clone();
         let queues = self.queues.clone();
-        let dec = self.dec_txs.clone();
+        let dec = self.dec.clone();
         let m = self.metrics.clone();
         let model = self.model.clone();
         let bits = self.bits;
@@ -226,9 +236,11 @@ impl ShardHost {
                             // healthy successor) while we were opening
                             if queues.retire_generation(slot,
                                                         generation) {
-                                m.shards[slot].mark_retired();
+                                m.shards[slot]
+                                    .mark_retired(m.epoch_micros());
                                 let live = queues.live_count();
-                                m.record_scale(ScaleAction::SpawnFailed,
+                                m.record_scale(StageId::Dnn,
+                                               ScaleAction::SpawnFailed,
                                                slot, live);
                             }
                         }
@@ -262,7 +274,7 @@ impl ShardHost {
                     // decode queue is gone the pipeline has
                     // collapsed downstream — stop burning
                     // inference on it
-                    if !send_round_robin(&dec, &mut rr, DecodeJob {
+                    if !dec.send_round_robin(&mut rr, DecodeJob {
                         read_id,
                         window_idx,
                         lp,
@@ -278,7 +290,7 @@ impl ShardHost {
     }
 }
 
-impl ShardPool for ShardHost {
+impl StagePool for ShardHost {
     fn slots(&self) -> usize {
         self.queues.slots()
     }
@@ -308,7 +320,8 @@ impl ShardPool for ShardHost {
 
     fn retire(&self, slot: usize) -> bool {
         if self.queues.retire(slot) {
-            self.metrics.shards[slot].mark_retired();
+            self.metrics.shards[slot]
+                .mark_retired(self.metrics.epoch_micros());
             true
         } else {
             false
@@ -341,7 +354,7 @@ pub struct Coordinator {
     host: Option<Arc<ShardHost>>,
     autoscale_stop: Option<Sender<()>>,
     autoscale_thread: Option<JoinHandle<()>>,
-    decode_threads: Vec<JoinHandle<()>>,
+    decode_pool: Option<Arc<WorkerPool<DecodeJob>>>,
     collector: Option<Collector>,
     /// live pipeline telemetry (readable mid-run; see `Metrics`).
     pub metrics: Arc<Metrics>,
@@ -378,25 +391,53 @@ impl Coordinator {
                 (n, n)
             }
         };
-        let metrics = Arc::new(Metrics::with_shards(n_slots));
+        let n_dec = cfg.decode_threads.max(1);
+        let n_vote = cfg.vote_threads.max(1);
+        let metrics = Arc::new(
+            Metrics::for_pipeline(n_slots, n_dec, n_vote));
         let registry = Arc::new(ReadRegistry::default());
 
         let cap = cfg.queue_cap.max(1);
         let (tx_windows, rx_windows) = bounded::<WindowJob>(cap);
         let (tx_decoded, rx_decoded) = bounded::<DecodedWindow>(cap);
 
-        // per-worker decode queues, fed round-robin by the DNN shards (no
-        // shared Mutex<Receiver> hot spot).
-        let n_dec = cfg.decode_threads.max(1);
+        // decode pool: per-worker queues in a QueueSet-backed
+        // WorkerPool, fed round-robin by the DNN shards (no shared
+        // Mutex<Receiver> hot spot), resizable by the controller when
+        // `autoscale.scale_decode` is set. The spawn closure moves the
+        // decoded-queue prototype sender in; each worker clones it —
+        // finish() drops the pool before draining so the collector can
+        // observe the disconnect.
         let dec_cap = (cap / n_dec).max(8);
-        let mut dec_txs: Vec<Sender<DecodeJob>> = Vec::with_capacity(n_dec);
-        let mut dec_rxs: Vec<Receiver<DecodeJob>> =
-            Vec::with_capacity(n_dec);
-        for _ in 0..n_dec {
-            let (tx, rx) = bounded::<DecodeJob>(dec_cap);
-            dec_txs.push(tx);
-            dec_rxs.push(rx);
-        }
+        let decode_pool = {
+            let m = metrics.clone();
+            let beam = cfg.beam_width;
+            WorkerPool::new(
+                StageId::Decode, metrics.clone(), n_dec, dec_cap,
+                Box::new(move |slot, rx: Receiver<DecodeJob>| {
+                    let tx = tx_decoded.clone();
+                    let m = m.clone();
+                    std::thread::spawn(move || {
+                        while let Ok(job) = rx.recv() {
+                            let t0 = Instant::now();
+                            let seq = beam_search(&job.lp, beam);
+                            let busy = t0.elapsed().as_micros() as u64;
+                            m.add(&m.decode_micros, busy);
+                            if let Some(st) = m.decode_workers.get(slot) {
+                                m.add(&st.jobs, 1);
+                                m.add(&st.busy_micros, busy);
+                            }
+                            if tx.send(DecodedWindow {
+                                read_id: job.read_id,
+                                window_idx: job.window_idx,
+                                seq,
+                            }).is_err() {
+                                break;
+                            }
+                        }
+                    })
+                }))
+        };
 
         // per-shard batch queues live in a QueueSet so the autoscaler
         // can add/retire slots mid-run. Install the initial queues
@@ -423,7 +464,11 @@ impl Coordinator {
             let qs = queues.clone();
             let m = metrics.clone();
             std::thread::spawn(move || {
-                let mut batcher = Batcher::new(rx_windows, policy);
+                // deadline clock anchored at each window's enqueue, so
+                // time queued behind backpressure counts toward the
+                // batching deadline and oldest_wait telemetry
+                let mut batcher = Batcher::with_stamp(
+                    rx_windows, policy, |j: &WindowJob| j.enqueued_at);
                 let mut rr = 0usize;
                 while let Some(batch) = batcher.next_batch() {
                     let tail = batch.is_tail();
@@ -461,13 +506,12 @@ impl Coordinator {
             model: cfg.model.clone(),
             bits: cfg.bits,
             queues: queues.clone(),
-            dec_txs: dec_txs.clone(),
+            dec: Feeder::new(decode_pool.queues()),
             metrics: metrics.clone(),
             handles: Mutex::new(Vec::new()),
             window_tx: tx_windows.clone(),
             window_cap: cap,
         });
-        drop(dec_txs); // host + shard threads hold the decode senders
 
         // initial shard pool; every shard reports open+warm exactly once
         let (tx_ready, rx_ready) =
@@ -477,30 +521,6 @@ impl Coordinator {
         }
         drop(tx_ready); // shard threads hold the only ready senders
 
-        // decode pool: one private queue per worker.
-        let mut decode_threads = Vec::with_capacity(n_dec);
-        for rx in dec_rxs {
-            let tx = tx_decoded.clone();
-            let m = metrics.clone();
-            let beam = cfg.beam_width;
-            decode_threads.push(std::thread::spawn(move || {
-                while let Ok(job) = rx.recv() {
-                    let t0 = Instant::now();
-                    let seq = beam_search(&job.lp, beam);
-                    m.add(&m.decode_micros,
-                          t0.elapsed().as_micros() as u64);
-                    if tx.send(DecodedWindow {
-                        read_id: job.read_id,
-                        window_idx: job.window_idx,
-                        seq,
-                    }).is_err() {
-                        break;
-                    }
-                }
-            }));
-        }
-        drop(tx_decoded); // decode workers hold the only senders
-
         // collector: assembles out-of-order windows, votes + splices in
         // its own worker pool, emits CalledReads eagerly.
         let collector = Collector::spawn(
@@ -508,7 +528,7 @@ impl Coordinator {
             rx_decoded,
             metrics.clone(),
             CollectorConfig {
-                vote_threads: cfg.vote_threads.max(1),
+                vote_threads: n_vote,
                 queue_cap: cap,
             },
         );
@@ -529,15 +549,42 @@ impl Coordinator {
             host.factory.discard_prototype();
         }
 
-        // adaptive controller: sample → decide → scale/retire, every
-        // tick, until finish() signals stop (see coordinator::autoscale)
+        // adaptive controller: one thread sizing every controlled
+        // stage — the DNN pool always, the decode/vote pools when
+        // `scale_decode`/`scale_vote` opt them in (their configured
+        // widths become the per-stage ceilings, floor 1). Runs sample
+        // → decide → scale/retire every tick until finish() signals
+        // stop (see coordinator::autoscale).
         let (autoscale_stop, autoscale_thread) = match auto {
             Some(a) => {
                 let (stop_tx, stop_rx) = bounded::<()>(1);
-                let pool: Arc<dyn ShardPool> = host.clone();
+                let mut stages = vec![StageControl {
+                    stage: StageId::Dnn,
+                    pool: host.clone() as Arc<dyn StagePool>,
+                    min: a.min_shards,
+                    max: a.max_shards,
+                }];
+                if a.scale_decode {
+                    stages.push(StageControl {
+                        stage: StageId::Decode,
+                        pool: decode_pool.clone() as Arc<dyn StagePool>,
+                        min: 1,
+                        max: n_dec,
+                    });
+                }
+                if a.scale_vote {
+                    if let Some(pool) = collector.vote_stage_pool() {
+                        stages.push(StageControl {
+                            stage: StageId::Vote,
+                            pool,
+                            min: 1,
+                            max: n_vote,
+                        });
+                    }
+                }
                 let m = metrics.clone();
                 let h = std::thread::spawn(move || {
-                    autoscale::run(pool, a, m, stop_rx);
+                    autoscale::run(stages, a, m, stop_rx);
                 });
                 (Some(stop_tx), Some(h))
             }
@@ -553,7 +600,7 @@ impl Coordinator {
             host: Some(host),
             autoscale_stop,
             autoscale_thread,
-            decode_threads,
+            decode_pool: Some(decode_pool),
             collector: Some(collector),
             metrics,
         })
@@ -567,20 +614,28 @@ impl Coordinator {
     /// in long submission loops to keep that flat too.
     pub fn submit(&mut self, read: &Read) {
         let ws = windows_from_read(read, self.window, self.cfg.hop);
-        self.metrics.add(&self.metrics.reads_in, 1);
-        self.metrics.add(&self.metrics.windows, ws.len() as u64);
         if ws.is_empty() {
-            return; // shorter than one window: nothing to call
+            // shorter than one window: accepted, trivially complete
+            self.metrics.add(&self.metrics.reads_in, 1);
+            return;
         }
         // register BEFORE the first window enters the pipeline so the
-        // collector always knows the expected count
+        // collector always knows the expected count. Counters, by
+        // contrast, track what actually ENTERS the pipeline: windows
+        // are counted per successful enqueue and the read once its
+        // first window is in, so a mid-run DNN failure cannot leave
+        // `windows` claiming deliveries that never happened (a
+        // partially-sent read counts only its delivered prefix, and a
+        // fully-refused read counts nothing at all).
         self.registry.register(read.id, ws.len());
+        let mut delivered: u64 = 0;
         if let Some(tx) = &self.tx_windows {
             for (i, w) in ws.into_iter().enumerate() {
                 if tx.send(WindowJob {
                     read_id: read.id,
                     window_idx: i,
                     signal: w.signal,
+                    enqueued_at: Instant::now(),
                 }).is_err() {
                     // DNN stage already exited (mid-run failure). If no
                     // window of this read got in, drop the registration
@@ -588,9 +643,16 @@ impl Coordinator {
                     if i == 0 {
                         self.registry.unregister(read.id);
                     }
-                    return;
+                    break;
                 }
+                delivered += 1;
             }
+        } else {
+            self.registry.unregister(read.id);
+        }
+        if delivered > 0 {
+            self.metrics.add(&self.metrics.reads_in, 1);
+            self.metrics.add(&self.metrics.windows, delivered);
         }
     }
 
@@ -629,14 +691,25 @@ impl Coordinator {
         if let Some(h) = self.autoscale_thread.take() {
             let _ = h.join();
         }
-        // release the host's channel handles (window + decode senders):
-        // the recv-until-disconnect barrier below relies on every
-        // sender dropping. The controller's host Arc is already gone.
+        // release the host's channel handles (window sender + decode
+        // feeder): the recv-until-disconnect barrier below relies on
+        // every sender dropping. The controller's host Arc is already
+        // gone.
         let mut shard_handles: Vec<JoinHandle<Result<()>>> = Vec::new();
         if let Some(host) = self.host.take() {
             shard_handles = host.handles.lock().unwrap()
                 .drain(..).collect();
         }
+        // release the decode pool: its respawn closure holds the
+        // decoded-queue prototype sender, which must drop before the
+        // drain barrier can see the collector disconnect. (The
+        // controller — the only other pool holder — is joined above,
+        // so no worker can spawn after the handles are taken.)
+        let decode_handles: Vec<JoinHandle<()>> =
+            match self.decode_pool.take() {
+                Some(pool) => pool.take_handles(),
+                None => Vec::new(),
+            };
         drop(self.tx_windows.take());
         // drain first: recv-until-disconnect is the shutdown barrier —
         // it returns exactly when the last stage has emptied, after
@@ -667,7 +740,7 @@ impl Coordinator {
                 }
             }
         }
-        for h in self.decode_threads.drain(..) {
+        for h in decode_handles {
             if h.join().is_err() && err.is_none() {
                 err = Some(anyhow::anyhow!("decode worker panicked"));
             }
@@ -688,10 +761,21 @@ impl Coordinator {
         self.cfg.policy.max_batch
     }
 
-    /// The *configured* DNN shard count: the fixed pool size, or the
-    /// initial live count before the autoscaler takes over.
+    /// The DNN shard count the pipeline actually *started with*: the
+    /// fixed pool size, or — under the autoscaler — the configured
+    /// `dnn_shards` clamped into `[min_shards, max_shards]`, exactly
+    /// as `new()` clamps the initial live count. (It used to return
+    /// the raw configured value, which with autoscaling enabled could
+    /// name a shard count that never existed.)
     pub fn dnn_shards(&self) -> usize {
-        self.cfg.dnn_shards.max(1)
+        let n = self.cfg.dnn_shards.max(1);
+        match &self.cfg.autoscale {
+            Some(a) => {
+                let a = a.normalized();
+                n.clamp(a.min_shards, a.max_shards)
+            }
+            None => n,
+        }
     }
 
     /// DNN shards live right now: equals `dnn_shards()` for a fixed
@@ -701,8 +785,116 @@ impl Coordinator {
         self.host.as_ref().map_or(0, |h| h.queues.live_count())
     }
 
+    /// CTC decode workers live right now: the configured
+    /// `decode_threads` until the controller (with
+    /// `AutoscaleConfig::scale_decode`) resizes the pool. 0 once the
+    /// pipeline is torn down.
+    pub fn live_decode_workers(&self) -> usize {
+        self.decode_pool.as_ref().map_or(0, |p| p.live_count())
+    }
+
+    /// Vote workers live right now: the configured `vote_threads`
+    /// until the controller (with `AutoscaleConfig::scale_vote`)
+    /// resizes the pool. 0 once the pipeline is torn down.
+    pub fn live_vote_workers(&self) -> usize {
+        self.collector.as_ref().map_or(0, |c| c.live_vote_workers())
+    }
+
     /// Reads submitted but not yet emitted.
     pub fn in_flight(&self) -> usize {
         self.registry.in_flight()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::genome::pore::PoreModel;
+    use crate::genome::synth::{RunSpec, SequencingRun};
+
+    fn no_artifacts_dir() -> String {
+        std::env::temp_dir()
+            .join("helix_server_unit_no_artifacts")
+            .join("nonexistent")
+            .to_str().unwrap().to_string()
+    }
+
+    /// Regression for the submit() counter drift: `reads_in`/`windows`
+    /// used to be bumped before any window was delivered, so a submit
+    /// against a dead pipeline (mid-run DNN failure) kept inflating
+    /// both counters with work that never entered the pipeline.
+    #[test]
+    fn dead_pipeline_submit_counts_nothing() {
+        let pm = PoreModel::synthetic(7);
+        let run = SequencingRun::simulate(&pm, RunSpec {
+            genome_len: 600,
+            coverage: 2,
+            seed: 9,
+            ..Default::default()
+        });
+        assert!(run.reads.len() >= 2, "need at least two reads");
+        let mut coord = Coordinator::new(CoordinatorConfig {
+            artifacts_dir: no_artifacts_dir(),
+            ..Default::default()
+        }).unwrap();
+        let m = coord.metrics.clone();
+        // kill every shard queue: the batcher's next dispatch fails,
+        // it exits, and the window receiver drops — the same state a
+        // total mid-run DNN failure leaves behind
+        coord.host.as_ref().unwrap().queues.close_all();
+        // feed probes until the dead batcher is observable from
+        // submit() (a probe that delivers no window)
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            let before = m.windows.load(Ordering::Relaxed);
+            coord.submit(&run.reads[0]);
+            if m.windows.load(Ordering::Relaxed) == before {
+                break;
+            }
+            assert!(Instant::now() < deadline,
+                    "batcher never observed the closed shard queues");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        // THE regression assertions: a submit against the dead
+        // pipeline must not move reads_in/windows, and must not leave
+        // a registration stuck in flight
+        let reads_before = m.reads_in.load(Ordering::Relaxed);
+        let windows_before = m.windows.load(Ordering::Relaxed);
+        let in_flight_before = coord.in_flight();
+        coord.submit(&run.reads[1]);
+        assert_eq!(m.reads_in.load(Ordering::Relaxed), reads_before,
+                   "undelivered read must not count as read in");
+        assert_eq!(m.windows.load(Ordering::Relaxed), windows_before,
+                   "undelivered windows must not count");
+        assert_eq!(coord.in_flight(), in_flight_before,
+                   "undelivered read must be unregistered");
+    }
+
+    /// A healthy pipeline still counts every submitted read and all of
+    /// its windows (the counter fix must not change the happy path).
+    #[test]
+    fn healthy_submit_counts_all_windows() {
+        let pm = PoreModel::synthetic(7);
+        let run = SequencingRun::simulate(&pm, RunSpec {
+            genome_len: 500,
+            coverage: 1,
+            seed: 17,
+            ..Default::default()
+        });
+        let mut coord = Coordinator::new(CoordinatorConfig {
+            artifacts_dir: no_artifacts_dir(),
+            ..Default::default()
+        }).unwrap();
+        let m = coord.metrics.clone();
+        let mut expected_windows = 0u64;
+        for r in &run.reads {
+            let ws = windows_from_read(r, coord.window, coord.cfg.hop);
+            expected_windows += ws.len() as u64;
+            coord.submit(r);
+        }
+        assert_eq!(m.reads_in.load(Ordering::Relaxed),
+                   run.reads.len() as u64);
+        assert_eq!(m.windows.load(Ordering::Relaxed), expected_windows);
+        coord.finish().unwrap();
     }
 }

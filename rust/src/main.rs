@@ -22,29 +22,57 @@ fn usage() -> ! {
         commands:\n  \
         basecall [--model guppy] [--bits 32] [--genome 2000] [--coverage 5]\n    \
         [--backend native|xla] [--shards N]\n    \
-        [--max-shards N [--min-shards N] [--autoscale-tick-ms MS]]\n  \
+        [--max-shards N [--min-shards N] [--autoscale-tick-ms MS]\n     \
+        [--slo-ms MS] [--autoscale-decode] [--autoscale-vote]]\n  \
         simulate [--genome 10000] [--coverage 30]\n  \
         figures <fig2|...|fig26|table1..table5|all>\n  \
         schemes\n  \
         mc [--samples 100000]\n\
         env: HELIX_ARTIFACTS=artifacts HELIX_BACKEND=native|xla \
         HELIX_SHARDS=N\n     \
-        HELIX_MAX_SHARDS=N HELIX_MIN_SHARDS=N HELIX_AUTOSCALE_TICK_MS=MS\n\
-        --max-shards (or HELIX_MAX_SHARDS) enables adaptive shard \
-        autoscaling:\n\
-        the pool resizes between the min/max bounds from observed \
-        utilization.");
+        HELIX_MAX_SHARDS=N HELIX_MIN_SHARDS=N HELIX_AUTOSCALE_TICK_MS=MS\n     \
+        HELIX_SLO_MS=MS HELIX_AUTOSCALE_DECODE=1 HELIX_AUTOSCALE_VOTE=1\n\
+        --max-shards (or HELIX_MAX_SHARDS) enables adaptive autoscaling: \
+        the DNN\n\
+        pool resizes between the min/max bounds from observed utilization \
+        and,\n\
+        with --slo-ms, from the p99 read latency of the last control tick;\n\
+        --autoscale-decode/--autoscale-vote put those pools under the same\n\
+        controller (ceiling = their configured widths).");
     std::process::exit(2);
 }
 
-/// Tiny flag parser: --key value pairs after the subcommand.
+/// Flags that may appear bare (no value token): presence records "1".
+/// Kept as an explicit allowlist so a value-taking flag with a missing
+/// value does NOT silently become "1" — it still consumes the next
+/// token and fails (or falls back) exactly as before.
+const BARE_FLAGS: &[&str] = &["autoscale-decode", "autoscale-vote"];
+
+/// Tiny flag parser: `--key value` pairs after the subcommand, plus
+/// the [`BARE_FLAGS`] booleans, which may stand alone or take an
+/// explicit `1|true|0|false`.
 fn flags(args: &[String]) -> std::collections::HashMap<String, String> {
     let mut out = std::collections::HashMap::new();
     let mut i = 0;
-    while i + 1 < args.len() {
+    while i < args.len() {
         if let Some(k) = args[i].strip_prefix("--") {
-            out.insert(k.to_string(), args[i + 1].clone());
-            i += 2;
+            if BARE_FLAGS.contains(&k) {
+                match args.get(i + 1).map(|s| s.as_str()) {
+                    Some(v @ ("1" | "true" | "0" | "false")) => {
+                        out.insert(k.to_string(), v.to_string());
+                        i += 2;
+                    }
+                    _ => {
+                        out.insert(k.to_string(), "1".to_string());
+                        i += 1;
+                    }
+                }
+            } else if i + 1 < args.len() {
+                out.insert(k.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                i += 1;
+            }
         } else {
             i += 1;
         }
@@ -127,16 +155,44 @@ fn main() -> Result<()> {
                                  (want positive milliseconds)"),
                         };
                     }
+                    // latency SLO: p99 over this budget reads as hot
+                    // even when utilization is low (trickle loads)
+                    if let Some(v) = f.get("slo-ms") {
+                        a.slo = match v.parse::<u64>() {
+                            Ok(ms) if ms >= 1 => Some(
+                                std::time::Duration::from_millis(ms)),
+                            _ => anyhow::bail!(
+                                "invalid --slo-ms '{v}' (want positive \
+                                 milliseconds)"),
+                        };
+                    }
+                    // bare flags: presence (value "1"/"true") opts the
+                    // decode/vote pools into the same controller
+                    for (key, field) in [
+                        ("autoscale-decode", &mut a.scale_decode),
+                        ("autoscale-vote", &mut a.scale_vote),
+                    ] {
+                        if let Some(v) = f.get(key) {
+                            *field = match v.as_str() {
+                                "1" | "true" => true,
+                                "0" | "false" => false,
+                                _ => anyhow::bail!(
+                                    "invalid --{key} '{v}' (bare flag, \
+                                     or 1|true|0|false)"),
+                            };
+                        }
+                    }
                     Some(a.normalized())
                 }
                 None => {
-                    if f.contains_key("min-shards")
-                        || f.contains_key("autoscale-tick-ms")
-                    {
-                        anyhow::bail!(
-                            "--min-shards/--autoscale-tick-ms need \
-                             autoscaling enabled via --max-shards or \
-                             HELIX_MAX_SHARDS");
+                    for key in ["min-shards", "autoscale-tick-ms",
+                                "slo-ms", "autoscale-decode",
+                                "autoscale-vote"] {
+                        if f.contains_key(key) {
+                            anyhow::bail!(
+                                "--{key} needs autoscaling enabled via \
+                                 --max-shards or HELIX_MAX_SHARDS");
+                        }
                     }
                     None
                 }
@@ -147,8 +203,21 @@ fn main() -> Result<()> {
                 genome_len: genome, coverage, ..Default::default()
             });
             let scale_note = match &autoscale {
-                Some(a) => format!(", autoscale {}..{} every {:?}",
-                                   a.min_shards, a.max_shards, a.tick),
+                Some(a) => {
+                    let mut note = format!(
+                        ", autoscale {}..{} every {:?}",
+                        a.min_shards, a.max_shards, a.tick);
+                    if let Some(slo) = a.slo {
+                        note.push_str(&format!(", slo p99<{slo:?}"));
+                    }
+                    if a.scale_decode {
+                        note.push_str(", +decode");
+                    }
+                    if a.scale_vote {
+                        note.push_str(", +vote");
+                    }
+                    note
+                }
                 None => String::new(),
             };
             println!("basecalling {} reads ({} genome, {:.1}x coverage) \

@@ -405,12 +405,48 @@ impl<T> QueueSet<T> {
         (txs, ids)
     }
 
+    /// `snapshot` without the slot-id vector, for the per-job dispatch
+    /// paths that only need the senders (one less allocation on the
+    /// hot path).
+    fn snapshot_txs(&self) -> Vec<Sender<T>> {
+        let g = self.table.lock().unwrap();
+        g.slots.iter()
+            .filter_map(|s| s.tx.as_ref().cloned())
+            .collect()
+    }
+
     /// Least-loaded dispatch over the live slots (see
     /// [`send_least_loaded`]). Returns `false` iff no slot could take
     /// the job (set empty or every live queue disconnected).
     pub fn send_least_loaded(&self, rr: &mut usize, job: T) -> bool {
-        let (txs, _ids) = self.snapshot();
+        let txs = self.snapshot_txs();
         send_least_loaded(&txs, rr, job)
+    }
+
+    /// Round-robin dispatch over the live slots (see
+    /// [`send_round_robin`]): skip-full, skip-dead, blocking only when
+    /// every live queue is at capacity. Membership edits between calls
+    /// simply change the rotation length — `*rr` is taken modulo the
+    /// current live count. Returns `false` iff no slot could take the
+    /// job.
+    pub fn send_round_robin(&self, rr: &mut usize, job: T) -> bool {
+        let txs = self.snapshot_txs();
+        send_round_robin(&txs, rr, job)
+    }
+
+    /// Occupancy fraction (0–1) summed over the live queues: total
+    /// queued items over total capacity. 0.0 when no slot is live.
+    /// Racy like `Sender::len` — telemetry only.
+    pub fn occupancy(&self) -> f64 {
+        let txs = self.snapshot_txs();
+        if txs.is_empty() {
+            return 0.0;
+        }
+        let queued = txs.iter()
+            .fold(0usize, |a, t| a.saturating_add(t.len()));
+        let cap = txs.iter()
+            .fold(0usize, |a, t| a.saturating_add(t.capacity()));
+        queued as f64 / cap.max(1) as f64
     }
 
     /// Preference-ordered dispatch over the live slots (see
@@ -436,6 +472,51 @@ impl<T> QueueSet<T> {
             }
         }
         send_in_order(&txs, &order, job)
+    }
+}
+
+struct FeederShared<T> {
+    set: Arc<QueueSet<T>>,
+}
+
+impl<T> Drop for FeederShared<T> {
+    fn drop(&mut self) {
+        self.set.close_all();
+    }
+}
+
+/// Cloneable producer-side guard over a [`QueueSet`]: when the last
+/// clone drops, the set is sealed (`close_all`), so the consuming
+/// pool's receivers drain and disconnect exactly when no producer
+/// remains. This is how a *set-fed* stage boundary reproduces the
+/// plain channel's drop-to-disconnect cascade: per-slot `Sender`s live
+/// inside the set (they never drop on their own), so without this
+/// guard a downstream pool would block on `recv` forever after its
+/// producers exited. The DNN shard pool feeds the decode pool's queue
+/// set this way — every shard thread holds a clone, and the last shard
+/// out turns off the lights.
+pub struct Feeder<T> {
+    shared: Arc<FeederShared<T>>,
+}
+
+impl<T> Clone for Feeder<T> {
+    fn clone(&self) -> Self {
+        Feeder { shared: self.shared.clone() }
+    }
+}
+
+impl<T> Feeder<T> {
+    /// Wrap a queue set in a producer guard. All producers must hold
+    /// clones of the SAME `Feeder` (clone it; do not call `new` twice
+    /// on one set, or the first group to finish seals it early).
+    pub fn new(set: Arc<QueueSet<T>>) -> Feeder<T> {
+        Feeder { shared: Arc::new(FeederShared { set }) }
+    }
+
+    /// Round-robin dispatch over the set's live slots (see
+    /// [`QueueSet::send_round_robin`]).
+    pub fn send_round_robin(&self, rr: &mut usize, job: T) -> bool {
+        self.shared.set.send_round_robin(rr, job)
     }
 }
 
@@ -952,6 +1033,50 @@ mod tests {
         assert!(set.send_preferring(&[2], 3));
         assert_eq!(rx0.len() + rx1.len(), 1);
         assert_eq!(rx2.len(), 2, "retired queue must take no new jobs");
+    }
+
+    #[test]
+    fn queue_set_round_robin_rotates_and_reports_occupancy() {
+        let set = QueueSet::<u32>::with_slots(2);
+        assert_eq!(set.occupancy(), 0.0, "empty set has no occupancy");
+        let (tx0, rx0) = bounded::<u32>(2);
+        let (tx1, rx1) = bounded::<u32>(2);
+        assert_eq!(set.add(tx0), Some(0));
+        assert_eq!(set.add(tx1), Some(1));
+        let mut rr = 0;
+        for v in 0..4 {
+            assert!(set.send_round_robin(&mut rr, v));
+        }
+        assert_eq!(rx0.len(), 2);
+        assert_eq!(rx1.len(), 2);
+        // 4 queued over 4 total capacity
+        assert!((set.occupancy() - 1.0).abs() < 1e-12);
+        assert_eq!(rx0.recv(), Ok(0));
+        assert!((set.occupancy() - 0.75).abs() < 1e-12);
+        // a retired slot leaves the occupancy math (live queues only)
+        set.retire(1);
+        assert!((set.occupancy() - 0.5).abs() < 1e-12, "1 of 2 queued");
+        drop(rx1);
+    }
+
+    #[test]
+    fn feeder_last_drop_closes_the_set() {
+        let set = Arc::new(QueueSet::<u32>::with_slots(1));
+        let (tx, rx) = bounded::<u32>(4);
+        assert_eq!(set.add(tx), Some(0));
+        let feeder = Feeder::new(set.clone());
+        let clone = feeder.clone();
+        let mut rr = 0;
+        assert!(feeder.send_round_robin(&mut rr, 5));
+        drop(feeder);
+        // one clone still alive: the queue must stay open
+        assert_eq!(rx.recv(), Ok(5));
+        assert_eq!(rx.try_recv(), Err(TryRecvError::Empty));
+        drop(clone);
+        // last producer gone: sealed + disconnected
+        assert_eq!(rx.recv(), Err(RecvError));
+        let (tx2, _rx2) = bounded::<u32>(1);
+        assert_eq!(set.add(tx2), None, "sealed set must refuse adds");
     }
 
     #[test]

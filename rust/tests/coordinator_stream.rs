@@ -332,7 +332,8 @@ fn single_shard_pipeline_reports_single_shard_metrics() {
 
 // ---- adaptive autoscaling (coordinator::autoscale) ----
 
-use helix::coordinator::{AutoscaleConfig, ScaleAction};
+use helix::coordinator::{AutoscaleConfig, BatchPolicy, ScaleAction,
+                         StageId};
 
 /// THE autoscale acceptance invariant: a run whose shard pool is
 /// resized mid-flight by the controller calls byte-identical reads to
@@ -364,6 +365,7 @@ fn called_reads_identical_fixed_vs_adaptive() {
             up_ticks: 1,
             down_ticks: 2,
             cooldown_ticks: 0,
+            ..AutoscaleConfig::default()
         }),
         artifacts_dir: no_artifacts_dir(),
         ..Default::default()
@@ -412,6 +414,7 @@ fn autoscaler_scales_up_under_sustained_load() {
             up_ticks: 1,
             down_ticks: 1,
             cooldown_ticks: 0,
+            ..AutoscaleConfig::default()
         }),
         artifacts_dir: no_artifacts_dir(),
         ..Default::default()
@@ -470,6 +473,7 @@ fn autoscaler_retires_idle_shards_to_min() {
             up_ticks: 1,
             down_ticks: 2,
             cooldown_ticks: 0,
+            ..AutoscaleConfig::default()
         }),
         artifacts_dir: no_artifacts_dir(),
         ..Default::default()
@@ -508,6 +512,325 @@ fn autoscaler_retires_idle_shards_to_min() {
     assert!(report.contains("%(retired)"),
             "retired slots must stay listed: {report}");
     assert!(report.contains("autoscale +0/-3 live 1"), "{report}");
+}
+
+/// Regression: `dnn_shards()` used to return the raw configured value,
+/// but with autoscale enabled the initial live count is clamped into
+/// `[min_shards, max_shards]` — callers saw a shard count that never
+/// existed.
+#[test]
+fn dnn_shards_reports_clamped_initial_live_count() {
+    let coord = Coordinator::new(CoordinatorConfig {
+        dnn_shards: 1, // below the autoscale floor of 2
+        autoscale: Some(AutoscaleConfig {
+            min_shards: 2,
+            max_shards: 4,
+            ..AutoscaleConfig::default()
+        }),
+        artifacts_dir: no_artifacts_dir(),
+        ..Default::default()
+    }).unwrap();
+    assert_eq!(coord.dnn_shards(), 2,
+               "configured 1 must report the clamped initial count");
+    assert_eq!(coord.live_dnn_shards(), 2,
+               "dnn_shards() must match what actually started");
+    // fixed pools still report the configured value
+    let fixed = Coordinator::new(CoordinatorConfig {
+        dnn_shards: 3,
+        artifacts_dir: no_artifacts_dir(),
+        ..Default::default()
+    }).unwrap();
+    assert_eq!(fixed.dnn_shards(), 3);
+    coord.finish().unwrap();
+    fixed.finish().unwrap();
+}
+
+/// THE SLO tentpole scenario: a latency-sensitive trickle load —
+/// utilization stays far below `high_util` (one small read at a time,
+/// long idle gaps, so the pool never looks busy) but every read eats
+/// the full batching deadline, so the interval p99 breaches the SLO
+/// and the controller must scale up on latency alone.
+#[test]
+fn slo_breach_scales_up_despite_idle_utilization() {
+    let run = sim_run(4000, 4, 111);
+    let mut coord = Coordinator::new(CoordinatorConfig {
+        model: "guppy".into(),
+        bits: 32,
+        dnn_shards: 1,
+        // a wide batch with a long deadline: the trickle never fills
+        // it, so every window waits out max_wait before launching
+        policy: BatchPolicy {
+            max_batch: 64,
+            max_wait: Duration::from_millis(15),
+        },
+        autoscale: Some(AutoscaleConfig {
+            min_shards: 1,
+            max_shards: 3,
+            tick: Duration::from_millis(5),
+            // utilization can never read hot (>1.0 is impossible) and
+            // never cold (low of 0.0): every decision below is the
+            // SLO's alone
+            high_util: 2.0,
+            low_util: 0.0,
+            up_ticks: 1,
+            down_ticks: 1,
+            cooldown_ticks: 0,
+            slo: Some(Duration::from_millis(1)),
+            ..AutoscaleConfig::default()
+        }),
+        artifacts_dir: no_artifacts_dir(),
+        ..Default::default()
+    }).unwrap();
+    assert_eq!(coord.live_dnn_shards(), 1);
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut called = Vec::new();
+    for r in &run.reads {
+        coord.submit(r);
+        called.extend(coord.drain_ready());
+        std::thread::sleep(Duration::from_millis(8));
+        if coord.live_dnn_shards() >= 2 || Instant::now() >= deadline {
+            break;
+        }
+    }
+    assert!(coord.live_dnn_shards() >= 2,
+            "p99 over the SLO must grow the pool even though \
+             utilization reads idle (events: {:?})",
+            coord.metrics.scale_events());
+    let metrics = coord.metrics.clone();
+    // drain the rest (the trickle loop may have exited early)
+    let n_submitted = metrics.reads_in
+        .load(std::sync::atomic::Ordering::SeqCst) as usize;
+    called.extend(coord.finish().unwrap());
+    assert_eq!(called.len(), n_submitted, "no read may be lost");
+    let ups = metrics.scale_events().iter()
+        .filter(|e| e.action == ScaleAction::Up
+                && e.stage == StageId::Dnn)
+        .count();
+    assert!(ups >= 1, "scale-up events must be recorded");
+}
+
+/// Determinism pin extended to SLO-driven scaling: a run whose pool is
+/// grown by latency breaches calls byte-identical reads to a fixed
+/// 2-shard run over the same input.
+#[test]
+fn called_reads_identical_fixed_vs_slo_scaled() {
+    let run = sim_run(900, 3, 123);
+    let (fixed, _m) = call_run_with_shards(&run, 2);
+    assert_eq!(fixed.len(), run.reads.len());
+
+    let mut coord = Coordinator::new(CoordinatorConfig {
+        model: "guppy".into(),
+        bits: 32,
+        dnn_shards: 1,
+        policy: BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+        },
+        autoscale: Some(AutoscaleConfig {
+            min_shards: 1,
+            max_shards: 4,
+            tick: Duration::from_millis(2),
+            high_util: 2.0, // never hot by utilization...
+            low_util: 0.0,  // ...never cold either
+            up_ticks: 1,
+            down_ticks: 1,
+            cooldown_ticks: 0,
+            // ...so every scale-up during the run is SLO-driven: any
+            // completion breaches a 1µs budget
+            slo: Some(Duration::from_micros(1)),
+            ..AutoscaleConfig::default()
+        }),
+        artifacts_dir: no_artifacts_dir(),
+        ..Default::default()
+    }).unwrap();
+    for r in &run.reads {
+        coord.submit(r);
+    }
+    let metrics = coord.metrics.clone();
+    let scaled = coord.finish().unwrap();
+
+    assert_eq!(scaled.len(), fixed.len());
+    for (a, b) in fixed.iter().zip(&scaled) {
+        assert_eq!(a.read_id, b.read_id);
+        assert_eq!(a.seq, b.seq,
+                   "read {} consensus diverged under SLO scaling",
+                   a.read_id);
+        assert_eq!(a.window_decodes, b.window_decodes,
+                   "read {} window decodes diverged under SLO scaling",
+                   a.read_id);
+    }
+    // the pin is only meaningful if the pool actually moved
+    assert!(!metrics.scale_events().is_empty(),
+            "the SLO config must have produced scale events");
+}
+
+/// Multi-stage scaling: with `scale_decode`/`scale_vote` set, the
+/// decode and vote pools resize through the same controller path as
+/// the DNN pool — here everything is cold, so all three walk down to
+/// their floors, each logging stage-tagged events, and the per-stage
+/// splits appear in `report()`.
+#[test]
+fn decode_and_vote_pools_retire_through_controller() {
+    let run = sim_run(400, 1, 131);
+    let mut coord = Coordinator::new(CoordinatorConfig {
+        model: "guppy".into(),
+        bits: 32,
+        dnn_shards: 2,
+        decode_threads: 3,
+        vote_threads: 3,
+        autoscale: Some(AutoscaleConfig {
+            min_shards: 1,
+            max_shards: 2,
+            tick: Duration::from_millis(2),
+            // nothing is ever hot; anything under-utilized is cold
+            high_util: 2.0,
+            low_util: 1.5,
+            up_ticks: 1,
+            // a generous streak so the initial-width assertions below
+            // cannot race the first retirement on a slow machine
+            down_ticks: 25,
+            cooldown_ticks: 0,
+            scale_decode: true,
+            scale_vote: true,
+            ..AutoscaleConfig::default()
+        }),
+        artifacts_dir: no_artifacts_dir(),
+        ..Default::default()
+    }).unwrap();
+    assert_eq!(coord.live_decode_workers(), 3,
+               "decode pool starts at its configured width");
+    assert_eq!(coord.live_vote_workers(), 3,
+               "vote pool starts at its configured width");
+    let mut called = Vec::new();
+    for r in &run.reads {
+        coord.submit(r);
+        called.extend(coord.drain_ready());
+    }
+    // idle the pipeline until every stage reaches its floor
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while (coord.live_decode_workers() > 1
+           || coord.live_vote_workers() > 1
+           || coord.live_dnn_shards() > 1)
+        && Instant::now() < deadline
+    {
+        called.extend(coord.drain_ready());
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(coord.live_decode_workers(), 1,
+               "idle decode pool must shrink to its floor");
+    assert_eq!(coord.live_vote_workers(), 1,
+               "idle vote pool must shrink to its floor");
+    assert_eq!(coord.live_dnn_shards(), 1);
+    let metrics = coord.metrics.clone();
+    called.extend(coord.finish().unwrap());
+    assert_eq!(called.len(), run.reads.len(),
+               "stage retirement must not lose reads");
+    let events = metrics.scale_events();
+    for stage in [StageId::Dnn, StageId::Decode, StageId::Vote] {
+        let downs = events.iter()
+            .filter(|e| e.stage == stage
+                    && e.action == ScaleAction::Down)
+            .count();
+        let expected = if stage == StageId::Dnn { 1 } else { 2 };
+        assert_eq!(downs, expected,
+                   "{} retirements for {stage:?}: {events:?}",
+                   expected);
+    }
+    let report = metrics.report(32);
+    assert!(report.contains("decode-util ["), "{report}");
+    assert!(report.contains("vote-util ["), "{report}");
+}
+
+/// Soak/chaos: sustained bursty load with the autoscaler churning all
+/// three stages (grow under each wave, retire in each gap) while
+/// output must stay byte-identical to a fixed single-shard run, no
+/// read may be lost, and `in_flight()` must settle at 0. The default
+/// run is sized for `cargo test`; `HELIX_CI_SOAK=1` (ci.sh's opt-in
+/// soak gate) runs the long variant.
+#[test]
+fn soak_chaos_autoscale_keeps_output_identical() {
+    let slow = std::env::var("HELIX_CI_SOAK")
+        .map(|v| v == "1").unwrap_or(false);
+    let (genome, coverage, waves, gap_ms) =
+        if slow { (3000, 8, 10, 300) } else { (900, 3, 3, 100) };
+    let run = sim_run(genome, coverage, 171);
+    let (fixed, _m) = call_run_with_shards(&run, 1);
+    assert_eq!(fixed.len(), run.reads.len());
+
+    let mut coord = Coordinator::new(CoordinatorConfig {
+        model: "guppy".into(),
+        bits: 32,
+        dnn_shards: 1,
+        decode_threads: 3,
+        vote_threads: 2,
+        policy: BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+        },
+        autoscale: Some(AutoscaleConfig {
+            min_shards: 1,
+            max_shards: 4,
+            tick: Duration::from_millis(2),
+            // deliberately churny: waves read hot almost immediately,
+            // gaps read cold within a few ticks
+            high_util: 0.10,
+            low_util: 0.05,
+            up_ticks: 1,
+            down_ticks: 2,
+            cooldown_ticks: 0,
+            scale_decode: true,
+            scale_vote: true,
+            ..AutoscaleConfig::default()
+        }),
+        artifacts_dir: no_artifacts_dir(),
+        ..Default::default()
+    }).unwrap();
+
+    let mut called = Vec::new();
+    let chunk = run.reads.len().div_ceil(waves).max(1);
+    for wave in run.reads.chunks(chunk) {
+        for r in wave {
+            coord.submit(r);
+            called.extend(coord.drain_ready());
+        }
+        // inter-wave idle gap: long enough for the retire path to run
+        let gap_deadline =
+            Instant::now() + Duration::from_millis(gap_ms);
+        while Instant::now() < gap_deadline {
+            called.extend(coord.drain_ready());
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+    // every read was submitted: in_flight must settle at 0 without
+    // finish()'s help (the ROADMAP's replica-kill × autoscale item —
+    // retirement drains through the same path a killed replica takes)
+    let settle_deadline = Instant::now() + Duration::from_secs(60);
+    while coord.in_flight() > 0 && Instant::now() < settle_deadline {
+        called.extend(coord.drain_ready());
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(coord.in_flight(), 0, "in_flight must settle at 0");
+    let metrics = coord.metrics.clone();
+    called.extend(coord.finish().unwrap());
+
+    assert_eq!(called.len(), run.reads.len(), "chaos lost reads");
+    called.sort_by_key(|c| c.read_id);
+    for (a, b) in fixed.iter().zip(&called) {
+        assert_eq!(a.read_id, b.read_id);
+        assert_eq!(a.seq, b.seq,
+                   "read {} consensus diverged under chaos", a.read_id);
+        assert_eq!(a.window_decodes, b.window_decodes,
+                   "read {} window decodes diverged under chaos",
+                   a.read_id);
+    }
+    // the soak is only a soak if the pool actually churned
+    let events = metrics.scale_events();
+    let ups = events.iter()
+        .filter(|e| e.action == ScaleAction::Up).count();
+    let downs = events.iter()
+        .filter(|e| e.action == ScaleAction::Down).count();
+    assert!(ups >= 1, "waves must have grown a pool: {events:?}");
+    assert!(downs >= 1, "gaps must have retired workers: {events:?}");
 }
 
 #[test]
