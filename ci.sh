@@ -1,12 +1,15 @@
 #!/usr/bin/env bash
 # Tier-1 CI for the Helix reproduction: build, tests, lints, and
-# (optionally) the coordinator perf bench that emits
-# BENCH_coordinator.json for the perf trajectory.
+# (optionally) the perf benches that emit BENCH_coordinator.json and
+# BENCH_kernels.json for the perf trajectory.
 #
 #   ./ci.sh          # build + test + clippy (default features: the
 #                    #   self-contained native backend — MUST pass)
-#   ./ci.sh bench    # ... plus `cargo bench --bench coordinator`
-#                    #   (native backend; artifacts self-materialize)
+#   ./ci.sh bench    # ... plus `cargo bench --bench coordinator` and
+#                    #   `cargo bench --bench basecall_hot` (native
+#                    #   backend; artifacts self-materialize; the
+#                    #   kernel bench hard-fails on a regression past
+#                    #   rust/benches/baseline_kernels.json's band)
 #   HELIX_CI_XLA=1 ./ci.sh
 #                    # additionally try the `xla` feature build
 #                    #   (best-effort: needs the PJRT binding crate,
@@ -130,6 +133,29 @@ if [ "${1:-}" = "bench" ]; then
         exit 1
     fi
     echo "wrote $(pwd)/BENCH_coordinator.json"
+
+    echo "== cargo bench --bench basecall_hot (kernel perf gate)"
+    # The kernel bench gates itself: it exits non-zero when a
+    # kernel_rows metric falls past the checked-in baseline band
+    # (rust/benches/baseline_kernels.json) or a SWAR/pruning speedup
+    # drops below its floor — set -e turns that into a CI failure.
+    rm -f BENCH_kernels.json rust/BENCH_kernels.json
+    cargo bench --bench basecall_hot
+    if [ -f rust/BENCH_kernels.json ]; then
+        mv rust/BENCH_kernels.json BENCH_kernels.json
+    fi
+    if [ ! -f BENCH_kernels.json ]; then
+        echo "ci.sh: FAIL — BENCH_kernels.json was not emitted" >&2
+        exit 1
+    fi
+    # the structured kernel section is a hard deliverable: the perf
+    # gate is meaningless if the rows silently disappear
+    if ! grep -q '"kernel_rows"' BENCH_kernels.json; then
+        echo "ci.sh: FAIL — BENCH_kernels.json has no kernel_rows" \
+             "section (SWAR/decode kernel bench missing)" >&2
+        exit 1
+    fi
+    echo "wrote $(pwd)/BENCH_kernels.json"
 fi
 
 echo "ci.sh: OK"

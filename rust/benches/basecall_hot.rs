@@ -1,13 +1,28 @@
-//! Hot-path micro-benchmarks: CTC decode, voting, edit distance, signal
-//! simulation. (In-tree timer replaces criterion — offline build.)
+//! Hot-path micro-benchmarks: quantized DNN forward (SWAR vs scalar
+//! reference), CTC decode (pruned vs exhaustive beam), voting, edit
+//! distance, signal simulation. (In-tree timer replaces criterion —
+//! offline build.)
 //!
 //!     cargo bench --bench basecall_hot
+//!
+//! Emits a structured `kernel_rows` section into BENCH_kernels.json
+//! (windows/s for the native forward at each bit-width, decodes/s at
+//! each beam width) and hard-gates it against the checked-in baseline
+//! band in benches/baseline_kernels.json: a metric below
+//! `metric * (1 - tolerance)` or a SWAR/pruning speedup below the
+//! row's `min_speedup` floor exits non-zero, which fails `./ci.sh
+//! bench`. Re-baseline on a new machine with
+//! `HELIX_BENCH_UPDATE_BASELINE=1` (keeps the bands, rewrites the
+//! absolute metrics). Field-to-figure mapping: docs/TUNING.md.
 
-use helix::basecall::ctc::{beam_search, greedy_decode, LogProbs};
+use helix::basecall::ctc::{beam_search, beam_search_pruned, greedy_decode,
+                           BeamPrune, LogProbs};
 use helix::basecall::edit::{edit_distance, edit_distance_banded};
 use helix::basecall::vote::consensus;
 use helix::bench::timer::bench;
 use helix::genome::pore::PoreModel;
+use helix::runtime::{Backend, NativeBackend};
+use helix::util::json::Json;
 use helix::util::rng::Rng;
 
 /// Guppy-shaped logprobs: T=145, peaked like a trained model's output.
@@ -24,16 +39,194 @@ fn realistic_lp(t: usize, seed: u64) -> LogProbs {
     LogProbs::new(t, data)
 }
 
+/// One gated kernel measurement: the JSON row plus what the baseline
+/// band checks (`metric` = the row's primary throughput; `speedup` =
+/// vectorized-over-reference ratio on the same inputs).
+struct KernelRow {
+    key: String,
+    metric: f64,
+    speedup: f64,
+    json: String,
+}
+
+/// Candidate baseline locations: cargo runs benches with cwd = the
+/// crate root (rust/), but keep the repo-root-relative spelling too so
+/// a direct `./rust/target/release/...` invocation from the repo root
+/// still finds it.
+const BASELINE_PATHS: &[&str] = &["benches/baseline_kernels.json",
+                                  "rust/benches/baseline_kernels.json"];
+
+fn find_baseline() -> Option<(String, String)> {
+    for p in BASELINE_PATHS {
+        if let Ok(text) = std::fs::read_to_string(p) {
+            return Some((p.to_string(), text));
+        }
+    }
+    None
+}
+
+/// Gate the measured rows against the baseline band; returns human
+/// readable failure descriptions (empty = pass).
+fn gate(rows: &[KernelRow], baseline: &Json, tolerance: f64)
+        -> Vec<String> {
+    let mut failures = Vec::new();
+    let Some(brows) = baseline.get("rows").and_then(|r| r.as_arr()) else {
+        return vec!["baseline has no \"rows\" array".into()];
+    };
+    for b in brows {
+        let Some(key) = b.get("key").and_then(|k| k.as_str()) else {
+            failures.push("baseline row without \"key\"".into());
+            continue;
+        };
+        let Some(row) = rows.iter().find(|r| r.key == key) else {
+            failures.push(format!(
+                "baseline row '{key}' was not measured this run"));
+            continue;
+        };
+        if let Some(metric) = b.get("metric").and_then(|m| m.as_f64()) {
+            let floor = metric * (1.0 - tolerance);
+            if row.metric < floor {
+                failures.push(format!(
+                    "{key}: {:.0}/s is below the baseline band \
+                     ({:.0}/s * (1 - {tolerance}) = {floor:.0}/s)",
+                    row.metric, metric));
+            }
+        }
+        if let Some(ms) = b.get("min_speedup").and_then(|m| m.as_f64()) {
+            if row.speedup < ms {
+                failures.push(format!(
+                    "{key}: speedup {:.2}x is below the floor {ms:.2}x",
+                    row.speedup));
+            }
+        }
+    }
+    failures
+}
+
+/// Rewrite the baseline's absolute metrics from this run, keeping the
+/// tolerance and per-row `min_speedup` bands (1.0 for new keys).
+fn update_baseline(rows: &[KernelRow], old: Option<&Json>, path: &str) {
+    let tolerance = old
+        .and_then(|b| b.get("tolerance"))
+        .and_then(|t| t.as_f64())
+        .unwrap_or(0.75);
+    let mut out = Vec::new();
+    for r in rows {
+        let min_speedup = old
+            .and_then(|b| b.get("rows"))
+            .and_then(|rs| rs.as_arr())
+            .and_then(|rs| rs.iter().find(|b| {
+                b.get("key").and_then(|k| k.as_str())
+                    == Some(r.key.as_str())
+            }))
+            .and_then(|b| b.get("min_speedup"))
+            .and_then(|m| m.as_f64())
+            .unwrap_or(1.0);
+        out.push(format!(
+            "    {{\"key\": \"{}\", \"metric\": {:.0}, \
+             \"min_speedup\": {min_speedup}}}",
+            r.key, r.metric));
+    }
+    let json = format!(
+        "{{\n  \"tolerance\": {tolerance},\n  \"rows\": [\n{}\n  ]\n}}\n",
+        out.join(",\n"));
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("rebaselined {path}"),
+        Err(e) => {
+            eprintln!("could not write {path}: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
 fn main() {
-    println!("== basecall hot paths ==");
+    let mut kernel_rows: Vec<KernelRow> = Vec::new();
+
+    // SWAR forward throughput vs the retained scalar reference, per
+    // exported bit-width, on the builtin native model (batch = 32, the
+    // largest exported batch). Same random signals for both paths, and
+    // the outputs are asserted bit-identical before timing anything —
+    // a wrong kernel must fail loudly, not get benchmarked.
+    println!("== native quantized forward (SWAR vs scalar) ==");
+    let mut backend = NativeBackend::builtin();
+    let window = backend.meta().window;
+    let batch = 32usize;
+    let mut rng = Rng::new(7);
+    let sigs: Vec<Vec<f32>> = (0..batch)
+        .map(|_| (0..window).map(|_| rng.normal() as f32 * 0.8).collect())
+        .collect();
+    for bits in [32u32, 16, 8, 5] {
+        let vectorized = backend.run_windows("guppy", bits, &sigs).unwrap();
+        let reference = backend.run_reference("guppy", bits, &sigs).unwrap();
+        assert_eq!(vectorized.len(), reference.len());
+        for (v, r) in vectorized.iter().zip(reference.iter()) {
+            assert_eq!(v.t, r.t);
+            for (a, b) in v.data.iter().zip(r.data.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(),
+                           "SWAR forward diverged from scalar at {bits}b");
+            }
+        }
+        let st_v = bench(&format!("forward {bits:>2}b batch=32 swar"),
+                         300, || {
+            std::hint::black_box(
+                backend.run_windows("guppy", bits, &sigs).unwrap());
+        });
+        let st_s = bench(&format!("forward {bits:>2}b batch=32 scalar"),
+                         300, || {
+            std::hint::black_box(
+                backend.run_reference("guppy", bits, &sigs).unwrap());
+        });
+        let win_per_s = batch as f64 / (st_v.median_ns / 1e9);
+        let scalar_win_per_s = batch as f64 / (st_s.median_ns / 1e9);
+        let speedup = win_per_s / scalar_win_per_s;
+        println!("    -> {win_per_s:.0} windows/s \
+                  (scalar {scalar_win_per_s:.0}, {speedup:.2}x)");
+        kernel_rows.push(KernelRow {
+            key: format!("forward/{bits}"),
+            metric: win_per_s,
+            speedup,
+            json: format!(
+                "{{\"kind\": \"forward\", \"key\": \"forward/{bits}\", \
+                 \"bits\": {bits}, \"win_per_s\": {win_per_s:.0}, \
+                 \"scalar_win_per_s\": {scalar_win_per_s:.0}, \
+                 \"speedup\": {speedup:.3}}}"),
+        });
+    }
+
+    // decode throughput per beam width: pruned (default thresholds)
+    // vs the exhaustive search on model-realistic peaked rows.
+    println!("\n== basecall hot paths ==");
     let lp = realistic_lp(145, 1);
+    let prune = BeamPrune::defaults();
 
     bench("greedy_decode T=145", 200, || {
         std::hint::black_box(greedy_decode(&lp));
     });
     for width in [2usize, 10, 32, 64] {
-        bench(&format!("beam_search T=145 width={width}"), 300, || {
-            std::hint::black_box(beam_search(&lp, width));
+        let st_full = bench(
+            &format!("beam_search T=145 width={width}"), 300, || {
+                std::hint::black_box(beam_search(&lp, width));
+            });
+        let st_pruned = bench(
+            &format!("beam_search T=145 width={width} pruned"), 300, || {
+                std::hint::black_box(beam_search_pruned(&lp, width, prune));
+            });
+        let dec_per_s = 1e9 / st_pruned.median_ns;
+        let full_dec_per_s = 1e9 / st_full.median_ns;
+        let speedup = dec_per_s / full_dec_per_s;
+        println!("    -> width {width}: pruned {dec_per_s:.0} dec/s \
+                  (full {full_dec_per_s:.0}, {speedup:.2}x)");
+        kernel_rows.push(KernelRow {
+            key: format!("decode/{width}"),
+            metric: dec_per_s,
+            speedup,
+            json: format!(
+                "{{\"kind\": \"decode\", \"key\": \"decode/{width}\", \
+                 \"beam_width\": {width}, \"dec_per_s\": {dec_per_s:.0}, \
+                 \"full_dec_per_s\": {full_dec_per_s:.0}, \
+                 \"speedup\": {speedup:.3}, \
+                 \"prune_delta\": {}, \"prune_floor\": {}}}",
+                prune.symbol_delta, prune.score_floor),
         });
     }
 
@@ -76,4 +269,62 @@ fn main() {
     bench("pore simulate 400-base read", 150, || {
         std::hint::black_box(pm.simulate(&seq, &mut sim_rng));
     });
+
+    // emit BENCH_kernels.json before gating so a failing run still
+    // leaves the measurements on disk for diagnosis.
+    let found = find_baseline();
+    let json = format!(
+        "{{\n  \"backend\": \"native\",\n  \"batch\": {batch},\n  \
+         \"kernel_rows\": [\n    {}\n  ],\n  \"gate\": {{\"baseline\": \
+         {}, \"updated\": {}}}\n}}\n",
+        kernel_rows.iter().map(|r| r.json.clone())
+            .collect::<Vec<_>>().join(",\n    "),
+        match &found {
+            Some((p, _)) => format!("\"{p}\""),
+            None => "null".into(),
+        },
+        std::env::var("HELIX_BENCH_UPDATE_BASELINE").as_deref() == Ok("1"));
+    match std::fs::write("BENCH_kernels.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_kernels.json"),
+        Err(e) => println!("\ncould not write BENCH_kernels.json: {e}"),
+    }
+
+    let baseline = found.as_ref().map(|(p, text)| {
+        (p.clone(), Json::parse(text).unwrap_or_else(|e| {
+            eprintln!("unparsable baseline {p}: {e}");
+            std::process::exit(1);
+        }))
+    });
+
+    if std::env::var("HELIX_BENCH_UPDATE_BASELINE").as_deref() == Ok("1") {
+        let path = baseline.as_ref()
+            .map(|(p, _)| p.clone())
+            .unwrap_or_else(|| BASELINE_PATHS[0].to_string());
+        update_baseline(&kernel_rows, baseline.as_ref().map(|(_, b)| b),
+                        &path);
+        return;
+    }
+
+    let Some((path, base)) = baseline else {
+        eprintln!("no kernel baseline found (looked at {BASELINE_PATHS:?}); \
+                   the perf gate requires one — run with \
+                   HELIX_BENCH_UPDATE_BASELINE=1 to create it");
+        std::process::exit(1);
+    };
+    let tolerance = base.get("tolerance")
+        .and_then(|t| t.as_f64())
+        .unwrap_or(0.75);
+    let failures = gate(&kernel_rows, &base, tolerance);
+    if failures.is_empty() {
+        println!("kernel perf gate: {} rows within the {path} band \
+                  (tolerance {tolerance})", kernel_rows.len());
+    } else {
+        eprintln!("kernel perf gate FAILED against {path}:");
+        for f in &failures {
+            eprintln!("  - {f}");
+        }
+        eprintln!("(rebaseline with HELIX_BENCH_UPDATE_BASELINE=1 if this \
+                   machine is legitimately slower)");
+        std::process::exit(1);
+    }
 }

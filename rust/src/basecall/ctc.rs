@@ -131,6 +131,73 @@ pub fn beam_search(lp: &LogProbs, beam: usize) -> Vec<u8> {
     beam_search_n(lp, beam, 1).pop().map(|(s, _)| s).unwrap_or_default()
 }
 
+/// Pruning thresholds for the prefix beam search hot path. Both knobs
+/// are log-domain distances (nonnegative; larger prunes less).
+///
+/// [`BeamPrune::OFF`] (both thresholds infinite) skips the threshold
+/// computations entirely, so the pruned search is then
+/// operation-for-operation identical to the exhaustive
+/// [`beam_search_n`] traversal — byte-identical output, which is what
+/// keeps the coordinator's determinism pins intact when pruning is
+/// disabled.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BeamPrune {
+    /// Per-step symbol cutoff: at each time step, a base symbol whose
+    /// log-prob is below `best_symbol − symbol_delta` is not used to
+    /// extend any prefix. Blank emission is never pruned, so every
+    /// surviving prefix keeps accumulating mass.
+    pub symbol_delta: f32,
+    /// Beam score floor: after the top-K selection, candidates whose
+    /// total mass is below `best_total − score_floor` are dropped.
+    /// The best survivor is never dropped.
+    pub score_floor: f32,
+}
+
+impl BeamPrune {
+    /// No pruning: infinite thresholds — arithmetic-identical to the
+    /// exhaustive search.
+    pub const OFF: BeamPrune = BeamPrune {
+        symbol_delta: f32::INFINITY,
+        score_floor: f32::INFINITY,
+    };
+
+    /// Production defaults (what `--beam-prune` without explicit
+    /// values enables): δ = 3.0 keeps only near-dominant base
+    /// extensions on peaked (model-realistic) rows while pruning
+    /// nothing on near-uniform rows; floor = 10.0 drops prefixes
+    /// ~e^10 less likely than the best survivor.
+    pub fn defaults() -> BeamPrune {
+        BeamPrune { symbol_delta: 3.0, score_floor: 10.0 }
+    }
+
+    /// Pruning knobs from the environment: `HELIX_BEAM_PRUNE` (symbol
+    /// delta; enables pruning) and `HELIX_BEAM_FLOOR` (score floor,
+    /// optional refinement). `None` when `HELIX_BEAM_PRUNE` is unset
+    /// or unparsable.
+    pub fn from_env() -> Option<BeamPrune> {
+        let delta = std::env::var("HELIX_BEAM_PRUNE").ok()
+            .and_then(|s| s.parse::<f32>().ok())
+            .filter(|d| d.is_finite() && *d >= 0.0)?;
+        let mut p = BeamPrune { symbol_delta: delta,
+                                ..BeamPrune::defaults() };
+        if let Some(floor) = std::env::var("HELIX_BEAM_FLOOR").ok()
+            .and_then(|s| s.parse::<f32>().ok())
+            .filter(|f| f.is_finite() && *f >= 0.0)
+        {
+            p.score_floor = floor;
+        }
+        Some(p)
+    }
+}
+
+/// Pruned prefix beam search returning the single best decode — the
+/// decode-pool hot path when `CoordinatorConfig::prune` is set.
+pub fn beam_search_pruned(lp: &LogProbs, beam: usize, prune: BeamPrune)
+                          -> Vec<u8> {
+    beam_search_pruned_n(lp, beam, 1, prune)
+        .pop().map(|(s, _)| s).unwrap_or_default()
+}
+
 /// Prefix trie node: prefixes live in an arena and are deduplicated via a
 /// (parent, symbol) -> child map, so every logical prefix has exactly ONE
 /// u32 id. This removes the per-candidate `Vec<u8>` clone + hash of the naive
@@ -184,6 +251,14 @@ impl PrefixArena {
 /// Prefix beam search returning the top-n (prefix, log-prob) results.
 pub fn beam_search_n(lp: &LogProbs, beam: usize, n: usize)
                      -> Vec<(Vec<u8>, f32)> {
+    beam_search_pruned_n(lp, beam, n, BeamPrune::OFF)
+}
+
+/// Prefix beam search with per-step symbol pruning and a beam score
+/// floor (see [`BeamPrune`]), returning the top-n (prefix, log-prob)
+/// results. With [`BeamPrune::OFF`] this is the exhaustive search.
+pub fn beam_search_pruned_n(lp: &LogProbs, beam: usize, n: usize,
+                            prune: BeamPrune) -> Vec<(Vec<u8>, f32)> {
     assert!(beam >= 1);
     let mut arena = PrefixArena::new();
     // (prefix node, mass) survivors of the previous step.
@@ -196,10 +271,27 @@ pub fn beam_search_n(lp: &LogProbs, beam: usize, n: usize)
     for t in 0..lp.t {
         let row = lp.row(t);
         next.clear();
+        // Per-step symbol cutoff: extensions whose emission log-prob
+        // falls below best-base-minus-delta are skipped for every
+        // prefix this step. NaN rows never trip the cutoff (`p_s <
+        // cut` is false for NaN), so malformed input degrades to the
+        // unpruned traversal instead of losing symbols.
+        let cut = if prune.symbol_delta.is_finite() {
+            let mut best = f32::NEG_INFINITY;
+            for &p in &row[..BLANK] {
+                if p > best {
+                    best = p;
+                }
+            }
+            best - prune.symbol_delta
+        } else {
+            f32::NEG_INFINITY
+        };
         for &(node, mass) in beams.iter() {
             let total = mass.total();
             let last = arena.last_sym(node);
-            // 1) emit blank: prefix unchanged, ends in blank.
+            // 1) emit blank: prefix unchanged, ends in blank. Blank is
+            //    never pruned — survivors keep accumulating mass.
             {
                 let e = next.entry(node).or_insert(Mass::EMPTY);
                 e.pb = logsumexp2(e.pb, total + row[BLANK]);
@@ -207,6 +299,9 @@ pub fn beam_search_n(lp: &LogProbs, beam: usize, n: usize)
             // 2) emit a base.
             for s in 0..BLANK as u8 {
                 let p_s = row[s as usize];
+                if p_s < cut {
+                    continue;
+                }
                 if last == Some(s) {
                     // repeat of the last symbol: the extension only grows
                     // from blank-ending mass (A- + A -> AA); non-blank mass
@@ -231,16 +326,30 @@ pub fn beam_search_n(lp: &LogProbs, beam: usize, n: usize)
         scored.clear();
         scored.extend(next.iter().map(|(&k, &v)| (k, v, v.total())));
         if scored.len() > beam {
-            scored.select_nth_unstable_by(beam - 1, |a, b| b.2
-                .partial_cmp(&a.2).unwrap());
+            // total_cmp, not partial_cmp().unwrap(): a NaN mass (from
+            // NaN rows upstream) must rank, not panic the decoder.
+            scored.select_nth_unstable_by(beam - 1,
+                                          |a, b| b.2.total_cmp(&a.2));
             scored.truncate(beam);
+        }
+        // Beam score floor: drop survivors far below the step's best.
+        // `c.2 >= floor` is false for NaN, so NaN candidates are only
+        // culled when the floor is actually enabled.
+        if prune.score_floor.is_finite() && !scored.is_empty() {
+            let mut best = f32::NEG_INFINITY;
+            for c in scored.iter() {
+                if c.2 > best {
+                    best = c.2;
+                }
+            }
+            let floor = best - prune.score_floor;
+            scored.retain(|c| c.2 >= floor);
         }
         beams.clear();
         beams.extend(scored.iter().map(|&(k, v, _)| (k, v)));
     }
 
-    beams.sort_unstable_by(|a, b| b.1.total()
-        .partial_cmp(&a.1.total()).unwrap());
+    beams.sort_unstable_by(|a, b| b.1.total().total_cmp(&a.1.total()));
     let mut out: Vec<(Vec<u8>, f32)> = beams.into_iter()
         .take(n)
         .map(|(node, m)| (arena.materialize(node), m.total()))
@@ -401,6 +510,87 @@ mod tests {
         let lp = uniformish(5, 3);
         let want: f32 = (0..5).map(|t| lp.row(t)[BLANK]).sum();
         assert!((ctc_log_prob(&lp, &[]) - want).abs() < 1e-5);
+    }
+
+    #[test]
+    fn nan_and_neg_inf_rows_decode_without_panicking() {
+        // A backend bug (or a hostile artifact) can hand the decoders
+        // NaN or -inf log-prob rows. Every decoder must degrade
+        // gracefully — total_cmp ordering, no partial_cmp panics.
+        let t = 6;
+        let mut data = vec![0.0f32; t * NUM_SYMBOLS];
+        for (i, v) in data.iter_mut().enumerate() {
+            *v = (-((i % NUM_SYMBOLS) as f32)).max(-3.0);
+        }
+        // row 1 all-NaN, row 3 all -inf, row 4 mixed NaN/-inf/finite.
+        for s in 0..NUM_SYMBOLS {
+            data[NUM_SYMBOLS + s] = f32::NAN;
+            data[3 * NUM_SYMBOLS + s] = f32::NEG_INFINITY;
+        }
+        data[4 * NUM_SYMBOLS] = f32::NAN;
+        data[4 * NUM_SYMBOLS + 1] = f32::NEG_INFINITY;
+        let lp = LogProbs::new(t, data);
+        greedy_decode(&lp);
+        for beam in [1usize, 2, 8] {
+            beam_search(&lp, beam);
+            beam_search_n(&lp, beam, beam);
+            beam_search_pruned(&lp, beam, BeamPrune::defaults());
+            beam_search_pruned_n(&lp, beam, beam, BeamPrune::defaults());
+        }
+        // The all-NaN input is the worst case: every mass goes NaN.
+        let lp = LogProbs::new(3, vec![f32::NAN; 3 * NUM_SYMBOLS]);
+        greedy_decode(&lp);
+        beam_search(&lp, 4);
+        beam_search_pruned(&lp, 4, BeamPrune::defaults());
+    }
+
+    #[test]
+    fn pruning_off_is_byte_identical_to_exhaustive() {
+        // BeamPrune::OFF must take the exact arithmetic path of the
+        // exhaustive search, and huge-but-finite thresholds (which DO
+        // run the threshold code, pruning nothing) must not perturb a
+        // single bit either — the coordinator's determinism pins rely
+        // on this.
+        prop::check("prune off == exhaustive", 10, |rng, _| {
+            let t = rng.range(3, 20) as usize;
+            let lp = uniformish(t, rng.next_u64());
+            for beam in [1usize, 2, 10] {
+                let full = beam_search_n(&lp, beam, beam);
+                for prune in [BeamPrune::OFF,
+                              BeamPrune { symbol_delta: 1e9,
+                                          score_floor: 1e9 }] {
+                    let pruned =
+                        beam_search_pruned_n(&lp, beam, beam, prune);
+                    assert_eq!(full.len(), pruned.len());
+                    for (f, p) in full.iter().zip(pruned.iter()) {
+                        assert_eq!(f.0, p.0);
+                        assert_eq!(f.1.to_bits(), p.1.to_bits(),
+                                   "mass drifted: {} vs {}", f.1, p.1);
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn pruned_beam_equals_full_beam_on_peaked_dists() {
+        // On peaked (model-realistic) distributions the default
+        // thresholds must not change the decoded read: the dominant
+        // symbol's log-prob gap (ln(0.99/0.0025) ≈ 5.98) is far past
+        // symbol_delta = 3.0, so pruning only removes mass that could
+        // never overtake the winner.
+        prop::check("pruned = full (peaked)", 20, |rng, _| {
+            let t = rng.range(10, 40) as usize;
+            let path: Vec<usize> = (0..t)
+                .map(|_| rng.below(NUM_SYMBOLS)).collect();
+            let lp = from_path(&path);
+            for beam in [2usize, 10] {
+                assert_eq!(
+                    beam_search(&lp, beam),
+                    beam_search_pruned(&lp, beam, BeamPrune::defaults()),
+                    "beam {beam} diverged under default pruning");
+            }
+        });
     }
 
     #[test]

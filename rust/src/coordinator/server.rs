@@ -35,7 +35,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::basecall::ctc::{beam_search, LogProbs};
+use crate::basecall::ctc::{beam_search, beam_search_pruned, BeamPrune,
+                           LogProbs};
 use crate::genome::dataset::windows_from_read;
 use crate::genome::synth::Read;
 use crate::runtime::{Backend, BackendKind, ShardFactory};
@@ -99,6 +100,12 @@ pub struct CoordinatorConfig {
     /// artifact directory (meta.json + weights; the native backend
     /// falls back to its builtin model when absent).
     pub artifacts_dir: String,
+    /// beam-search pruning thresholds for the decode pool. `None`
+    /// (default) runs the exhaustive search — byte-identical to the
+    /// pre-knob pipeline. `Some(BeamPrune::OFF)` also reproduces the
+    /// exhaustive arithmetic exactly; finite thresholds trade decode
+    /// work for a bounded heuristic (see `basecall::ctc::BeamPrune`).
+    pub prune: Option<BeamPrune>,
 }
 
 impl Default for CoordinatorConfig {
@@ -116,6 +123,7 @@ impl Default for CoordinatorConfig {
             policy: BatchPolicy::default(),
             autoscale: None,
             artifacts_dir: crate::runtime::meta::default_artifacts_dir(),
+            prune: None,
         }
     }
 }
@@ -412,6 +420,7 @@ impl Coordinator {
         let decode_pool = {
             let m = metrics.clone();
             let beam = cfg.beam_width;
+            let prune = cfg.prune;
             WorkerPool::new(
                 StageId::Decode, metrics.clone(), n_dec, dec_cap,
                 Box::new(move |slot, rx: Receiver<DecodeJob>| {
@@ -420,7 +429,11 @@ impl Coordinator {
                     std::thread::spawn(move || {
                         while let Ok(job) = rx.recv() {
                             let t0 = Instant::now();
-                            let seq = beam_search(&job.lp, beam);
+                            let seq = match prune {
+                                Some(p) => beam_search_pruned(
+                                    &job.lp, beam, p),
+                                None => beam_search(&job.lp, beam),
+                            };
                             let busy = t0.elapsed().as_micros() as u64;
                             m.add(&m.decode_micros, busy);
                             if let Some(st) = m.decode_workers.get(slot) {

@@ -9,6 +9,7 @@
 
 use anyhow::Result;
 
+use helix::basecall::ctc::BeamPrune;
 use helix::basecall::edit::identity;
 use helix::bench::figures;
 use helix::coordinator::{AutoscaleConfig, Coordinator, CoordinatorConfig};
@@ -23,7 +24,8 @@ fn usage() -> ! {
         basecall [--model guppy] [--bits 32] [--genome 2000] [--coverage 5]\n    \
         [--backend native|xla] [--shards N]\n    \
         [--max-shards N [--min-shards N] [--autoscale-tick-ms MS]\n     \
-        [--slo-ms MS] [--autoscale-decode] [--autoscale-vote]]\n  \
+        [--slo-ms MS] [--autoscale-decode] [--autoscale-vote]]\n    \
+        [--beam-prune DELTA [--beam-floor FLOOR]]\n  \
         simulate [--genome 10000] [--coverage 30]\n  \
         figures <fig2|...|fig26|table1..table5|all>\n  \
         schemes\n  \
@@ -31,14 +33,23 @@ fn usage() -> ! {
         env: HELIX_ARTIFACTS=artifacts HELIX_BACKEND=native|xla \
         HELIX_SHARDS=N\n     \
         HELIX_MAX_SHARDS=N HELIX_MIN_SHARDS=N HELIX_AUTOSCALE_TICK_MS=MS\n     \
-        HELIX_SLO_MS=MS HELIX_AUTOSCALE_DECODE=1 HELIX_AUTOSCALE_VOTE=1\n\
+        HELIX_SLO_MS=MS HELIX_AUTOSCALE_DECODE=1 HELIX_AUTOSCALE_VOTE=1\n     \
+        HELIX_BEAM_PRUNE=DELTA HELIX_BEAM_FLOOR=FLOOR\n\
         --max-shards (or HELIX_MAX_SHARDS) enables adaptive autoscaling: \
         the DNN\n\
         pool resizes between the min/max bounds from observed utilization \
         and,\n\
         with --slo-ms, from the p99 read latency of the last control tick;\n\
         --autoscale-decode/--autoscale-vote put those pools under the same\n\
-        controller (ceiling = their configured widths).");
+        controller (ceiling = their configured widths).\n\
+        --beam-prune (or HELIX_BEAM_PRUNE) enables pruned beam search in \
+        the\n\
+        decode pool: symbols more than DELTA log-prob below the step's \
+        best are\n\
+        not extended, and --beam-floor drops beams more than FLOOR below \
+        the\n\
+        best survivor. Unset = exhaustive search (byte-identical \
+        baseline).");
     std::process::exit(2);
 }
 
@@ -197,6 +208,43 @@ fn main() -> Result<()> {
                     None
                 }
             };
+            // pruned beam search: --beam-prune beats HELIX_BEAM_PRUNE;
+            // --beam-floor refines whichever base enabled it. As with
+            // the other flags, unparsable values are errors, not
+            // silent fallbacks.
+            let base_prune: Option<BeamPrune> = match f.get("beam-prune") {
+                Some(s) => match s.parse::<f32>() {
+                    Ok(d) if d.is_finite() && d >= 0.0 => {
+                        Some(BeamPrune { symbol_delta: d,
+                                         ..BeamPrune::defaults() })
+                    }
+                    _ => anyhow::bail!(
+                        "invalid --beam-prune '{s}' (want a nonnegative \
+                         log-prob delta)"),
+                },
+                None => BeamPrune::from_env(),
+            };
+            let prune: Option<BeamPrune> = match base_prune {
+                Some(mut p) => {
+                    if let Some(v) = f.get("beam-floor") {
+                        p.score_floor = match v.parse::<f32>() {
+                            Ok(fl) if fl.is_finite() && fl >= 0.0 => fl,
+                            _ => anyhow::bail!(
+                                "invalid --beam-floor '{v}' (want a \
+                                 nonnegative log-prob distance)"),
+                        };
+                    }
+                    Some(p)
+                }
+                None => {
+                    if f.contains_key("beam-floor") {
+                        anyhow::bail!(
+                            "--beam-floor needs pruning enabled via \
+                             --beam-prune or HELIX_BEAM_PRUNE");
+                    }
+                    None
+                }
+            };
             kind.prepare(&dir)?;
             let pm = PoreModel::load(&format!("{dir}/pore_model.json"))?;
             let run = SequencingRun::simulate(&pm, RunSpec {
@@ -220,15 +268,21 @@ fn main() -> Result<()> {
                 }
                 None => String::new(),
             };
+            let prune_note = match &prune {
+                Some(p) => format!(", beam prune δ={} floor={}",
+                                   p.symbol_delta, p.score_floor),
+                None => String::new(),
+            };
             println!("basecalling {} reads ({} genome, {:.1}x coverage) \
                       with {model}/{bits}b on the {} backend \
-                      ({shards} dnn shard{}{scale_note}) ...",
+                      ({shards} dnn shard{}{scale_note}{prune_note}) ...",
                      run.reads.len(), genome, run.mean_coverage(),
                      kind.name(), if shards == 1 { "" } else { "s" });
             let mut coord = Coordinator::new(CoordinatorConfig {
                 model, bits, backend: kind, artifacts_dir: dir.clone(),
                 dnn_shards: shards,
                 autoscale,
+                prune,
                 ..Default::default()
             })?;
             let t0 = std::time::Instant::now();

@@ -55,6 +55,30 @@ pub trait Backend {
         anyhow::ensure!(!batches.is_empty(),
                         "no artifacts for {model}/{bits}b");
         let bmax = *batches.last().unwrap();
+        // per-call scratch, shared by every batch of this call: the
+        // refs table and the tail zero-pad used to be rebuilt on every
+        // loop iteration of the hot path. `refs` holds borrows of the
+        // pad across iterations, so the pad is sized up front to the
+        // largest matching entry window (a tail batch slices it down
+        // to ITS entry's window — the padding contract below). Only a
+        // call that will actually pad allocates it: the tiling ends
+        // with a short batch exactly when the final remainder is not
+        // itself an available batch size.
+        let needs_pad = {
+            let r = windows.len() % bmax;
+            r != 0 && !batches.contains(&r)
+        };
+        let zero: Vec<f32> = if needs_pad {
+            let wmax = self.meta().entries.iter()
+                .filter(|e| e.model == model && e.bits == bits)
+                .map(|e| e.window)
+                .max()
+                .unwrap_or(0);
+            vec![0f32; wmax]
+        } else {
+            Vec::new()
+        };
+        let mut refs: Vec<&[f32]> = Vec::with_capacity(bmax);
         let mut out = Vec::with_capacity(windows.len());
         let mut i = 0;
         while i < windows.len() {
@@ -67,21 +91,15 @@ pub trait Backend {
                                           {model}/{bits}b/b{b}"))?
                 .clone();
             let take = remaining.min(b);
-            // zero pad only exists for a short tail batch (hot-path
-            // full batches allocate nothing here)
-            let zero = if take < b {
-                Some(vec![0f32; entry.window])
-            } else {
-                None
-            };
-            let mut refs: Vec<&[f32]> = Vec::with_capacity(b);
+            refs.clear();
             for w in &windows[i..i + take] {
                 refs.push(w.as_slice());
             }
-            if let Some(z) = &zero {
-                for _ in take..b {
-                    refs.push(z.as_slice());
-                }
+            // contract: the tail batch is padded with zero windows
+            // sized to the SELECTED entry's window — not the top-level
+            // `meta.window` default (see the doc comment above)
+            for _ in take..b {
+                refs.push(&zero[..entry.window]);
             }
             let lps = self.run_batch(&entry, &refs)?;
             out.extend(lps.into_iter().take(take));
@@ -317,6 +335,36 @@ mod tests {
     fn run_windows_rejects_unknown_model() {
         let mut b = NativeBackend::builtin();
         assert!(b.run_windows("nope", 32, &[]).is_err());
+    }
+
+    /// Regression for the scratch hoist: `run_windows` reuses one refs
+    /// table and one zero pad across every batch of a call now — the
+    /// output must stay bit-identical to decoding each window alone,
+    /// at every ragged length (exact batch, padded tail, multi-batch,
+    /// and the short-batch-then-pad shapes).
+    #[test]
+    fn run_windows_scratch_reuse_keeps_output_identical() {
+        let mut b = NativeBackend::builtin();
+        let w = b.meta().window;
+        for len in [1usize, 2, 7, 8, 9, 33] {
+            let windows: Vec<Vec<f32>> = (0..len)
+                .map(|k| (0..w)
+                     .map(|i| ((i + 31 * k) as f32 * 0.13).sin())
+                     .collect())
+                .collect();
+            let batched = b.run_windows("guppy", 16, &windows).unwrap();
+            assert_eq!(batched.len(), len);
+            for (k, win) in windows.iter().enumerate() {
+                let solo = b.run_windows("guppy", 16,
+                                         &[win.clone()]).unwrap();
+                for (x, y) in batched[k].data.iter()
+                    .zip(&solo[0].data)
+                {
+                    assert_eq!(x.to_bits(), y.to_bits(),
+                               "len={len} window={k} diverged");
+                }
+            }
+        }
     }
 
     /// The autoscaler's late-construction contract: every replica the

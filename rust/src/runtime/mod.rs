@@ -6,6 +6,9 @@
 //! * `executable` (cargo feature `xla`): the PJRT engine that loads the
 //!   HLO-text artifacts produced by `make artifacts`
 //!   (python/compile/aot.py) and executes them on the CPU PJRT client.
+//! * `swar`: the u64 lane-parallel integer kernels the native
+//!   executor's hot path runs on, bit-exact against its scalar
+//!   reference.
 //!
 //! Either way, python is never on the serving path.
 
@@ -14,6 +17,7 @@ pub mod backend;
 pub mod executable;
 pub mod meta;
 pub mod native;
+pub mod swar;
 
 pub use backend::{Backend, BackendKind, ShardFactory};
 #[cfg(feature = "xla")]

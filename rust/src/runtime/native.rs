@@ -25,6 +25,8 @@ use crate::pim::schemes::native_datapath_bits;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
+use super::swar::{self, PackedMat};
+
 use super::backend::Backend;
 use super::meta::{artifacts_available, ArtifactEntry, Meta};
 
@@ -245,7 +247,9 @@ fn quantize(w: &[f32], qmax: i32) -> (Vec<i32>, f32) {
 }
 
 /// One (model, bits) executable: weights quantized to the datapath
-/// width, run with integer accumulation.
+/// width, run with integer accumulation. Carries both the scalar
+/// weight rows (the bit-exactness oracle) and their SWAR packing
+/// (the hot path).
 #[derive(Clone)]
 struct QuantModel {
     window: usize,
@@ -261,6 +265,27 @@ struct QuantModel {
     out_b: Vec<f32>,
     /// activation clamp from the datapath's activation bits.
     a_qmax: i32,
+    /// conv filters packed into u64 SWAR lanes (rows = channels).
+    conv_packed: PackedMat,
+    /// output projection packed into u64 SWAR lanes (rows = symbols).
+    out_packed: PackedMat,
+}
+
+/// Reusable per-backend scratch for the SWAR forward pass: quantize
+/// output, hidden activations, and dot-product accumulators all live
+/// here, so a steady-state batch allocates nothing but each window's
+/// `LogProbs` payload. One `Scratch` per backend replica — shard
+/// threads own their backend exclusively, so there is no contention.
+#[derive(Clone, Default)]
+struct Scratch {
+    /// biased quantized input window (SWAR activations `q + a_qmax`).
+    xb: Vec<u64>,
+    /// ReLU'd conv activations, pre-requantization.
+    hidden: Vec<f32>,
+    /// biased quantized hidden activations.
+    hb: Vec<u64>,
+    /// per-row integer dot accumulators (conv channels / symbols).
+    acc: Vec<i64>,
 }
 
 impl QuantModel {
@@ -270,6 +295,12 @@ impl QuantModel {
         let a_qmax = (1i32 << (a_bits - 1)) - 1;
         let (conv_q, conv_scale) = quantize(&raw.conv_w, w_qmax);
         let (out_q, out_scale) = quantize(&raw.out_w, w_qmax);
+        let conv_packed =
+            PackedMat::pack(&conv_q, raw.hidden, raw.kernel, w_qmax,
+                            a_qmax);
+        let out_packed =
+            PackedMat::pack(&out_q, NUM_SYMBOLS, raw.hidden, w_qmax,
+                            a_qmax);
         QuantModel {
             window: raw.window,
             time_steps: raw.time_steps,
@@ -283,13 +314,66 @@ impl QuantModel {
             out_scale,
             out_b: raw.out_b.clone(),
             a_qmax,
+            conv_packed,
+            out_packed,
         }
     }
 
-    /// Integer conv → ReLU → integer matmul → log-softmax. Activations
-    /// are quantized per window (dynamic symmetric scale), so a window's
+    /// SWAR forward: integer conv → ReLU → integer matmul →
+    /// log-softmax, with every integer accumulator computed over
+    /// u64-packed lanes (`runtime::swar`) and every intermediate
+    /// buffer drawn from `scratch`. Bit-identical to
+    /// [`QuantModel::forward_reference`]: the SWAR dot products
+    /// reproduce the scalar i64 accumulators exactly, and the float
+    /// expressions are evaluated in the same order. Activations are
+    /// quantized per window (dynamic symmetric scale), so a window's
     /// output never depends on its batch neighbours.
-    fn forward(&self, sig: &[f32]) -> LogProbs {
+    fn forward(&self, sig: &[f32], scratch: &mut Scratch) -> LogProbs {
+        debug_assert_eq!(sig.len(), self.window);
+        let sx = swar::quantize_biased(sig, self.a_qmax,
+                                       &mut scratch.xb);
+        scratch.hidden.clear();
+        scratch.hidden.resize(self.time_steps * self.hidden, 0.0);
+        scratch.acc.clear();
+        scratch.acc.resize(self.hidden.max(NUM_SYMBOLS), 0);
+        for t in 0..self.time_steps {
+            let base = t * self.stride;
+            let win = &scratch.xb[base..base + self.kernel];
+            let xsum: i64 = win.iter().map(|&x| x as i64).sum();
+            self.conv_packed.dot_into(win, xsum, &mut scratch.acc);
+            let row = &mut scratch.hidden
+                [t * self.hidden..(t + 1) * self.hidden];
+            for (c, h) in row.iter_mut().enumerate() {
+                let v = scratch.acc[c] as f32 * self.conv_scale * sx
+                    + self.conv_b[c];
+                *h = v.max(0.0);
+            }
+        }
+        let sh = swar::quantize_biased(&scratch.hidden, self.a_qmax,
+                                       &mut scratch.hb);
+        let mut data = Vec::with_capacity(self.time_steps * NUM_SYMBOLS);
+        for t in 0..self.time_steps {
+            let row = &scratch.hb[t * self.hidden..(t + 1) * self.hidden];
+            let hsum: i64 = row.iter().map(|&x| x as i64).sum();
+            self.out_packed.dot_into(row, hsum, &mut scratch.acc);
+            let mut logits = [0f32; NUM_SYMBOLS];
+            for (s, logit) in logits.iter_mut().enumerate() {
+                *logit = scratch.acc[s] as f32 * self.out_scale * sh
+                    + self.out_b[s];
+            }
+            let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let lse = m
+                + logits.iter().map(|z| (z - m).exp()).sum::<f32>().ln();
+            data.extend(logits.iter().map(|z| z - lse));
+        }
+        LogProbs::new(self.time_steps, data)
+    }
+
+    /// Scalar reference forward — the pre-SWAR implementation, kept
+    /// verbatim as the bit-exactness oracle: property tests and the
+    /// kernel bench pin `forward` against this, element for element,
+    /// by `f32::to_bits`.
+    fn forward_reference(&self, sig: &[f32]) -> LogProbs {
         debug_assert_eq!(sig.len(), self.window);
         let (qx, sx) = quantize(sig, self.a_qmax);
         let mut hidden = vec![0f32; self.time_steps * self.hidden];
@@ -334,6 +418,10 @@ impl QuantModel {
 pub struct NativeBackend {
     meta: Meta,
     models: HashMap<(String, u32), QuantModel>,
+    /// per-backend scratch arena for the SWAR forward pass — reused
+    /// across every window of every `run_batch`, so the steady-state
+    /// batch path allocates nothing but the `LogProbs` payloads.
+    scratch: Scratch,
 }
 
 impl NativeBackend {
@@ -367,7 +455,30 @@ impl NativeBackend {
         NativeBackend {
             meta: spec.meta(Path::new(".")),
             models,
+            scratch: Scratch::default(),
         }
+    }
+
+    /// Scalar reference execution — the pre-SWAR forward pass, kept as
+    /// the public bit-exactness oracle. `run_windows`/`run_batch` (the
+    /// hot path) must produce byte-identical `LogProbs`; the property
+    /// tests and `benches/basecall_hot.rs` assert exactly that, and
+    /// the bench's `kernel_rows` report the SWAR speedup against this
+    /// path.
+    pub fn run_reference(&self, model: &str, bits: u32,
+                         windows: &[Vec<f32>]) -> Result<Vec<LogProbs>> {
+        let qm = self.models
+            .get(&(model.to_string(), bits))
+            .with_context(|| format!("no native model for \
+                                      {model}/{bits}b"))?;
+        let mut out = Vec::with_capacity(windows.len());
+        for w in windows {
+            anyhow::ensure!(w.len() == qm.window,
+                            "window length {} != {}", w.len(),
+                            qm.window);
+            out.push(qm.forward_reference(w));
+        }
+        Ok(out)
     }
 
     /// Replicate this backend for another DNN shard: duplicates the
@@ -416,7 +527,7 @@ impl NativeBackend {
                              ({}, {})", e.name, qm.window, qm.time_steps,
                             e.window, e.time_steps);
         }
-        Ok(NativeBackend { meta, models })
+        Ok(NativeBackend { meta, models, scratch: Scratch::default() })
     }
 }
 
@@ -470,7 +581,7 @@ impl Backend for NativeBackend {
         for s in signals {
             anyhow::ensure!(s.len() == w, "window length {} != {w}",
                             s.len());
-            out.push(qm.forward(s));
+            out.push(qm.forward(s, &mut self.scratch));
         }
         Ok(out)
     }
@@ -599,6 +710,94 @@ mod tests {
         let w = b.meta().window;
         let lps = b.run_windows("guppy", 8, &[vec![0f32; w]]).unwrap();
         assert!(lps[0].data.iter().all(|x| x.is_finite() && *x <= 0.0));
+    }
+
+    /// The SWAR rewrite's core contract: at every datapath width, on
+    /// random, all-zero, saturating, and tiny-magnitude signals, the
+    /// vectorized forward equals the scalar reference *bit for bit* —
+    /// not approximately. This is what lets the shard/determinism pins
+    /// elsewhere stay byte-identical across the rewrite.
+    #[test]
+    fn swar_forward_is_bit_exact_vs_scalar_reference() {
+        let mut b = NativeBackend::builtin();
+        let w = b.meta().window;
+        let mut cases: Vec<Vec<f32>> = vec![
+            vec![0.0; w], // all-zero (the tail-pad path)
+            (0..w).map(|i| if i % 2 == 0 { 1e30 } else { -1e30 })
+                .collect(), // saturating: every activation at ±a_qmax
+            vec![5.0; w], // constant (max == every sample)
+            (0..w).map(|i| (i as f32 * 0.17).sin() * 1e-6)
+                .collect(), // tiny magnitudes
+        ];
+        let mut rng = Rng::new(0xD00D);
+        for _ in 0..4 {
+            cases.push((0..w).map(|_| rng.normal() as f32).collect());
+        }
+        for &bits in &[32u32, 16, 8, 5] {
+            for (ci, sig) in cases.iter().enumerate() {
+                let fast =
+                    b.run_windows("guppy", bits, &[sig.clone()]).unwrap();
+                let slow =
+                    b.run_reference("guppy", bits, &[sig.clone()])
+                    .unwrap();
+                assert_eq!(fast[0].t, slow[0].t);
+                for (i, (x, y)) in fast[0].data.iter()
+                    .zip(&slow[0].data).enumerate()
+                {
+                    assert_eq!(x.to_bits(), y.to_bits(),
+                               "bits={bits} case={ci} elem={i}: \
+                                SWAR {x} != scalar {y}");
+                }
+            }
+        }
+    }
+
+    /// Randomized variant of the bit-exactness pin (prop-test seeds, so
+    /// a failure names a replayable case).
+    #[test]
+    fn swar_forward_bit_exactness_holds_on_random_signals() {
+        let mut b = NativeBackend::builtin();
+        let w = b.meta().window;
+        crate::util::prop::check("swar forward == scalar", 8,
+                                 |rng, i| {
+            let amp = [1e-3f32, 1.0, 1e4][i % 3];
+            let sig: Vec<f32> = (0..w)
+                .map(|_| rng.normal() as f32 * amp)
+                .collect();
+            let bits = [32u32, 16, 8, 5][i % 4];
+            let fast =
+                b.run_windows("guppy", bits, &[sig.clone()]).unwrap();
+            let slow =
+                b.run_reference("guppy", bits, &[sig]).unwrap();
+            for (x, y) in fast[0].data.iter().zip(&slow[0].data) {
+                assert_eq!(x.to_bits(), y.to_bits(), "bits={bits}");
+            }
+        });
+    }
+
+    #[test]
+    fn scratch_reuse_does_not_leak_state_across_windows() {
+        // a batch mixing degenerate and normal windows through the
+        // shared scratch must give each window the same answer it gets
+        // alone (the arena is per-call state, not per-window state)
+        let mut b = NativeBackend::builtin();
+        let w = b.meta().window;
+        let windows: Vec<Vec<f32>> = vec![
+            sig(w, 0.3),
+            vec![0.0; w],
+            sig(w, 1.1),
+            vec![1e30; w],
+            sig(w, 2.2),
+        ];
+        let batched = b.run_windows("guppy", 8, &windows).unwrap();
+        for (i, win) in windows.iter().enumerate() {
+            let solo =
+                b.run_windows("guppy", 8, &[win.clone()]).unwrap();
+            for (x, y) in batched[i].data.iter().zip(&solo[0].data) {
+                assert_eq!(x.to_bits(), y.to_bits(),
+                           "window {i} depends on batch neighbours");
+            }
+        }
     }
 
     #[test]

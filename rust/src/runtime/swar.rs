@@ -1,0 +1,338 @@
+//! SWAR (SIMD-within-a-register) integer kernels for the native
+//! quantized executor.
+//!
+//! The scalar reference path multiplies one `(weight, activation)` pair
+//! per instruction. Here the quantized weight matrix is packed into
+//! `u64` words carrying several *lanes* (independent unsigned
+//! sub-accumulators), so one 64-bit multiply-add advances several
+//! output rows at once:
+//!
+//! * weights are biased to unsigned, `w' = w + w_qmax ∈ [0, 2·w_qmax]`,
+//!   and likewise activations `x' = x + a_qmax` — a broadcast multiply
+//!   `(w0' + w1'·2^L)·x'` then yields `w0'x'` and `w1'x'` in disjoint
+//!   lanes with no cross-lane carry, as long as every lane's
+//!   accumulated sum stays below `2^L`;
+//! * the exact signed dot product is recovered from the biased one by
+//!   the identity `Σw·x = Σw'x' − a_qmax·Σw' − w_qmax·Σx' +
+//!   n·w_qmax·a_qmax`, which is all-integer and therefore exact — the
+//!   SWAR path produces the *same* `i64` accumulator as the scalar
+//!   loop, bit for bit;
+//! * the lane layout is chosen from the worst-case lane sum
+//!   `n·(2·w_qmax)·(2·a_qmax)`: 4×16-bit lanes for narrow models,
+//!   3×21-bit for the 8-bit datapath, 2×32-bit beyond that. The
+//!   16-bit datapath (what `native_datapath_bits` maps 32- and 16-bit
+//!   models to) overflows even 32-bit lanes, so its weights are split
+//!   into hi/lo byte *planes* (`w' = 256·hi + lo`, both ≤ 255) and the
+//!   two plane sums are recombined — still exact.
+//!
+//! `pim::schemes::native_datapath_bits` caps both operand widths at 16
+//! bits, so every reachable configuration packs; `PackedMat::pack`
+//! asserts the capacity proof at construction time.
+
+/// Lane layouts in preference order: most lanes first. A layout is
+/// usable when the worst-case per-lane sum fits its lane width.
+const LANE_CFGS: &[(u32, usize)] = &[(16, 4), (21, 3), (32, 2)];
+
+/// Pick the widest (most-lanes) layout whose lanes can hold
+/// `max_lane_sum` without overflowing into the neighbour lane.
+fn lane_cfg(max_lane_sum: u64) -> Option<(u32, usize)> {
+    LANE_CFGS.iter().copied()
+        .find(|&(bits, _)| max_lane_sum < (1u64 << bits))
+}
+
+/// One packed copy of the (biased) weight matrix. For most widths a
+/// matrix has a single plane holding `w'` directly (`mult == 1`); the
+/// 16-bit datapath carries two byte planes (`mult` 256 and 1) whose
+/// lane sums are recombined as `256·hi + lo`.
+#[derive(Clone, Debug)]
+struct Plane {
+    /// weight of this plane in the recombination (1 or 256).
+    mult: i64,
+    /// lane width in bits.
+    lane_bits: u32,
+    /// lanes (rows) per u64 word.
+    lanes: usize,
+    /// packed words, `[group][term]` row-major: group `g`, term `k` at
+    /// `words[g*n + k]`, where group `g` covers rows
+    /// `g*lanes .. (g+1)*lanes`.
+    words: Vec<u64>,
+}
+
+impl Plane {
+    /// Pack per-row plane values (`vals`, row-major `[rows][n]`, every
+    /// value `< 2^lane_bits`) into lane-parallel words.
+    fn pack(vals: &[u64], rows: usize, n: usize, mult: i64,
+            lane_bits: u32, lanes: usize) -> Plane {
+        let groups = rows.div_ceil(lanes);
+        let mut words = vec![0u64; groups * n];
+        for r in 0..rows {
+            let shift = ((r % lanes) as u32) * lane_bits;
+            let g = r / lanes;
+            for k in 0..n {
+                words[g * n + k] |= vals[r * n + k] << shift;
+            }
+        }
+        Plane { mult, lane_bits, lanes, words }
+    }
+}
+
+/// A quantized weight matrix (`rows` × `n`, entries in
+/// `[-w_qmax, w_qmax]`) packed for lane-parallel dot products against
+/// activations in `[-a_qmax, a_qmax]`.
+///
+/// `dot_into` computes, for every row, exactly the `i64` the scalar
+/// loop `Σ_k w[r][k]·x[k]` computes — same value, bit for bit — which
+/// is what lets the native backend keep its byte-identical determinism
+/// contract while running vectorized.
+#[derive(Clone, Debug)]
+pub struct PackedMat {
+    rows: usize,
+    n: usize,
+    w_qmax: i64,
+    a_qmax: i64,
+    /// per-row biased weight sums `Σ_k (w[r][k] + w_qmax)`.
+    wsum: Vec<i64>,
+    /// the constant `n · w_qmax · a_qmax` of the unbiasing identity.
+    nwa: i64,
+    planes: Vec<Plane>,
+}
+
+impl PackedMat {
+    /// Pack a row-major quantized matrix. Panics (with the capacity
+    /// proof) if no lane layout can hold the worst-case lane sum —
+    /// unreachable for the ≤16-bit widths `native_datapath_bits`
+    /// produces.
+    pub fn pack(q: &[i32], rows: usize, n: usize, w_qmax: i32,
+                a_qmax: i32) -> PackedMat {
+        assert_eq!(q.len(), rows * n, "packed matrix shape mismatch");
+        assert!(rows > 0 && n > 0, "empty matrix");
+        assert!(w_qmax > 0 && a_qmax > 0 && w_qmax <= 32767
+                && a_qmax <= 32767,
+                "SWAR packing needs 2..=16-bit operands \
+                 (w_qmax {w_qmax}, a_qmax {a_qmax})");
+        let wq = w_qmax as i64;
+        let aq = a_qmax as i64;
+        let biased: Vec<u64> = q.iter().map(|&w| {
+            debug_assert!((-w_qmax..=w_qmax).contains(&w),
+                          "weight {w} outside ±{w_qmax}");
+            (w as i64 + wq) as u64
+        }).collect();
+        let wsum: Vec<i64> = (0..rows)
+            .map(|r| biased[r * n..(r + 1) * n].iter()
+                 .map(|&w| w as i64).sum())
+            .collect();
+        let xmax = 2 * aq as u64; // biased activation ceiling
+        let wmax = 2 * wq as u64; // biased weight ceiling
+        let planes = match lane_cfg(n as u64 * wmax * xmax) {
+            Some((bits, lanes)) => {
+                vec![Plane::pack(&biased, rows, n, 1, bits, lanes)]
+            }
+            None => {
+                // byte-plane split: w' = 256·hi + lo, both planes ≤ 255
+                let (bits, lanes) = lane_cfg(n as u64 * 255 * xmax)
+                    .expect("byte planes must fit a lane layout \
+                             (n too large for SWAR packing)");
+                let hi: Vec<u64> = biased.iter().map(|&w| w >> 8)
+                    .collect();
+                let lo: Vec<u64> = biased.iter().map(|&w| w & 0xFF)
+                    .collect();
+                vec![Plane::pack(&hi, rows, n, 256, bits, lanes),
+                     Plane::pack(&lo, rows, n, 1, bits, lanes)]
+            }
+        };
+        PackedMat {
+            rows,
+            n,
+            w_qmax: wq,
+            a_qmax: aq,
+            wsum,
+            nwa: n as i64 * wq * aq,
+            planes,
+        }
+    }
+
+    /// Number of output rows (`out` must hold at least this many).
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Terms per row (`xb` must be exactly this long).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Lane-parallel dot products: `out[r] = Σ_k w[r][k]·x[k]` for
+    /// every row, exactly (bit-identical to the scalar i64 loop).
+    ///
+    /// `xb` holds the *biased* activations `x[k] + a_qmax` (as produced
+    /// by [`quantize_biased`]) and `xsum` their sum `Σ_k xb[k]`.
+    pub fn dot_into(&self, xb: &[u64], xsum: i64, out: &mut [i64]) {
+        assert_eq!(xb.len(), self.n, "activation length mismatch");
+        assert!(out.len() >= self.rows, "output buffer too small");
+        for o in out[..self.rows].iter_mut() {
+            *o = 0;
+        }
+        for plane in &self.planes {
+            let lanes = plane.lanes;
+            let lane_bits = plane.lane_bits;
+            let mask = (1u64 << lane_bits) - 1;
+            let groups = self.rows.div_ceil(lanes);
+            for g in 0..groups {
+                // the hot loop: one u64 multiply-add advances `lanes`
+                // rows at once; lane sums provably stay below
+                // 2^lane_bits (asserted at pack time), so no cross-lane
+                // carry and no u64 wrap can occur
+                let mut acc = 0u64;
+                let words = &plane.words[g * self.n..(g + 1) * self.n];
+                for (w, &x) in words.iter().zip(xb) {
+                    acc = acc.wrapping_add(w.wrapping_mul(x));
+                }
+                let r0 = g * lanes;
+                let live = lanes.min(self.rows - r0);
+                for j in 0..live {
+                    let lane = ((acc >> (j as u32 * lane_bits)) & mask)
+                        as i64;
+                    out[r0 + j] += plane.mult * lane;
+                }
+            }
+        }
+        // unbias: Σw·x = Σw'x' − a_qmax·Σw' − w_qmax·Σx' + n·W·A
+        for (o, &ws) in out[..self.rows].iter_mut().zip(&self.wsum) {
+            *o += self.nwa - self.a_qmax * ws - self.w_qmax * xsum;
+        }
+    }
+}
+
+/// Quantize a float signal symmetrically — *the same rounding as the
+/// scalar reference* (`max-abs / qmax` scale, round-half-away, clamp) —
+/// directly into biased-unsigned SWAR activations
+/// `out[k] = q[k] + a_qmax`. Returns the dequantization scale.
+///
+/// Callers slice `out` and sum the slice for `dot_into`'s `xsum`.
+pub fn quantize_biased(sig: &[f32], a_qmax: i32, out: &mut Vec<u64>)
+                       -> f32 {
+    let max = sig.iter().fold(0f32, |m, &x| m.max(x.abs())).max(1e-12);
+    let scale = max / a_qmax as f32;
+    let lim = a_qmax as f32;
+    out.clear();
+    out.reserve(sig.len());
+    for &x in sig {
+        let q = (x / scale).round().clamp(-lim, lim) as i32;
+        out.push((q + a_qmax) as u64);
+    }
+    scale
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    fn naive_dot(q: &[i32], rows: usize, n: usize, x: &[i64])
+                 -> Vec<i64> {
+        (0..rows).map(|r| {
+            q[r * n..(r + 1) * n].iter().zip(x)
+                .map(|(&w, &xx)| w as i64 * xx)
+                .sum()
+        }).collect()
+    }
+
+    fn check_exact(q: &[i32], rows: usize, n: usize, w_qmax: i32,
+                   a_qmax: i32, x: &[i32]) {
+        let pm = PackedMat::pack(q, rows, n, w_qmax, a_qmax);
+        assert_eq!(pm.rows(), rows);
+        assert_eq!(pm.n(), n);
+        let xb: Vec<u64> =
+            x.iter().map(|&v| (v + a_qmax) as u64).collect();
+        let xsum: i64 = xb.iter().map(|&v| v as i64).sum();
+        let mut out = vec![0i64; rows];
+        pm.dot_into(&xb, xsum, &mut out);
+        let xi: Vec<i64> = x.iter().map(|&v| v as i64).collect();
+        let want = naive_dot(q, rows, n, &xi);
+        assert_eq!(out, want,
+                   "rows={rows} n={n} w_qmax={w_qmax} a_qmax={a_qmax}");
+    }
+
+    #[test]
+    fn packed_dot_is_exact_at_every_width() {
+        // every operand width 2..=16 bits, random shapes/values —
+        // covers the 4-lane, 3-lane, 2-lane and byte-split layouts
+        for bits in 2..=16u32 {
+            let qmax = (1i32 << (bits - 1)) - 1;
+            prop::check(&format!("swar dot {bits}b"), 6, |rng, _| {
+                let rows = 1 + rng.below(17);
+                let n = 1 + rng.below(20);
+                let q: Vec<i32> = (0..rows * n)
+                    .map(|_| rng.range(-(qmax as i64), qmax as i64)
+                         as i32)
+                    .collect();
+                let x: Vec<i32> = (0..n)
+                    .map(|_| rng.range(-(qmax as i64), qmax as i64)
+                         as i32)
+                    .collect();
+                check_exact(&q, rows, n, qmax, qmax, &x);
+            });
+        }
+    }
+
+    #[test]
+    fn packed_dot_is_exact_at_saturation() {
+        // all-extreme operands: the worst case the capacity proof is
+        // about — every lane at its maximum sum simultaneously
+        for &(w_bits, a_bits) in
+            &[(5u32, 5u32), (8, 8), (12, 12), (16, 16), (16, 8)]
+        {
+            let wq = (1i32 << (w_bits - 1)) - 1;
+            let aq = (1i32 << (a_bits - 1)) - 1;
+            for (rows, n) in [(16usize, 12usize), (5, 16), (1, 1),
+                              (3, 7)] {
+                for wv in [wq, -wq, 0] {
+                    for xv in [aq, -aq, 0] {
+                        let q = vec![wv; rows * n];
+                        let x = vec![xv; n];
+                        check_exact(&q, rows, n, wq, aq, &x);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn model_shapes_use_expected_layouts() {
+        // the builtin model's shapes: conv 16×12, matmul 5×16
+        let mut rng = Rng::new(42);
+        for &(bits, want_planes) in &[(5u32, 1usize), (8, 1), (16, 2)] {
+            let qmax = (1i32 << (bits - 1)) - 1;
+            for (rows, n) in [(16usize, 12usize), (5, 16)] {
+                let q: Vec<i32> = (0..rows * n)
+                    .map(|_| rng.range(-(qmax as i64), qmax as i64)
+                         as i32)
+                    .collect();
+                let pm = PackedMat::pack(&q, rows, n, qmax, qmax);
+                assert_eq!(pm.planes.len(), want_planes,
+                           "{bits}b {rows}x{n}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_biased_matches_scalar_rounding() {
+        let mut rng = Rng::new(7);
+        let sig: Vec<f32> =
+            (0..64).map(|_| rng.normal() as f32).collect();
+        for qmax in [15i32, 127, 32767] {
+            let mut xb = Vec::new();
+            let scale = quantize_biased(&sig, qmax, &mut xb);
+            // re-derive the scalar quantization and compare
+            let max = sig.iter().fold(0f32, |m, &x| m.max(x.abs()))
+                .max(1e-12);
+            let want_scale = max / qmax as f32;
+            assert_eq!(scale.to_bits(), want_scale.to_bits());
+            for (&b, &x) in xb.iter().zip(&sig) {
+                let q = (x / want_scale).round()
+                    .clamp(-(qmax as f32), qmax as f32) as i32;
+                assert_eq!(b, (q + qmax) as u64);
+            }
+        }
+    }
+}

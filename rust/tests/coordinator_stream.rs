@@ -387,6 +387,47 @@ fn called_reads_identical_fixed_vs_adaptive() {
     }
 }
 
+/// The beam-pruning knob's off positions are byte-identical: `prune:
+/// None` (the pre-knob pipeline) and `prune: Some(BeamPrune::OFF)`
+/// (the pruned decoder with infinite thresholds, which skips every
+/// threshold computation) must call the exact same reads. This is the
+/// seed-output pin for the decode-pool dispatch switch.
+#[test]
+fn called_reads_identical_pruned_off_vs_seed() {
+    use helix::basecall::ctc::BeamPrune;
+    let run = sim_run(900, 3, 91);
+    let (base, _m) = call_run_with_shards(&run, 1);
+    assert_eq!(base.len(), run.reads.len());
+
+    let mut coord = Coordinator::new(CoordinatorConfig {
+        model: "guppy".into(),
+        bits: 32,
+        dnn_shards: 1,
+        policy: helix::coordinator::BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+        },
+        prune: Some(BeamPrune::OFF),
+        artifacts_dir: no_artifacts_dir(),
+        ..Default::default()
+    }).unwrap();
+    for r in &run.reads {
+        coord.submit(r);
+    }
+    let pruned_off = coord.finish().unwrap();
+
+    assert_eq!(pruned_off.len(), base.len());
+    for (a, b) in base.iter().zip(&pruned_off) {
+        assert_eq!(a.read_id, b.read_id);
+        assert_eq!(a.seq, b.seq,
+                   "read {} consensus diverged with BeamPrune::OFF",
+                   a.read_id);
+        assert_eq!(a.window_decodes, b.window_decodes,
+                   "read {} window decodes diverged with BeamPrune::OFF",
+                   a.read_id);
+    }
+}
+
 /// Sustained saturation from one initial shard must grow the pool:
 /// with an always-hot threshold the controller scales up on every
 /// non-cooldown tick until `max_shards`, and the scale-event log plus

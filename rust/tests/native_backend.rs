@@ -50,6 +50,35 @@ fn run_windows_handles_ragged_batches() {
 }
 
 #[test]
+fn swar_run_windows_matches_scalar_reference_at_every_width() {
+    // The SWAR datapath contract through the public API: the
+    // lane-parallel forward the backend serves from `run_windows` must
+    // be bit-exact against the retained scalar oracle
+    // (`run_reference`) at every exported bit-width, batched and solo.
+    let mut backend = NativeBackend::builtin();
+    let window = backend.meta().window;
+    let windows: Vec<Vec<f32>> = (0..9)
+        .map(|k| (0..window)
+             .map(|i| ((i as f32 + 17.0 * k as f32) * 0.07).sin() * 1.5)
+             .collect())
+        .collect();
+    for bits in [32u32, 16, 8, 5] {
+        let swar = backend.run_windows("guppy", bits, &windows).unwrap();
+        let scalar = backend.run_reference("guppy", bits, &windows)
+            .unwrap();
+        assert_eq!(swar.len(), scalar.len());
+        for (w, (a, b)) in swar.iter().zip(&scalar).enumerate() {
+            assert_eq!(a.t, b.t);
+            for (x, y) in a.data.iter().zip(&b.data) {
+                assert_eq!(x.to_bits(), y.to_bits(),
+                           "SWAR diverged from scalar at {bits}b, \
+                            window {w}: {x} vs {y}");
+            }
+        }
+    }
+}
+
+#[test]
 fn quantized_artifacts_execute_and_differ() {
     let mut backend = NativeBackend::builtin();
     let window = backend.meta().window;
