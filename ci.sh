@@ -132,6 +132,14 @@ if [ "${1:-}" = "bench" ]; then
              "section (SLO-driven scaling bench missing)" >&2
         exit 1
     fi
+    # ... and so is the tiered-serving sweep: the speculative
+    # fast-path/escalation tradeoff (hq agreement vs throughput across
+    # --escalate-margin values) must emit its rows
+    if ! grep -q '"tier_rows"' BENCH_coordinator.json; then
+        echo "ci.sh: FAIL — BENCH_coordinator.json has no tier_rows" \
+             "section (tiered-serving sweep missing)" >&2
+        exit 1
+    fi
     echo "wrote $(pwd)/BENCH_coordinator.json"
 
     echo "== cargo bench --bench basecall_hot (kernel perf gate)"

@@ -3,7 +3,10 @@
 //! deliverable), plus batching-policy ablation, DNN-shard scaling
 //! (`dnn_shards` 1/2/4 with per-shard utilization), and adaptive
 //! autoscaling under a bursty synthetic load (`autoscale_rows`: the
-//! scale-event trace showing the pool converging upward). Self-contained:
+//! scale-event trace showing the pool converging upward), and the
+//! tiered-serving accuracy-vs-throughput sweep (`tier_rows`: hq
+//! agreement and escalation cost across `--escalate-margin` values,
+//! with an hq-only baseline row). Self-contained:
 //! runs on the native quantized backend by default (artifacts are
 //! materialized on first run); HELIX_BACKEND=xla on a `--features xla`
 //! build benchmarks the PJRT engine over `make artifacts` output instead.
@@ -335,6 +338,94 @@ fn main() {
              \"final_live\": {final_live}, \"wall_s\": {dt:.3}}}");
     }
 
+    // Tiered serving sweep: speculative fast tier (auto-picked low-bit
+    // rung) with confidence-gated escalation to the hq tier, across
+    // escalation margins. The accuracy axis is hq agreement — the
+    // fraction of reads whose called sequence is byte-identical to the
+    // hq-only baseline (margin "inf" must reach 1.0 by construction;
+    // margin 0 shows what the fast tier alone gives up). The throughput
+    // axis is wall-clock bases/s of the full pipeline. Paper framing:
+    // Helix's low-bit quantization buys throughput at an accuracy cost;
+    // the margin knob trades the two continuously instead of forcing a
+    // global bit-width choice.
+    println!("\n== tiered serving sweep ({} reads) ==", run.reads.len());
+    let mut tier_rows: Vec<String> = Vec::new();
+    let tier_summary;
+    {
+        let call_tiered = |margin: Option<f32>| {
+            let t0 = std::time::Instant::now();
+            let mut coord = Coordinator::new(CoordinatorConfig {
+                model: "guppy".into(),
+                bits: 32,
+                backend: kind,
+                decode_threads: 4,
+                policy: BatchPolicy {
+                    max_batch: 8,
+                    max_wait: Duration::from_millis(5),
+                },
+                escalate_margin: margin,
+                artifacts_dir: dir.clone(),
+                ..Default::default()
+            }).unwrap();
+            let tiers = coord.tier_set()
+                .map(|t| (t.fast_bits, t.hq_bits));
+            let mut called = Vec::new();
+            for r in &run.reads {
+                coord.submit(r);
+                called.extend(coord.drain_ready());
+            }
+            let metrics = coord.metrics.clone();
+            called.extend(coord.finish().unwrap());
+            called.sort_by_key(|c| c.read_id);
+            (called, metrics, t0.elapsed().as_secs_f64(), tiers)
+        };
+        let (hq_called, _hm, hq_dt, _t) = call_tiered(None);
+        let hq_bases: usize =
+            hq_called.iter().map(|c| c.seq.len()).sum();
+        println!("hq-only        {hq_dt:>8.2}s  {:>9.0} bases/s  \
+                  (agreement 1.000 by definition)",
+                 hq_bases as f64 / hq_dt);
+        tier_rows.push(format!(
+            "{{\"margin\": \"hq-only\", \"wall_s\": {hq_dt:.3}, \
+             \"bases_per_s\": {:.0}, \"hq_agreement\": 1.0, \
+             \"esc_rate\": 0.0, \"esc_p99_ms\": 0.0, \
+             \"fast_decided\": 0, \"escalations\": 0}}",
+            hq_bases as f64 / hq_dt));
+        let mut fastbits = (0u32, 32u32);
+        for margin in [0.0f32, 1.0, 3.0, f32::INFINITY] {
+            let (called, m, dt, tiers) = call_tiered(Some(margin));
+            if let Some(t) = tiers {
+                fastbits = t;
+            }
+            let bases: usize = called.iter().map(|c| c.seq.len()).sum();
+            let agree = called.iter().zip(&hq_called)
+                .filter(|(a, b)| a.seq == b.seq)
+                .count() as f64 / hq_called.len().max(1) as f64;
+            let esc_rate = m.escalation_rate();
+            let esc_p99_ms = m.escalation_latency
+                .quantile_micros(0.99) as f64 / 1e3;
+            let mlabel = if margin.is_infinite() { "inf".into() }
+                         else { format!("{margin}") };
+            println!("margin {mlabel:<7} {dt:>8.2}s  {:>9.0} bases/s  \
+                      agreement {agree:.3}  esc {:.1}% p99 \
+                      {esc_p99_ms:.1}ms",
+                     bases as f64 / dt, esc_rate * 100.0);
+            tier_rows.push(format!(
+                "{{\"margin\": \"{mlabel}\", \"wall_s\": {dt:.3}, \
+                 \"bases_per_s\": {:.0}, \"hq_agreement\": {agree:.4}, \
+                 \"esc_rate\": {esc_rate:.4}, \
+                 \"esc_p99_ms\": {esc_p99_ms:.2}, \
+                 \"fast_decided\": {}, \"escalations\": {}}}",
+                bases as f64 / dt,
+                m.fast_decided.load(std::sync::atomic::Ordering::Relaxed),
+                m.escalations.load(std::sync::atomic::Ordering::Relaxed)));
+        }
+        tier_summary = format!(
+            "{{\"fast_bits\": {}, \"hq_bits\": {}, \
+             \"hq_only_wall_s\": {hq_dt:.3}}}",
+            fastbits.0, fastbits.1);
+    }
+
     // machine-readable summary for the perf trajectory (see ci.sh);
     // field semantics are documented in docs/TUNING.md
     let json = format!(
@@ -342,10 +433,11 @@ fn main() {
          \"reads\": {}, \"bases\": {}, \"rows\": [{}], \
          \"shard_rows\": [{}], \"autoscale\": {}, \
          \"autoscale_rows\": [{}], \"slo\": {}, \
-         \"slo_rows\": [{}]}}\n",
+         \"slo_rows\": [{}], \"tier\": {}, \"tier_rows\": [{}]}}\n",
         kind.name(), run.reads.len(), total_bases, rows.join(", "),
         shard_rows.join(", "), autoscale_summary,
-        autoscale_rows.join(", "), slo_summary, slo_rows.join(", "));
+        autoscale_rows.join(", "), slo_summary, slo_rows.join(", "),
+        tier_summary, tier_rows.join(", "));
     match std::fs::write("BENCH_coordinator.json", &json) {
         Ok(()) => println!("\nwrote BENCH_coordinator.json"),
         Err(e) => println!("\ncould not write BENCH_coordinator.json: {e}"),

@@ -107,6 +107,13 @@ pub struct AutoscaleConfig {
     /// also size the vote/splice pool with this controller (ceiling
     /// `CoordinatorConfig::vote_threads`, floor 1).
     pub scale_vote: bool,
+    /// floor on live hq-tier DNN shards when tiered serving is armed
+    /// (`CoordinatorConfig::escalate_margin`); `0` means "default",
+    /// normalized to 1. Ignored on single-tier pipelines.
+    pub hq_min_shards: usize,
+    /// ceiling on live hq-tier DNN shards; `0` means "follow
+    /// `max_shards`". Ignored on single-tier pipelines.
+    pub hq_max_shards: usize,
 }
 
 impl Default for AutoscaleConfig {
@@ -123,6 +130,8 @@ impl Default for AutoscaleConfig {
             slo: None,
             scale_decode: false,
             scale_vote: false,
+            hq_min_shards: 0,
+            hq_max_shards: 0,
         }
     }
 }
@@ -146,6 +155,11 @@ impl AutoscaleConfig {
         if self.slo == Some(Duration::ZERO) {
             self.slo = None;
         }
+        if self.hq_max_shards == 0 {
+            self.hq_max_shards = self.max_shards;
+        }
+        self.hq_min_shards = self.hq_min_shards.max(1);
+        self.hq_max_shards = self.hq_max_shards.max(self.hq_min_shards);
         self
     }
 
@@ -187,6 +201,18 @@ impl AutoscaleConfig {
             .is_ok_and(|v| v == "1" || v == "true");
         cfg.scale_vote = std::env::var("HELIX_AUTOSCALE_VOTE")
             .is_ok_and(|v| v == "1" || v == "true");
+        if let Some(n) = std::env::var("HELIX_HQ_MIN_SHARDS").ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+        {
+            cfg.hq_min_shards = n;
+        }
+        if let Some(n) = std::env::var("HELIX_HQ_MAX_SHARDS").ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+        {
+            cfg.hq_max_shards = n;
+        }
         Some(cfg.normalized())
     }
 }
@@ -375,7 +401,8 @@ impl<T: Send> WorkerPool<T> {
         match self.stage {
             StageId::Decode => self.metrics.decode_workers.get(slot),
             StageId::Vote => self.metrics.vote_workers.get(slot),
-            StageId::Dnn => None, // DNN slots live in Metrics::shards
+            // DNN slots live in Metrics::shards / Metrics::hq_shards
+            StageId::Dnn | StageId::DnnHq => None,
         }
     }
 
@@ -607,6 +634,18 @@ mod tests {
         assert_eq!(c.up_ticks, 1);
         assert_eq!(c.down_ticks, 1);
         assert_eq!(c.slo, None, "a zero SLO is dropped, not enforced");
+        assert_eq!(c.hq_min_shards, 1, "hq floor defaults to 1");
+        assert_eq!(c.hq_max_shards, c.max_shards,
+                   "hq ceiling follows max_shards when unset");
+        // hq bounds clamp like the fast bounds do
+        let hq = AutoscaleConfig {
+            max_shards: 4,
+            hq_min_shards: 3,
+            hq_max_shards: 2, // inverted: ceiling follows floor
+            ..AutoscaleConfig::default()
+        }.normalized();
+        assert_eq!(hq.hq_min_shards, 3);
+        assert_eq!(hq.hq_max_shards, 3);
         // min above max: max follows min
         let c2 = AutoscaleConfig {
             min_shards: 8,

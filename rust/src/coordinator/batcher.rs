@@ -1,8 +1,14 @@
-//! Dynamic batching: size-or-deadline policy over a bounded queue.
+//! Dynamic batching: size-or-deadline policy over a bounded queue,
+//! plus the two-lane [`TieredBatcher`] that also accepts re-queued
+//! (escalated) items on a side channel without mixing them into fresh
+//! batches.
 
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::util::bounded::{Receiver, RecvTimeoutError};
+use crate::util::bounded::{Receiver, RecvTimeoutError, TryRecvError};
 
 /// Batching policy.
 #[derive(Clone, Copy, Debug)]
@@ -123,6 +129,203 @@ impl<T> Batcher<T> {
     }
 }
 
+/// Lane index of fresh (fast-tier) items in a [`TieredBatcher`].
+pub const LANE_FRESH: usize = 0;
+/// Lane index of re-queued (hq escalation) items in a
+/// [`TieredBatcher`].
+pub const LANE_REQUEUE: usize = 1;
+
+/// Two-lane batcher for tiered serving: fresh items arrive on the
+/// bounded intake channel and re-queued items (decode-confidence
+/// escalations) on an unbounded side channel, each accumulating in its
+/// own lane under the same size-or-deadline [`BatchPolicy`]. Lanes
+/// never mix — a batch is entirely fresh ([`LANE_FRESH`]) or entirely
+/// re-queued ([`LANE_REQUEUE`]) — and when both trigger at once the
+/// re-queue lane flushes first (an escalated window is the oldest work
+/// in the pipeline; its read is stalled on it).
+///
+/// The deadline clock is enqueue-anchored exactly like
+/// [`Batcher::with_stamp`]: `stamp` extracts each item's enqueue (or
+/// re-enqueue) timestamp and a lane launches when its **oldest** item
+/// has waited `max_wait`.
+///
+/// Shutdown is two-phase because re-queued items chase in-flight work:
+/// after the fresh channel disconnects, the batcher keeps serving the
+/// re-queue lane until `pending` — the number of dispatched fast-tier
+/// items whose keep-or-escalate decision has not been made yet, which
+/// the dispatcher increments *before* sending a fast batch and the
+/// decode workers decrement (`Release`) *after* sending any
+/// escalation — reads zero, then drains the side channel once more
+/// (the decrement follows the send, so a zero count proves any
+/// escalation is already in the channel) and ends the stream. A
+/// disconnected side channel ends it unconditionally.
+pub struct TieredBatcher<T> {
+    fresh: Receiver<T>,
+    requeue: Receiver<T>,
+    policy: BatchPolicy,
+    stamp: fn(&T) -> Instant,
+    pending: Arc<AtomicU64>,
+    lanes: [VecDeque<T>; 2],
+    fresh_open: bool,
+    requeue_open: bool,
+}
+
+impl<T> TieredBatcher<T> {
+    /// Wrap the fresh intake and the re-queue side channel. `stamp`
+    /// extracts an item's (re-)enqueue timestamp; `pending` is the
+    /// in-flight fast-tier decision counter shared with the decode
+    /// workers (see the type docs for the shutdown protocol).
+    pub fn new(fresh: Receiver<T>, requeue: Receiver<T>,
+               policy: BatchPolicy, stamp: fn(&T) -> Instant,
+               pending: Arc<AtomicU64>) -> Self {
+        TieredBatcher {
+            fresh,
+            requeue,
+            policy,
+            stamp,
+            pending,
+            lanes: [VecDeque::new(), VecDeque::new()],
+            fresh_open: true,
+            requeue_open: true,
+        }
+    }
+
+    /// Non-blocking drain of the re-queue side channel into its lane.
+    /// The channel is unbounded, so take everything available.
+    fn drain_requeue(&mut self) {
+        while self.requeue_open {
+            match self.requeue.try_recv() {
+                Ok(x) => self.lanes[LANE_REQUEUE].push_back(x),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    self.requeue_open = false;
+                }
+            }
+        }
+    }
+
+    /// Non-blocking drain of the fresh intake, capped at one batch in
+    /// the lane so backpressure stays on the bounded channel.
+    fn drain_fresh(&mut self) {
+        while self.fresh_open
+            && self.lanes[LANE_FRESH].len() < self.policy.max_batch
+        {
+            match self.fresh.try_recv() {
+                Ok(x) => self.lanes[LANE_FRESH].push_back(x),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    self.fresh_open = false;
+                }
+            }
+        }
+    }
+
+    /// Take up to one batch off the front of `lane`.
+    fn flush(&mut self, lane: usize, full: bool) -> Batch<T> {
+        let n = self.lanes[lane].len().min(self.policy.max_batch);
+        let oldest_wait = self.lanes[lane].front()
+            .map(|x| (self.stamp)(x).elapsed())
+            .unwrap_or(Duration::ZERO);
+        let items: Vec<T> = self.lanes[lane].drain(..n).collect();
+        Batch { items, oldest_wait, full }
+    }
+
+    /// How long the blocking wait may sleep before re-polling the side
+    /// channel: a fraction of `max_wait`, clamped so escalations are
+    /// noticed promptly even under second-scale batch deadlines.
+    fn poll_quantum(&self) -> Duration {
+        (self.policy.max_wait / 4)
+            .clamp(Duration::from_micros(500), Duration::from_millis(5))
+    }
+
+    /// Block for the next batch from either lane; `None` once the
+    /// fresh channel is closed, both lanes are drained, and no
+    /// in-flight fast-tier item can still produce a re-queue.
+    pub fn next_batch(&mut self) -> Option<(usize, Batch<T>)> {
+        loop {
+            self.drain_requeue();
+            self.drain_fresh();
+            // size trigger, re-queue lane first
+            for lane in [LANE_REQUEUE, LANE_FRESH] {
+                if self.lanes[lane].len() >= self.policy.max_batch {
+                    return Some((lane, self.flush(lane, true)));
+                }
+            }
+            // deadline trigger on each lane's oldest stamp
+            let now = Instant::now();
+            for lane in [LANE_REQUEUE, LANE_FRESH] {
+                if let Some(front) = self.lanes[lane].front() {
+                    if now.duration_since((self.stamp)(front))
+                        >= self.policy.max_wait
+                    {
+                        return Some((lane, self.flush(lane, false)));
+                    }
+                }
+            }
+            // no further input can arrive: flush what is left as tails
+            if !self.fresh_open && !self.requeue_open {
+                for lane in [LANE_REQUEUE, LANE_FRESH] {
+                    if !self.lanes[lane].is_empty() {
+                        return Some((lane, self.flush(lane, false)));
+                    }
+                }
+                return None;
+            }
+            // fresh intake done and nothing buffered: end the stream
+            // once no dispatched fast-tier item can still escalate.
+            // The decode-side decrement (Release) follows its re-queue
+            // send, so observing zero (Acquire) proves any escalation
+            // is already in the side channel — drain once more to
+            // close the race, then finish.
+            if !self.fresh_open
+                && self.lanes[LANE_FRESH].is_empty()
+                && self.lanes[LANE_REQUEUE].is_empty()
+                && self.pending.load(Ordering::Acquire) == 0
+            {
+                self.drain_requeue();
+                if self.lanes[LANE_REQUEUE].is_empty() {
+                    return None;
+                }
+                continue;
+            }
+            // block for more input, waking at the nearest lane
+            // deadline — or at the poll quantum while escalations may
+            // still land on the side channel
+            let mut wait = if !self.lanes[LANE_REQUEUE].is_empty()
+                || self.pending.load(Ordering::Acquire) > 0
+            {
+                self.poll_quantum()
+            } else {
+                self.policy.max_wait.max(self.poll_quantum())
+            };
+            for lane in [LANE_REQUEUE, LANE_FRESH] {
+                if let Some(front) = self.lanes[lane].front() {
+                    let spent = now.duration_since((self.stamp)(front));
+                    wait = wait.min(
+                        self.policy.max_wait.saturating_sub(spent));
+                }
+            }
+            if self.fresh_open {
+                match self.fresh.recv_timeout(wait) {
+                    Ok(x) => self.lanes[LANE_FRESH].push_back(x),
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => {
+                        self.fresh_open = false;
+                    }
+                }
+            } else {
+                match self.requeue.recv_timeout(wait) {
+                    Ok(x) => self.lanes[LANE_REQUEUE].push_back(x),
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => {
+                        self.requeue_open = false;
+                    }
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -211,6 +414,111 @@ mod tests {
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.items, vec![7]);
         assert!(b.next_batch().is_none());
+        assert!(b.next_batch().is_none());
+    }
+
+    /// Test item for the tiered batcher: enqueue stamp + payload.
+    struct J(Instant, u32);
+
+    fn j(v: u32) -> J {
+        J(Instant::now(), v)
+    }
+
+    fn vals(batch: &Batch<J>) -> Vec<u32> {
+        batch.items.iter().map(|x| x.1).collect()
+    }
+
+    #[test]
+    fn tiered_lanes_never_mix_and_requeue_flushes_first() {
+        let (ftx, frx) = bounded(16);
+        let (rtx, rrx) = bounded(16);
+        let pending = Arc::new(AtomicU64::new(0));
+        let mut b = TieredBatcher::new(frx, rrx, BatchPolicy {
+            max_batch: 2, max_wait: Duration::from_secs(5),
+        }, |x: &J| x.0, pending);
+        for i in 0..2 {
+            ftx.send(j(i)).unwrap();
+        }
+        for i in 10..12 {
+            rtx.send(j(i)).unwrap();
+        }
+        // both lanes are full: the re-queue lane wins the tie, and
+        // neither batch carries the other lane's items
+        let (lane, batch) = b.next_batch().unwrap();
+        assert_eq!(lane, LANE_REQUEUE);
+        assert_eq!(vals(&batch), vec![10, 11]);
+        assert!(batch.full);
+        let (lane, batch) = b.next_batch().unwrap();
+        assert_eq!(lane, LANE_FRESH);
+        assert_eq!(vals(&batch), vec![0, 1]);
+        assert!(batch.full);
+    }
+
+    #[test]
+    fn tiered_deadline_fires_per_lane() {
+        let (ftx, frx) = bounded(16);
+        let (rtx, rrx) = bounded(16);
+        let pending = Arc::new(AtomicU64::new(0));
+        let mut b = TieredBatcher::new(frx, rrx, BatchPolicy {
+            max_batch: 100, max_wait: Duration::from_millis(10),
+        }, |x: &J| x.0, pending);
+        ftx.send(j(1)).unwrap();
+        let (lane, batch) = b.next_batch().unwrap();
+        assert_eq!(lane, LANE_FRESH);
+        assert_eq!(vals(&batch), vec![1]);
+        assert!(batch.is_tail(), "deadline launch is a tail");
+        assert!(batch.oldest_wait >= Duration::from_millis(9));
+        rtx.send(j(2)).unwrap();
+        let (lane, batch) = b.next_batch().unwrap();
+        assert_eq!(lane, LANE_REQUEUE);
+        assert_eq!(vals(&batch), vec![2]);
+        assert!(batch.is_tail());
+    }
+
+    #[test]
+    fn tiered_stream_ends_only_when_no_escalation_can_arrive() {
+        let (ftx, frx) = bounded::<J>(16);
+        let (rtx, rrx) = bounded(16);
+        let pending = Arc::new(AtomicU64::new(0));
+        let mut b = TieredBatcher::new(frx, rrx, BatchPolicy {
+            max_batch: 4, max_wait: Duration::from_millis(5),
+        }, |x: &J| x.0, pending.clone());
+        // one fast window dispatched, fresh intake closes, and the
+        // escalation lands AFTER the close — the decode protocol:
+        // send the re-queue, then release the pending count
+        pending.store(1, Ordering::Release);
+        drop(ftx);
+        rtx.send(j(42)).unwrap();
+        pending.store(0, Ordering::Release);
+        let (lane, batch) = b.next_batch().unwrap();
+        assert_eq!(lane, LANE_REQUEUE);
+        assert_eq!(vals(&batch), vec![42]);
+        // nothing pending: the stream ends even though the re-queue
+        // sender is still alive (decode workers keep theirs open)
+        assert!(b.next_batch().is_none());
+        drop(rtx);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn tiered_batcher_waits_out_inflight_escalations() {
+        let (ftx, frx) = bounded::<J>(16);
+        let (rtx, rrx) = bounded(16);
+        let pending = Arc::new(AtomicU64::new(1));
+        let mut b = TieredBatcher::new(frx, rrx, BatchPolicy {
+            max_batch: 4, max_wait: Duration::from_millis(2),
+        }, |x: &J| x.0, pending.clone());
+        drop(ftx);
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            rtx.send(j(7)).unwrap();
+            pending.store(0, Ordering::Release);
+        });
+        // must block across the undecided window instead of ending
+        let (lane, batch) = b.next_batch().unwrap();
+        assert_eq!(lane, LANE_REQUEUE);
+        assert_eq!(vals(&batch), vec![7]);
+        t.join().unwrap();
         assert!(b.next_batch().is_none());
     }
 }

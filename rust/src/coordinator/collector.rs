@@ -10,6 +10,16 @@
 //! pipelined with the DNN/decode stages instead of being single-threaded
 //! caller-side work after the run, and `Coordinator::try_recv()` observes
 //! reads mid-run.
+//!
+//! **Tiered serving needs no collector changes.** When the decode pool
+//! escalates a low-confidence fast-tier window, it emits *no*
+//! `DecodedWindow` for the fast attempt — the window's slot stays
+//! unfilled, the read's arrival count does not advance, and the
+//! collector simply keeps waiting until the hq re-run's decode arrives
+//! under the same `(read_id, window_idx)` key. Exactly one delivery per
+//! window reaches this stage in either mode, so the expected-count
+//! completion rule and the vote/splice inputs are identical with
+//! tiering on or off.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};

@@ -1,0 +1,264 @@
+//! Coordinator configuration: the pipeline-shaping
+//! [`CoordinatorConfig`] struct plus the table-driven CLI-flag /
+//! `HELIX_*` environment resolver every serving knob goes through.
+//!
+//! Precedence is one rule for every knob: **an explicit flag beats the
+//! environment, the environment beats the built-in default.** A flag
+//! that is present but unparsable is a hard error (the operator typed
+//! it; silently ignoring it would run a different configuration than
+//! they asked for), while an unparsable environment value falls back
+//! silently (matching the long-standing `*_from_env` behavior — env
+//! vars travel through CI configs and containers where stray values
+//! must not brick the binary).
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::basecall::ctc::BeamPrune;
+use crate::runtime::BackendKind;
+
+use super::autoscale::AutoscaleConfig;
+use super::batcher::BatchPolicy;
+
+/// Everything the `Coordinator` needs to open a pipeline: model
+/// selection, backend kind, stage widths, queue bounds, and the tiered
+/// serving knobs.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    /// model family to execute (e.g. "guppy").
+    pub model: String,
+    /// bit-width variant of the model (32 = the fp32-trained baseline).
+    /// With tiered serving armed this is the **hq** tier's width; the
+    /// fast tier's comes from `tier_bits`.
+    pub bits: u32,
+    /// which inference backend the DNN stage opens (native by default;
+    /// `xla` requires the cargo feature).
+    pub backend: BackendKind,
+    /// window hop in samples; window length comes from the artifact meta.
+    pub hop: usize,
+    /// CTC beam width used by the decode pool.
+    pub beam_width: usize,
+    /// number of DNN executor shards. Each shard owns an independent
+    /// `Backend` replica (built by the [`ShardFactory`]: an in-memory
+    /// clone for native, `open_shard` in-thread for non-`Send`
+    /// backends) fed through its own bounded batch queue; 1 reproduces
+    /// the single-owner layout. With `autoscale` set this is only the
+    /// *initial* live count (clamped into `[min_shards, max_shards]`).
+    /// The called result set is byte-identical for any value.
+    ///
+    /// [`ShardFactory`]: crate::runtime::ShardFactory
+    pub dnn_shards: usize,
+    /// CTC decode worker count.
+    pub decode_threads: usize,
+    /// vote/splice worker count.
+    pub vote_threads: usize,
+    /// bound on in-flight windows per queue: `submit()` blocks once the
+    /// window queue holds this many undecoded windows (backpressure).
+    pub queue_cap: usize,
+    /// size-or-deadline batching policy for the DNN stage.
+    pub policy: BatchPolicy,
+    /// adaptive shard autoscaling: `None` (default) pins the pool at
+    /// `dnn_shards` for the whole run; `Some(cfg)` starts a controller
+    /// thread that resizes the live pool between `cfg.min_shards` and
+    /// `cfg.max_shards` from observed utilization (see
+    /// `coordinator::autoscale`). Scaling never changes called output.
+    pub autoscale: Option<AutoscaleConfig>,
+    /// artifact directory (meta.json + weights; the native backend
+    /// falls back to its builtin model when absent).
+    pub artifacts_dir: String,
+    /// beam-search pruning thresholds for the decode pool. `None`
+    /// (default) runs the exhaustive search — byte-identical to the
+    /// pre-knob pipeline. `Some(BeamPrune::OFF)` also reproduces the
+    /// exhaustive arithmetic exactly; finite thresholds trade decode
+    /// work for a bounded heuristic (see `basecall::ctc::BeamPrune`).
+    pub prune: Option<BeamPrune>,
+    /// confidence threshold that arms speculative tiered serving.
+    /// `None` (default) runs the single-tier pipeline — byte-identical
+    /// to pre-tier builds. `Some(m)` routes fresh windows through a
+    /// low-bit fast tier and re-queues any window whose top-two-beam
+    /// CTC score margin falls below `m` onto a full-precision hq tier.
+    /// `0.0` never escalates (margins are non-negative);
+    /// `f32::INFINITY` escalates every window, reproducing hq-only
+    /// output byte-for-byte at two-pass cost.
+    pub escalate_margin: Option<f32>,
+    /// fast-tier bit-width override. `None` picks automatically (the
+    /// 8-bit rung when it sits below `bits` in the artifact ladder,
+    /// else the widest rung below `bits`). Ignored unless
+    /// `escalate_margin` is set.
+    pub tier_bits: Option<u32>,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            model: "guppy".into(),
+            bits: 32,
+            backend: BackendKind::default(),
+            hop: 100,
+            beam_width: 10,
+            dnn_shards: 1,
+            decode_threads: 2,
+            vote_threads: 2,
+            queue_cap: 256,
+            policy: BatchPolicy::default(),
+            autoscale: None,
+            artifacts_dir: crate::runtime::meta::default_artifacts_dir(),
+            prune: None,
+            escalate_margin: None,
+            tier_bits: None,
+        }
+    }
+}
+
+impl CoordinatorConfig {
+    /// Shard count selected by `HELIX_SHARDS` (default 1; zero or an
+    /// unparsable value also fall back to 1).
+    pub fn shards_from_env() -> usize {
+        std::env::var("HELIX_SHARDS").ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or(1)
+    }
+}
+
+/// Where a resolved knob's value came from — callers use this to apply
+/// flag-only validation (e.g. an *explicitly typed* orphan refinement
+/// flag is an error, while the same setting inherited from a CI
+/// environment is silently ignored).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KnobSource {
+    /// the value was typed on the command line.
+    Flag,
+    /// the value came from a `HELIX_*` environment variable.
+    Env,
+}
+
+/// Resolve one serving knob by the uniform precedence rule:
+///
+/// 1. `flags[flag]` present and parsable → `Some((value, Flag))`.
+/// 2. `flags[flag]` present but unparsable → `Err` naming the flag and
+///    the expected shape (`want`).
+/// 3. `$env` set and parsable → `Some((value, Env))`.
+/// 4. anything else (including an unparsable environment value) →
+///    `Ok(None)`: the caller's default stands.
+///
+/// `parse` returns `None` to reject a candidate string; range checks
+/// (positivity, finiteness) belong inside it so flag and env values
+/// are held to the same contract.
+pub fn resolve_knob<T>(
+    flags: &HashMap<String, String>,
+    flag: &str,
+    env: &str,
+    want: &str,
+    parse: impl Fn(&str) -> Option<T>,
+) -> Result<Option<(T, KnobSource)>> {
+    if let Some(raw) = flags.get(flag) {
+        return match parse(raw) {
+            Some(v) => Ok(Some((v, KnobSource::Flag))),
+            None => Err(anyhow!("invalid --{flag} '{raw}' (want {want})")),
+        };
+    }
+    if let Ok(raw) = std::env::var(env) {
+        if let Some(v) = parse(&raw) {
+            return Ok(Some((v, KnobSource::Env)));
+        }
+    }
+    Ok(None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flags(pairs: &[(&str, &str)]) -> HashMap<String, String> {
+        pairs.iter()
+            .map(|(k, v)| (k.to_string(), v.to_string()))
+            .collect()
+    }
+
+    fn parse_pos(s: &str) -> Option<usize> {
+        s.parse::<usize>().ok().filter(|&n| n >= 1)
+    }
+
+    #[test]
+    fn flag_beats_env() {
+        std::env::set_var("HELIX_TEST_RESOLVER_A", "7");
+        let got = resolve_knob(&flags(&[("shards", "3")]), "shards",
+                               "HELIX_TEST_RESOLVER_A",
+                               "a positive integer", parse_pos)
+            .unwrap();
+        assert_eq!(got, Some((3, KnobSource::Flag)));
+        std::env::remove_var("HELIX_TEST_RESOLVER_A");
+    }
+
+    #[test]
+    fn env_fills_in_when_flag_absent() {
+        std::env::set_var("HELIX_TEST_RESOLVER_B", "5");
+        let got = resolve_knob(&flags(&[]), "shards",
+                               "HELIX_TEST_RESOLVER_B",
+                               "a positive integer", parse_pos)
+            .unwrap();
+        assert_eq!(got, Some((5, KnobSource::Env)));
+        std::env::remove_var("HELIX_TEST_RESOLVER_B");
+    }
+
+    #[test]
+    fn unparsable_flag_is_a_hard_error() {
+        let err = resolve_knob(&flags(&[("shards", "zero")]), "shards",
+                               "HELIX_TEST_RESOLVER_C",
+                               "a positive integer", parse_pos)
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("--shards"), "names the flag: {msg}");
+        assert!(msg.contains("zero"), "echoes the value: {msg}");
+        assert!(msg.contains("positive integer"),
+                "states the shape: {msg}");
+    }
+
+    #[test]
+    fn unparsable_env_falls_back_silently() {
+        std::env::set_var("HELIX_TEST_RESOLVER_D", "banana");
+        let got = resolve_knob(&flags(&[]), "shards",
+                               "HELIX_TEST_RESOLVER_D",
+                               "a positive integer", parse_pos)
+            .unwrap();
+        assert_eq!(got, None, "bad env value keeps the default");
+        std::env::remove_var("HELIX_TEST_RESOLVER_D");
+    }
+
+    #[test]
+    fn absent_everywhere_keeps_the_default() {
+        let got = resolve_knob(&flags(&[]), "shards",
+                               "HELIX_TEST_RESOLVER_NEVER_SET",
+                               "a positive integer", parse_pos)
+            .unwrap();
+        assert_eq!(got, None);
+    }
+
+    #[test]
+    fn tier_knobs_share_the_rule() {
+        // --escalate-margin and --tier-bits resolve through the same
+        // helper with their own parsers; pin the shapes used by main
+        let margin = |s: &str| s.parse::<f32>().ok()
+            .filter(|m| !m.is_nan() && *m >= 0.0);
+        assert_eq!(
+            resolve_knob(&flags(&[("escalate-margin", "inf")]),
+                         "escalate-margin", "HELIX_TEST_RESOLVER_E",
+                         "a non-negative number", &margin).unwrap(),
+            Some((f32::INFINITY, KnobSource::Flag)));
+        assert!(resolve_knob(&flags(&[("escalate-margin", "-1")]),
+                             "escalate-margin", "HELIX_TEST_RESOLVER_E",
+                             "a non-negative number", &margin).is_err());
+        assert!(resolve_knob(&flags(&[("escalate-margin", "NaN")]),
+                             "escalate-margin", "HELIX_TEST_RESOLVER_E",
+                             "a non-negative number", &margin).is_err());
+    }
+
+    #[test]
+    fn default_config_leaves_tiering_off() {
+        let cfg = CoordinatorConfig::default();
+        assert_eq!(cfg.escalate_margin, None);
+        assert_eq!(cfg.tier_bits, None);
+    }
+}

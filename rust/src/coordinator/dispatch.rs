@@ -1,0 +1,137 @@
+//! The dispatch thread: drains the window stream through a batcher and
+//! routes each assembled batch onto a DNN shard queue. A single-tier
+//! pipeline runs the classic `Batcher` over the one window queue; a
+//! tiered pipeline runs the two-lane [`TieredBatcher`], routing fresh
+//! batches to the fast pool and escalation batches to the hq pool —
+//! lanes never share a batch, so a shard's model selection applies to
+//! every row it receives.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::util::bounded::{QueueSet, Receiver};
+
+use super::batcher::{BatchPolicy, Batcher, TieredBatcher, LANE_FRESH};
+use super::job::{ShardBatch, WindowJob, WindowKey};
+use super::metrics::{Metrics, StageId};
+use super::pool::rank_busiest;
+
+/// The tiered half of the dispatcher's wiring: the escalation
+/// side-channel receiver, the dispatched-but-undecided fast-window
+/// count it shares with the decode pool (see `TieredBatcher` for the
+/// shutdown protocol), and the hq pool's shard queues.
+pub(crate) struct TierRouting {
+    pub(crate) esc_rx: Receiver<WindowJob>,
+    pub(crate) pending: Arc<AtomicU64>,
+    pub(crate) hq_queues: Arc<QueueSet<ShardBatch>>,
+}
+
+/// Split a batch of window jobs into the key/signal pair a shard
+/// consumes (one `Vec<Vec<f32>>` block the backend can run directly).
+fn shard_batch(items: Vec<WindowJob>, full: bool) -> ShardBatch {
+    let mut keys = Vec::with_capacity(items.len());
+    let mut sigs = Vec::with_capacity(items.len());
+    for job in items {
+        keys.push(WindowKey {
+            read_id: job.read_id,
+            window_idx: job.window_idx,
+            escalated_at: job.escalated_at,
+        });
+        sigs.push(job.signal);
+    }
+    ShardBatch { keys, sigs, full }
+}
+
+/// Spawn the dispatch thread. `tiered: None` reproduces the
+/// single-tier dispatcher exactly (same batcher, same routing, same
+/// teardown), which is what keeps escalation-off runs byte-identical;
+/// `Some` runs the two-lane loop. Either way the thread seals every
+/// shard queue set it routed to before exiting, so the shard threads
+/// drain and exit no matter how the stream ended.
+pub(crate) fn spawn_dispatch(
+    rx_windows: Receiver<WindowJob>,
+    policy: BatchPolicy,
+    metrics: Arc<Metrics>,
+    fast: Arc<QueueSet<ShardBatch>>,
+    tiered: Option<TierRouting>,
+) -> JoinHandle<()> {
+    std::thread::spawn(move || match tiered {
+        None => run_single(rx_windows, policy, metrics, fast),
+        Some(t) => run_tiered(rx_windows, policy, metrics, fast, t),
+    })
+}
+
+/// The classic single-queue dispatch loop: batch by size/deadline,
+/// route full batches least-loaded and deadline tails onto the
+/// busiest live shard (keeping the others drainable/retirable).
+fn run_single(rx: Receiver<WindowJob>, policy: BatchPolicy,
+              m: Arc<Metrics>, qs: Arc<QueueSet<ShardBatch>>) {
+    let mut batcher =
+        Batcher::with_stamp(rx, policy, |j: &WindowJob| j.enqueued_at);
+    let mut rr = 0usize;
+    while let Some(batch) = batcher.next_batch() {
+        let tail = batch.is_tail();
+        let out = shard_batch(batch.items, !tail);
+        let delivered = if tail {
+            let order = rank_busiest(m.stage_shards(StageId::Dnn), &qs);
+            qs.send_preferring(&order, out)
+        } else {
+            qs.send_least_loaded(&mut rr, out)
+        };
+        if !delivered {
+            // every shard is gone; nothing downstream can make
+            // progress, so stop consuming windows
+            break;
+        }
+    }
+    qs.close_all();
+}
+
+/// The two-lane dispatch loop: the `TieredBatcher` hands back
+/// `(lane, batch)` pairs — requeue lane first under contention — and
+/// each lane routes onto its own pool with the same full/tail policy
+/// as the single-tier loop. Fresh fast-lane windows are counted into
+/// `pending` BEFORE their batch is sent (the decode worker decrements
+/// after its escalation decision), so the batcher can never observe
+/// "no pending windows" while an escalation is still in flight.
+fn run_tiered(rx: Receiver<WindowJob>, policy: BatchPolicy,
+              m: Arc<Metrics>, fast: Arc<QueueSet<ShardBatch>>,
+              t: TierRouting) {
+    let mut batcher = TieredBatcher::new(
+        rx, t.esc_rx, policy,
+        |j: &WindowJob| j.enqueued_at, t.pending.clone());
+    let mut rr_fast = 0usize;
+    let mut rr_hq = 0usize;
+    while let Some((lane, batch)) = batcher.next_batch() {
+        let tail = batch.is_tail();
+        let n = batch.items.len() as u64;
+        let out = shard_batch(batch.items, !tail);
+        let (qs, rr, stage) = if lane == LANE_FRESH {
+            (&fast, &mut rr_fast, StageId::Dnn)
+        } else {
+            (&t.hq_queues, &mut rr_hq, StageId::DnnHq)
+        };
+        if lane == LANE_FRESH {
+            // count before send: once a fast batch is on a shard
+            // queue, its windows may escalate at any time
+            t.pending.fetch_add(n, Ordering::Release);
+        }
+        let delivered = if tail {
+            let order = rank_busiest(m.stage_shards(stage), qs);
+            qs.send_preferring(&order, out)
+        } else {
+            qs.send_least_loaded(rr, out)
+        };
+        if !delivered {
+            if lane == LANE_FRESH {
+                // the batch never reached a shard: no decode worker
+                // will ever decrement for these windows
+                t.pending.fetch_sub(n, Ordering::Release);
+            }
+            break;
+        }
+    }
+    fast.close_all();
+    t.hq_queues.close_all();
+}

@@ -1,0 +1,69 @@
+//! The typed payloads that flow between pipeline stages: tier-tagged
+//! windows entering the batcher, keyed signal batches entering the DNN
+//! shards, and log-prob jobs entering the decode pool. Splitting these
+//! from the stage code keeps the routing fabric readable: every field
+//! that travels with a window — its tier, its enqueue stamp, its
+//! escalation stamp — is declared in one place.
+
+use std::time::Instant;
+
+use crate::basecall::ctc::LogProbs;
+use crate::runtime::Tier;
+
+/// One window of raw signal en route to the DNN stage.
+pub(crate) struct WindowJob {
+    pub(crate) read_id: usize,
+    pub(crate) window_idx: usize,
+    pub(crate) signal: Vec<f32>,
+    /// which shard pool this window targets: `Fast` for fresh windows
+    /// of a tiered pipeline, `Hq` for escalations and for every window
+    /// of a single-tier run.
+    pub(crate) tier: Tier,
+    /// stamped as the window enters its queue (`submit()` for fresh
+    /// windows, the decode worker's re-queue for escalations), so the
+    /// batcher's deadline clock (and `Batch::oldest_wait`) counts time
+    /// spent queued behind backpressure, not just time since the
+    /// batcher's first dequeue.
+    pub(crate) enqueued_at: Instant,
+    /// when the decode pool escalated this window to the hq tier
+    /// (`None` for fresh windows). Carried through the DNN and decode
+    /// stages so the hq decode can record the escalation round-trip
+    /// latency.
+    pub(crate) escalated_at: Option<Instant>,
+}
+
+/// Identity of one window inside a [`ShardBatch`]: enough to route the
+/// decoded result back to its read, plus the escalation stamp riding
+/// along for latency accounting.
+pub(crate) struct WindowKey {
+    pub(crate) read_id: usize,
+    pub(crate) window_idx: usize,
+    pub(crate) escalated_at: Option<Instant>,
+}
+
+/// One batch en route from the dispatcher to a DNN shard: the window
+/// keys and their signals, split so a shard can hand the signal block
+/// to the backend without re-walking the jobs. A batch is always
+/// single-tier — the dispatcher never mixes lanes — so the receiving
+/// shard's own model selection applies to every row.
+pub(crate) struct ShardBatch {
+    pub(crate) keys: Vec<WindowKey>,
+    pub(crate) sigs: Vec<Vec<f32>>,
+    pub(crate) full: bool,
+}
+
+/// One window's log-probs en route to the CTC decode pool.
+pub(crate) struct DecodeJob {
+    pub(crate) read_id: usize,
+    pub(crate) window_idx: usize,
+    pub(crate) lp: LogProbs,
+    /// which tier produced `lp` — the decode worker only measures
+    /// confidence (and may escalate) on `Fast` jobs.
+    pub(crate) tier: Tier,
+    /// the raw signal, carried through the fast tier only while
+    /// escalation is armed, so a low-confidence window can be re-run
+    /// at the hq tier without a round-trip to storage.
+    pub(crate) signal: Option<Vec<f32>>,
+    /// see [`WindowJob::escalated_at`].
+    pub(crate) escalated_at: Option<Instant>,
+}

@@ -257,8 +257,12 @@ impl ShardStats {
 /// mechanics, so events and telemetry carry the stage explicitly.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum StageId {
-    /// the DNN executor shard pool.
+    /// the DNN executor shard pool (the fast tier when the pipeline
+    /// runs tiered serving, the only tier otherwise).
     Dnn,
+    /// the full-precision hq DNN shard pool a tiered pipeline escalates
+    /// low-confidence windows to (absent in a single-tier run).
+    DnnHq,
     /// the CTC decode worker pool.
     Decode,
     /// the vote/splice worker pool.
@@ -270,6 +274,7 @@ impl StageId {
     pub fn name(&self) -> &'static str {
         match self {
             StageId::Dnn => "dnn",
+            StageId::DnnHq => "dnn-hq",
             StageId::Decode => "decode",
             StageId::Vote => "vote",
         }
@@ -340,6 +345,75 @@ impl StageStats {
     }
 }
 
+/// Per-slot lifecycle surface shared by [`ShardStats`] and
+/// [`StageStats`], so `report()` renders every utilization split —
+/// shard, hq, decode, vote — through one formatter with one percent
+/// format and one unspawned-slot rule.
+trait SlotUtil {
+    /// busy wall-micros accumulated by the slot.
+    fn slot_busy(&self) -> u64;
+    /// live wall-micros up to `now_micros`.
+    fn slot_live(&self, now_micros: u64) -> u64;
+    /// a worker was ever launched into the slot.
+    fn slot_spawned(&self) -> bool;
+    /// the slot is currently retired.
+    fn slot_retired(&self) -> bool;
+}
+
+impl SlotUtil for ShardStats {
+    fn slot_busy(&self) -> u64 {
+        self.busy_micros.load(Ordering::Relaxed)
+    }
+    fn slot_live(&self, now_micros: u64) -> u64 {
+        self.live_micros(now_micros)
+    }
+    fn slot_spawned(&self) -> bool {
+        self.spawned.load(Ordering::Relaxed)
+    }
+    fn slot_retired(&self) -> bool {
+        self.retired.load(Ordering::Relaxed)
+    }
+}
+
+impl SlotUtil for StageStats {
+    fn slot_busy(&self) -> u64 {
+        self.busy_micros.load(Ordering::Relaxed)
+    }
+    fn slot_live(&self, now_micros: u64) -> u64 {
+        self.live_micros(now_micros)
+    }
+    fn slot_spawned(&self) -> bool {
+        self.spawned.load(Ordering::Relaxed)
+    }
+    fn slot_retired(&self) -> bool {
+        self.retired.load(Ordering::Relaxed)
+    }
+}
+
+/// The one utilization-row formatter every split in `report()` goes
+/// through: one `i:pct.p%` / `i:pct.p%(retired)` row per slot, busy
+/// time over the slot's live wall window (capped at 100%), and — once
+/// any slot in the table was ever spawned — unspawned slots are
+/// skipped, in every section alike. (A standalone `Metrics` with no
+/// lifecycle marks still prints every row, the pre-lifecycle
+/// behavior.) Retired slots keep their row, explicitly tagged, instead
+/// of silently vanishing from the split.
+fn util_rows<S: SlotUtil>(slots: &[S], now_micros: u64) -> Vec<String> {
+    let any_spawned = slots.iter().any(|s| s.slot_spawned());
+    slots.iter().enumerate()
+        .filter(|(_, s)| !any_spawned || s.slot_spawned())
+        .map(|(i, s)| {
+            let live = s.slot_live(now_micros).max(1) as f64;
+            let pct = (s.slot_busy() as f64 / live).min(1.0) * 100.0;
+            if s.slot_retired() {
+                format!("{i}:{pct:.1}%(retired)")
+            } else {
+                format!("{i}:{pct:.1}%")
+            }
+        })
+        .collect()
+}
+
 /// What an autoscale event did to the shard pool.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ScaleAction {
@@ -407,8 +481,21 @@ pub struct Metrics {
     /// per-shard DNN counters, one per shard *slot*: the pipeline's
     /// `dnn_shards` for a fixed pool, `max_shards` under the
     /// autoscaler (slots the autoscaler never filled stay all-zero and
-    /// unspawned).
+    /// unspawned). When the pipeline runs tiered serving this is the
+    /// **fast** tier's pool; the hq pool lives in `hq_shards`.
     pub shards: Vec<ShardStats>,
+    /// per-shard counters of the full-precision hq escalation pool —
+    /// empty unless the pipeline runs tiered serving.
+    pub hq_shards: Vec<ShardStats>,
+    /// fast-tier windows whose decode confidence was measured (each is
+    /// then either collected or escalated). Zero in a single-tier run.
+    pub fast_decided: AtomicU64,
+    /// fast-tier windows re-queued to the hq tier because their CTC
+    /// top-beam margin fell below the escalation threshold.
+    pub escalations: AtomicU64,
+    /// escalation round-trip latency: hq re-queue -> hq decode
+    /// complete, per escalated window.
+    pub escalation_latency: LatencyHistogram,
     /// per-worker CTC decode counters, one per decode pool slot (empty
     /// for `Metrics` built outside a coordinator, e.g. `default()`).
     pub decode_workers: Vec<StageStats>,
@@ -433,10 +520,19 @@ impl Metrics {
         Metrics::for_pipeline(n, 0, 0)
     }
 
-    /// Metrics sized for a full pipeline: `n` DNN shard slots (min 1)
-    /// plus `n_decode` decode-worker and `n_vote` vote-worker slots.
+    /// Metrics sized for a full single-tier pipeline: `n` DNN shard
+    /// slots (min 1) plus `n_decode` decode-worker and `n_vote`
+    /// vote-worker slots.
     pub fn for_pipeline(n: usize, n_decode: usize, n_vote: usize)
                         -> Metrics {
+        Metrics::for_tiered_pipeline(n, 0, n_decode, n_vote)
+    }
+
+    /// Metrics sized for a tiered pipeline: `n` fast-tier DNN shard
+    /// slots (min 1), `n_hq` hq-tier shard slots (0 = single tier),
+    /// plus the decode and vote worker slots.
+    pub fn for_tiered_pipeline(n: usize, n_hq: usize, n_decode: usize,
+                               n_vote: usize) -> Metrics {
         Metrics {
             start: Instant::now(),
             reads_in: AtomicU64::new(0),
@@ -451,12 +547,37 @@ impl Metrics {
             vote_micros: AtomicU64::new(0),
             read_latency: LatencyHistogram::default(),
             shards: (0..n.max(1)).map(|_| ShardStats::default()).collect(),
+            hq_shards: (0..n_hq).map(|_| ShardStats::default()).collect(),
+            fast_decided: AtomicU64::new(0),
+            escalations: AtomicU64::new(0),
+            escalation_latency: LatencyHistogram::default(),
             decode_workers: (0..n_decode)
                 .map(|_| StageStats::default()).collect(),
             vote_workers: (0..n_vote)
                 .map(|_| StageStats::default()).collect(),
             scale_events: Mutex::new(Vec::new()),
         }
+    }
+
+    /// The shard-stats table backing a DNN stage: `hq_shards` for the
+    /// escalation pool, `shards` for everything else. This is how the
+    /// shard hosts and the dispatch thread index per-slot counters
+    /// without caring which tier they serve.
+    pub fn stage_shards(&self, stage: StageId) -> &[ShardStats] {
+        match stage {
+            StageId::DnnHq => &self.hq_shards,
+            _ => &self.shards,
+        }
+    }
+
+    /// Fraction of confidence-measured fast-tier windows that were
+    /// escalated to the hq tier (0.0 when none were measured).
+    pub fn escalation_rate(&self) -> f64 {
+        let decided = self.fast_decided.load(Ordering::Relaxed);
+        if decided == 0 {
+            return 0.0;
+        }
+        self.escalations.load(Ordering::Relaxed) as f64 / decided as f64
     }
 
     /// µs elapsed since this `Metrics` was constructed — the epoch all
@@ -584,52 +705,49 @@ impl Metrics {
             s.push_str(&format!("  dnn-stage {:.0} win/s",
                                 self.dnn_stage_windows_per_s()));
         }
-        if self.shards.len() > 1 {
-            // one row per slot that ever ran a shard, in a consistent
-            // percent format; retired slots keep their row, explicitly
-            // tagged, instead of silently vanishing from the split.
-            // (Metrics built outside a coordinator never mark spawns,
-            // so an all-unspawned table prints every slot, as before.)
-            let any_spawned = self.shards.iter()
-                .any(|st| st.spawned.load(Ordering::Relaxed));
-            let utils = self.shard_utilization();
-            let rows: Vec<String> = self.shards.iter().enumerate()
-                .filter(|(_, st)| {
-                    !any_spawned || st.spawned.load(Ordering::Relaxed)
-                })
-                .map(|(i, st)| {
-                    let pct = utils[i] * 100.0;
-                    if st.retired.load(Ordering::Relaxed) {
-                        format!("{i}:{pct:.1}%(retired)")
-                    } else {
-                        format!("{i}:{pct:.1}%")
-                    }
-                })
-                .collect();
-            s.push_str(&format!("  shard-util [{}]", rows.join(" ")));
-        }
-        // per-stage worker splits (decode/vote pools), same percent
-        // format as the shard split: busy over the slot's live window,
-        // retired slots listed explicitly
+        // every per-slot split — shard, hq, decode, vote — renders
+        // through util_rows, so retired- and live-slot utilization use
+        // one percent format and one unspawned-slot rule throughout
         let now = self.epoch_micros();
+        if self.shards.len() > 1 {
+            s.push_str(&format!("  shard-util [{}]",
+                                util_rows(&self.shards, now).join(" ")));
+        }
+        if self.hq_shards.len() > 1 {
+            s.push_str(&format!("  hq-util [{}]",
+                                util_rows(&self.hq_shards, now).join(" ")));
+        }
         for (label, workers) in [("decode-util", &self.decode_workers),
                                  ("vote-util", &self.vote_workers)] {
             if workers.len() <= 1 {
                 continue;
             }
-            let rows: Vec<String> = workers.iter().enumerate()
-                .map(|(i, st)| {
-                    let live = st.live_micros(now).max(1) as f64;
-                    let pct = (st.busy_micros.load(Ordering::Relaxed)
-                               as f64 / live).min(1.0) * 100.0;
-                    if st.retired.load(Ordering::Relaxed) {
-                        format!("{i}:{pct:.1}%(retired)")
-                    } else {
-                        format!("{i}:{pct:.1}%")
-                    }
-                })
-                .collect();
-            s.push_str(&format!("  {label} [{}]", rows.join(" ")));
+            s.push_str(&format!("  {label} [{}]",
+                                util_rows(workers, now).join(" ")));
+        }
+        // tiered-serving section: per-tier window counts, escalation
+        // rate, and the escalation round-trip latency
+        let decided = self.fast_decided.load(Ordering::Relaxed);
+        if !self.hq_shards.is_empty() || decided > 0 {
+            let fast_w: u64 = self.shards.iter()
+                .map(|st| st.windows.load(Ordering::Relaxed)).sum();
+            let hq_w: u64 = self.hq_shards.iter()
+                .map(|st| st.windows.load(Ordering::Relaxed)).sum();
+            s.push_str(&format!(
+                "  tier fast {fast_w}w hq {hq_w}w  esc {}/{decided} \
+                 ({:.1}%)",
+                self.escalations.load(Ordering::Relaxed),
+                self.escalation_rate() * 100.0,
+            ));
+            if self.escalation_latency.count() > 0 {
+                s.push_str(&format!(
+                    "  esc-lat p50 {:.1}ms p99 {:.1}ms",
+                    self.escalation_latency.quantile_micros(0.50) as f64
+                        / 1e3,
+                    self.escalation_latency.quantile_micros(0.99) as f64
+                        / 1e3,
+                ));
+            }
         }
         let events = self.scale_events.lock().unwrap();
         if !events.is_empty() {
@@ -860,6 +978,7 @@ mod tests {
         assert!(!st.is_live());
         assert_eq!(st.live_micros(9_000), 150);
         assert_eq!(StageId::Dnn.name(), "dnn");
+        assert_eq!(StageId::DnnHq.name(), "dnn-hq");
         assert_eq!(StageId::Decode.name(), "decode");
         assert_eq!(StageId::Vote.name(), "vote");
     }
@@ -973,5 +1092,79 @@ mod tests {
         assert!(!m.report(32).contains("lat p50"));
         m.read_latency.record(2_000);
         assert!(m.report(32).contains("lat p50"));
+    }
+
+    #[test]
+    fn tiered_metrics_size_both_pools_and_expose_rate() {
+        let m = Metrics::for_tiered_pipeline(3, 2, 1, 1);
+        assert_eq!(m.shards.len(), 3);
+        assert_eq!(m.hq_shards.len(), 2);
+        // stage_shards routes hq traffic to its own table
+        assert!(std::ptr::eq(m.stage_shards(StageId::Dnn).as_ptr(),
+                             m.shards.as_ptr()));
+        assert!(std::ptr::eq(m.stage_shards(StageId::DnnHq).as_ptr(),
+                             m.hq_shards.as_ptr()));
+        // single-tier pipelines carry no hq slots
+        assert!(Metrics::for_pipeline(2, 1, 1).hq_shards.is_empty());
+        assert_eq!(m.escalation_rate(), 0.0, "nothing decided yet");
+        m.add(&m.fast_decided, 8);
+        m.add(&m.escalations, 2);
+        assert!((m.escalation_rate() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn report_shows_tier_section_with_escalation_stats() {
+        let m = Metrics::for_tiered_pipeline(1, 1, 1, 1);
+        m.shards[0].mark_spawned(0);
+        m.hq_shards[0].mark_spawned(0);
+        m.add(&m.shards[0].windows, 10);
+        m.add(&m.hq_shards[0].windows, 3);
+        m.add(&m.fast_decided, 10);
+        m.add(&m.escalations, 3);
+        let r = m.report(32);
+        assert!(r.contains("tier fast 10w hq 3w"), "{r}");
+        assert!(r.contains("esc 3/10 (30.0%)"), "{r}");
+        assert!(!r.contains("esc-lat"), "no samples yet: {r}");
+        m.escalation_latency.record(2_000);
+        assert!(m.report(32).contains("esc-lat p50"), "{}", m.report(32));
+        // an untiered Metrics never prints the section
+        assert!(!Metrics::default().report(32).contains("tier fast"));
+    }
+
+    /// The satellite fix this PR pins: every utilization split —
+    /// shard, hq, decode, vote — must use the same percent format and
+    /// the same unspawned-slot filter. Before, the decode/vote
+    /// sections printed rows for slots no worker ever occupied while
+    /// the shard section skipped them.
+    #[test]
+    fn report_percent_format_is_consistent_across_sections() {
+        let m = Metrics::for_tiered_pipeline(2, 2, 2, 2);
+        // slot 0 of each section spawned; slot 1 spawned only for hq,
+        // where it is also retired
+        m.shards[0].mark_spawned(0);
+        m.hq_shards[0].mark_spawned(0);
+        m.hq_shards[1].mark_spawned(0);
+        m.hq_shards[1].mark_retired(m.epoch_micros());
+        m.decode_workers[0].mark_spawned(0);
+        m.vote_workers[0].mark_spawned(0);
+        let r = m.report(32);
+        let section = |label: &str| {
+            let start = r.find(label)
+                .unwrap_or_else(|| panic!("missing {label}: {r}"));
+            let end = r[start..].find(']').unwrap() + start;
+            r[start..=end].to_string()
+        };
+        for label in ["shard-util [", "hq-util [",
+                      "decode-util [", "vote-util ["] {
+            let sec = section(label);
+            assert!(sec.contains("0:") && sec.contains('%'),
+                    "{label}: {sec}");
+            // the unspawned-slot rule applies to EVERY section: only
+            // hq slot 1 ever spawned, so only hq lists a row for it
+            assert_eq!(sec.contains("1:"), label == "hq-util [",
+                       "{label}: {sec}");
+        }
+        assert!(section("hq-util [").contains("%(retired)"),
+                "{}", section("hq-util ["));
     }
 }

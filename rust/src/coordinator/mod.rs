@@ -10,14 +10,19 @@
 pub mod autoscale;
 pub mod batcher;
 pub mod collector;
+pub mod config;
+mod dispatch;
+mod job;
 pub mod metrics;
+mod pool;
 pub mod server;
 
 pub use autoscale::{AutoscaleConfig, Controller, Decision, Sample,
                     SpawnWorker, StageControl, StagePool, WorkerPool};
-pub use batcher::{Batch, Batcher, BatchPolicy};
+pub use batcher::{Batch, Batcher, BatchPolicy, TieredBatcher};
 pub use collector::{Collector, CollectorConfig, DecodedWindow,
                     ReadRegistry};
+pub use config::{resolve_knob, KnobSource};
 pub use metrics::{LatencyHistogram, LatencySnapshot, Metrics,
                   ScaleAction, ScaleEvent, ShardStats, StageId,
                   StageStats};

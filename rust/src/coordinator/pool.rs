@@ -1,0 +1,368 @@
+//! Stage spawning: the DNN shard host (one per tier) and the CTC
+//! decode worker pool, plus the escalation hub the decode workers use
+//! to re-queue low-confidence fast-tier windows.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::basecall::ctc::{beam_search, beam_search_pruned,
+                           beam_search_pruned_n, BeamPrune};
+use crate::runtime::{ShardFactory, Tier};
+use crate::util::bounded::{bounded, Feeder, QueueSet, Receiver, Sender};
+
+use super::autoscale::{StagePool, WorkerPool};
+use super::collector::DecodedWindow;
+use super::job::{DecodeJob, ShardBatch, WindowJob};
+use super::metrics::{Metrics, ScaleAction, ShardStats, StageId};
+
+/// Batches a shard can hold QUEUED ahead of its forward pass (the
+/// executing batch has already been dequeued): one staged batch while
+/// one executes — classic double buffering — keeps a replica busy
+/// without parking a deep backlog of signal memory behind a slow shard
+/// (the window queue is the intended buffering point — it
+/// backpressures `submit()`). Depth 1 is also what makes retirement
+/// cheap: a closed queue drains at most one staged batch before the
+/// shard thread sees the disconnect and exits.
+pub(crate) const SHARD_QUEUE_DEPTH: usize = 1;
+
+/// The decode workers' handle on the escalation path: the confidence
+/// threshold, the re-queue sender back to the dispatcher, and the
+/// shared count of dispatched-but-undecided fast-tier windows (see
+/// `TieredBatcher` for the shutdown protocol it anchors).
+#[derive(Clone)]
+pub(crate) struct Escalator {
+    pub(crate) margin: f32,
+    pub(crate) tx: Sender<WindowJob>,
+    pub(crate) pending: Arc<AtomicU64>,
+}
+
+/// Shard-pool state shared by everyone who touches one tier's pool:
+/// the dispatcher routes through `queues`, the autoscaler (when
+/// enabled) adds and retires slots through the [`StagePool`] impl, and
+/// `Coordinator::finish` drains `handles`. Shard threads hold only the
+/// individual Arcs they need (factory, queue set, metrics) — never
+/// this struct — so teardown has no reference cycles: once the
+/// controller is joined and the coordinator drops its host Arcs, the
+/// hosts' input senders and decode feeders drop and the stage-by-stage
+/// disconnect cascade proceeds exactly as in the fixed-pool design.
+///
+/// A tiered pipeline runs two hosts over ONE [`ShardFactory`]: a
+/// native replica holds the quantized models for every exported
+/// bit-width and `warm(model, bits)` selects one, so the hq pool costs
+/// what a same-size single-tier pool costs.
+pub(crate) struct ShardHost {
+    pub(crate) factory: Arc<ShardFactory>,
+    pub(crate) model: String,
+    pub(crate) bits: u32,
+    /// which stage this host's slots report as: `Dnn` for the fast /
+    /// only pool (stats in `Metrics::shards`), `DnnHq` for the
+    /// escalation pool (stats in `Metrics::hq_shards`).
+    pub(crate) stage: StageId,
+    /// the tier tag stamped on every `DecodeJob` this host emits.
+    pub(crate) tier: Tier,
+    /// carry each window's signal into its `DecodeJob` so a
+    /// low-confidence decode can re-queue it — true only on the fast
+    /// host of an escalation-armed pipeline.
+    pub(crate) keep_signals: bool,
+    pub(crate) queues: Arc<QueueSet<ShardBatch>>,
+    /// producer guard over the decode pool's queue set: every shard
+    /// thread holds a clone, and the last holder's drop seals the set
+    /// so the decode workers disconnect exactly when no shard remains
+    /// (the hosts themselves are dropped by `finish()` before the
+    /// drain).
+    pub(crate) dec: Feeder<DecodeJob>,
+    pub(crate) metrics: Arc<Metrics>,
+    pub(crate) handles: Mutex<Vec<JoinHandle<Result<()>>>>,
+    /// this host's input-queue sender, held only for backlog sampling:
+    /// the bounded window queue for the fast/only host, the escalation
+    /// side channel for the hq host.
+    pub(crate) window_tx: Sender<WindowJob>,
+    pub(crate) window_cap: usize,
+}
+
+impl ShardHost {
+    /// Spawn the shard thread that owns slot `slot`'s backend replica.
+    /// The replica is opened + warmed *inside* the thread (it may not
+    /// be `Send`). `ready` carries the outcome for init-time shards so
+    /// `Coordinator::new` fails fast; autoscaled spawns pass `None` —
+    /// on failure they retire *their own installation* of the slot
+    /// (generation-checked, so a slow failing spawn can never close a
+    /// successor that recycled the slot) and log a `SpawnFailed` scale
+    /// event, degrading the pool instead of failing the run.
+    pub(crate) fn launch(&self, slot: usize, generation: u64,
+                         rx: Receiver<ShardBatch>,
+                         ready: Option<Sender<Result<()>>>) {
+        let stage = self.stage;
+        self.metrics.stage_shards(stage)[slot]
+            .mark_spawned(self.metrics.epoch_micros());
+        let factory = self.factory.clone();
+        let queues = self.queues.clone();
+        let dec = self.dec.clone();
+        let m = self.metrics.clone();
+        let model = self.model.clone();
+        let bits = self.bits;
+        let tier = self.tier;
+        let keep_signals = self.keep_signals;
+        let handle = std::thread::spawn(move || -> Result<()> {
+            let opened = factory.replica(slot)
+                .and_then(|mut b| b.warm(&model, bits).map(|()| b));
+            let mut backend = match opened {
+                Ok(b) => {
+                    if let Some(tx) = &ready {
+                        let _ = tx.send(Ok(()));
+                    }
+                    b
+                }
+                Err(err) => {
+                    match ready {
+                        Some(tx) => {
+                            let _ = tx.send(Err(err));
+                        }
+                        None => {
+                            // only touch the slot if this thread's
+                            // installation still owns it — it may have
+                            // been retired (and even recycled by a
+                            // healthy successor) while we were opening
+                            if queues.retire_generation(slot,
+                                                        generation) {
+                                m.stage_shards(stage)[slot]
+                                    .mark_retired(m.epoch_micros());
+                                let live = queues.live_count();
+                                m.record_scale(stage,
+                                               ScaleAction::SpawnFailed,
+                                               slot, live);
+                            }
+                        }
+                    }
+                    return Ok(());
+                }
+            };
+            drop(ready); // init handshake complete
+            // spread the decode round-robin start points so shards
+            // do not gang up on decode worker 0
+            let mut rr = slot;
+            let stats = &m.stage_shards(stage)[slot];
+            while let Ok(batch) = rx.recv() {
+                let t0 = Instant::now();
+                let lps = backend.run_windows(&model, bits, &batch.sigs)?;
+                let busy = t0.elapsed().as_micros() as u64;
+                let n_items = batch.keys.len();
+                m.add(&m.batches, 1);
+                m.add(&m.batch_items, n_items as u64);
+                if batch.full {
+                    m.add(&m.full_batches, 1);
+                }
+                m.add(&m.dnn_micros, busy);
+                m.add(&stats.batches, 1);
+                m.add(&stats.windows, n_items as u64);
+                m.add(&stats.busy_micros, busy);
+                // move the signals back out only when the decode pool
+                // may need them for an escalation re-queue
+                let mut sigs = batch.sigs.into_iter();
+                for (key, lp) in batch.keys.into_iter().zip(lps) {
+                    let signal = if keep_signals {
+                        sigs.next()
+                    } else {
+                        None
+                    };
+                    // skip-over-backlogged round-robin; if every
+                    // decode queue is gone the pipeline has
+                    // collapsed downstream — stop burning
+                    // inference on it
+                    if !dec.send_round_robin(&mut rr, DecodeJob {
+                        read_id: key.read_id,
+                        window_idx: key.window_idx,
+                        lp,
+                        tier,
+                        signal,
+                        escalated_at: key.escalated_at,
+                    }) {
+                        anyhow::bail!("decode stage disconnected \
+                                       mid-run (downstream failure)");
+                    }
+                }
+            }
+            Ok(())
+        });
+        self.handles.lock().unwrap().push(handle);
+    }
+}
+
+impl StagePool for ShardHost {
+    fn slots(&self) -> usize {
+        self.queues.slots()
+    }
+
+    fn live_slots(&self) -> Vec<usize> {
+        self.queues.live_slots()
+    }
+
+    fn busy_micros(&self, slot: usize) -> u64 {
+        self.metrics.stage_shards(self.stage)[slot]
+            .busy_micros.load(Ordering::Relaxed)
+    }
+
+    fn backlog(&self) -> f64 {
+        // the fraction can exceed 1 for the hq host (its input is the
+        // unbounded escalation channel, measured against the window
+        // cap); the controller only thresholds it, so saturation is
+        // fine
+        self.window_tx.len() as f64 / self.window_cap.max(1) as f64
+    }
+
+    fn scale_up(&self) -> Option<usize> {
+        // add() fails once the dispatcher has sealed the set at
+        // shutdown (or total pool collapse), so a racing scale-up can
+        // never install a queue that nobody will close again
+        let (tx, rx) = bounded::<ShardBatch>(SHARD_QUEUE_DEPTH);
+        let slot = self.queues.add(tx)?;
+        let generation = self.queues.generation(slot);
+        self.launch(slot, generation, rx, None);
+        Some(slot)
+    }
+
+    fn retire(&self, slot: usize) -> bool {
+        if self.queues.retire(slot) {
+            self.metrics.stage_shards(self.stage)[slot]
+                .mark_retired(self.metrics.epoch_micros());
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Live slots ranked busiest-first for tail-batch routing: descending
+/// cumulative forward-pass micros over the given tier's stats table,
+/// ties toward the lower slot id so the ranking is total. Small
+/// deadline-triggered batches consistently pile onto the hottest
+/// replica, leaving the rest free to take full batches (and, under the
+/// autoscaler, free to be retired).
+pub(crate) fn rank_busiest(stats: &[ShardStats],
+                           qs: &QueueSet<ShardBatch>) -> Vec<usize> {
+    let mut live = qs.live_slots();
+    live.sort_by_key(|&s| {
+        (u64::MAX - stats[s].busy_micros.load(Ordering::Relaxed), s)
+    });
+    live
+}
+
+/// Build the CTC decode worker pool: per-worker queues in a
+/// QueueSet-backed [`WorkerPool`], fed round-robin by the DNN shards
+/// (no shared `Mutex<Receiver>` hot spot), resizable by the controller
+/// when `autoscale.scale_decode` is set. The spawn closure moves the
+/// decoded-queue prototype sender in; each worker clones it —
+/// `finish()` drops the pool before draining so the collector can
+/// observe the disconnect.
+///
+/// With `esc` set (tiered serving), a fast-tier job decodes the top
+/// TWO beams and its confidence margin — top beam's score minus the
+/// runner-up's — is compared against the escalation threshold: below
+/// it, the window is re-queued to the hq tier instead of being
+/// collected. Hq-tier jobs (and every job when `esc` is `None`) run
+/// the exact single-best search of the single-tier pipeline, which is
+/// what keeps escalation-off output byte-identical.
+pub(crate) fn spawn_decode_pool(
+    metrics: Arc<Metrics>,
+    n_dec: usize,
+    dec_cap: usize,
+    beam: usize,
+    prune: Option<BeamPrune>,
+    tx_decoded: Sender<DecodedWindow>,
+    esc: Option<Escalator>,
+) -> Arc<WorkerPool<DecodeJob>> {
+    let m = metrics.clone();
+    WorkerPool::new(
+        StageId::Decode, metrics, n_dec, dec_cap,
+        Box::new(move |slot, rx: Receiver<DecodeJob>| {
+            let tx = tx_decoded.clone();
+            let m = m.clone();
+            let esc = esc.clone();
+            std::thread::spawn(move || {
+                while let Ok(job) = rx.recv() {
+                    let t0 = Instant::now();
+                    if let (Some(e), Tier::Fast) = (&esc, job.tier) {
+                        // confidence-gated fast tier: decode the top
+                        // two beams so the margin is observable
+                        let mut top = beam_search_pruned_n(
+                            &job.lp, beam, 2,
+                            prune.unwrap_or(BeamPrune::OFF));
+                        // beam_search_*_n returns best LAST
+                        let (best, best_score) =
+                            top.pop().unwrap_or_default();
+                        let margin = match top.pop() {
+                            Some((_, runner)) => best_score - runner,
+                            // a single surviving beam: no runner-up to
+                            // doubt it, treat as fully confident
+                            None => f32::INFINITY,
+                        };
+                        let busy = t0.elapsed().as_micros() as u64;
+                        m.add(&m.decode_micros, busy);
+                        if let Some(st) = m.decode_workers.get(slot) {
+                            m.add(&st.jobs, 1);
+                            m.add(&st.busy_micros, busy);
+                        }
+                        m.add(&m.fast_decided, 1);
+                        if margin < e.margin {
+                            // low confidence: re-queue at the hq tier
+                            // instead of collecting. The send must
+                            // precede the pending release — the
+                            // dispatcher's shutdown check relies on
+                            // that order (see TieredBatcher). A send
+                            // error means the dispatcher is gone
+                            // (shutdown/collapse); the window is
+                            // dropped like any in-flight work then.
+                            m.add(&m.escalations, 1);
+                            let now = Instant::now();
+                            let _ = e.tx.send(WindowJob {
+                                read_id: job.read_id,
+                                window_idx: job.window_idx,
+                                signal: job.signal.unwrap_or_default(),
+                                tier: Tier::Hq,
+                                enqueued_at: now,
+                                escalated_at: Some(now),
+                            });
+                            e.pending.fetch_sub(1, Ordering::Release);
+                            continue;
+                        }
+                        e.pending.fetch_sub(1, Ordering::Release);
+                        if tx.send(DecodedWindow {
+                            read_id: job.read_id,
+                            window_idx: job.window_idx,
+                            seq: best,
+                        }).is_err() {
+                            break;
+                        }
+                        continue;
+                    }
+                    // hq tier, or escalation disabled: the exact
+                    // single-tier decode path
+                    let seq = match prune {
+                        Some(p) => beam_search_pruned(&job.lp, beam, p),
+                        None => beam_search(&job.lp, beam),
+                    };
+                    let busy = t0.elapsed().as_micros() as u64;
+                    m.add(&m.decode_micros, busy);
+                    if let Some(st) = m.decode_workers.get(slot) {
+                        m.add(&st.jobs, 1);
+                        m.add(&st.busy_micros, busy);
+                    }
+                    if let Some(at) = job.escalated_at {
+                        m.escalation_latency.record(
+                            at.elapsed().as_micros() as u64);
+                    }
+                    if tx.send(DecodedWindow {
+                        read_id: job.read_id,
+                        window_idx: job.window_idx,
+                        seq,
+                    }).is_err() {
+                        break;
+                    }
+                }
+            })
+        }))
+}

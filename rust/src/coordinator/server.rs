@@ -1,8 +1,11 @@
-//! The coordinator proper: read router -> window batcher -> sharded DNN
-//! executor pool (each shard thread owns its own `runtime::Backend`
-//! replica: the native quantized executor by default, PJRT under the
-//! `xla` feature) -> CTC decode pool (per-worker queues fed
-//! round-robin) -> collector router -> vote worker pool -> output queue.
+//! Streaming pipeline lifecycle: construction, submission, drain.
+//!
+//! Window flow: windower -> size-or-deadline batcher (dispatch thread,
+//! `coordinator::dispatch`) -> sharded DNN executor pool (each shard
+//! thread owns its own `runtime::Backend` replica: the native quantized
+//! executor by default, PJRT under the `xla` feature) -> CTC decode
+//! pool (per-worker queues fed round-robin) -> collector router -> vote
+//! worker pool -> output queue.
 //!
 //! Every interior stage boundary is a bounded channel (`util::bounded`),
 //! so a slow stage backpressures its producer all the way up to
@@ -13,11 +16,11 @@
 //! `coordinator/README.md` for the stage/queue map.
 //!
 //! The DNN stage fans out over a pool of backend replicas reached
-//! through a [`QueueSet`] of per-shard queues. Dispatch is
-//! *batch-size-aware*: full (size-triggered) batches go to the
-//! least-loaded live shard, small deadline-triggered tail batches go to
-//! the *busiest* live shard so the heavy batches stay unsplit and idle
-//! replicas stay genuinely idle. With `CoordinatorConfig::autoscale`
+//! through a [`QueueSet`] of per-shard queues (`coordinator::pool`).
+//! Dispatch is *batch-size-aware*: full (size-triggered) batches go to
+//! the least-loaded live shard, small deadline-triggered tail batches go
+//! to the *busiest* live shard so the heavy batches stay unsplit and
+//! idle replicas stay genuinely idle. With `CoordinatorConfig::autoscale`
 //! set, a controller thread (`coordinator::autoscale`) resizes the live
 //! pool between `min_shards` and `max_shards` from observed
 //! utilization — spawning replicas through the [`ShardFactory`] and
@@ -27,117 +30,42 @@
 //! never see their batch neighbours), the called result set is
 //! byte-identical for any shard count, fixed or adaptive (mid-run
 //! emission order remains completion order, as with one shard).
+//!
+//! With `CoordinatorConfig::escalate_margin` set, the pipeline runs
+//! **speculative tiered serving**: fresh windows execute on a *fast*
+//! low-bit shard pool, the decode stage measures each window's
+//! top-two-beam confidence margin, and windows below the threshold are
+//! re-queued — through an unbounded escalation side channel back into
+//! the dispatcher's requeue lane — onto a full-precision *hq* pool. An
+//! escalated fast decode emits nothing, so the collector naturally
+//! waits for the hq replacement before voting; last-delivery-wins
+//! routing keyed by `(read_id, window_idx)` makes the substitution
+//! invisible downstream. Escalation off (`None`, the default) runs the
+//! exact single-tier code path, byte-identical to pre-tier builds.
 
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::basecall::ctc::{beam_search, beam_search_pruned, BeamPrune,
-                           LogProbs};
 use crate::genome::dataset::windows_from_read;
 use crate::genome::synth::Read;
-use crate::runtime::{Backend, BackendKind, ShardFactory};
-use crate::util::bounded::{bounded, Feeder, QueueSet, Receiver, Sender};
+use crate::runtime::{ShardFactory, Tier, TierSet};
+use crate::util::bounded::{bounded, unbounded, Feeder, QueueSet,
+                           Receiver, Sender};
 
-use super::autoscale::{self, AutoscaleConfig, StageControl, StagePool,
-                       WorkerPool};
-use super::batcher::{Batcher, BatchPolicy};
+use super::autoscale::{self, StageControl, StagePool, WorkerPool};
 use super::collector::{Collector, CollectorConfig, DecodedWindow,
                        ReadRegistry};
-use super::metrics::{Metrics, ScaleAction, StageId};
+use super::dispatch::{spawn_dispatch, TierRouting};
+use super::job::{DecodeJob, ShardBatch, WindowJob};
+use super::metrics::{Metrics, StageId};
+use super::pool::{spawn_decode_pool, Escalator, ShardHost,
+                  SHARD_QUEUE_DEPTH};
 
-/// Batches a shard can hold QUEUED ahead of its forward pass (the
-/// executing batch has already been dequeued): one staged batch while
-/// one executes — classic double buffering — keeps a replica busy
-/// without parking a deep backlog of signal memory behind a slow shard
-/// (the window queue is the intended buffering point — it
-/// backpressures `submit()`). Depth 1 is also what makes retirement
-/// cheap: a closed queue drains at most one staged batch before the
-/// shard thread sees the disconnect and exits.
-const SHARD_QUEUE_DEPTH: usize = 1;
-
-/// Everything the `Coordinator` needs to open a pipeline: model
-/// selection, backend kind, stage widths, and queue bounds.
-#[derive(Clone, Debug)]
-pub struct CoordinatorConfig {
-    /// model family to execute (e.g. "guppy").
-    pub model: String,
-    /// bit-width variant of the model (32 = the fp32-trained baseline).
-    pub bits: u32,
-    /// which inference backend the DNN stage opens (native by default;
-    /// `xla` requires the cargo feature).
-    pub backend: BackendKind,
-    /// window hop in samples; window length comes from the artifact meta.
-    pub hop: usize,
-    /// CTC beam width used by the decode pool.
-    pub beam_width: usize,
-    /// number of DNN executor shards. Each shard owns an independent
-    /// `Backend` replica (built by the [`ShardFactory`]: an in-memory
-    /// clone for native, `open_shard` in-thread for non-`Send`
-    /// backends) fed through its own bounded batch queue; 1 reproduces
-    /// the single-owner layout. With `autoscale` set this is only the
-    /// *initial* live count (clamped into `[min_shards, max_shards]`).
-    /// The called result set is byte-identical for any value.
-    pub dnn_shards: usize,
-    /// CTC decode worker count.
-    pub decode_threads: usize,
-    /// vote/splice worker count.
-    pub vote_threads: usize,
-    /// bound on in-flight windows per queue: `submit()` blocks once the
-    /// window queue holds this many undecoded windows (backpressure).
-    pub queue_cap: usize,
-    /// size-or-deadline batching policy for the DNN stage.
-    pub policy: BatchPolicy,
-    /// adaptive shard autoscaling: `None` (default) pins the pool at
-    /// `dnn_shards` for the whole run; `Some(cfg)` starts a controller
-    /// thread that resizes the live pool between `cfg.min_shards` and
-    /// `cfg.max_shards` from observed utilization (see
-    /// `coordinator::autoscale`). Scaling never changes called output.
-    pub autoscale: Option<AutoscaleConfig>,
-    /// artifact directory (meta.json + weights; the native backend
-    /// falls back to its builtin model when absent).
-    pub artifacts_dir: String,
-    /// beam-search pruning thresholds for the decode pool. `None`
-    /// (default) runs the exhaustive search — byte-identical to the
-    /// pre-knob pipeline. `Some(BeamPrune::OFF)` also reproduces the
-    /// exhaustive arithmetic exactly; finite thresholds trade decode
-    /// work for a bounded heuristic (see `basecall::ctc::BeamPrune`).
-    pub prune: Option<BeamPrune>,
-}
-
-impl Default for CoordinatorConfig {
-    fn default() -> Self {
-        CoordinatorConfig {
-            model: "guppy".into(),
-            bits: 32,
-            backend: BackendKind::default(),
-            hop: 100,
-            beam_width: 10,
-            dnn_shards: 1,
-            decode_threads: 2,
-            vote_threads: 2,
-            queue_cap: 256,
-            policy: BatchPolicy::default(),
-            autoscale: None,
-            artifacts_dir: crate::runtime::meta::default_artifacts_dir(),
-            prune: None,
-        }
-    }
-}
-
-impl CoordinatorConfig {
-    /// Shard count selected by `HELIX_SHARDS` (default 1; zero or an
-    /// unparsable value also fall back to 1).
-    pub fn shards_from_env() -> usize {
-        std::env::var("HELIX_SHARDS").ok()
-            .and_then(|s| s.parse::<usize>().ok())
-            .filter(|&n| n >= 1)
-            .unwrap_or(1)
-    }
-}
+pub use super::config::CoordinatorConfig;
 
 /// A fully base-called read: per-window decodes voted into a consensus and
 /// spliced into one sequence.
@@ -151,205 +79,6 @@ pub struct CalledRead {
     pub window_decodes: Vec<Vec<u8>>,
 }
 
-struct WindowJob {
-    read_id: usize,
-    window_idx: usize,
-    signal: Vec<f32>,
-    /// stamped by `submit()` as the window enters the window queue, so
-    /// the batcher's deadline clock (and `Batch::oldest_wait`) counts
-    /// time spent queued behind backpressure, not just time since the
-    /// batcher's first dequeue.
-    enqueued_at: Instant,
-}
-
-/// One batch en route from the batcher to a DNN shard: the window keys
-/// and their signals, split so a shard can hand the signal block to the
-/// backend without re-walking the jobs.
-struct ShardBatch {
-    keys: Vec<(usize, usize)>,
-    sigs: Vec<Vec<f32>>,
-    full: bool,
-}
-
-struct DecodeJob {
-    read_id: usize,
-    window_idx: usize,
-    lp: LogProbs,
-}
-
-/// Shard-pool state shared by everyone who touches the pool: the
-/// batcher dispatches through `queues`, the autoscaler (when enabled)
-/// adds and retires slots through the [`StagePool`] impl, and
-/// `Coordinator::finish` drains `handles`. Shard threads hold only the
-/// individual Arcs they need (factory, queue set, metrics) — never
-/// this struct — so teardown has no reference cycles: once the
-/// controller is joined and the coordinator drops its host Arc, the
-/// host's window/decode senders drop and the stage-by-stage disconnect
-/// cascade proceeds exactly as in the fixed-pool design.
-struct ShardHost {
-    factory: Arc<ShardFactory>,
-    model: String,
-    bits: u32,
-    queues: Arc<QueueSet<ShardBatch>>,
-    /// producer guard over the decode pool's queue set: every shard
-    /// thread holds a clone, and the last holder's drop seals the set
-    /// so the decode workers disconnect exactly when no shard remains
-    /// (the host itself is dropped by `finish()` before the drain).
-    dec: Feeder<DecodeJob>,
-    metrics: Arc<Metrics>,
-    handles: Mutex<Vec<JoinHandle<Result<()>>>>,
-    window_tx: Sender<WindowJob>,
-    window_cap: usize,
-}
-
-impl ShardHost {
-    /// Spawn the shard thread that owns slot `slot`'s backend replica.
-    /// The replica is opened + warmed *inside* the thread (it may not
-    /// be `Send`). `ready` carries the outcome for init-time shards so
-    /// `Coordinator::new` fails fast; autoscaled spawns pass `None` —
-    /// on failure they retire *their own installation* of the slot
-    /// (generation-checked, so a slow failing spawn can never close a
-    /// successor that recycled the slot) and log a `SpawnFailed` scale
-    /// event, degrading the pool instead of failing the run.
-    fn launch(&self, slot: usize, generation: u64,
-              rx: Receiver<ShardBatch>,
-              ready: Option<Sender<Result<()>>>) {
-        self.metrics.shards[slot]
-            .mark_spawned(self.metrics.epoch_micros());
-        let factory = self.factory.clone();
-        let queues = self.queues.clone();
-        let dec = self.dec.clone();
-        let m = self.metrics.clone();
-        let model = self.model.clone();
-        let bits = self.bits;
-        let handle = std::thread::spawn(move || -> Result<()> {
-            let opened = factory.replica(slot)
-                .and_then(|mut b| b.warm(&model, bits).map(|()| b));
-            let mut backend = match opened {
-                Ok(b) => {
-                    if let Some(tx) = &ready {
-                        let _ = tx.send(Ok(()));
-                    }
-                    b
-                }
-                Err(err) => {
-                    match ready {
-                        Some(tx) => {
-                            let _ = tx.send(Err(err));
-                        }
-                        None => {
-                            // only touch the slot if this thread's
-                            // installation still owns it — it may have
-                            // been retired (and even recycled by a
-                            // healthy successor) while we were opening
-                            if queues.retire_generation(slot,
-                                                        generation) {
-                                m.shards[slot]
-                                    .mark_retired(m.epoch_micros());
-                                let live = queues.live_count();
-                                m.record_scale(StageId::Dnn,
-                                               ScaleAction::SpawnFailed,
-                                               slot, live);
-                            }
-                        }
-                    }
-                    return Ok(());
-                }
-            };
-            drop(ready); // init handshake complete
-            // spread the decode round-robin start points so shards
-            // do not gang up on decode worker 0
-            let mut rr = slot;
-            let stats = &m.shards[slot];
-            while let Ok(batch) = rx.recv() {
-                let t0 = Instant::now();
-                let lps = backend.run_windows(&model, bits, &batch.sigs)?;
-                let busy = t0.elapsed().as_micros() as u64;
-                let n_items = batch.keys.len();
-                m.add(&m.batches, 1);
-                m.add(&m.batch_items, n_items as u64);
-                if batch.full {
-                    m.add(&m.full_batches, 1);
-                }
-                m.add(&m.dnn_micros, busy);
-                m.add(&stats.batches, 1);
-                m.add(&stats.windows, n_items as u64);
-                m.add(&stats.busy_micros, busy);
-                for ((read_id, window_idx), lp) in
-                    batch.keys.into_iter().zip(lps)
-                {
-                    // skip-over-backlogged round-robin; if every
-                    // decode queue is gone the pipeline has
-                    // collapsed downstream — stop burning
-                    // inference on it
-                    if !dec.send_round_robin(&mut rr, DecodeJob {
-                        read_id,
-                        window_idx,
-                        lp,
-                    }) {
-                        anyhow::bail!("decode stage disconnected \
-                                       mid-run (downstream failure)");
-                    }
-                }
-            }
-            Ok(())
-        });
-        self.handles.lock().unwrap().push(handle);
-    }
-}
-
-impl StagePool for ShardHost {
-    fn slots(&self) -> usize {
-        self.queues.slots()
-    }
-
-    fn live_slots(&self) -> Vec<usize> {
-        self.queues.live_slots()
-    }
-
-    fn busy_micros(&self, slot: usize) -> u64 {
-        self.metrics.shards[slot].busy_micros.load(Ordering::Relaxed)
-    }
-
-    fn backlog(&self) -> f64 {
-        self.window_tx.len() as f64 / self.window_cap.max(1) as f64
-    }
-
-    fn scale_up(&self) -> Option<usize> {
-        // add() fails once the batcher has sealed the set at shutdown
-        // (or total pool collapse), so a racing scale-up can never
-        // install a queue that nobody will close again
-        let (tx, rx) = bounded::<ShardBatch>(SHARD_QUEUE_DEPTH);
-        let slot = self.queues.add(tx)?;
-        let generation = self.queues.generation(slot);
-        self.launch(slot, generation, rx, None);
-        Some(slot)
-    }
-
-    fn retire(&self, slot: usize) -> bool {
-        if self.queues.retire(slot) {
-            self.metrics.shards[slot]
-                .mark_retired(self.metrics.epoch_micros());
-            true
-        } else {
-            false
-        }
-    }
-}
-
-/// Live slots ranked busiest-first for tail-batch routing: descending
-/// cumulative forward-pass micros, ties toward the lower slot id so the
-/// ranking is total. Small deadline-triggered batches consistently pile
-/// onto the hottest replica, leaving the rest free to take full batches
-/// (and, under the autoscaler, free to be retired).
-fn rank_busiest(m: &Metrics, qs: &QueueSet<ShardBatch>) -> Vec<usize> {
-    let mut live = qs.live_slots();
-    live.sort_by_key(|&s| {
-        (u64::MAX - m.shards[s].busy_micros.load(Ordering::Relaxed), s)
-    });
-    live
-}
-
 /// Staged streaming pipeline coordinator. Construct, `submit` reads, pull
 /// completed reads mid-run with `try_recv`/`recv_timeout`, then `finish`
 /// to drain the rest.
@@ -357,9 +86,11 @@ pub struct Coordinator {
     cfg: CoordinatorConfig,
     window: usize,
     registry: Arc<ReadRegistry>,
+    tiers: Option<TierSet>,
     tx_windows: Option<Sender<WindowJob>>,
-    batcher_thread: Option<JoinHandle<()>>,
+    dispatch_thread: Option<JoinHandle<()>>,
     host: Option<Arc<ShardHost>>,
+    hq_host: Option<Arc<ShardHost>>,
     autoscale_stop: Option<Sender<()>>,
     autoscale_thread: Option<JoinHandle<()>>,
     decode_pool: Option<Arc<WorkerPool<DecodeJob>>>,
@@ -370,8 +101,8 @@ pub struct Coordinator {
 
 impl Coordinator {
     /// Open the full pipeline: probe the artifact metadata, build the
-    /// shard factory, spawn the batcher, the DNN shard pool, the decode
-    /// pool, the collector, and (when configured) the autoscale
+    /// shard factory, spawn the dispatcher, the DNN shard pool(s), the
+    /// decode pool, the collector, and (when configured) the autoscale
     /// controller, and block until every *initial* shard's backend has
     /// opened and warmed (so compile/load failures surface here, not
     /// mid-run).
@@ -382,14 +113,27 @@ impl Coordinator {
         let batches = meta.batches(&cfg.model, cfg.bits);
         anyhow::ensure!(!batches.is_empty(),
                         "no artifacts for {}/{}b", cfg.model, cfg.bits);
+        // tier plan: escalate_margin arms the fast/hq pair; the fast
+        // bit-width comes from the artifact ladder (or the explicit
+        // override), validated here so a ladder without a rung below
+        // `bits` fails at construction, not mid-run
+        let tiers = match cfg.escalate_margin {
+            Some(_) => Some(TierSet::from_meta(
+                &meta, &cfg.model, cfg.bits, cfg.tier_bits)?),
+            None => None,
+        };
         // the factory front-loads the one artifact load every replica
-        // is cloned from (native), so open errors also surface here
+        // is cloned from (native), so open errors also surface here.
+        // A native replica holds the quantized models for EVERY
+        // exported bit-width, so one factory serves both tiers.
         let factory = Arc::new(
             ShardFactory::new(cfg.backend, &cfg.artifacts_dir)?);
 
         // shard plan: a fixed pool runs `dnn_shards` slots, all live;
         // an adaptive pool pre-allocates `max_shards` slots and starts
-        // with `dnn_shards` clamped into [min_shards, max_shards].
+        // with `dnn_shards` clamped into [min_shards, max_shards]. The
+        // hq pool (tiered only) gets the same treatment under its own
+        // `hq_min_shards`/`hq_max_shards` bounds.
         let auto = cfg.autoscale.map(|a| a.normalized());
         let (n_slots, n_initial) = match &auto {
             Some(a) => (a.max_shards,
@@ -399,62 +143,60 @@ impl Coordinator {
                 (n, n)
             }
         };
+        let (hq_slots, hq_initial) = match (&tiers, &auto) {
+            (None, _) => (0, 0),
+            (Some(_), Some(a)) => (a.hq_max_shards,
+                                   cfg.dnn_shards.clamp(a.hq_min_shards,
+                                                        a.hq_max_shards)),
+            (Some(_), None) => {
+                let n = cfg.dnn_shards.max(1);
+                (n, n)
+            }
+        };
         let n_dec = cfg.decode_threads.max(1);
         let n_vote = cfg.vote_threads.max(1);
-        let metrics = Arc::new(
-            Metrics::for_pipeline(n_slots, n_dec, n_vote));
+        let metrics = Arc::new(Metrics::for_tiered_pipeline(
+            n_slots, hq_slots, n_dec, n_vote));
         let registry = Arc::new(ReadRegistry::default());
 
         let cap = cfg.queue_cap.max(1);
         let (tx_windows, rx_windows) = bounded::<WindowJob>(cap);
         let (tx_decoded, rx_decoded) = bounded::<DecodedWindow>(cap);
 
-        // decode pool: per-worker queues in a QueueSet-backed
-        // WorkerPool, fed round-robin by the DNN shards (no shared
-        // Mutex<Receiver> hot spot), resizable by the controller when
-        // `autoscale.scale_decode` is set. The spawn closure moves the
-        // decoded-queue prototype sender in; each worker clones it —
-        // finish() drops the pool before draining so the collector can
-        // observe the disconnect.
-        let dec_cap = (cap / n_dec).max(8);
-        let decode_pool = {
-            let m = metrics.clone();
-            let beam = cfg.beam_width;
-            let prune = cfg.prune;
-            WorkerPool::new(
-                StageId::Decode, metrics.clone(), n_dec, dec_cap,
-                Box::new(move |slot, rx: Receiver<DecodeJob>| {
-                    let tx = tx_decoded.clone();
-                    let m = m.clone();
-                    std::thread::spawn(move || {
-                        while let Ok(job) = rx.recv() {
-                            let t0 = Instant::now();
-                            let seq = match prune {
-                                Some(p) => beam_search_pruned(
-                                    &job.lp, beam, p),
-                                None => beam_search(&job.lp, beam),
-                            };
-                            let busy = t0.elapsed().as_micros() as u64;
-                            m.add(&m.decode_micros, busy);
-                            if let Some(st) = m.decode_workers.get(slot) {
-                                m.add(&st.jobs, 1);
-                                m.add(&st.busy_micros, busy);
-                            }
-                            if tx.send(DecodedWindow {
-                                read_id: job.read_id,
-                                window_idx: job.window_idx,
-                                seq,
-                            }).is_err() {
-                                break;
-                            }
-                        }
-                    })
-                }))
+        // the escalation side channel is UNBOUNDED on purpose: an
+        // escalating decode worker must never block on the dispatcher
+        // (which may itself be blocked sending into a full shard queue
+        // whose drain path runs through that same decode worker — a
+        // bounded channel here closes that cycle into a deadlock).
+        // Depth is bounded in practice by the windows in flight, which
+        // the window queue already caps. `pending` counts fast windows
+        // dispatched but not yet past their escalation decision; the
+        // dispatcher increments BEFORE a fresh batch is sent and the
+        // decode worker decrements AFTER its decision (send first), so
+        // the tiered batcher only ends the stream when no escalation
+        // can still arrive.
+        let pending = Arc::new(AtomicU64::new(0));
+        let (escalator, esc_parts) = match cfg.escalate_margin {
+            Some(margin) => {
+                let (tx_esc, rx_esc) = unbounded::<WindowJob>();
+                (Some(Escalator {
+                    margin,
+                    tx: tx_esc.clone(),
+                    pending: pending.clone(),
+                }),
+                 Some((tx_esc, rx_esc)))
+            }
+            None => (None, None),
         };
+
+        let dec_cap = (cap / n_dec).max(8);
+        let decode_pool = spawn_decode_pool(
+            metrics.clone(), n_dec, dec_cap, cfg.beam_width, cfg.prune,
+            tx_decoded, escalator);
 
         // per-shard batch queues live in a QueueSet so the autoscaler
         // can add/retire slots mid-run. Install the initial queues
-        // BEFORE the batcher spawns: dispatch must never observe an
+        // BEFORE the dispatcher spawns: dispatch must never observe an
         // empty set at startup (it would read as pool collapse).
         let queues = Arc::new(QueueSet::<ShardBatch>::with_slots(n_slots));
         let mut initial: Vec<(usize, u64, Receiver<ShardBatch>)> =
@@ -465,59 +207,45 @@ impl Coordinator {
                 .expect("a fresh queue set has a slot per initial shard");
             initial.push((slot, queues.generation(slot), rx));
         }
-
-        // batcher: drains the window queue with the size-or-deadline
-        // policy and routes each finished batch by size — full batches
-        // to the least-loaded live shard, tail batches to the busiest.
-        // On exit it closes every shard queue (the host and autoscaler
-        // also hold the set, so merely dropping this thread's Arc
-        // would not disconnect the shard receivers).
-        let batcher_thread = {
-            let policy = cfg.policy;
-            let qs = queues.clone();
-            let m = metrics.clone();
-            std::thread::spawn(move || {
-                // deadline clock anchored at each window's enqueue, so
-                // time queued behind backpressure counts toward the
-                // batching deadline and oldest_wait telemetry
-                let mut batcher = Batcher::with_stamp(
-                    rx_windows, policy, |j: &WindowJob| j.enqueued_at);
-                let mut rr = 0usize;
-                while let Some(batch) = batcher.next_batch() {
-                    let tail = batch.is_tail();
-                    let n_items = batch.items.len();
-                    // move the signals out of the jobs — no per-window
-                    // clone on this hot path
-                    let mut keys = Vec::with_capacity(n_items);
-                    let mut sigs = Vec::with_capacity(n_items);
-                    for j in batch.items {
-                        keys.push((j.read_id, j.window_idx));
-                        sigs.push(j.signal);
-                    }
-                    let job = ShardBatch { keys, sigs, full: !tail };
-                    let delivered = if tail {
-                        // batch-size-aware dispatch: a small deadline
-                        // batch rides on the already-hot replica so
-                        // full batches stay unsplit across idle shards
-                        qs.send_preferring(&rank_busiest(&m, &qs), job)
-                    } else {
-                        qs.send_least_loaded(&mut rr, job)
-                    };
-                    if !delivered {
-                        // every shard is gone (all replicas failed):
-                        // stop pulling windows so submit() sees the
-                        // disconnect instead of feeding a dead stage
-                        break;
-                    }
-                }
-                qs.close_all();
-            })
+        let (routing, hq_queues, hq_tx) = match esc_parts {
+            Some((tx_esc, rx_esc)) => {
+                let qs = Arc::new(
+                    QueueSet::<ShardBatch>::with_slots(hq_slots));
+                (Some(TierRouting {
+                    esc_rx: rx_esc,
+                    pending: pending.clone(),
+                    hq_queues: qs.clone(),
+                }),
+                 Some(qs), Some(tx_esc))
+            }
+            None => (None, None, None),
         };
+        let mut hq_install: Vec<(usize, u64, Receiver<ShardBatch>)> =
+            Vec::with_capacity(hq_initial);
+        if let Some(qs) = &hq_queues {
+            for _ in 0..hq_initial {
+                let (tx, rx) = bounded::<ShardBatch>(SHARD_QUEUE_DEPTH);
+                let slot = qs.add(tx)
+                    .expect("a fresh queue set has a slot per initial \
+                             shard");
+                hq_install.push((slot, qs.generation(slot), rx));
+            }
+        }
+
+        // the dispatch thread: single-tier batcher loop, or — with
+        // escalation armed — the two-lane tiered loop routing fresh
+        // batches to the fast pool and requeued ones to the hq pool
+        let dispatch_thread = spawn_dispatch(
+            rx_windows, cfg.policy, metrics.clone(), queues.clone(),
+            routing);
 
         let host = Arc::new(ShardHost {
-            factory,
+            factory: factory.clone(),
             model: cfg.model.clone(),
-            bits: cfg.bits,
+            bits: tiers.as_ref().map_or(cfg.bits, |t| t.fast_bits),
+            stage: StageId::Dnn,
+            tier: if tiers.is_some() { Tier::Fast } else { Tier::Hq },
+            keep_signals: tiers.is_some(),
             queues: queues.clone(),
             dec: Feeder::new(decode_pool.queues()),
             metrics: metrics.clone(),
@@ -525,12 +253,36 @@ impl Coordinator {
             window_tx: tx_windows.clone(),
             window_cap: cap,
         });
+        let hq_host = match (&tiers, hq_queues, hq_tx) {
+            (Some(t), Some(qs), Some(tx_esc)) => Some(Arc::new(ShardHost {
+                factory: factory.clone(),
+                model: cfg.model.clone(),
+                bits: t.hq_bits,
+                stage: StageId::DnnHq,
+                tier: Tier::Hq,
+                keep_signals: false,
+                queues: qs,
+                dec: Feeder::new(decode_pool.queues()),
+                metrics: metrics.clone(),
+                handles: Mutex::new(Vec::new()),
+                window_tx: tx_esc,
+                window_cap: cap,
+            })),
+            _ => None,
+        };
 
-        // initial shard pool; every shard reports open+warm exactly once
+        // initial shard pools; every shard reports open+warm exactly
+        // once through the shared ready channel
+        let total_initial = n_initial + hq_initial;
         let (tx_ready, rx_ready) =
-            bounded::<Result<()>>(n_initial.max(1));
+            bounded::<Result<()>>(total_initial.max(1));
         for (slot, generation, rx) in initial {
             host.launch(slot, generation, rx, Some(tx_ready.clone()));
+        }
+        if let Some(hq) = &hq_host {
+            for (slot, generation, rx) in hq_install {
+                hq.launch(slot, generation, rx, Some(tx_ready.clone()));
+            }
         }
         drop(tx_ready); // shard threads hold the only ready senders
 
@@ -550,24 +302,24 @@ impl Coordinator {
         // fail fast: the first shard error aborts construction, and the
         // channel cascade tears the other stages down as this frame's
         // senders drop)
-        for _ in 0..n_initial {
+        for _ in 0..total_initial {
             rx_ready.recv()
                 .map_err(|_| anyhow::anyhow!(
                     "a dnn shard thread died during init"))??;
         }
         if auto.is_none() {
-            // fixed pool: no further replica will ever be built, so
+            // fixed pool(s): no further replica will ever be built, so
             // release the factory's native prototype instead of
-            // carrying an (N+1)-th model copy for the whole run
+            // carrying an extra model copy for the whole run
             host.factory.discard_prototype();
         }
 
         // adaptive controller: one thread sizing every controlled
-        // stage — the DNN pool always, the decode/vote pools when
-        // `scale_decode`/`scale_vote` opt them in (their configured
-        // widths become the per-stage ceilings, floor 1). Runs sample
-        // → decide → scale/retire every tick until finish() signals
-        // stop (see coordinator::autoscale).
+        // stage — the fast DNN pool always, the hq pool when tiered,
+        // the decode/vote pools when `scale_decode`/`scale_vote` opt
+        // them in (their configured widths become the per-stage
+        // ceilings, floor 1). Runs sample → decide → scale/retire every
+        // tick until finish() signals stop (see coordinator::autoscale).
         let (autoscale_stop, autoscale_thread) = match auto {
             Some(a) => {
                 let (stop_tx, stop_rx) = bounded::<()>(1);
@@ -577,6 +329,14 @@ impl Coordinator {
                     min: a.min_shards,
                     max: a.max_shards,
                 }];
+                if let Some(hq) = &hq_host {
+                    stages.push(StageControl {
+                        stage: StageId::DnnHq,
+                        pool: hq.clone() as Arc<dyn StagePool>,
+                        min: a.hq_min_shards,
+                        max: a.hq_max_shards,
+                    });
+                }
                 if a.scale_decode {
                     stages.push(StageControl {
                         stage: StageId::Decode,
@@ -596,10 +356,10 @@ impl Coordinator {
                     }
                 }
                 let m = metrics.clone();
-                let h = std::thread::spawn(move || {
+                let handle = std::thread::spawn(move || {
                     autoscale::run(stages, a, m, stop_rx);
                 });
-                (Some(stop_tx), Some(h))
+                (Some(stop_tx), Some(handle))
             }
             None => (None, None),
         };
@@ -608,9 +368,11 @@ impl Coordinator {
             cfg,
             window,
             registry,
+            tiers,
             tx_windows: Some(tx_windows),
-            batcher_thread: Some(batcher_thread),
+            dispatch_thread: Some(dispatch_thread),
             host: Some(host),
+            hq_host,
             autoscale_stop,
             autoscale_thread,
             decode_pool: Some(decode_pool),
@@ -641,6 +403,9 @@ impl Coordinator {
         // partially-sent read counts only its delivered prefix, and a
         // fully-refused read counts nothing at all).
         self.registry.register(read.id, ws.len());
+        // fresh windows enter at the fast tier when tiering is armed;
+        // a single-tier pipeline tags everything hq (the only model)
+        let tier = if self.tiers.is_some() { Tier::Fast } else { Tier::Hq };
         let mut delivered: u64 = 0;
         if let Some(tx) = &self.tx_windows {
             for (i, w) in ws.into_iter().enumerate() {
@@ -648,7 +413,9 @@ impl Coordinator {
                     read_id: read.id,
                     window_idx: i,
                     signal: w.signal,
+                    tier,
                     enqueued_at: Instant::now(),
+                    escalated_at: None,
                 }).is_err() {
                     // DNN stage already exited (mid-run failure). If no
                     // window of this read got in, drop the registration
@@ -704,20 +471,28 @@ impl Coordinator {
         if let Some(h) = self.autoscale_thread.take() {
             let _ = h.join();
         }
-        // release the host's channel handles (window sender + decode
-        // feeder): the recv-until-disconnect barrier below relies on
-        // every sender dropping. The controller's host Arc is already
-        // gone.
+        // release the hosts' channel handles (window/escalation senders
+        // + decode feeders): the recv-until-disconnect barrier below
+        // relies on every sender dropping. The controller's host Arcs
+        // are already gone. Dropping the hq host here also releases its
+        // escalation-channel sender — together with the decode pool
+        // release below, that guarantees the tiered dispatcher's
+        // requeue lane disconnects even if the decode stage died with
+        // escalations still counted pending.
         let mut shard_handles: Vec<JoinHandle<Result<()>>> = Vec::new();
         if let Some(host) = self.host.take() {
             shard_handles = host.handles.lock().unwrap()
                 .drain(..).collect();
         }
+        if let Some(hq) = self.hq_host.take() {
+            shard_handles.extend(hq.handles.lock().unwrap().drain(..));
+        }
         // release the decode pool: its respawn closure holds the
-        // decoded-queue prototype sender, which must drop before the
-        // drain barrier can see the collector disconnect. (The
-        // controller — the only other pool holder — is joined above,
-        // so no worker can spawn after the handles are taken.)
+        // decoded-queue prototype sender (and, tiered, an escalation
+        // sender), which must drop before the drain barrier can see the
+        // collector disconnect. (The controller — the only other pool
+        // holder — is joined above, so no worker can spawn after the
+        // handles are taken.)
         let decode_handles: Vec<JoinHandle<()>> =
             match self.decode_pool.take() {
                 Some(pool) => pool.take_handles(),
@@ -732,9 +507,9 @@ impl Coordinator {
             None => Ok(Vec::new()),
         };
         let mut err = None;
-        if let Some(h) = self.batcher_thread.take() {
+        if let Some(h) = self.dispatch_thread.take() {
             if h.join().is_err() {
-                err = Some(anyhow::anyhow!("batcher thread panicked"));
+                err = Some(anyhow::anyhow!("dispatch thread panicked"));
             }
         }
         for h in shard_handles {
@@ -794,8 +569,22 @@ impl Coordinator {
     /// DNN shards live right now: equals `dnn_shards()` for a fixed
     /// pool (until a replica dies), varies between the autoscale
     /// bounds under the controller. 0 once the pipeline is torn down.
+    /// On a tiered pipeline this counts the *fast* pool; see
+    /// `live_hq_shards`.
     pub fn live_dnn_shards(&self) -> usize {
         self.host.as_ref().map_or(0, |h| h.queues.live_count())
+    }
+
+    /// Hq-tier DNN shards live right now; 0 on a single-tier pipeline
+    /// or once the pipeline is torn down.
+    pub fn live_hq_shards(&self) -> usize {
+        self.hq_host.as_ref().map_or(0, |h| h.queues.live_count())
+    }
+
+    /// The fast/hq model pair this pipeline serves, when
+    /// `escalate_margin` armed tiered serving.
+    pub fn tier_set(&self) -> Option<&TierSet> {
+        self.tiers.as_ref()
     }
 
     /// CTC decode workers live right now: the configured
@@ -851,11 +640,11 @@ mod tests {
             ..Default::default()
         }).unwrap();
         let m = coord.metrics.clone();
-        // kill every shard queue: the batcher's next dispatch fails,
+        // kill every shard queue: the dispatcher's next send fails,
         // it exits, and the window receiver drops — the same state a
         // total mid-run DNN failure leaves behind
         coord.host.as_ref().unwrap().queues.close_all();
-        // feed probes until the dead batcher is observable from
+        // feed probes until the dead dispatcher is observable from
         // submit() (a probe that delivers no window)
         let deadline = Instant::now() + Duration::from_secs(30);
         loop {
@@ -865,7 +654,7 @@ mod tests {
                 break;
             }
             assert!(Instant::now() < deadline,
-                    "batcher never observed the closed shard queues");
+                    "dispatcher never observed the closed shard queues");
             std::thread::sleep(Duration::from_millis(2));
         }
         // THE regression assertions: a submit against the dead
@@ -909,5 +698,38 @@ mod tests {
                    run.reads.len() as u64);
         assert_eq!(m.windows.load(Ordering::Relaxed), expected_windows);
         coord.finish().unwrap();
+    }
+
+    /// A tiered pipeline opens both shard pools and a margin of zero
+    /// never escalates (margins are non-negative), so the run drains
+    /// cleanly with every window decided at the fast tier.
+    #[test]
+    fn tiered_pipeline_opens_and_zero_margin_never_escalates() {
+        let pm = PoreModel::synthetic(7);
+        let run = SequencingRun::simulate(&pm, RunSpec {
+            genome_len: 500,
+            coverage: 1,
+            seed: 21,
+            ..Default::default()
+        });
+        let mut coord = Coordinator::new(CoordinatorConfig {
+            artifacts_dir: no_artifacts_dir(),
+            escalate_margin: Some(0.0),
+            ..Default::default()
+        }).unwrap();
+        let t = coord.tier_set().expect("margin arms tiering").clone();
+        assert!(t.fast_bits < t.hq_bits);
+        assert_eq!(t.hq_bits, 32);
+        assert_eq!(coord.live_hq_shards(), 1);
+        let m = coord.metrics.clone();
+        for r in &run.reads {
+            coord.submit(r);
+        }
+        let out = coord.finish().unwrap();
+        assert_eq!(out.len(), run.reads.len());
+        assert_eq!(m.escalations.load(Ordering::Relaxed), 0,
+                   "zero margin must never escalate");
+        assert!(m.fast_decided.load(Ordering::Relaxed) > 0,
+                "every window was decided at the fast tier");
     }
 }

@@ -61,6 +61,13 @@
 //! a sample→decide→scale control loop that grows the pool under
 //! saturation and retires idle replicas, without ever changing called
 //! output — byte-identical to a fixed-shard run over the same input.
+//!
+//! Setting `CoordinatorConfig::escalate_margin` additionally turns on
+//! **tiered serving**: every window runs a speculative low-bit fast
+//! tier first, and windows whose CTC confidence margin falls below the
+//! threshold are re-queued to a full-precision hq tier (see
+//! `runtime::TierSet` and the escalation contract in
+//! `src/coordinator/README.md`).
 #![warn(missing_docs)]
 
 pub mod util;

@@ -12,7 +12,8 @@ use anyhow::Result;
 use helix::basecall::ctc::BeamPrune;
 use helix::basecall::edit::identity;
 use helix::bench::figures;
-use helix::coordinator::{AutoscaleConfig, Coordinator, CoordinatorConfig};
+use helix::coordinator::{resolve_knob, AutoscaleConfig, Coordinator,
+                         CoordinatorConfig, KnobSource};
 use helix::genome::pore::PoreModel;
 use helix::genome::synth::{RunSpec, SequencingRun};
 use helix::runtime::meta::default_artifacts_dir;
@@ -24,8 +25,10 @@ fn usage() -> ! {
         basecall [--model guppy] [--bits 32] [--genome 2000] [--coverage 5]\n    \
         [--backend native|xla] [--shards N]\n    \
         [--max-shards N [--min-shards N] [--autoscale-tick-ms MS]\n     \
-        [--slo-ms MS] [--autoscale-decode] [--autoscale-vote]]\n    \
-        [--beam-prune DELTA [--beam-floor FLOOR]]\n  \
+        [--slo-ms MS] [--autoscale-decode] [--autoscale-vote]\n     \
+        [--hq-min-shards N] [--hq-max-shards N]]\n    \
+        [--beam-prune DELTA [--beam-floor FLOOR]]\n    \
+        [--escalate-margin M [--tier-bits B]]\n  \
         simulate [--genome 10000] [--coverage 30]\n  \
         figures <fig2|...|fig26|table1..table5|all>\n  \
         schemes\n  \
@@ -34,7 +37,12 @@ fn usage() -> ! {
         HELIX_SHARDS=N\n     \
         HELIX_MAX_SHARDS=N HELIX_MIN_SHARDS=N HELIX_AUTOSCALE_TICK_MS=MS\n     \
         HELIX_SLO_MS=MS HELIX_AUTOSCALE_DECODE=1 HELIX_AUTOSCALE_VOTE=1\n     \
-        HELIX_BEAM_PRUNE=DELTA HELIX_BEAM_FLOOR=FLOOR\n\
+        HELIX_BEAM_PRUNE=DELTA HELIX_BEAM_FLOOR=FLOOR\n     \
+        HELIX_ESCALATE_MARGIN=M HELIX_TIER_BITS=B\n     \
+        HELIX_HQ_MIN_SHARDS=N HELIX_HQ_MAX_SHARDS=N\n\
+        Every knob resolves flag-over-env-over-default; a flag that does \
+        not\n\
+        parse is an error, a malformed env value keeps the default.\n\
         --max-shards (or HELIX_MAX_SHARDS) enables adaptive autoscaling: \
         the DNN\n\
         pool resizes between the min/max bounds from observed utilization \
@@ -49,7 +57,20 @@ fn usage() -> ! {
         not extended, and --beam-floor drops beams more than FLOOR below \
         the\n\
         best survivor. Unset = exhaustive search (byte-identical \
-        baseline).");
+        baseline).\n\
+        --escalate-margin (or HELIX_ESCALATE_MARGIN) arms speculative \
+        tiered\n\
+        serving: windows run on a low-bit fast model (--tier-bits, auto \
+        when\n\
+        unset) and any window whose top-two-beam score margin falls \
+        below M is\n\
+        re-run on the full-precision --bits model. M=0 never escalates; \
+        M=inf\n\
+        escalates everything (byte-identical to a full-precision run); \
+        unset\n\
+        runs the single-tier pipeline. --hq-min/max-shards bound the hq \
+        pool\n\
+        under the autoscaler (defaults: 1 and max-shards).");
     std::process::exit(2);
 }
 
@@ -115,90 +136,111 @@ fn main() -> Result<()> {
                     "unknown --backend '{other}' (native|xla; xla needs \
                      a `--features xla` build)"),
             };
-            // DNN shard count: --shards beats HELIX_SHARDS beats 1.
-            // An explicit flag that doesn't parse is an error (like
-            // --backend), not a silent single-shard fallback.
-            let shards: usize = match f.get("shards") {
-                Some(s) => match s.parse::<usize>() {
-                    Ok(n) if n >= 1 => n,
-                    _ => anyhow::bail!(
-                        "invalid --shards '{s}' (want a positive \
-                         integer)"),
-                },
-                None => CoordinatorConfig::shards_from_env(),
+            // Every serving knob below resolves through ONE rule
+            // (coordinator::config::resolve_knob): an explicit flag
+            // beats the HELIX_* env var beats the default, a flag that
+            // doesn't parse is an error (like --backend), and a
+            // malformed env value silently keeps the default.
+            let pos_usize = |s: &str| {
+                s.parse::<usize>().ok().filter(|&n| n >= 1)
             };
+            let pos_ms = |s: &str| {
+                s.parse::<u64>().ok().filter(|&ms| ms >= 1)
+                    .map(std::time::Duration::from_millis)
+            };
+            let boolish = |s: &str| match s {
+                "1" | "true" => Some(true),
+                "0" | "false" => Some(false),
+                _ => None,
+            };
+            let nonneg_f32 = |s: &str| {
+                s.parse::<f32>().ok()
+                    .filter(|v| v.is_finite() && *v >= 0.0)
+            };
+            // escalation margins may be infinite ("inf" = escalate
+            // everything), just never NaN or negative
+            let margin_f32 = |s: &str| {
+                s.parse::<f32>().ok()
+                    .filter(|v| !v.is_nan() && *v >= 0.0)
+            };
+            const POS_INT: &str = "a positive integer";
+            const POS_MS: &str = "positive milliseconds";
+            const BOOLISH: &str = "bare flag, or 1|true|0|false";
+
+            // DNN shard count: --shards beats HELIX_SHARDS beats 1.
+            let shards: usize =
+                resolve_knob(&f, "shards", "HELIX_SHARDS", POS_INT,
+                             pos_usize)?
+                    .map_or(1, |(n, _)| n);
             // adaptive autoscaling: enabled by --max-shards or
-            // HELIX_MAX_SHARDS (the flag beats the env trio when both
-            // name the ceiling); --min-shards / --autoscale-tick-ms
-            // then refine whichever base enabled it. Like --shards, an
-            // explicit flag that doesn't parse is an error, not a
-            // silent fallback.
-            let base: Option<AutoscaleConfig> = match f.get("max-shards")
+            // HELIX_MAX_SHARDS; the refinement knobs each resolve
+            // flag-over-env on top of whichever base enabled it.
+            let autoscale: Option<AutoscaleConfig> = match resolve_knob(
+                &f, "max-shards", "HELIX_MAX_SHARDS", POS_INT,
+                pos_usize)?
             {
-                Some(s) => match s.parse::<usize>() {
-                    Ok(n) if n >= 1 => Some(AutoscaleConfig {
+                Some((n, _)) => {
+                    let mut a = AutoscaleConfig {
                         max_shards: n,
                         ..AutoscaleConfig::default()
-                    }),
-                    _ => anyhow::bail!(
-                        "invalid --max-shards '{s}' (want a positive \
-                         integer)"),
-                },
-                None => AutoscaleConfig::from_env(),
-            };
-            let autoscale: Option<AutoscaleConfig> = match base {
-                Some(mut a) => {
-                    if let Some(v) = f.get("min-shards") {
-                        a.min_shards = match v.parse::<usize>() {
-                            Ok(n) if n >= 1 => n,
-                            _ => anyhow::bail!(
-                                "invalid --min-shards '{v}' (want a \
-                                 positive integer)"),
-                        };
+                    };
+                    if let Some((v, _)) = resolve_knob(
+                        &f, "min-shards", "HELIX_MIN_SHARDS", POS_INT,
+                        pos_usize)?
+                    {
+                        a.min_shards = v;
                     }
-                    if let Some(v) = f.get("autoscale-tick-ms") {
-                        a.tick = match v.parse::<u64>() {
-                            Ok(ms) if ms >= 1 => {
-                                std::time::Duration::from_millis(ms)
-                            }
-                            _ => anyhow::bail!(
-                                "invalid --autoscale-tick-ms '{v}' \
-                                 (want positive milliseconds)"),
-                        };
+                    if let Some((v, _)) = resolve_knob(
+                        &f, "autoscale-tick-ms",
+                        "HELIX_AUTOSCALE_TICK_MS", POS_MS, pos_ms)?
+                    {
+                        a.tick = v;
                     }
                     // latency SLO: p99 over this budget reads as hot
                     // even when utilization is low (trickle loads)
-                    if let Some(v) = f.get("slo-ms") {
-                        a.slo = match v.parse::<u64>() {
-                            Ok(ms) if ms >= 1 => Some(
-                                std::time::Duration::from_millis(ms)),
-                            _ => anyhow::bail!(
-                                "invalid --slo-ms '{v}' (want positive \
-                                 milliseconds)"),
-                        };
+                    if let Some((v, _)) = resolve_knob(
+                        &f, "slo-ms", "HELIX_SLO_MS", POS_MS, pos_ms)?
+                    {
+                        a.slo = Some(v);
                     }
                     // bare flags: presence (value "1"/"true") opts the
                     // decode/vote pools into the same controller
-                    for (key, field) in [
-                        ("autoscale-decode", &mut a.scale_decode),
-                        ("autoscale-vote", &mut a.scale_vote),
-                    ] {
-                        if let Some(v) = f.get(key) {
-                            *field = match v.as_str() {
-                                "1" | "true" => true,
-                                "0" | "false" => false,
-                                _ => anyhow::bail!(
-                                    "invalid --{key} '{v}' (bare flag, \
-                                     or 1|true|0|false)"),
-                            };
-                        }
+                    if let Some((v, _)) = resolve_knob(
+                        &f, "autoscale-decode", "HELIX_AUTOSCALE_DECODE",
+                        BOOLISH, boolish)?
+                    {
+                        a.scale_decode = v;
+                    }
+                    if let Some((v, _)) = resolve_knob(
+                        &f, "autoscale-vote", "HELIX_AUTOSCALE_VOTE",
+                        BOOLISH, boolish)?
+                    {
+                        a.scale_vote = v;
+                    }
+                    // hq-tier pool bounds (used when --escalate-margin
+                    // arms tiered serving; harmless otherwise)
+                    if let Some((v, _)) = resolve_knob(
+                        &f, "hq-min-shards", "HELIX_HQ_MIN_SHARDS",
+                        POS_INT, pos_usize)?
+                    {
+                        a.hq_min_shards = v;
+                    }
+                    if let Some((v, _)) = resolve_knob(
+                        &f, "hq-max-shards", "HELIX_HQ_MAX_SHARDS",
+                        POS_INT, pos_usize)?
+                    {
+                        a.hq_max_shards = v;
                     }
                     Some(a.normalized())
                 }
                 None => {
+                    // refinement FLAGS without a base are operator
+                    // errors; the same settings arriving via env are
+                    // ignored (a CI profile may export them globally)
                     for key in ["min-shards", "autoscale-tick-ms",
                                 "slo-ms", "autoscale-decode",
-                                "autoscale-vote"] {
+                                "autoscale-vote", "hq-min-shards",
+                                "hq-max-shards"] {
                         if f.contains_key(key) {
                             anyhow::bail!(
                                 "--{key} needs autoscaling enabled via \
@@ -209,30 +251,21 @@ fn main() -> Result<()> {
                 }
             };
             // pruned beam search: --beam-prune beats HELIX_BEAM_PRUNE;
-            // --beam-floor refines whichever base enabled it. As with
-            // the other flags, unparsable values are errors, not
-            // silent fallbacks.
-            let base_prune: Option<BeamPrune> = match f.get("beam-prune") {
-                Some(s) => match s.parse::<f32>() {
-                    Ok(d) if d.is_finite() && d >= 0.0 => {
-                        Some(BeamPrune { symbol_delta: d,
-                                         ..BeamPrune::defaults() })
-                    }
-                    _ => anyhow::bail!(
-                        "invalid --beam-prune '{s}' (want a nonnegative \
-                         log-prob delta)"),
-                },
-                None => BeamPrune::from_env(),
-            };
-            let prune: Option<BeamPrune> = match base_prune {
-                Some(mut p) => {
-                    if let Some(v) = f.get("beam-floor") {
-                        p.score_floor = match v.parse::<f32>() {
-                            Ok(fl) if fl.is_finite() && fl >= 0.0 => fl,
-                            _ => anyhow::bail!(
-                                "invalid --beam-floor '{v}' (want a \
-                                 nonnegative log-prob distance)"),
-                        };
+            // --beam-floor refines whichever base enabled it.
+            let prune: Option<BeamPrune> = match resolve_knob(
+                &f, "beam-prune", "HELIX_BEAM_PRUNE",
+                "a nonnegative log-prob delta", nonneg_f32)?
+            {
+                Some((d, _)) => {
+                    let mut p = BeamPrune {
+                        symbol_delta: d,
+                        ..BeamPrune::defaults()
+                    };
+                    if let Some((fl, _)) = resolve_knob(
+                        &f, "beam-floor", "HELIX_BEAM_FLOOR",
+                        "a nonnegative log-prob distance", nonneg_f32)?
+                    {
+                        p.score_floor = fl;
                     }
                     Some(p)
                 }
@@ -244,6 +277,27 @@ fn main() -> Result<()> {
                     }
                     None
                 }
+            };
+            // speculative tiered serving: --escalate-margin arms the
+            // fast/hq pair; --tier-bits optionally pins the fast
+            // bit-width (auto-selected from the artifact ladder when
+            // unset). A typed --tier-bits without a margin is an
+            // operator error; HELIX_TIER_BITS alone is ignored.
+            let escalate_margin: Option<f32> = resolve_knob(
+                &f, "escalate-margin", "HELIX_ESCALATE_MARGIN",
+                "a non-negative log-prob margin, or 'inf'", margin_f32)?
+                .map(|(m, _)| m);
+            let tier_bits: Option<u32> = match resolve_knob(
+                &f, "tier-bits", "HELIX_TIER_BITS",
+                "a positive bit-width",
+                |s: &str| s.parse::<u32>().ok().filter(|&b| b >= 1))?
+            {
+                Some((_, KnobSource::Flag)) if escalate_margin.is_none() =>
+                    anyhow::bail!("--tier-bits needs --escalate-margin \
+                                   or HELIX_ESCALATE_MARGIN"),
+                Some(_) if escalate_margin.is_none() => None,
+                Some((b, _)) => Some(b),
+                None => None,
             };
             kind.prepare(&dir)?;
             let pm = PoreModel::load(&format!("{dir}/pore_model.json"))?;
@@ -283,8 +337,15 @@ fn main() -> Result<()> {
                 dnn_shards: shards,
                 autoscale,
                 prune,
+                escalate_margin,
+                tier_bits,
                 ..Default::default()
             })?;
+            if let (Some(t), Some(m)) = (coord.tier_set(),
+                                         escalate_margin) {
+                println!("tiered serving: fast {}b -> hq {}b, escalate \
+                          when margin < {m}", t.fast_bits, t.hq_bits);
+            }
             let t0 = std::time::Instant::now();
             // stream: collect reads the moment they complete, while later
             // reads are still being submitted

@@ -9,6 +9,8 @@
 //! * `swar`: the u64 lane-parallel integer kernels the native
 //!   executor's hot path runs on, bit-exact against its scalar
 //!   reference.
+//! * `tier`: fast/hq model-pair selection over one artifact ladder,
+//!   backing the coordinator's speculative tiered serving.
 //!
 //! Either way, python is never on the serving path.
 
@@ -18,9 +20,11 @@ pub mod executable;
 pub mod meta;
 pub mod native;
 pub mod swar;
+pub mod tier;
 
 pub use backend::{Backend, BackendKind, ShardFactory};
 #[cfg(feature = "xla")]
 pub use executable::{Engine, ModelExecutable};
 pub use meta::{ArtifactEntry, Meta};
 pub use native::NativeBackend;
+pub use tier::{Tier, TierSet};

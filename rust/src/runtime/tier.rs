@@ -1,0 +1,195 @@
+//! Tiered model serving: a fast (low-bit) / hq (full-precision) model
+//! pair drawn from one artifact ladder.
+//!
+//! The quantization sweep (`pim::schemes`, realized in-tree as the
+//! native backend's per-bit-width `QuantModel`s) exports the *same*
+//! model family at several bit-widths. A [`TierSet`] picks two rungs of
+//! that ladder — the configured `bits` as the **hq** tier and a
+//! lower-precision rung as the **fast** tier — so the coordinator can
+//! route every window through the cheap model first and escalate only
+//! the low-confidence ones to the expensive one (RUBICON-style
+//! speculative serving). Both tiers come from the *same*
+//! `ShardFactory`: a native backend replica holds every exported
+//! bit-width and `warm(model, bits)` selects one, so a tier pool costs
+//! exactly what a same-size single-tier pool costs.
+
+use anyhow::Result;
+
+use super::meta::Meta;
+
+/// Which model tier a window is routed to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    /// the low-bit speculative tier every fresh window runs through
+    /// when tiered serving is on.
+    Fast,
+    /// the full-precision tier: the only tier of an untiered pipeline,
+    /// and the escalation target of a tiered one.
+    Hq,
+}
+
+impl Tier {
+    /// Stable lowercase name for logs and the bench JSON.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Tier::Fast => "fast",
+            Tier::Hq => "hq",
+        }
+    }
+}
+
+/// Preferred fast-tier bit-width when the operator does not pick one:
+/// the classic int8 rung balances speed against escalation rate.
+const PREFERRED_FAST_BITS: u32 = 8;
+
+/// A fast/hq model pair resolved against an artifact ladder.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TierSet {
+    /// model family both tiers execute.
+    pub model: String,
+    /// bit-width of the speculative fast tier (strictly below
+    /// `hq_bits`).
+    pub fast_bits: u32,
+    /// bit-width of the full-precision hq tier (the pipeline's
+    /// configured `bits`).
+    pub hq_bits: u32,
+}
+
+impl TierSet {
+    /// Resolve a tier pair from the artifact ladder: `hq_bits` is the
+    /// configured model width, and the fast tier is `fast_override`
+    /// when given (it must exist in the ladder and sit strictly below
+    /// `hq_bits`) or else auto-picked — the preferred
+    /// [`PREFERRED_FAST_BITS`] rung when the ladder exports it below
+    /// `hq_bits`, otherwise the *largest* exported width below
+    /// `hq_bits` (closest precision, smallest accuracy gap). Errors
+    /// when the ladder has no rung below `hq_bits` at all.
+    pub fn from_meta(meta: &Meta, model: &str, hq_bits: u32,
+                     fast_override: Option<u32>) -> Result<TierSet> {
+        let mut ladder: Vec<u32> = meta.entries.iter()
+            .filter(|e| e.model == model)
+            .map(|e| e.bits)
+            .collect();
+        ladder.sort_unstable();
+        ladder.dedup();
+        anyhow::ensure!(ladder.contains(&hq_bits),
+                        "no artifacts for {model}/{hq_bits}b");
+        let fast_bits = match fast_override {
+            Some(b) => {
+                anyhow::ensure!(
+                    ladder.contains(&b),
+                    "no artifacts for {model}/{b}b (--tier-bits; ladder \
+                     exports {ladder:?})");
+                anyhow::ensure!(
+                    b < hq_bits,
+                    "--tier-bits {b} must be below the hq width \
+                     {hq_bits} (the fast tier is the cheaper model)");
+                b
+            }
+            None => {
+                let below: Vec<u32> = ladder.iter().copied()
+                    .filter(|&b| b < hq_bits)
+                    .collect();
+                match below.iter().copied()
+                    .find(|&b| b == PREFERRED_FAST_BITS)
+                    .or_else(|| below.last().copied())
+                {
+                    Some(b) => b,
+                    None => anyhow::bail!(
+                        "tiered serving needs a ladder rung below \
+                         {hq_bits}b for {model}, but the artifacts only \
+                         export {ladder:?}"),
+                }
+            }
+        };
+        Ok(TierSet {
+            model: model.to_string(),
+            fast_bits,
+            hq_bits,
+        })
+    }
+
+    /// Bit-width the given tier executes at.
+    pub fn bits_for(&self, tier: Tier) -> u32 {
+        match tier {
+            Tier::Fast => self.fast_bits,
+            Tier::Hq => self.hq_bits,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{Backend, NativeBackend};
+
+    fn builtin_meta() -> Meta {
+        NativeBackend::builtin().meta().clone()
+    }
+
+    #[test]
+    fn default_fast_tier_prefers_int8() {
+        // builtin ladder: [5, 8, 16, 32]
+        let ts = TierSet::from_meta(&builtin_meta(), "guppy", 32, None)
+            .unwrap();
+        assert_eq!(ts, TierSet {
+            model: "guppy".into(),
+            fast_bits: 8,
+            hq_bits: 32,
+        });
+        assert_eq!(ts.bits_for(Tier::Fast), 8);
+        assert_eq!(ts.bits_for(Tier::Hq), 32);
+        // 8 also wins under a 16b hq tier
+        let ts16 = TierSet::from_meta(&builtin_meta(), "guppy", 16, None)
+            .unwrap();
+        assert_eq!(ts16.fast_bits, 8);
+    }
+
+    #[test]
+    fn default_falls_back_to_largest_rung_below_hq() {
+        // hq = 8: the preferred 8b rung is not below it, so the fast
+        // tier takes the largest remaining rung (5)
+        let ts = TierSet::from_meta(&builtin_meta(), "guppy", 8, None)
+            .unwrap();
+        assert_eq!(ts.fast_bits, 5);
+    }
+
+    #[test]
+    fn no_rung_below_hq_is_an_error() {
+        let err = TierSet::from_meta(&builtin_meta(), "guppy", 5, None)
+            .unwrap_err();
+        assert!(err.to_string().contains("ladder rung below"),
+                "{err}");
+    }
+
+    #[test]
+    fn override_must_exist_and_sit_below_hq() {
+        let meta = builtin_meta();
+        let ts = TierSet::from_meta(&meta, "guppy", 32, Some(5)).unwrap();
+        assert_eq!(ts.fast_bits, 5);
+        // a rung the ladder does not export
+        let err = TierSet::from_meta(&meta, "guppy", 32, Some(7))
+            .unwrap_err();
+        assert!(err.to_string().contains("no artifacts"), "{err}");
+        // a rung at or above the hq width
+        let err = TierSet::from_meta(&meta, "guppy", 16, Some(32))
+            .unwrap_err();
+        assert!(err.to_string().contains("below the hq width"), "{err}");
+        let err = TierSet::from_meta(&meta, "guppy", 16, Some(16))
+            .unwrap_err();
+        assert!(err.to_string().contains("below the hq width"), "{err}");
+    }
+
+    #[test]
+    fn unknown_model_is_an_error() {
+        let err = TierSet::from_meta(&builtin_meta(), "nope", 32, None)
+            .unwrap_err();
+        assert!(err.to_string().contains("no artifacts"), "{err}");
+    }
+
+    #[test]
+    fn tier_names_are_stable() {
+        assert_eq!(Tier::Fast.name(), "fast");
+        assert_eq!(Tier::Hq.name(), "hq");
+    }
+}

@@ -885,3 +885,207 @@ fn coordinator_unknown_model_fails_at_init() {
     });
     assert!(err.is_err());
 }
+
+// ---- speculative tiered serving (escalate_margin) ----
+
+/// Call a run through a tiered pipeline (escalation armed) with a
+/// fixed shard count per tier, returning sorted reads + metrics.
+fn call_run_tiered(run: &helix::genome::synth::SequencingRun,
+                   margin: f32, tier_bits: Option<u32>)
+                   -> (Vec<helix::coordinator::CalledRead>,
+                       Arc<Metrics>) {
+    let mut coord = Coordinator::new(CoordinatorConfig {
+        model: "guppy".into(),
+        bits: 32,
+        dnn_shards: 1,
+        policy: helix::coordinator::BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+        },
+        escalate_margin: Some(margin),
+        tier_bits,
+        artifacts_dir: no_artifacts_dir(),
+        ..Default::default()
+    }).unwrap();
+    for r in &run.reads {
+        coord.submit(r);
+    }
+    let metrics = coord.metrics.clone();
+    let called = coord.finish().unwrap();
+    (called, metrics)
+}
+
+/// Escalate-NEVER pin: margin 0 with the fast tier pinned at 8 bits
+/// decides every window on the fast model, so the output must be
+/// byte-identical to a plain single-tier 8-bit run. This pins the
+/// fast-path decode (top-2 beam search, margin measurement, tier
+/// routing) as a pure superset of the classic decode: measuring
+/// confidence must never change what gets called.
+#[test]
+fn tiered_zero_margin_matches_plain_fast_bits_run() {
+    let run = sim_run(900, 3, 53);
+    let mut plain = Coordinator::new(CoordinatorConfig {
+        model: "guppy".into(),
+        bits: 8,
+        dnn_shards: 1,
+        policy: helix::coordinator::BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+        },
+        artifacts_dir: no_artifacts_dir(),
+        ..Default::default()
+    }).unwrap();
+    for r in &run.reads {
+        plain.submit(r);
+    }
+    let base = plain.finish().unwrap();
+    assert_eq!(base.len(), run.reads.len());
+
+    let (tiered, m) = call_run_tiered(&run, 0.0, Some(8));
+    assert_eq!(m.escalations.load(Ordering::SeqCst), 0,
+               "zero margin must never escalate");
+    assert!(m.fast_decided.load(Ordering::SeqCst) > 0);
+    assert_eq!(tiered.len(), base.len());
+    for (a, b) in base.iter().zip(&tiered) {
+        assert_eq!(a.read_id, b.read_id);
+        assert_eq!(a.seq, b.seq,
+                   "read {} diverged: tiered fast path is not a pure \
+                    superset of the plain 8b decode", a.read_id);
+        assert_eq!(a.window_decodes, b.window_decodes);
+    }
+}
+
+/// Escalate-EVERYTHING pin, across seeds: with an infinite margin every
+/// fast decode re-queues (with beam width >= 2 the top-2 margin is
+/// always finite), so the collected output must be byte-identical to
+/// an hq-only run — the escalation path (side channel, requeue lane,
+/// hq pool, collector wait-for-replacement) reproduces the hq result
+/// exactly, just after a speculative fast pass.
+#[test]
+fn escalate_everything_matches_hq_only() {
+    for seed in [3, 29, 71] {
+        let run = sim_run(600, 2, seed);
+        let (base, _m) = call_run_with_shards(&run, 1);
+        assert_eq!(base.len(), run.reads.len());
+
+        let (tiered, m) = call_run_tiered(&run, f32::INFINITY, None);
+        let fast = m.fast_decided.load(Ordering::SeqCst);
+        let esc = m.escalations.load(Ordering::SeqCst);
+        assert!(fast > 0, "seed {seed}: no fast decisions recorded");
+        assert_eq!(esc, fast,
+                   "seed {seed}: infinite margin must escalate every \
+                    fast-decided window");
+        assert!(m.escalation_latency.count() > 0,
+                "seed {seed}: escalated windows must record round-trip \
+                 latency");
+        assert!((m.escalation_rate() - 1.0).abs() < 1e-9);
+        let report = m.report(4);
+        assert!(report.contains("tier fast"), "{report}");
+        assert!(report.contains("esc-lat"), "{report}");
+
+        assert_eq!(tiered.len(), base.len());
+        for (a, b) in base.iter().zip(&tiered) {
+            assert_eq!(a.read_id, b.read_id);
+            assert_eq!(a.seq, b.seq,
+                       "seed {seed} read {}: escalated output diverged \
+                        from the hq-only run", a.read_id);
+            assert_eq!(a.window_decodes, b.window_decodes,
+                       "seed {seed} read {}: window decodes diverged",
+                       a.read_id);
+        }
+    }
+}
+
+/// Soak/chaos for the tier fabric: every window escalates while the
+/// autoscaler churns BOTH shard pools (fast replicas retire with
+/// escalations of their windows still in flight — the re-queued window
+/// must survive its origin shard's retirement). Output must stay
+/// byte-identical to the fixed hq-only run, no read lost, in_flight
+/// settling at 0. `HELIX_CI_SOAK=1` runs the long variant.
+#[test]
+fn soak_chaos_tiered_escalation_keeps_output_identical() {
+    let slow = std::env::var("HELIX_CI_SOAK")
+        .map(|v| v == "1").unwrap_or(false);
+    let (genome, coverage, waves, gap_ms) =
+        if slow { (2400, 6, 8, 300) } else { (900, 3, 3, 100) };
+    let run = sim_run(genome, coverage, 193);
+    let (fixed, _m) = call_run_with_shards(&run, 1);
+    assert_eq!(fixed.len(), run.reads.len());
+
+    let mut coord = Coordinator::new(CoordinatorConfig {
+        model: "guppy".into(),
+        bits: 32,
+        dnn_shards: 1,
+        decode_threads: 3,
+        policy: BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+        },
+        escalate_margin: Some(f32::INFINITY),
+        autoscale: Some(AutoscaleConfig {
+            min_shards: 1,
+            max_shards: 3,
+            hq_min_shards: 1,
+            hq_max_shards: 3,
+            tick: Duration::from_millis(2),
+            // deliberately churny: waves read hot almost immediately,
+            // gaps read cold within a few ticks
+            high_util: 0.10,
+            low_util: 0.05,
+            up_ticks: 1,
+            down_ticks: 2,
+            cooldown_ticks: 0,
+            ..AutoscaleConfig::default()
+        }),
+        artifacts_dir: no_artifacts_dir(),
+        ..Default::default()
+    }).unwrap();
+
+    let mut called = Vec::new();
+    let chunk = run.reads.len().div_ceil(waves).max(1);
+    for wave in run.reads.chunks(chunk) {
+        for r in wave {
+            coord.submit(r);
+            called.extend(coord.drain_ready());
+        }
+        let gap_deadline =
+            Instant::now() + Duration::from_millis(gap_ms);
+        while Instant::now() < gap_deadline {
+            called.extend(coord.drain_ready());
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+    let settle_deadline = Instant::now() + Duration::from_secs(60);
+    while coord.in_flight() > 0 && Instant::now() < settle_deadline {
+        called.extend(coord.drain_ready());
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(coord.in_flight(), 0,
+               "in_flight must settle at 0 despite every window taking \
+                the escalation round-trip");
+    let metrics = coord.metrics.clone();
+    called.extend(coord.finish().unwrap());
+
+    assert_eq!(called.len(), run.reads.len(), "tier chaos lost reads");
+    called.sort_by_key(|c| c.read_id);
+    for (a, b) in fixed.iter().zip(&called) {
+        assert_eq!(a.read_id, b.read_id);
+        assert_eq!(a.seq, b.seq,
+                   "read {} consensus diverged under tiered chaos",
+                   a.read_id);
+        assert_eq!(a.window_decodes, b.window_decodes,
+                   "read {} window decodes diverged under tiered chaos",
+                   a.read_id);
+    }
+    assert!(metrics.escalations.load(Ordering::SeqCst) > 0,
+            "the soak is only meaningful if windows escalated");
+    // the churn must have actually retired a fast shard mid-run, i.e.
+    // escalations survived their origin replica's retirement
+    let events = metrics.scale_events();
+    let fast_downs = events.iter()
+        .filter(|e| e.stage == StageId::Dnn
+                && e.action == ScaleAction::Down)
+        .count();
+    assert!(fast_downs >= 1,
+            "gaps must have retired a fast shard: {events:?}");
+}
