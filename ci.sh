@@ -81,8 +81,10 @@ fi
 
 # opt-in long-run soak/chaos pass: sustained bursty load with the
 # autoscaler churning every stage while output must stay byte-identical
-# and no read may be lost. The short variant of the same test runs in
-# the normal `cargo test` above; HELIX_CI_SOAK=1 sizes it up.
+# and no read may be lost, plus the TCP serving chaos (greedy tenant
+# flooding past its quota, trickle tenants that must not starve, a
+# client killed mid-flight). The short variants of the same tests run
+# in the normal `cargo test` above; HELIX_CI_SOAK=1 sizes them up.
 if [ "${HELIX_CI_SOAK:-0}" = "1" ]; then
     echo "== HELIX_CI_SOAK=1 cargo test --release soak (long variant)"
     HELIX_CI_SOAK=1 cargo test -q --release --test coordinator_stream \
@@ -138,6 +140,14 @@ if [ "${1:-}" = "bench" ]; then
     if ! grep -q '"tier_rows"' BENCH_coordinator.json; then
         echo "ci.sh: FAIL — BENCH_coordinator.json has no tier_rows" \
              "section (tiered-serving sweep missing)" >&2
+        exit 1
+    fi
+    # ... and so is the TCP serving section: the multi-tenant wire
+    # front-end (many-small vs few-huge tenant shapes over a real
+    # socket) must emit its rows
+    if ! grep -q '"serve_rows"' BENCH_coordinator.json; then
+        echo "ci.sh: FAIL — BENCH_coordinator.json has no serve_rows" \
+             "section (TCP serving bench missing)" >&2
         exit 1
     fi
     echo "wrote $(pwd)/BENCH_coordinator.json"

@@ -6,7 +6,10 @@
 //! scale-event trace showing the pool converging upward), and the
 //! tiered-serving accuracy-vs-throughput sweep (`tier_rows`: hq
 //! agreement and escalation cost across `--escalate-margin` values,
-//! with an hq-only baseline row). Self-contained:
+//! with an hq-only baseline row), and the multi-tenant TCP front-end
+//! (`serve_rows`: many-small vs few-huge tenant shapes over a real
+//! socket, measuring wire-path cost against the library numbers).
+//! Self-contained:
 //! runs on the native quantized backend by default (artifacts are
 //! materialized on first run); HELIX_BACKEND=xla on a `--features xla`
 //! build benchmarks the PJRT engine over `make artifacts` output instead.
@@ -426,6 +429,91 @@ fn main() {
             fastbits.0, fastbits.1);
     }
 
+    // Multi-tenant TCP serving: the same pipeline behind the wire
+    // front-end (`coordinator::net`), measured in two tenant shapes.
+    // "many-small" fans the run's reads across 8 concurrent clients —
+    // the per-connection/framing overhead and fan-in path; "few-huge"
+    // streams long concatenated signals from 2 clients — the sustained
+    // single-stream throughput path. Quota is unlimited here (admission
+    // *behavior* is pinned by the test suite); the axis being tracked
+    // is wire-path cost vs the in-process library numbers above.
+    println!("\n== tcp serving ({} reads) ==", run.reads.len());
+    let mut serve_rows: Vec<String> = Vec::new();
+    let serve_summary;
+    {
+        use helix::coordinator::{Client, ServeConfig, Server};
+        let small: Vec<Vec<f32>> = run.reads.iter()
+            .map(|r| r.signal.clone()).collect();
+        let huge: Vec<Vec<f32>> = (0..4usize)
+            .map(|lane| {
+                let mut s = Vec::new();
+                for r in run.reads.iter().skip(lane).step_by(4) {
+                    s.extend_from_slice(&r.signal);
+                }
+                s
+            })
+            .collect();
+        let scenarios: [(&str, usize, &Vec<Vec<f32>>); 2] =
+            [("many-small", 8, &small), ("few-huge", 2, &huge)];
+        for (label, clients, signals) in scenarios {
+            let server = Server::start(CoordinatorConfig {
+                model: "guppy".into(),
+                bits: 32,
+                backend: kind,
+                policy: BatchPolicy {
+                    max_batch: 8,
+                    max_wait: Duration::from_millis(5),
+                },
+                artifacts_dir: dir.clone(),
+                ..Default::default()
+            }, ServeConfig {
+                tenant_quota: 0,
+                ..ServeConfig::default()
+            }).unwrap();
+            let addr = server.local_addr();
+            let t0 = std::time::Instant::now();
+            let handles: Vec<_> = (0..clients).map(|lane| {
+                let mine: Vec<Vec<f32>> = signals.iter().enumerate()
+                    .filter(|(i, _)| i % clients == lane)
+                    .map(|(_, s)| s.clone()).collect();
+                std::thread::spawn(move || {
+                    let mut c = Client::connect(addr).unwrap();
+                    for (i, s) in mine.iter().enumerate() {
+                        c.submit(i as u64, s).unwrap();
+                    }
+                    let summary = c.drain().unwrap();
+                    let bases: usize = summary.results.iter()
+                        .map(|(_, s)| s.len()).sum();
+                    (summary.results.len(), bases)
+                })
+            }).collect();
+            let mut reads_out = 0usize;
+            let mut bases = 0usize;
+            for h in handles {
+                let (r, b) = h.join().unwrap();
+                reads_out += r;
+                bases += b;
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            let m = server.metrics();
+            let p99_ms =
+                m.read_latency.quantile_micros(0.99) as f64 / 1e3;
+            server.shutdown().unwrap();
+            println!("{label:<12} {clients} clients  {dt:>8.2}s  \
+                      {:>9.0} bases/s   {reads_out} reads  \
+                      lat p99 {p99_ms:.1}ms",
+                     bases as f64 / dt);
+            serve_rows.push(format!(
+                "{{\"scenario\": \"{label}\", \"clients\": {clients}, \
+                 \"reads\": {reads_out}, \"wall_s\": {dt:.3}, \
+                 \"bases_per_s\": {:.0}, \"p99_ms\": {p99_ms:.2}}}",
+                bases as f64 / dt));
+        }
+        serve_summary =
+            format!("{{\"scenarios\": {}, \"tenant_quota\": 0}}",
+                    serve_rows.len());
+    }
+
     // machine-readable summary for the perf trajectory (see ci.sh);
     // field semantics are documented in docs/TUNING.md
     let json = format!(
@@ -433,11 +521,13 @@ fn main() {
          \"reads\": {}, \"bases\": {}, \"rows\": [{}], \
          \"shard_rows\": [{}], \"autoscale\": {}, \
          \"autoscale_rows\": [{}], \"slo\": {}, \
-         \"slo_rows\": [{}], \"tier\": {}, \"tier_rows\": [{}]}}\n",
+         \"slo_rows\": [{}], \"tier\": {}, \"tier_rows\": [{}], \
+         \"serve\": {}, \"serve_rows\": [{}]}}\n",
         kind.name(), run.reads.len(), total_bases, rows.join(", "),
         shard_rows.join(", "), autoscale_summary,
         autoscale_rows.join(", "), slo_summary, slo_rows.join(", "),
-        tier_summary, tier_rows.join(", "));
+        tier_summary, tier_rows.join(", "),
+        serve_summary, serve_rows.join(", "));
     match std::fs::write("BENCH_coordinator.json", &json) {
         Ok(()) => println!("\nwrote BENCH_coordinator.json"),
         Err(e) => println!("\ncould not write BENCH_coordinator.json: {e}"),

@@ -46,6 +46,9 @@ pub struct DecodedWindow {
     pub read_id: usize,
     /// position of the window within the read.
     pub window_idx: usize,
+    /// owning tenant of the read (0 = in-process library submission;
+    /// see `Coordinator::submit_tagged`).
+    pub tenant: u64,
     /// decoded base fragment.
     pub seq: Vec<u8>,
 }
@@ -53,6 +56,26 @@ pub struct DecodedWindow {
 struct ReadEntry {
     expected: usize,
     submitted_at: Instant,
+    tenant: u64,
+    /// the owning connection disconnected mid-flight: the entry stays
+    /// until the read's windows drain (so `in_flight()` reflects work
+    /// still in the pipeline), but the completed assembly is dropped
+    /// at the router instead of being voted and emitted.
+    cancelled: bool,
+}
+
+/// What the router learns when a read's last window arrives (the entry
+/// is removed either way — see [`ReadRegistry::complete`]).
+enum Completion {
+    /// the read is wanted: vote it and emit, stamping the latency from
+    /// `submitted_at` and routing by `tenant`.
+    Live { submitted_at: Instant, tenant: u64 },
+    /// the owning tenant disconnected: drop the assembly.
+    Cancelled { tenant: u64 },
+    /// the read was never registered (windows injected without a
+    /// `submit()`, e.g. collector unit tests): flush-complete it with
+    /// no latency stamp.
+    Unregistered,
 }
 
 /// Shared bookkeeping between `Coordinator::submit()` (which knows how
@@ -66,20 +89,61 @@ pub struct ReadRegistry {
 
 impl ReadRegistry {
     /// Record a read's expected window count (call BEFORE its first
-    /// window enters the pipeline).
+    /// window enters the pipeline). Untenanted: equivalent to
+    /// `register_tenant(read_id, expected, 0)`.
     pub fn register(&self, read_id: usize, expected: usize) {
+        self.register_tenant(read_id, expected, 0);
+    }
+
+    /// Record a read's expected window count together with its owning
+    /// tenant (0 = in-process library submission, a connection id for
+    /// reads arriving over `coordinator::net`).
+    pub fn register_tenant(&self, read_id: usize, expected: usize,
+                           tenant: u64) {
         self.inner.lock().unwrap().insert(read_id, ReadEntry {
             expected,
             submitted_at: Instant::now(),
+            tenant,
+            cancelled: false,
         });
+    }
+
+    /// Mark every in-flight read of `tenant` cancelled: its windows
+    /// keep draining through the pipeline (so backpressure and
+    /// `in_flight()` stay truthful), but the router drops each
+    /// completed assembly instead of voting and emitting it. Returns
+    /// the number of reads marked. Cancelling tenant 0 is refused —
+    /// that would silently discard library-path reads.
+    pub fn cancel_tenant(&self, tenant: u64) -> usize {
+        if tenant == 0 {
+            return 0;
+        }
+        let mut n = 0;
+        for e in self.inner.lock().unwrap().values_mut() {
+            if e.tenant == tenant && !e.cancelled {
+                e.cancelled = true;
+                n += 1;
+            }
+        }
+        n
     }
 
     fn expected(&self, read_id: usize) -> Option<usize> {
         self.inner.lock().unwrap().get(&read_id).map(|e| e.expected)
     }
 
-    fn take_submitted_at(&self, read_id: usize) -> Option<Instant> {
-        self.inner.lock().unwrap().remove(&read_id).map(|e| e.submitted_at)
+    /// Remove a read's entry at assembly completion and report what to
+    /// do with it (vote, drop, or flush without a latency stamp).
+    fn complete(&self, read_id: usize) -> Completion {
+        match self.inner.lock().unwrap().remove(&read_id) {
+            Some(e) if e.cancelled =>
+                Completion::Cancelled { tenant: e.tenant },
+            Some(e) => Completion::Live {
+                submitted_at: e.submitted_at,
+                tenant: e.tenant,
+            },
+            None => Completion::Unregistered,
+        }
     }
 
     /// Drop a registration whose windows never entered the pipeline
@@ -121,6 +185,7 @@ impl Default for CollectorConfig {
 
 struct VoteJob {
     read_id: usize,
+    tenant: u64,
     decodes: Vec<Vec<u8>>,
     submitted_at: Option<Instant>,
 }
@@ -162,6 +227,7 @@ impl Collector {
         // each spawned worker. The closure's prototype sender is the
         // reason finish() drops the pool before draining: the output
         // queue disconnects only when every sender is gone.
+        let m_router = metrics.clone();
         let vote_pool = {
             let m = metrics.clone();
             WorkerPool::new(
@@ -183,11 +249,17 @@ impl Collector {
                             m.add(&m.bases_called, seq.len() as u64);
                             m.add(&m.reads_out, 1);
                             if let Some(t) = job.submitted_at {
-                                m.read_latency
-                                    .record(t.elapsed().as_micros() as u64);
+                                let us = t.elapsed().as_micros() as u64;
+                                m.read_latency.record(us);
+                                if job.tenant != 0 {
+                                    let ts = m.tenant(job.tenant);
+                                    m.add(&ts.reads_out, 1);
+                                    ts.latency.record(us);
+                                }
                             }
                             if out.send(CalledRead {
                                 read_id: job.read_id,
+                                tenant: job.tenant,
                                 seq,
                                 window_decodes: job.decodes,
                             }).is_err() {
@@ -204,14 +276,33 @@ impl Collector {
             let mut rr = 0usize;
             // skip-over-backlogged round-robin to the vote pool; a
             // `false` return means every vote worker died — the job is
-            // lost, which Collector::finish surfaces as a panic error
+            // lost, which Collector::finish surfaces as a panic error.
+            // A read whose tenant disconnected mid-flight is dropped
+            // HERE, at assembly completion: its registry entry kept
+            // in_flight() truthful while its windows drained, and no
+            // vote work is spent on a result nobody can receive.
             let dispatch = |read_id: usize, a: Assembly, rr: &mut usize| {
+                let (submitted_at, tenant) =
+                    match registry.complete(read_id) {
+                        Completion::Cancelled { tenant } => {
+                            m_router.add(&m_router.dropped_reads, 1);
+                            if tenant != 0 {
+                                m_router.add(
+                                    &m_router.tenant(tenant).dropped, 1);
+                            }
+                            return true;
+                        }
+                        Completion::Live { submitted_at, tenant } =>
+                            (Some(submitted_at), tenant),
+                        Completion::Unregistered => (None, 0),
+                    };
                 let decodes: Vec<Vec<u8>> =
                     a.wins.into_iter().flatten().collect();
                 vote_queues.send_round_robin(rr, VoteJob {
                     read_id,
+                    tenant,
                     decodes,
-                    submitted_at: registry.take_submitted_at(read_id),
+                    submitted_at,
                 })
             };
             while let Ok(d) = rx_decoded.recv() {
@@ -337,7 +428,7 @@ mod tests {
     }
 
     fn win(read_id: usize, window_idx: usize, seq: &[u8]) -> DecodedWindow {
-        DecodedWindow { read_id, window_idx, seq: seq.to_vec() }
+        DecodedWindow { read_id, window_idx, tenant: 0, seq: seq.to_vec() }
     }
 
     #[test]
@@ -413,6 +504,70 @@ mod tests {
         assert_eq!(out[0].window_decodes.len(), 2);
         assert_eq!(out[0].window_decodes[0][0], 0);
         assert_eq!(out[0].window_decodes[1][0], 2);
+    }
+
+    /// A tenant disconnect mid-flight: the read's windows keep
+    /// draining (in_flight() stays truthful until the last one lands),
+    /// but the completed assembly is dropped at the router — no vote,
+    /// no emission — and `dropped_reads` records the drop.
+    #[test]
+    fn cancelled_tenant_read_drops_at_completion() {
+        use std::sync::atomic::Ordering;
+        let (reg, tx, col, m) = spawn_collector(64);
+        reg.register_tenant(11, 2, 5);
+        reg.register_tenant(12, 1, 6);
+        tx.send(DecodedWindow {
+            read_id: 11, window_idx: 0, tenant: 5, seq: vec![1, 2, 3, 0],
+        }).unwrap();
+        assert_eq!(reg.cancel_tenant(5), 1, "one read of tenant 5 marked");
+        assert_eq!(reg.in_flight(), 2,
+                   "cancelled read still drains through the pipeline");
+        // the cancelled read's last window arrives: dropped, not voted
+        tx.send(DecodedWindow {
+            read_id: 11, window_idx: 1, tenant: 5, seq: vec![0, 1, 2, 3],
+        }).unwrap();
+        // tenant 6 is unaffected and completes normally
+        tx.send(DecodedWindow {
+            read_id: 12, window_idx: 0, tenant: 6, seq: vec![2, 2, 2, 2],
+        }).unwrap();
+        let r = col.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(r.read_id, 12);
+        assert_eq!(r.tenant, 6);
+        drop(tx);
+        assert!(col.finish().unwrap().is_empty(),
+                "the cancelled read must never be emitted");
+        assert_eq!(reg.in_flight(), 0, "in_flight settles to 0");
+        assert_eq!(m.dropped_reads.load(Ordering::Relaxed), 1);
+        assert_eq!(m.tenant(5).dropped.load(Ordering::Relaxed), 1);
+    }
+
+    /// Cancelled reads are also dropped on the end-of-stream flush
+    /// path (a tenant dies, then the run ends before its windows all
+    /// arrive): the partial assembly must not leak into the output.
+    #[test]
+    fn cancelled_read_drops_on_flush_too() {
+        use std::sync::atomic::Ordering;
+        let (reg, tx, col, m) = spawn_collector(64);
+        reg.register_tenant(3, 4, 9);
+        tx.send(DecodedWindow {
+            read_id: 3, window_idx: 0, tenant: 9, seq: vec![1, 1, 1, 1],
+        }).unwrap();
+        assert_eq!(reg.cancel_tenant(9), 1);
+        drop(tx); // stream ends with the read incomplete
+        assert!(col.finish().unwrap().is_empty());
+        assert_eq!(m.dropped_reads.load(Ordering::Relaxed), 1);
+        assert_eq!(reg.in_flight(), 0);
+    }
+
+    /// Cancelling tenant 0 (the library path) is refused, and
+    /// cancelling an unknown tenant is a no-op.
+    #[test]
+    fn cancel_tenant_guards() {
+        let reg = ReadRegistry::default();
+        reg.register(1, 2); // library read (tenant 0)
+        assert_eq!(reg.cancel_tenant(0), 0, "tenant 0 must be refused");
+        assert_eq!(reg.cancel_tenant(42), 0, "unknown tenant: no-op");
+        assert_eq!(reg.in_flight(), 1);
     }
 
     #[test]

@@ -111,6 +111,39 @@ impl Default for CoordinatorConfig {
     }
 }
 
+/// Shape of the multi-tenant TCP front-end (`coordinator::net`):
+/// where to listen and how admission control treats each connection.
+/// Orthogonal to [`CoordinatorConfig`] — the same pipeline config
+/// serves the library path and the wire path unchanged.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// listen address (`host:port`; port 0 binds an ephemeral port —
+    /// the default, which tests and benches read back via
+    /// `Server::local_addr`).
+    pub addr: String,
+    /// per-tenant in-flight read quota: a connection with this many
+    /// reads unanswered has further submissions refused with
+    /// `BUSY(quota)` until results come back — the greedy client
+    /// blocks itself, never its neighbours. 0 = unlimited (only the
+    /// global `queue_cap` backpressure applies).
+    pub tenant_quota: usize,
+    /// latency SLO for load shedding: when the interval p99 of the
+    /// per-read latency breaches this budget, new submissions from
+    /// EVERY tenant are refused with `BUSY(slo)` until the interval
+    /// p99 recovers. `None` (default) never sheds on latency.
+    pub slo: Option<std::time::Duration>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            tenant_quota: 64,
+            slo: None,
+        }
+    }
+}
+
 impl CoordinatorConfig {
     /// Shard count selected by `HELIX_SHARDS` (default 1; zero or an
     /// unparsable value also fall back to 1).

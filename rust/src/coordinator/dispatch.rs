@@ -36,6 +36,7 @@ fn shard_batch(items: Vec<WindowJob>, full: bool) -> ShardBatch {
         keys.push(WindowKey {
             read_id: job.read_id,
             window_idx: job.window_idx,
+            tenant: job.tenant,
             escalated_at: job.escalated_at,
         });
         sigs.push(job.signal);

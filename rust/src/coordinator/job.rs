@@ -14,6 +14,12 @@ use crate::runtime::Tier;
 pub(crate) struct WindowJob {
     pub(crate) read_id: usize,
     pub(crate) window_idx: usize,
+    /// owning tenant of the read this window belongs to: 0 for the
+    /// in-process library path, a connection id (>= 1) for reads that
+    /// arrived over the TCP front-end (`coordinator::net`). Rides every
+    /// stage payload so the collector can route a completion back to
+    /// (or drop it for) the submitting connection.
+    pub(crate) tenant: u64,
     pub(crate) signal: Vec<f32>,
     /// which shard pool this window targets: `Fast` for fresh windows
     /// of a tiered pipeline, `Hq` for escalations and for every window
@@ -38,6 +44,8 @@ pub(crate) struct WindowJob {
 pub(crate) struct WindowKey {
     pub(crate) read_id: usize,
     pub(crate) window_idx: usize,
+    /// see [`WindowJob::tenant`].
+    pub(crate) tenant: u64,
     pub(crate) escalated_at: Option<Instant>,
 }
 
@@ -56,6 +64,8 @@ pub(crate) struct ShardBatch {
 pub(crate) struct DecodeJob {
     pub(crate) read_id: usize,
     pub(crate) window_idx: usize,
+    /// see [`WindowJob::tenant`].
+    pub(crate) tenant: u64,
     pub(crate) lp: LogProbs,
     /// which tier produced `lp` — the decode worker only measures
     /// confidence (and may escalate) on `Fast` jobs.

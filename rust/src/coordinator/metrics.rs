@@ -2,8 +2,9 @@
 //! fixed-bucket latency histogram for per-read end-to-end latency
 //! (submit -> CalledRead emitted by the collector).
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// Buckets in the latency histogram: bucket `i` covers `[2^i, 2^(i+1))`
@@ -452,6 +453,27 @@ pub struct ScaleEvent {
     pub live_after: usize,
 }
 
+/// Per-tenant serving counters for the TCP front-end
+/// (`coordinator::net`): one row per connection, keyed by its tenant
+/// id, so a noisy neighbour is visible as *that tenant's* shed count
+/// instead of a blur in the global totals. Tenant 0 (the in-process
+/// library path) is never tabulated here.
+#[derive(Debug, Default)]
+pub struct TenantStats {
+    /// reads this tenant submitted that entered the pipeline.
+    pub reads_in: AtomicU64,
+    /// `CalledRead`s routed back to this tenant.
+    pub reads_out: AtomicU64,
+    /// windows this tenant's reads were chopped into.
+    pub windows: AtomicU64,
+    /// reads refused with an explicit `BUSY` (quota or SLO shed).
+    pub shed: AtomicU64,
+    /// completed reads dropped because the tenant disconnected first.
+    pub dropped: AtomicU64,
+    /// per-read end-to-end latency of this tenant's emitted reads.
+    pub latency: LatencyHistogram,
+}
+
 /// Aggregate pipeline telemetry shared by every stage thread.
 #[derive(Debug)]
 pub struct Metrics {
@@ -502,6 +524,17 @@ pub struct Metrics {
     /// per-worker vote/splice counters, one per vote pool slot (empty
     /// for `Metrics` built outside a coordinator).
     pub vote_workers: Vec<StageStats>,
+    /// reads refused with an explicit `BUSY` response by the TCP
+    /// front-end's admission gate (quota breach or SLO shed). Zero for
+    /// in-process pipelines.
+    pub shed_reads: AtomicU64,
+    /// completed reads dropped at the collector because their owning
+    /// connection disconnected mid-flight. Zero for in-process
+    /// pipelines.
+    pub dropped_reads: AtomicU64,
+    /// per-tenant serving stats, created lazily on first touch (see
+    /// [`Metrics::tenant`]). Empty for in-process pipelines.
+    tenants: Mutex<HashMap<u64, Arc<TenantStats>>>,
     /// autoscaler scale-event log (empty for a fixed shard pool).
     scale_events: Mutex<Vec<ScaleEvent>>,
 }
@@ -555,8 +588,28 @@ impl Metrics {
                 .map(|_| StageStats::default()).collect(),
             vote_workers: (0..n_vote)
                 .map(|_| StageStats::default()).collect(),
+            shed_reads: AtomicU64::new(0),
+            dropped_reads: AtomicU64::new(0),
+            tenants: Mutex::new(HashMap::new()),
             scale_events: Mutex::new(Vec::new()),
         }
+    }
+
+    /// This tenant's stats row, created on first touch. The row is an
+    /// `Arc` so callers on hot paths can hold it across the lock.
+    pub fn tenant(&self, id: u64) -> Arc<TenantStats> {
+        self.tenants.lock().unwrap()
+            .entry(id)
+            .or_default()
+            .clone()
+    }
+
+    /// Every tenant id with a stats row, ascending.
+    pub fn tenant_ids(&self) -> Vec<u64> {
+        let mut ids: Vec<u64> =
+            self.tenants.lock().unwrap().keys().copied().collect();
+        ids.sort_unstable();
+        ids
     }
 
     /// The shard-stats table backing a DNN stage: `hq_shards` for the
@@ -748,6 +801,44 @@ impl Metrics {
                         / 1e3,
                 ));
             }
+        }
+        // serving-ingress section: global shed/drop totals plus one
+        // compact row per tenant, so one line still tells the whole
+        // story when the pipeline fronts concurrent TCP clients
+        let shed = self.shed_reads.load(Ordering::Relaxed);
+        let dropped = self.dropped_reads.load(Ordering::Relaxed);
+        if shed > 0 || dropped > 0 {
+            s.push_str(&format!("  shed {shed} dropped {dropped}"));
+        }
+        let mut rows: Vec<(u64, Arc<TenantStats>)> = self.tenants.lock()
+            .unwrap()
+            .iter()
+            .map(|(id, t)| (*id, t.clone()))
+            .collect();
+        if !rows.is_empty() {
+            rows.sort_unstable_by_key(|(id, _)| *id);
+            let body: Vec<String> = rows.iter().map(|(id, t)| {
+                let mut row = format!(
+                    "t{id} {}->{} {}w",
+                    t.reads_in.load(Ordering::Relaxed),
+                    t.reads_out.load(Ordering::Relaxed),
+                    t.windows.load(Ordering::Relaxed));
+                let shed = t.shed.load(Ordering::Relaxed);
+                if shed > 0 {
+                    row.push_str(&format!(" shed {shed}"));
+                }
+                let dropped = t.dropped.load(Ordering::Relaxed);
+                if dropped > 0 {
+                    row.push_str(&format!(" dropped {dropped}"));
+                }
+                if t.latency.count() > 0 {
+                    row.push_str(&format!(
+                        " p99 {:.1}ms",
+                        t.latency.quantile_micros(0.99) as f64 / 1e3));
+                }
+                row
+            }).collect();
+            s.push_str(&format!("  tenants [{}]", body.join(" | ")));
         }
         let events = self.scale_events.lock().unwrap();
         if !events.is_empty() {
@@ -1129,6 +1220,32 @@ mod tests {
         assert!(m.report(32).contains("esc-lat p50"), "{}", m.report(32));
         // an untiered Metrics never prints the section
         assert!(!Metrics::default().report(32).contains("tier fast"));
+    }
+
+    #[test]
+    fn tenant_rows_accumulate_and_render() {
+        let m = Metrics::default();
+        assert!(m.tenant_ids().is_empty());
+        assert!(!m.report(32).contains("tenants ["),
+                "no tenant section without tenants");
+        let t2 = m.tenant(2);
+        m.add(&t2.reads_in, 3);
+        m.add(&t2.reads_out, 2);
+        m.add(&t2.windows, 12);
+        m.add(&t2.shed, 1);
+        t2.latency.record(2_000);
+        m.add(&m.tenant(1).reads_in, 1);
+        // the same id returns the same row
+        assert_eq!(m.tenant(2).reads_in.load(Ordering::Relaxed), 3);
+        assert_eq!(m.tenant_ids(), vec![1, 2]);
+        m.add(&m.shed_reads, 1);
+        m.add(&m.dropped_reads, 2);
+        let r = m.report(32);
+        assert!(r.contains("shed 1 dropped 2"), "{r}");
+        assert!(r.contains("t2 3->2 12w shed 1 p99"), "{r}");
+        assert!(r.contains("t1 1->0 0w"), "{r}");
+        // tenant 1 ordered before tenant 2
+        assert!(r.find("t1 ").unwrap() < r.find("t2 ").unwrap(), "{r}");
     }
 
     /// The satellite fix this PR pins: every utilization split —

@@ -14,6 +14,7 @@ pub mod config;
 mod dispatch;
 mod job;
 pub mod metrics;
+pub mod net;
 mod pool;
 pub mod server;
 
@@ -22,8 +23,9 @@ pub use autoscale::{AutoscaleConfig, Controller, Decision, Sample,
 pub use batcher::{Batch, Batcher, BatchPolicy, TieredBatcher};
 pub use collector::{Collector, CollectorConfig, DecodedWindow,
                     ReadRegistry};
-pub use config::{resolve_knob, KnobSource};
+pub use config::{resolve_knob, KnobSource, ServeConfig};
 pub use metrics::{LatencyHistogram, LatencySnapshot, Metrics,
                   ScaleAction, ScaleEvent, ShardStats, StageId,
-                  StageStats};
+                  StageStats, TenantStats};
+pub use net::{Client, ClientSummary, Server};
 pub use server::{CalledRead, Coordinator, CoordinatorConfig};

@@ -1,0 +1,465 @@
+//! Wire framing for the TCP serving front-end: a hand-rolled
+//! length-prefixed binary protocol in the spirit of `util::json`'s
+//! hand-rolled parser (no serde, no tokio — the offline build has
+//! neither, and the protocol is small enough that a hand parser is the
+//! clearer artifact anyway).
+//!
+//! Every frame is `[type: u8][len: u32 LE][payload: len bytes]`:
+//!
+//! | type | dir | name   | payload |
+//! |------|-----|--------|---------|
+//! | 0x01 | c→s | SUBMIT | `[tag u64][n u32][n × f32]` raw signal |
+//! | 0x02 | c→s | FIN    | empty — no further submissions |
+//! | 0x81 | s→c | RESULT | `[tag u64][n u32][n × u8]` called bases |
+//! | 0x82 | s→c | BUSY   | `[tag u64][reason u8]` admission refusal |
+//! | 0x83 | s→c | DONE   | empty — every tracked read answered |
+//!
+//! All integers and floats are little-endian. The `tag` is chosen by
+//! the client and echoed verbatim on the read's RESULT/BUSY, so a
+//! client can pipeline submissions and match answers without caring
+//! about server-side read ids. Payloads are capped at [`MAX_PAYLOAD`]
+//! so an adversarial length prefix is rejected outright instead of
+//! sizing an allocation.
+//!
+//! [`FrameParser`] is incremental: `feed` raw socket bytes, then pull
+//! decoded frames with `next` until it returns `Ok(None)` (needs more
+//! bytes). Malformed input — unknown type, oversized length, payload
+//! that doesn't type-check — returns a [`FrameError`] and poisons the
+//! parser: framing is byte-positional, so there is no resynchronizing
+//! with a stream that has lied once; the connection must be dropped.
+//! The property tests below drive random and adversarial byte streams
+//! (truncations, oversized prefixes, mid-frame splits, interleaved
+//! tenants) through the parser: it must never panic and must reject
+//! cleanly.
+
+use std::fmt;
+
+/// Hard cap on a frame payload (16 MiB ≈ a 4M-sample read): anything
+/// larger is rejected as [`FrameError::Oversized`] before any
+/// allocation is sized from the wire.
+pub const MAX_PAYLOAD: usize = 1 << 24;
+
+const TYPE_SUBMIT: u8 = 0x01;
+const TYPE_FIN: u8 = 0x02;
+const TYPE_RESULT: u8 = 0x81;
+const TYPE_BUSY: u8 = 0x82;
+const TYPE_DONE: u8 = 0x83;
+
+/// Why an admission gate refused a SUBMIT (the `reason` byte of a BUSY
+/// frame).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BusyReason {
+    /// the tenant's own in-flight quota is full: its earlier reads
+    /// must complete before it may submit more.
+    Quota,
+    /// the server is shedding load: the interval p99 read latency
+    /// breached the configured SLO.
+    Slo,
+}
+
+impl BusyReason {
+    fn code(self) -> u8 {
+        match self {
+            BusyReason::Quota => 1,
+            BusyReason::Slo => 2,
+        }
+    }
+
+    fn from_code(c: u8) -> Option<BusyReason> {
+        match c {
+            1 => Some(BusyReason::Quota),
+            2 => Some(BusyReason::Slo),
+            _ => None,
+        }
+    }
+}
+
+/// One decoded protocol frame (either direction).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// client→server: one read's raw signal under a client-chosen tag.
+    Submit {
+        /// client-chosen read tag, echoed on the RESULT/BUSY answer.
+        tag: u64,
+        /// raw current samples.
+        signal: Vec<f32>,
+    },
+    /// client→server: no further submissions; answer outstanding reads
+    /// then DONE.
+    Fin,
+    /// server→client: one read's called bases.
+    Result {
+        /// the tag the read was submitted under.
+        tag: u64,
+        /// consensus base sequence (values 0–3).
+        seq: Vec<u8>,
+    },
+    /// server→client: the submission was refused by admission control.
+    Busy {
+        /// the tag the refused read was submitted under.
+        tag: u64,
+        /// which gate refused it.
+        reason: BusyReason,
+    },
+    /// server→client: FIN acknowledged and every tracked read
+    /// answered; the connection is drained.
+    Done,
+}
+
+/// A malformed byte stream, detected positionally. The parser is
+/// poisoned afterwards (see module docs) — drop the connection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameError {
+    /// the type byte names no known frame.
+    BadType(u8),
+    /// the length prefix exceeds [`MAX_PAYLOAD`].
+    Oversized(u32),
+    /// the payload does not type-check against its frame type.
+    BadPayload(&'static str),
+}
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FrameError::BadType(t) =>
+                write!(f, "unknown frame type 0x{t:02x}"),
+            FrameError::Oversized(n) =>
+                write!(f, "frame payload of {n} bytes exceeds the \
+                           {MAX_PAYLOAD}-byte cap"),
+            FrameError::BadPayload(why) =>
+                write!(f, "malformed frame payload: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Encode one frame to wire bytes.
+pub fn encode(frame: &Frame) -> Vec<u8> {
+    let (ty, payload) = match frame {
+        Frame::Submit { tag, signal } => {
+            let mut p = Vec::with_capacity(12 + signal.len() * 4);
+            put_u64(&mut p, *tag);
+            put_u32(&mut p, signal.len() as u32);
+            for s in signal {
+                p.extend_from_slice(&s.to_le_bytes());
+            }
+            (TYPE_SUBMIT, p)
+        }
+        Frame::Fin => (TYPE_FIN, Vec::new()),
+        Frame::Result { tag, seq } => {
+            let mut p = Vec::with_capacity(12 + seq.len());
+            put_u64(&mut p, *tag);
+            put_u32(&mut p, seq.len() as u32);
+            p.extend_from_slice(seq);
+            (TYPE_RESULT, p)
+        }
+        Frame::Busy { tag, reason } => {
+            let mut p = Vec::with_capacity(9);
+            put_u64(&mut p, *tag);
+            p.push(reason.code());
+            (TYPE_BUSY, p)
+        }
+        Frame::Done => (TYPE_DONE, Vec::new()),
+    };
+    let mut out = Vec::with_capacity(5 + payload.len());
+    out.push(ty);
+    put_u32(&mut out, payload.len() as u32);
+    out.extend_from_slice(&payload);
+    out
+}
+
+fn get_u32(b: &[u8]) -> u32 {
+    u32::from_le_bytes([b[0], b[1], b[2], b[3]])
+}
+
+fn get_u64(b: &[u8]) -> u64 {
+    u64::from_le_bytes([b[0], b[1], b[2], b[3],
+                        b[4], b[5], b[6], b[7]])
+}
+
+fn decode_payload(ty: u8, p: &[u8]) -> Result<Frame, FrameError> {
+    match ty {
+        TYPE_SUBMIT | TYPE_RESULT => {
+            if p.len() < 12 {
+                return Err(FrameError::BadPayload(
+                    "submit/result header needs 12 bytes"));
+            }
+            let tag = get_u64(p);
+            let n = get_u32(&p[8..]) as usize;
+            let body = &p[12..];
+            if ty == TYPE_SUBMIT {
+                if body.len() != n * 4 {
+                    return Err(FrameError::BadPayload(
+                        "submit sample count disagrees with length"));
+                }
+                let signal = body.chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                Ok(Frame::Submit { tag, signal })
+            } else {
+                if body.len() != n {
+                    return Err(FrameError::BadPayload(
+                        "result base count disagrees with length"));
+                }
+                Ok(Frame::Result { tag, seq: body.to_vec() })
+            }
+        }
+        TYPE_FIN | TYPE_DONE => {
+            if !p.is_empty() {
+                return Err(FrameError::BadPayload(
+                    "fin/done carries no payload"));
+            }
+            Ok(if ty == TYPE_FIN { Frame::Fin } else { Frame::Done })
+        }
+        TYPE_BUSY => {
+            if p.len() != 9 {
+                return Err(FrameError::BadPayload(
+                    "busy payload is tag + reason byte"));
+            }
+            match BusyReason::from_code(p[8]) {
+                Some(reason) =>
+                    Ok(Frame::Busy { tag: get_u64(p), reason }),
+                None => Err(FrameError::BadPayload(
+                    "unknown busy reason code")),
+            }
+        }
+        other => Err(FrameError::BadType(other)),
+    }
+}
+
+/// Incremental frame parser over a raw byte stream (see module docs
+/// for the feed/next contract and the poisoning rule).
+#[derive(Default)]
+pub struct FrameParser {
+    buf: Vec<u8>,
+    pos: usize,
+    poisoned: Option<FrameError>,
+}
+
+impl FrameParser {
+    /// Append raw bytes read from the socket.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        // reclaim consumed prefix before it dominates the buffer
+        if self.pos > 4096 && self.pos * 2 > self.buf.len() {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes fed but not yet consumed by a decoded frame. Nonzero at
+    /// EOF means the stream ended mid-frame (a truncated/dirty
+    /// disconnect).
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Decode the next complete frame: `Ok(None)` means feed more
+    /// bytes; an error poisons the parser (every later call returns
+    /// the same error).
+    pub fn next(&mut self) -> Result<Option<Frame>, FrameError> {
+        if let Some(e) = self.poisoned {
+            return Err(e);
+        }
+        let avail = &self.buf[self.pos..];
+        if avail.len() < 5 {
+            return Ok(None);
+        }
+        let ty = avail[0];
+        if !matches!(ty, TYPE_SUBMIT | TYPE_RESULT | TYPE_BUSY
+                         | TYPE_FIN | TYPE_DONE) {
+            return self.poison(FrameError::BadType(ty));
+        }
+        let len = get_u32(&avail[1..]) as usize;
+        if len > MAX_PAYLOAD {
+            return self.poison(FrameError::Oversized(len as u32));
+        }
+        if avail.len() < 5 + len {
+            return Ok(None);
+        }
+        match decode_payload(ty, &avail[5..5 + len]) {
+            Ok(frame) => {
+                self.pos += 5 + len;
+                Ok(Some(frame))
+            }
+            Err(e) => self.poison(e),
+        }
+    }
+
+    fn poison(&mut self, e: FrameError) -> Result<Option<Frame>, FrameError> {
+        self.poisoned = Some(e);
+        Err(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn random_frame(rng: &mut Rng) -> Frame {
+        match rng.below(5) {
+            0 => Frame::Submit {
+                tag: rng.next_u64(),
+                signal: (0..rng.below(64))
+                    .map(|_| rng.normal() as f32).collect(),
+            },
+            1 => Frame::Fin,
+            2 => Frame::Result {
+                tag: rng.next_u64(),
+                seq: (0..rng.below(64)).map(|_| rng.base()).collect(),
+            },
+            3 => Frame::Busy {
+                tag: rng.next_u64(),
+                reason: if rng.below(2) == 0 { BusyReason::Quota }
+                        else { BusyReason::Slo },
+            },
+            _ => Frame::Done,
+        }
+    }
+
+    /// Frames survive encode → arbitrary re-chunking → decode, in
+    /// order, including interleaved tenants (many Submit frames under
+    /// different tags back to back).
+    #[test]
+    fn roundtrip_survives_arbitrary_chunking() {
+        prop::check("frame roundtrip", 60, |rng, _| {
+            let frames: Vec<Frame> =
+                (0..1 + rng.below(8)).map(|_| random_frame(rng)).collect();
+            let mut wire = Vec::new();
+            for f in &frames {
+                wire.extend_from_slice(&encode(f));
+            }
+            let mut parser = FrameParser::default();
+            let mut got = Vec::new();
+            let mut i = 0;
+            while i < wire.len() {
+                let n = (1 + rng.below(7)).min(wire.len() - i);
+                parser.feed(&wire[i..i + n]);
+                i += n;
+                while let Some(f) = parser.next().unwrap() {
+                    got.push(f);
+                }
+            }
+            assert_eq!(got, frames);
+            assert_eq!(parser.buffered(), 0, "no residue after decode");
+        });
+    }
+
+    /// Random byte soup must never panic: every frame either decodes
+    /// or the parser rejects cleanly and stays poisoned.
+    #[test]
+    fn random_bytes_never_panic() {
+        prop::check("frame byte soup", 80, |rng, _| {
+            let bytes: Vec<u8> = (0..rng.below(512))
+                .map(|_| (rng.next_u64() & 0xff) as u8).collect();
+            let mut parser = FrameParser::default();
+            parser.feed(&bytes);
+            let mut first_err = None;
+            for _ in 0..bytes.len() + 1 {
+                match parser.next() {
+                    Ok(Some(_)) => continue,
+                    Ok(None) => break,
+                    Err(e) => {
+                        first_err = Some(e);
+                        break;
+                    }
+                }
+            }
+            if let Some(e) = first_err {
+                // poisoned: the error is sticky and feed stays safe
+                parser.feed(&bytes);
+                assert_eq!(parser.next(), Err(e));
+            }
+        });
+    }
+
+    /// A truncated frame (any proper prefix) is "need more bytes",
+    /// never an error and never a phantom frame — and the unread
+    /// residue is observable so EOF-mid-frame reads as dirty.
+    #[test]
+    fn truncated_frames_wait_cleanly() {
+        prop::check("frame truncation", 60, |rng, _| {
+            let frame = random_frame(rng);
+            let wire = encode(&frame);
+            let cut = rng.below(wire.len().max(1));
+            let mut parser = FrameParser::default();
+            parser.feed(&wire[..cut]);
+            assert_eq!(parser.next(), Ok(None),
+                       "prefix of {cut}/{} bytes must just wait",
+                       wire.len());
+            assert_eq!(parser.buffered(), cut);
+            // completing the frame decodes it after all
+            parser.feed(&wire[cut..]);
+            assert_eq!(parser.next(), Ok(Some(frame)));
+        });
+    }
+
+    /// An adversarial length prefix past MAX_PAYLOAD is rejected from
+    /// the 5-byte header alone — no allocation, no waiting for 4 GiB.
+    #[test]
+    fn oversized_length_prefix_rejected_from_header() {
+        let mut wire = vec![0x01u8];
+        wire.extend_from_slice(&(u32::MAX).to_le_bytes());
+        let mut parser = FrameParser::default();
+        parser.feed(&wire);
+        assert_eq!(parser.next(), Err(FrameError::Oversized(u32::MAX)));
+        // poisoned thereafter, even if valid bytes follow
+        parser.feed(&encode(&Frame::Fin));
+        assert_eq!(parser.next(), Err(FrameError::Oversized(u32::MAX)));
+    }
+
+    #[test]
+    fn unknown_type_and_bad_payloads_reject() {
+        let mut parser = FrameParser::default();
+        parser.feed(&[0x7f, 0, 0, 0, 0]);
+        assert_eq!(parser.next(), Err(FrameError::BadType(0x7f)));
+        // FIN with a payload
+        let mut parser = FrameParser::default();
+        parser.feed(&[TYPE_FIN, 1, 0, 0, 0, 9]);
+        assert!(matches!(parser.next(),
+                         Err(FrameError::BadPayload(_))));
+        // SUBMIT whose sample count disagrees with the length
+        let mut p = vec![TYPE_SUBMIT];
+        p.extend_from_slice(&13u32.to_le_bytes());
+        p.extend_from_slice(&[0u8; 13]);
+        let mut parser = FrameParser::default();
+        parser.feed(&p);
+        assert!(matches!(parser.next(),
+                         Err(FrameError::BadPayload(_))));
+        // BUSY with an unknown reason code
+        let mut p = vec![TYPE_BUSY];
+        p.extend_from_slice(&9u32.to_le_bytes());
+        p.extend_from_slice(&[0u8; 8]);
+        p.push(7);
+        let mut parser = FrameParser::default();
+        parser.feed(&p);
+        assert!(matches!(parser.next(),
+                         Err(FrameError::BadPayload(_))));
+    }
+
+    /// The compaction path (large consumed prefix) must not corrupt
+    /// later frames.
+    #[test]
+    fn long_streams_compact_without_corruption() {
+        let mut parser = FrameParser::default();
+        let frame = Frame::Submit { tag: 42, signal: vec![1.0; 600] };
+        let wire = encode(&frame);
+        for round in 0..64 {
+            parser.feed(&wire);
+            assert_eq!(parser.next(), Ok(Some(frame.clone())),
+                       "round {round}");
+        }
+        assert_eq!(parser.buffered(), 0);
+    }
+}

@@ -1,0 +1,434 @@
+//! Multi-tenant TCP serving front-end: N concurrent clients stream raw
+//! signal in over a length-prefixed binary protocol ([`frame`]) and
+//! receive called reads back as they complete, all sharing ONE
+//! [`Coordinator`] pipeline.
+//!
+//! ```text
+//!  client A ──┐  SUBMIT(tag, f32×n)                 RESULT(tag, bases)
+//!  client B ──┼──▶ reader thread ──▶ admission ──▶ Coordinator ──▶ pump ──▶ writer thread ─▶ client
+//!  client C ──┘     (per conn)      quota │ slo     (shared)     (1 thread)   (per conn)
+//!                                     │BUSY(1)│BUSY(2)
+//! ```
+//!
+//! Each accepted connection becomes a **tenant** (ids from 1; tenant 0
+//! is reserved for the in-process library path). A reader thread
+//! parses frames and runs admission per SUBMIT: the per-tenant
+//! [`quota::QuotaGate`] first (a greedy client blocks only itself),
+//! then the global [`quota::SloGate`] (interval-p99 load shedding,
+//! refused with `BUSY(slo)` for every tenant). Admitted reads are
+//! tagged with the tenant id, which rides every window job through
+//! dispatch, the DNN shards (including hq escalation re-queues), CTC
+//! decode and the collector, so the single pump thread can route each
+//! [`CalledRead`] back to its owning connection via the
+//! [`registry::ConnectionRegistry`].
+//!
+//! Disconnects drain gracefully: a clean `FIN` holds the connection
+//! open until every outstanding read is answered (then `DONE`); a dead
+//! socket cancels the tenant's reads at the collector — their windows
+//! still drain through the pipeline (so `in_flight` stays truthful and
+//! settles to 0) but the assembled reads are dropped at the router
+//! instead of being voted, and the tenant's quota slots are released
+//! immediately.
+
+pub mod frame;
+pub(crate) mod quota;
+pub(crate) mod registry;
+
+use std::io::{Read as IoRead, Write as IoWrite};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream,
+               ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::bounded;
+
+use super::config::{CoordinatorConfig, ServeConfig};
+use super::metrics::Metrics;
+use super::server::Coordinator;
+
+use frame::{encode, BusyReason, Frame, FrameParser};
+use quota::{QuotaGate, SloGate};
+use registry::ConnectionRegistry;
+
+/// How often the reader threads surface from a blocking socket read to
+/// check the stop flag.
+const READ_TICK: Duration = Duration::from_millis(50);
+/// Accept-loop poll interval (the listener is non-blocking so shutdown
+/// never waits on a connection that isn't coming).
+const ACCEPT_TICK: Duration = Duration::from_millis(5);
+/// Pump idle sleep between output-queue drains.
+const PUMP_TICK: Duration = Duration::from_micros(500);
+/// How often the pump closes an SLO interval and recomputes the p99.
+const SLO_TICK: Duration = Duration::from_millis(20);
+
+/// Everything the acceptor, readers, writers and pump share.
+struct Shared {
+    coord: Mutex<Option<Coordinator>>,
+    conns: ConnectionRegistry,
+    quota: QuotaGate,
+    slo: SloGate,
+    metrics: Arc<Metrics>,
+    stop: AtomicBool,
+    next_tenant: AtomicU64,
+    next_read: AtomicUsize,
+}
+
+impl Shared {
+    fn stopping(&self) -> bool {
+        self.stop.load(Ordering::Relaxed)
+    }
+}
+
+/// The serving front-end: owns the listener, the per-connection
+/// reader/writer threads, the shared [`Coordinator`], and the pump
+/// thread that routes completed reads back to their tenants. Built by
+/// [`Server::start`], torn down by [`Server::shutdown`].
+pub struct Server {
+    local: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+    pump: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Open the pipeline described by `cfg` and start listening per
+    /// `serve`. Binding `host:0` picks an ephemeral port — read it
+    /// back with [`Server::local_addr`].
+    pub fn start(cfg: CoordinatorConfig, serve: ServeConfig)
+        -> Result<Server>
+    {
+        let coord = Coordinator::new(cfg)?;
+        let metrics = coord.metrics.clone();
+        let slo = SloGate::new(serve.slo, &metrics.read_latency);
+        let listener = TcpListener::bind(&serve.addr)
+            .with_context(|| format!("binding {}", serve.addr))?;
+        listener.set_nonblocking(true)
+            .context("non-blocking listener")?;
+        let local = listener.local_addr().context("listener addr")?;
+
+        let shared = Arc::new(Shared {
+            coord: Mutex::new(Some(coord)),
+            conns: ConnectionRegistry::default(),
+            quota: QuotaGate::new(serve.tenant_quota),
+            slo,
+            metrics,
+            stop: AtomicBool::new(false),
+            next_tenant: AtomicU64::new(1),
+            next_read: AtomicUsize::new(0),
+        });
+
+        let accept = {
+            let sh = shared.clone();
+            std::thread::spawn(move || accept_loop(&sh, listener))
+        };
+        let pump = {
+            let sh = shared.clone();
+            std::thread::spawn(move || pump_loop(&sh))
+        };
+        Ok(Server { local, shared, accept: Some(accept),
+                    pump: Some(pump) })
+    }
+
+    /// The bound listen address (resolves an ephemeral-port bind).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    /// Live pipeline telemetry, including the per-tenant rows.
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.shared.metrics.clone()
+    }
+
+    /// Windows currently in flight inside the shared pipeline (0 once
+    /// everything submitted has drained — including windows owned by
+    /// killed connections).
+    pub fn in_flight(&self) -> usize {
+        self.shared.coord.lock().unwrap()
+            .as_ref().map_or(0, |c| c.in_flight())
+    }
+
+    /// Reads the quota gate currently holds in flight for `tenant`.
+    pub fn tenant_in_flight(&self, tenant: u64) -> usize {
+        self.shared.quota.in_flight(tenant)
+    }
+
+    /// Stop accepting, drop every connection, drain the pipeline, and
+    /// join every thread. Outstanding reads of still-open connections
+    /// are cancelled (this is an operator stop, not a graceful drain —
+    /// clients that want their answers should FIN and wait for DONE
+    /// first).
+    pub fn shutdown(mut self) -> Result<()> {
+        self.shared.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept.take() {
+            h.join().map_err(|_| anyhow!("acceptor panicked"))?;
+        }
+        let coord = self.shared.coord.lock().unwrap().take();
+        let res = match coord {
+            Some(c) => c.finish().map(|_| ()),
+            None => Ok(()),
+        };
+        if let Some(h) = self.pump.take() {
+            h.join().map_err(|_| anyhow!("pump panicked"))?;
+        }
+        res
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        // shutdown() consumed the handles; a bare drop still unsticks
+        // every thread so the process can exit
+        self.shared.stop.store(true, Ordering::Relaxed);
+    }
+}
+
+/// Accept loop: non-blocking accept + stop-flag poll. Reader threads
+/// are detached — each one owns its connection teardown and the stop
+/// flag bounds its lifetime, so the acceptor joins only the readers it
+/// spawned by collecting their handles.
+fn accept_loop(sh: &Arc<Shared>, listener: TcpListener) {
+    let mut readers: Vec<JoinHandle<()>> = Vec::new();
+    while !sh.stopping() {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let tenant =
+                    sh.next_tenant.fetch_add(1, Ordering::Relaxed);
+                let sh = sh.clone();
+                readers.push(std::thread::spawn(move || {
+                    reader_loop(&sh, stream, tenant);
+                }));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_TICK);
+            }
+            Err(_) => std::thread::sleep(ACCEPT_TICK),
+        }
+    }
+    for h in readers {
+        let _ = h.join();
+    }
+}
+
+/// Per-connection reader: parse frames, run admission, submit to the
+/// shared pipeline. Exits on FIN-drained, EOF, protocol error, read
+/// error, or server stop — and in every case tears the connection down
+/// exactly once (cancelling outstanding reads unless the drain
+/// completed cleanly).
+fn reader_loop(sh: &Arc<Shared>, mut stream: TcpStream, tenant: u64) {
+    let _ = stream.set_read_timeout(Some(READ_TICK));
+    let _ = stream.set_nodelay(true);
+    let (tx, rx) = bounded::unbounded::<Vec<u8>>();
+    let writer = match stream.try_clone() {
+        Ok(ws) => std::thread::spawn(move || writer_loop(ws, rx)),
+        Err(_) => return,
+    };
+    sh.conns.add(tenant, tx);
+
+    let mut parser = FrameParser::default();
+    let mut buf = [0u8; 16 * 1024];
+    'conn: while !sh.stopping() {
+        let n = match stream.read(&mut buf) {
+            Ok(0) => break 'conn, // EOF
+            Ok(n) => n,
+            Err(e) if matches!(e.kind(),
+                               std::io::ErrorKind::WouldBlock
+                               | std::io::ErrorKind::TimedOut) =>
+                continue,
+            Err(_) => break 'conn,
+        };
+        parser.feed(&buf[..n]);
+        loop {
+            match parser.next() {
+                Ok(Some(Frame::Submit { tag, signal })) =>
+                    handle_submit(sh, tenant, tag, &signal),
+                Ok(Some(Frame::Fin)) => {
+                    if sh.conns.mark_fin(tenant) {
+                        // drained: DONE is queued, the writer will
+                        // flush it when the registry drops our sender
+                        break 'conn;
+                    }
+                    // outstanding reads remain; the pump finishes the
+                    // drain and the client closes after DONE (EOF)
+                }
+                Ok(Some(_)) => break 'conn, // server→client frame: bogus
+                Ok(None) => break,
+                Err(_) => break 'conn, // malformed stream: drop it
+            }
+        }
+    }
+
+    // teardown: if the registry still knows us the drain was NOT clean
+    // (EOF/protocol error/stop before DONE) — cancel what's left
+    let orphaned = sh.conns.drop_conn(tenant);
+    sh.quota.release_all(tenant);
+    if orphaned > 0 {
+        if let Some(c) = sh.coord.lock().unwrap().as_ref() {
+            c.cancel_tenant(tenant);
+        }
+    }
+    let _ = stream.shutdown(Shutdown::Read);
+    let _ = writer.join();
+}
+
+/// Admission + submission for one SUBMIT frame.
+fn handle_submit(sh: &Arc<Shared>, tenant: u64, tag: u64,
+                 signal: &[f32]) {
+    let m = &sh.metrics;
+    if !sh.quota.try_acquire(tenant) {
+        m.add(&m.shed_reads, 1);
+        m.add(&m.tenant(tenant).shed, 1);
+        sh.conns.send_busy(tenant, tag, BusyReason::Quota);
+        return;
+    }
+    if sh.slo.shedding() {
+        sh.quota.release(tenant); // shed AFTER acquire: give it back
+        m.add(&m.shed_reads, 1);
+        m.add(&m.tenant(tenant).shed, 1);
+        sh.conns.send_busy(tenant, tag, BusyReason::Slo);
+        return;
+    }
+    let read_id = sh.next_read.fetch_add(1, Ordering::Relaxed);
+    // track BEFORE submit: the pipeline may complete the read before
+    // this thread runs again, and the pump must find the routing entry
+    sh.conns.track(tenant, read_id, tag);
+    let delivered = match sh.coord.lock().unwrap().as_mut() {
+        Some(c) => c.submit_signal(read_id, signal, tenant),
+        None => 0, // shutting down; connection is about to die anyway
+    };
+    if delivered == 0 {
+        // too short for a single window: trivially complete, answer
+        // the empty read right away
+        sh.conns.route_result(tenant, read_id, &[]);
+        sh.quota.release(tenant);
+    }
+}
+
+/// Per-connection writer: flush encoded frames queued by the registry
+/// until the sender side is dropped (connection removed), then close
+/// the write half so a draining client sees EOF after DONE.
+fn writer_loop(mut stream: TcpStream, rx: bounded::Receiver<Vec<u8>>) {
+    while let Ok(bytes) = rx.recv() {
+        if stream.write_all(&bytes).is_err() {
+            break;
+        }
+    }
+    let _ = stream.shutdown(Shutdown::Write);
+}
+
+/// The pump: single thread that drains completed reads out of the
+/// shared pipeline, releases their quota slots, routes them to their
+/// tenants, and keeps the SLO gate's interval fresh.
+fn pump_loop(sh: &Arc<Shared>) {
+    let mut last_slo = std::time::Instant::now();
+    loop {
+        let stopping = sh.stopping();
+        let called = match sh.coord.lock().unwrap().as_ref() {
+            Some(c) => c.drain_ready(),
+            None => Vec::new(),
+        };
+        let idle = called.is_empty();
+        for r in called {
+            if r.tenant == 0 {
+                continue; // library-path read: not ours to route
+            }
+            sh.quota.release(r.tenant);
+            sh.conns.route_result(r.tenant, r.read_id, &r.seq);
+        }
+        if last_slo.elapsed() >= SLO_TICK {
+            sh.slo.refresh(&sh.metrics.read_latency);
+            last_slo = std::time::Instant::now();
+        }
+        if stopping {
+            // one final drain already ran above with stop observed:
+            // nothing more can arrive (finish() precedes pump join)
+            break;
+        }
+        if idle {
+            std::thread::sleep(PUMP_TICK);
+        }
+    }
+}
+
+/// Minimal blocking client for the wire protocol — what the tests, the
+/// serve bench and `helix serve` smoke-checks speak. One thread, one
+/// connection; pipelining is just calling [`Client::submit`] multiple
+/// times before reading events.
+pub struct Client {
+    stream: TcpStream,
+    parser: FrameParser,
+}
+
+/// Everything a drained connection received, in arrival order per
+/// kind: completed reads as `(tag, bases)` and admission refusals as
+/// `(tag, reason)`.
+#[derive(Debug, Default)]
+pub struct ClientSummary {
+    /// RESULT frames: client tag → called base sequence.
+    pub results: Vec<(u64, Vec<u8>)>,
+    /// BUSY frames: client tag → which gate refused it.
+    pub busy: Vec<(u64, BusyReason)>,
+}
+
+impl Client {
+    /// Connect to a running [`Server`].
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<Client> {
+        let stream = TcpStream::connect(addr)
+            .context("connecting to helix server")?;
+        let _ = stream.set_nodelay(true);
+        Ok(Client { stream, parser: FrameParser::default() })
+    }
+
+    /// Submit one read's raw signal under a client-chosen tag. Tags
+    /// are echoed on the matching RESULT/BUSY; reusing a tag across
+    /// in-flight reads is legal but the answers become ambiguous.
+    pub fn submit(&mut self, tag: u64, signal: &[f32]) -> Result<()> {
+        self.stream
+            .write_all(&encode(&Frame::Submit {
+                tag,
+                signal: signal.to_vec(),
+            }))
+            .context("writing SUBMIT")
+    }
+
+    /// Announce no further submissions; the server answers everything
+    /// outstanding and then sends DONE.
+    pub fn fin(&mut self) -> Result<()> {
+        self.stream.write_all(&encode(&Frame::Fin))
+            .context("writing FIN")
+    }
+
+    /// Block until the next server frame (RESULT, BUSY, or DONE).
+    pub fn next_event(&mut self) -> Result<Frame> {
+        let mut buf = [0u8; 16 * 1024];
+        loop {
+            if let Some(f) = self.parser.next()? {
+                return Ok(f);
+            }
+            let n = self.stream.read(&mut buf)
+                .context("reading server frame")?;
+            if n == 0 {
+                bail!("server closed the connection mid-stream \
+                       ({} bytes buffered)", self.parser.buffered());
+            }
+            self.parser.feed(&buf[..n]);
+        }
+    }
+
+    /// FIN, then collect every RESULT/BUSY until DONE.
+    pub fn drain(mut self) -> Result<ClientSummary> {
+        self.fin()?;
+        let mut out = ClientSummary::default();
+        loop {
+            match self.next_event()? {
+                Frame::Result { tag, seq } => out.results.push((tag, seq)),
+                Frame::Busy { tag, reason } => out.busy.push((tag, reason)),
+                Frame::Done => return Ok(out),
+                other => bail!("unexpected frame from server: {other:?}"),
+            }
+        }
+    }
+}

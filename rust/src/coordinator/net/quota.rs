@@ -1,0 +1,220 @@
+//! Admission control for the TCP front-end: the per-tenant in-flight
+//! [`QuotaGate`] and the interval-p99 [`SloGate`] load shedder.
+//!
+//! Both gates answer at SUBMIT time, before a read touches the
+//! pipeline, so a refused read costs the server one BUSY frame and
+//! nothing else. The quota is counted in **reads, not windows**, and a
+//! slot is acquired exactly once at admission and released exactly once
+//! when the read leaves the system (result routed, shed, or its
+//! connection died) — escalated windows re-enter the DNN stage without
+//! ever touching the gate, so tiered serving structurally cannot
+//! double-count a read.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use super::super::metrics::{LatencyHistogram, LatencySnapshot};
+
+/// Per-tenant in-flight read accounting. A tenant at its quota has
+/// further submissions refused — the greedy client blocks itself, never
+/// its neighbours, while the global `queue_cap` still bounds the
+/// pipeline as a whole.
+pub(crate) struct QuotaGate {
+    /// max in-flight reads per tenant; 0 = unlimited.
+    quota: usize,
+    in_flight: Mutex<HashMap<u64, usize>>,
+}
+
+impl QuotaGate {
+    pub(crate) fn new(quota: usize) -> QuotaGate {
+        QuotaGate { quota, in_flight: Mutex::new(HashMap::new()) }
+    }
+
+    /// Claim one in-flight slot for `tenant`; false = at quota, refuse
+    /// the read with BUSY(quota) and do NOT call `release` for it.
+    pub(crate) fn try_acquire(&self, tenant: u64) -> bool {
+        let mut m = self.in_flight.lock().unwrap();
+        let slot = m.entry(tenant).or_insert(0);
+        if self.quota != 0 && *slot >= self.quota {
+            return false;
+        }
+        *slot += 1;
+        true
+    }
+
+    /// Return one slot: the read completed, was shed after acquiring
+    /// (SLO refusal), or produced no windows. Releasing a tenant with
+    /// no outstanding slots is a no-op, so late pipeline results for a
+    /// connection already torn down by `release_all` cannot drive the
+    /// count negative.
+    pub(crate) fn release(&self, tenant: u64) {
+        let mut m = self.in_flight.lock().unwrap();
+        if let Some(slot) = m.get_mut(&tenant) {
+            *slot = slot.saturating_sub(1);
+            if *slot == 0 {
+                m.remove(&tenant);
+            }
+        }
+    }
+
+    /// Drop every slot a dead connection still held (its reads were
+    /// cancelled at the collector; no per-read releases will arrive
+    /// in any fixed order relative to this).
+    pub(crate) fn release_all(&self, tenant: u64) {
+        self.in_flight.lock().unwrap().remove(&tenant);
+    }
+
+    /// Current in-flight reads for `tenant`.
+    pub(crate) fn in_flight(&self, tenant: u64) -> usize {
+        self.in_flight.lock().unwrap().get(&tenant).copied().unwrap_or(0)
+    }
+}
+
+/// Interval-p99 load shedder. The serving pump periodically calls
+/// [`SloGate::refresh`] with the pipeline's per-read latency histogram;
+/// between refreshes, [`SloGate::shedding`] answers from the last
+/// interval's p99. An interval with **no completed reads** clears the
+/// breach rather than holding it: a sticky breach with nothing
+/// completing would refuse admissions forever and the system could
+/// never observe its own recovery.
+pub(crate) struct SloGate {
+    /// micros of read latency the interval p99 may reach; None never
+    /// sheds.
+    slo_micros: Option<u64>,
+    state: Mutex<SloState>,
+}
+
+struct SloState {
+    prev: LatencySnapshot,
+    breached: bool,
+}
+
+impl SloGate {
+    /// Build the gate, snapshotting `hist` as the first interval floor.
+    pub(crate) fn new(slo: Option<Duration>, hist: &LatencyHistogram)
+        -> SloGate
+    {
+        SloGate {
+            slo_micros: slo.map(|d| d.as_micros() as u64),
+            state: Mutex::new(SloState {
+                prev: hist.snapshot(),
+                breached: false,
+            }),
+        }
+    }
+
+    /// Close the current interval: recompute the interval p99 against
+    /// the previous snapshot and advance the floor.
+    pub(crate) fn refresh(&self, hist: &LatencyHistogram) {
+        let Some(slo) = self.slo_micros else { return };
+        let mut st = self.state.lock().unwrap();
+        let snap = hist.snapshot();
+        let p99 = snap.quantile_since(&st.prev, 0.99);
+        // p99 == 0 means no reads completed this interval (see module
+        // docs): treat as recovered, not as breached
+        st.breached = p99 > slo;
+        st.prev = snap;
+    }
+
+    /// True while the last closed interval's p99 breached the SLO:
+    /// refuse every tenant's submissions with BUSY(slo).
+    pub(crate) fn shedding(&self) -> bool {
+        self.slo_micros.is_some() && self.state.lock().unwrap().breached
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quota_blocks_only_the_greedy_tenant() {
+        let g = QuotaGate::new(2);
+        assert!(g.try_acquire(1));
+        assert!(g.try_acquire(1));
+        assert!(!g.try_acquire(1), "tenant 1 is at quota");
+        assert!(g.try_acquire(2), "tenant 2 is unaffected");
+        assert_eq!(g.in_flight(1), 2);
+        assert_eq!(g.in_flight(2), 1);
+    }
+
+    #[test]
+    fn release_on_shed_restores_the_slot() {
+        // the SLO path acquires first, then sheds: the release must
+        // give the slot back or quota capacity leaks away
+        let g = QuotaGate::new(1);
+        assert!(g.try_acquire(7));
+        g.release(7); // shed after acquire
+        assert!(g.try_acquire(7), "shed read must not consume quota");
+    }
+
+    #[test]
+    fn dead_connection_release_all_clears_every_slot() {
+        let g = QuotaGate::new(4);
+        for _ in 0..3 {
+            assert!(g.try_acquire(5));
+        }
+        g.release_all(5);
+        assert_eq!(g.in_flight(5), 0);
+        // a late pipeline completion for the dead tenant is harmless
+        g.release(5);
+        assert_eq!(g.in_flight(5), 0);
+        assert!(g.try_acquire(5), "tenant id reuse starts clean");
+    }
+
+    #[test]
+    fn double_release_cannot_go_negative() {
+        let g = QuotaGate::new(2);
+        assert!(g.try_acquire(3));
+        g.release(3);
+        g.release(3);
+        g.release(3);
+        assert_eq!(g.in_flight(3), 0);
+        assert!(g.try_acquire(3));
+        assert!(g.try_acquire(3));
+        assert!(!g.try_acquire(3), "quota intact after over-release");
+    }
+
+    #[test]
+    fn zero_quota_is_unlimited() {
+        let g = QuotaGate::new(0);
+        for _ in 0..1000 {
+            assert!(g.try_acquire(1));
+        }
+        assert_eq!(g.in_flight(1), 1000);
+    }
+
+    #[test]
+    fn slo_gate_trips_on_breach_and_recovers_on_quiet() {
+        let hist = LatencyHistogram::default();
+        let gate = SloGate::new(Some(Duration::from_millis(10)), &hist);
+        assert!(!gate.shedding(), "starts open");
+        // an interval of 50ms reads breaches a 10ms SLO
+        for _ in 0..100 {
+            hist.record(50_000);
+        }
+        gate.refresh(&hist);
+        assert!(gate.shedding());
+        // a quiet interval (no completions) clears the breach
+        gate.refresh(&hist);
+        assert!(!gate.shedding());
+        // fast reads keep it open
+        for _ in 0..100 {
+            hist.record(1_000);
+        }
+        gate.refresh(&hist);
+        assert!(!gate.shedding());
+    }
+
+    #[test]
+    fn slo_gate_without_slo_never_sheds() {
+        let hist = LatencyHistogram::default();
+        let gate = SloGate::new(None, &hist);
+        for _ in 0..100 {
+            hist.record(60_000_000);
+        }
+        gate.refresh(&hist);
+        assert!(!gate.shedding());
+    }
+}

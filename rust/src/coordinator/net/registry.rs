@@ -1,0 +1,199 @@
+//! Connection registry: maps each live tenant (TCP connection) to its
+//! outbound frame channel and the set of reads it still awaits.
+//!
+//! **Routing rule** — every state transition that both inspects the
+//! outstanding set and queues a frame happens under ONE registry lock,
+//! so the "last result arrives while FIN is being processed" race
+//! cannot drop a DONE or send one early: whichever of
+//! [`ConnectionRegistry::route_result`] / [`ConnectionRegistry::mark_fin`]
+//! observes `fin && outstanding.is_empty()` first queues the DONE and
+//! removes the connection; the other sees the connection gone and does
+//! nothing.
+//!
+//! Frames are queued as encoded bytes on an unbounded in-tree channel
+//! drained by the connection's writer thread; removing the connection
+//! drops the sender, which is the writer thread's exit signal after it
+//! flushes what was already queued (so a DONE queued at removal still
+//! reaches the socket).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::util::bounded::Sender;
+
+use super::frame::{encode, BusyReason, Frame};
+
+struct ConnState {
+    /// encoded outbound frames, drained by the writer thread.
+    tx: Sender<Vec<u8>>,
+    /// server-side read id → client tag, for every admitted read not
+    /// yet answered.
+    outstanding: HashMap<usize, u64>,
+    /// client sent FIN: queue DONE and drop once `outstanding` drains.
+    fin: bool,
+}
+
+/// All live connections, keyed by tenant id (see module docs for the
+/// locking discipline).
+#[derive(Default)]
+pub(crate) struct ConnectionRegistry {
+    conns: Mutex<HashMap<u64, ConnState>>,
+}
+
+impl ConnectionRegistry {
+    /// Register a fresh connection with its writer-thread channel.
+    pub(crate) fn add(&self, tenant: u64, tx: Sender<Vec<u8>>) {
+        let prev = self.conns.lock().unwrap().insert(tenant, ConnState {
+            tx,
+            outstanding: HashMap::new(),
+            fin: false,
+        });
+        debug_assert!(prev.is_none(), "tenant ids are never reused");
+    }
+
+    /// Record an admitted read BEFORE it is submitted to the pipeline,
+    /// so a result can never race ahead of its routing entry. False if
+    /// the connection is already gone.
+    pub(crate) fn track(&self, tenant: u64, read_id: usize, tag: u64)
+        -> bool
+    {
+        let mut m = self.conns.lock().unwrap();
+        match m.get_mut(&tenant) {
+            Some(c) => {
+                c.outstanding.insert(read_id, tag);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Queue a RESULT for one completed read and, if that read was the
+    /// last thing a FINished connection awaited, the DONE as well
+    /// (removing the connection). False if the connection or the read
+    /// is unknown — a late result for a dead tenant is dropped here.
+    pub(crate) fn route_result(&self, tenant: u64, read_id: usize,
+                               seq: &[u8]) -> bool {
+        let mut m = self.conns.lock().unwrap();
+        let Some(c) = m.get_mut(&tenant) else { return false };
+        let Some(tag) = c.outstanding.remove(&read_id) else {
+            return false;
+        };
+        let sent = c.tx
+            .send(encode(&Frame::Result { tag, seq: seq.to_vec() }))
+            .is_ok();
+        if c.fin && c.outstanding.is_empty() {
+            let _ = c.tx.send(encode(&Frame::Done));
+            m.remove(&tenant);
+        }
+        sent
+    }
+
+    /// Queue a BUSY refusal for a submission that was never admitted
+    /// (it has no outstanding entry to clear).
+    pub(crate) fn send_busy(&self, tenant: u64, tag: u64,
+                            reason: BusyReason) -> bool {
+        let m = self.conns.lock().unwrap();
+        match m.get(&tenant) {
+            Some(c) => c.tx.send(encode(&Frame::Busy { tag, reason }))
+                .is_ok(),
+            None => false,
+        }
+    }
+
+    /// Client sent FIN: if nothing is outstanding the DONE goes out now
+    /// and the connection is removed (returns true — the reader may
+    /// exit); otherwise the flag arms `route_result` to finish the
+    /// drain.
+    pub(crate) fn mark_fin(&self, tenant: u64) -> bool {
+        let mut m = self.conns.lock().unwrap();
+        let Some(c) = m.get_mut(&tenant) else { return true };
+        c.fin = true;
+        if c.outstanding.is_empty() {
+            let _ = c.tx.send(encode(&Frame::Done));
+            m.remove(&tenant);
+            return true;
+        }
+        false
+    }
+
+    /// Tear down a connection that died (EOF without a clean DONE,
+    /// protocol error, read error): returns how many reads it still
+    /// awaited so the caller can cancel them at the collector and
+    /// release their quota slots. Dropping the state drops the frame
+    /// sender, which stops the writer thread.
+    pub(crate) fn drop_conn(&self, tenant: u64) -> usize {
+        self.conns.lock().unwrap()
+            .remove(&tenant)
+            .map_or(0, |c| c.outstanding.len())
+    }
+
+    /// Reads currently awaited by `tenant` (0 if gone).
+    #[cfg(test)]
+    pub(crate) fn outstanding(&self, tenant: u64) -> usize {
+        self.conns.lock().unwrap()
+            .get(&tenant).map_or(0, |c| c.outstanding.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bounded;
+
+    use super::super::frame::FrameParser;
+
+    fn drain(rx: &bounded::Receiver<Vec<u8>>) -> Vec<Frame> {
+        let mut parser = FrameParser::default();
+        while let Ok(b) = rx.try_recv() {
+            parser.feed(&b);
+        }
+        let mut out = Vec::new();
+        while let Some(f) = parser.next().unwrap() {
+            out.push(f);
+        }
+        out
+    }
+
+    #[test]
+    fn done_follows_last_result_after_fin() {
+        let reg = ConnectionRegistry::default();
+        let (tx, rx) = bounded::bounded(64);
+        reg.add(9, tx);
+        assert!(reg.track(9, 100, 7));
+        assert!(reg.track(9, 101, 8));
+        assert!(!reg.mark_fin(9), "two reads still outstanding");
+        assert!(reg.route_result(9, 100, &[0, 1]));
+        assert!(reg.route_result(9, 101, &[2]));
+        let frames = drain(&rx);
+        assert_eq!(frames, vec![
+            Frame::Result { tag: 7, seq: vec![0, 1] },
+            Frame::Result { tag: 8, seq: vec![2] },
+            Frame::Done,
+        ]);
+        assert!(!reg.route_result(9, 100, &[]),
+                "connection is gone after DONE");
+    }
+
+    #[test]
+    fn fin_with_nothing_outstanding_is_immediate_done() {
+        let reg = ConnectionRegistry::default();
+        let (tx, rx) = bounded::bounded(64);
+        reg.add(3, tx);
+        assert!(reg.mark_fin(3));
+        assert_eq!(drain(&rx), vec![Frame::Done]);
+    }
+
+    #[test]
+    fn drop_conn_reports_orphans_and_silences_late_results() {
+        let reg = ConnectionRegistry::default();
+        let (tx, rx) = bounded::bounded(64);
+        reg.add(4, tx);
+        assert!(reg.track(4, 1, 10));
+        assert!(reg.track(4, 2, 11));
+        assert_eq!(reg.drop_conn(4), 2);
+        assert!(!reg.route_result(4, 1, &[0]), "late result dropped");
+        assert!(!reg.send_busy(4, 12, BusyReason::Quota));
+        assert_eq!(drain(&rx), vec![], "nothing was queued");
+        assert_eq!(reg.drop_conn(4), 0, "double drop is a no-op");
+    }
+}

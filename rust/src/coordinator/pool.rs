@@ -176,6 +176,7 @@ impl ShardHost {
                     if !dec.send_round_robin(&mut rr, DecodeJob {
                         read_id: key.read_id,
                         window_idx: key.window_idx,
+                        tenant: key.tenant,
                         lp,
                         tier,
                         signal,
@@ -321,6 +322,10 @@ pub(crate) fn spawn_decode_pool(
                             let _ = e.tx.send(WindowJob {
                                 read_id: job.read_id,
                                 window_idx: job.window_idx,
+                                // the tenant tag rides the re-queue, so
+                                // an escalated window still routes its
+                                // (single) completion to its owner
+                                tenant: job.tenant,
                                 signal: job.signal.unwrap_or_default(),
                                 tier: Tier::Hq,
                                 enqueued_at: now,
@@ -333,6 +338,7 @@ pub(crate) fn spawn_decode_pool(
                         if tx.send(DecodedWindow {
                             read_id: job.read_id,
                             window_idx: job.window_idx,
+                            tenant: job.tenant,
                             seq: best,
                         }).is_err() {
                             break;
@@ -358,6 +364,7 @@ pub(crate) fn spawn_decode_pool(
                     if tx.send(DecodedWindow {
                         read_id: job.read_id,
                         window_idx: job.window_idx,
+                        tenant: job.tenant,
                         seq,
                     }).is_err() {
                         break;

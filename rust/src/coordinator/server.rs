@@ -73,6 +73,11 @@ pub use super::config::CoordinatorConfig;
 pub struct CalledRead {
     /// id of the submitted `Read` this call answers.
     pub read_id: usize,
+    /// owning tenant: 0 for reads submitted through the in-process
+    /// library path (`submit`), the submitting connection's id for
+    /// reads that arrived over the TCP front-end (`coordinator::net`),
+    /// which uses this tag to route the completion back to its socket.
+    pub tenant: u64,
     /// consensus base sequence (values 0–3, one per called base).
     pub seq: Vec<u8>,
     /// per-window decoded fragments (pre-splice), for accuracy accounting.
@@ -388,11 +393,53 @@ impl Coordinator {
     /// (unbounded) output queue until taken; interleave `drain_ready()`
     /// in long submission loops to keep that flat too.
     pub fn submit(&mut self, read: &Read) {
+        self.submit_tagged(read, 0);
+    }
+
+    /// `submit` with an explicit owning tenant: completions carry the
+    /// tag in [`CalledRead::tenant`] so a front-end can route each one
+    /// back to the connection that submitted it. Tenant 0 is the
+    /// untenanted library path (`submit` delegates here with 0).
+    pub fn submit_tagged(&mut self, read: &Read, tenant: u64) {
         let ws = windows_from_read(read, self.window, self.cfg.hop);
-        if ws.is_empty() {
+        let sigs: Vec<Vec<f32>> =
+            ws.into_iter().map(|w| w.signal).collect();
+        self.enqueue_windows(read.id, tenant, sigs);
+    }
+
+    /// Submit a bare signal with no truth labels — the TCP front-end's
+    /// intake, where a client streams raw samples and nothing else. The
+    /// signal is chopped into hop-strided windows exactly like
+    /// `submit`'s windower chops a simulated read (every full window of
+    /// a real-length read carries whole bases, so the two paths produce
+    /// byte-identical window sets — pinned by the network byte-identity
+    /// test). Returns the number of windows delivered into the
+    /// pipeline: 0 means the read was trivially complete (shorter than
+    /// one window) or the pipeline is already torn down, and no
+    /// `CalledRead` will ever be emitted for it.
+    pub fn submit_signal(&mut self, read_id: usize, signal: &[f32],
+                         tenant: u64) -> usize {
+        let window = self.window;
+        let mut sigs = Vec::new();
+        let mut start = 0usize;
+        while start + window <= signal.len() {
+            sigs.push(signal[start..start + window].to_vec());
+            start += self.cfg.hop;
+        }
+        self.enqueue_windows(read_id, tenant, sigs)
+    }
+
+    /// Shared intake tail of `submit_tagged`/`submit_signal`: register,
+    /// enqueue, count.
+    fn enqueue_windows(&mut self, read_id: usize, tenant: u64,
+                       sigs: Vec<Vec<f32>>) -> usize {
+        if sigs.is_empty() {
             // shorter than one window: accepted, trivially complete
             self.metrics.add(&self.metrics.reads_in, 1);
-            return;
+            if tenant != 0 {
+                self.metrics.add(&self.metrics.tenant(tenant).reads_in, 1);
+            }
+            return 0;
         }
         // register BEFORE the first window enters the pipeline so the
         // collector always knows the expected count. Counters, by
@@ -402,17 +449,18 @@ impl Coordinator {
         // `windows` claiming deliveries that never happened (a
         // partially-sent read counts only its delivered prefix, and a
         // fully-refused read counts nothing at all).
-        self.registry.register(read.id, ws.len());
+        self.registry.register_tenant(read_id, sigs.len(), tenant);
         // fresh windows enter at the fast tier when tiering is armed;
         // a single-tier pipeline tags everything hq (the only model)
         let tier = if self.tiers.is_some() { Tier::Fast } else { Tier::Hq };
         let mut delivered: u64 = 0;
         if let Some(tx) = &self.tx_windows {
-            for (i, w) in ws.into_iter().enumerate() {
+            for (i, signal) in sigs.into_iter().enumerate() {
                 if tx.send(WindowJob {
-                    read_id: read.id,
+                    read_id,
                     window_idx: i,
-                    signal: w.signal,
+                    tenant,
+                    signal,
                     tier,
                     enqueued_at: Instant::now(),
                     escalated_at: None,
@@ -421,19 +469,41 @@ impl Coordinator {
                     // window of this read got in, drop the registration
                     // so in_flight() doesn't count it forever.
                     if i == 0 {
-                        self.registry.unregister(read.id);
+                        self.registry.unregister(read_id);
                     }
                     break;
                 }
                 delivered += 1;
             }
         } else {
-            self.registry.unregister(read.id);
+            self.registry.unregister(read_id);
         }
         if delivered > 0 {
             self.metrics.add(&self.metrics.reads_in, 1);
             self.metrics.add(&self.metrics.windows, delivered);
+            if tenant != 0 {
+                let ts = self.metrics.tenant(tenant);
+                self.metrics.add(&ts.reads_in, 1);
+                self.metrics.add(&ts.windows, delivered);
+            }
         }
+        delivered as usize
+    }
+
+    /// Mark every in-flight read of `tenant` cancelled (its owning
+    /// connection died): the windows keep draining through the
+    /// pipeline, but the collector drops each completed assembly
+    /// instead of voting and emitting it, so nothing leaks and
+    /// `in_flight()` settles to 0 on its own. Returns the number of
+    /// reads marked. See [`ReadRegistry::cancel_tenant`].
+    pub fn cancel_tenant(&self, tenant: u64) -> usize {
+        self.registry.cancel_tenant(tenant)
+    }
+
+    /// The model's window length in samples (from the artifact meta) —
+    /// what `submit_signal` chops against.
+    pub fn window(&self) -> usize {
+        self.window
     }
 
     /// Non-blocking: the next read whose last window has decoded, if any.

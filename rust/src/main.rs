@@ -2,6 +2,7 @@
 //!
 //! Subcommands (hand-rolled parser; clap is unavailable offline):
 //!   basecall  — run the coordinator over a synthetic sequencing run
+//!   serve     — multi-tenant TCP front-end over one shared pipeline
 //!   simulate  — emit a synthetic run's stats (Table 4 workloads)
 //!   figures   — regenerate paper tables/figures: `helix figures fig24`
 //!   schemes   — quick Fig 24 summary
@@ -13,7 +14,8 @@ use helix::basecall::ctc::BeamPrune;
 use helix::basecall::edit::identity;
 use helix::bench::figures;
 use helix::coordinator::{resolve_knob, AutoscaleConfig, Coordinator,
-                         CoordinatorConfig, KnobSource};
+                         CoordinatorConfig, KnobSource, ServeConfig,
+                         Server};
 use helix::genome::pore::PoreModel;
 use helix::genome::synth::{RunSpec, SequencingRun};
 use helix::runtime::meta::default_artifacts_dir;
@@ -29,6 +31,10 @@ fn usage() -> ! {
         [--hq-min-shards N] [--hq-max-shards N]]\n    \
         [--beam-prune DELTA [--beam-floor FLOOR]]\n    \
         [--escalate-margin M [--tier-bits B]]\n  \
+        serve [--model guppy] [--bits 32] [--backend native|xla] \
+        [--shards N]\n    \
+        [--serve-addr HOST:PORT] [--tenant-quota N] [--slo-ms MS]\n    \
+        [--escalate-margin M [--tier-bits B]]\n  \
         simulate [--genome 10000] [--coverage 30]\n  \
         figures <fig2|...|fig26|table1..table5|all>\n  \
         schemes\n  \
@@ -39,7 +45,8 @@ fn usage() -> ! {
         HELIX_SLO_MS=MS HELIX_AUTOSCALE_DECODE=1 HELIX_AUTOSCALE_VOTE=1\n     \
         HELIX_BEAM_PRUNE=DELTA HELIX_BEAM_FLOOR=FLOOR\n     \
         HELIX_ESCALATE_MARGIN=M HELIX_TIER_BITS=B\n     \
-        HELIX_HQ_MIN_SHARDS=N HELIX_HQ_MAX_SHARDS=N\n\
+        HELIX_HQ_MIN_SHARDS=N HELIX_HQ_MAX_SHARDS=N\n     \
+        HELIX_SERVE_ADDR=HOST:PORT HELIX_TENANT_QUOTA=N\n\
         Every knob resolves flag-over-env-over-default; a flag that does \
         not\n\
         parse is an error, a malformed env value keeps the default.\n\
@@ -70,7 +77,16 @@ fn usage() -> ! {
         unset\n\
         runs the single-tier pipeline. --hq-min/max-shards bound the hq \
         pool\n\
-        under the autoscaler (defaults: 1 and max-shards).");
+        under the autoscaler (defaults: 1 and max-shards).\n\
+        serve listens on --serve-addr (or HELIX_SERVE_ADDR; default\n\
+        127.0.0.1:4550) and runs every connection as a tenant over ONE\n\
+        shared pipeline: --tenant-quota bounds each tenant's in-flight \
+        reads\n\
+        (0 = unlimited; excess refused with BUSY so a greedy client \
+        blocks\n\
+        only itself) and --slo-ms arms load shedding (interval p99 over \
+        the\n\
+        budget refuses ALL new reads with BUSY until it recovers).");
     std::process::exit(2);
 }
 
@@ -112,6 +128,62 @@ fn flags(args: &[String]) -> std::collections::HashMap<String, String> {
     out
 }
 
+// `resolve_knob` parser callbacks shared by the basecall and serve
+// subcommands (one contract for flag AND env values — range checks
+// live here, not at the call sites).
+
+fn pos_usize(s: &str) -> Option<usize> {
+    s.parse::<usize>().ok().filter(|&n| n >= 1)
+}
+
+fn nonneg_usize(s: &str) -> Option<usize> {
+    s.parse::<usize>().ok()
+}
+
+fn pos_ms(s: &str) -> Option<std::time::Duration> {
+    s.parse::<u64>().ok().filter(|&ms| ms >= 1)
+        .map(std::time::Duration::from_millis)
+}
+
+fn boolish(s: &str) -> Option<bool> {
+    match s {
+        "1" | "true" => Some(true),
+        "0" | "false" => Some(false),
+        _ => None,
+    }
+}
+
+fn nonneg_f32(s: &str) -> Option<f32> {
+    s.parse::<f32>().ok().filter(|v| v.is_finite() && *v >= 0.0)
+}
+
+// escalation margins may be infinite ("inf" = escalate everything),
+// just never NaN or negative
+fn margin_f32(s: &str) -> Option<f32> {
+    s.parse::<f32>().ok().filter(|v| !v.is_nan() && *v >= 0.0)
+}
+
+const POS_INT: &str = "a positive integer";
+const NONNEG_INT: &str = "a nonnegative integer (0 = unlimited)";
+const POS_MS: &str = "positive milliseconds";
+const BOOLISH: &str = "bare flag, or 1|true|0|false";
+
+/// Resolve the backend kind: an explicit `--backend` beats
+/// `HELIX_BACKEND` beats native.
+fn backend_kind(f: &std::collections::HashMap<String, String>)
+    -> Result<BackendKind>
+{
+    match f.get("backend").map(|s| s.as_str()) {
+        None => BackendKind::from_env(),
+        Some("native") => Ok(BackendKind::Native),
+        #[cfg(feature = "xla")]
+        Some("xla") => Ok(BackendKind::Xla),
+        Some(other) => anyhow::bail!(
+            "unknown --backend '{other}' (native|xla; xla needs \
+             a `--features xla` build)"),
+    }
+}
+
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = args.first().map(|s| s.as_str()).unwrap_or("");
@@ -127,46 +199,12 @@ fn main() -> Result<()> {
                 .map_or(2000, |s| s.parse().unwrap_or(2000));
             let coverage: usize = f.get("coverage")
                 .map_or(5, |s| s.parse().unwrap_or(5));
-            let kind = match f.get("backend").map(|s| s.as_str()) {
-                None => BackendKind::from_env()?,
-                Some("native") => BackendKind::Native,
-                #[cfg(feature = "xla")]
-                Some("xla") => BackendKind::Xla,
-                Some(other) => anyhow::bail!(
-                    "unknown --backend '{other}' (native|xla; xla needs \
-                     a `--features xla` build)"),
-            };
+            let kind = backend_kind(&f)?;
             // Every serving knob below resolves through ONE rule
             // (coordinator::config::resolve_knob): an explicit flag
             // beats the HELIX_* env var beats the default, a flag that
             // doesn't parse is an error (like --backend), and a
             // malformed env value silently keeps the default.
-            let pos_usize = |s: &str| {
-                s.parse::<usize>().ok().filter(|&n| n >= 1)
-            };
-            let pos_ms = |s: &str| {
-                s.parse::<u64>().ok().filter(|&ms| ms >= 1)
-                    .map(std::time::Duration::from_millis)
-            };
-            let boolish = |s: &str| match s {
-                "1" | "true" => Some(true),
-                "0" | "false" => Some(false),
-                _ => None,
-            };
-            let nonneg_f32 = |s: &str| {
-                s.parse::<f32>().ok()
-                    .filter(|v| v.is_finite() && *v >= 0.0)
-            };
-            // escalation margins may be infinite ("inf" = escalate
-            // everything), just never NaN or negative
-            let margin_f32 = |s: &str| {
-                s.parse::<f32>().ok()
-                    .filter(|v| !v.is_nan() && *v >= 0.0)
-            };
-            const POS_INT: &str = "a positive integer";
-            const POS_MS: &str = "positive milliseconds";
-            const BOOLISH: &str = "bare flag, or 1|true|0|false";
-
             // DNN shard count: --shards beats HELIX_SHARDS beats 1.
             let shards: usize =
                 resolve_knob(&f, "shards", "HELIX_SHARDS", POS_INT,
@@ -371,6 +409,77 @@ fn main() -> Result<()> {
                       before the run ended)", called.len(), dt);
             println!("mean read identity: {:.4}", acc / called.len() as f64);
             println!("{}", metrics.report(max_batch));
+        }
+        "serve" => {
+            let model = f.get("model").cloned()
+                .unwrap_or_else(|| "guppy".into());
+            let bits: u32 = f.get("bits").map_or(32, |s| s.parse().unwrap_or(32));
+            let kind = backend_kind(&f)?;
+            let shards: usize =
+                resolve_knob(&f, "shards", "HELIX_SHARDS", POS_INT,
+                             pos_usize)?
+                    .map_or(1, |(n, _)| n);
+            // listen address: any nonempty host:port; port 0 binds an
+            // ephemeral port (printed once the listener is up)
+            let addr: String = resolve_knob(
+                &f, "serve-addr", "HELIX_SERVE_ADDR", "host:port",
+                |s: &str| if s.contains(':') { Some(s.to_string()) }
+                          else { None })?
+                .map_or_else(|| "127.0.0.1:4550".into(), |(a, _)| a);
+            let tenant_quota: usize = resolve_knob(
+                &f, "tenant-quota", "HELIX_TENANT_QUOTA", NONNEG_INT,
+                nonneg_usize)?
+                .map_or(ServeConfig::default().tenant_quota,
+                        |(n, _)| n);
+            // NOTE: under `serve`, --slo-ms is the load-shedding
+            // budget and stands alone (no --max-shards needed); the
+            // basecall subcommand gives the same flag to the
+            // autoscaler instead.
+            let slo = resolve_knob(&f, "slo-ms", "HELIX_SLO_MS",
+                                   POS_MS, pos_ms)?
+                .map(|(v, _)| v);
+            let escalate_margin: Option<f32> = resolve_knob(
+                &f, "escalate-margin", "HELIX_ESCALATE_MARGIN",
+                "a non-negative log-prob margin, or 'inf'", margin_f32)?
+                .map(|(m, _)| m);
+            let tier_bits: Option<u32> = match resolve_knob(
+                &f, "tier-bits", "HELIX_TIER_BITS",
+                "a positive bit-width",
+                |s: &str| s.parse::<u32>().ok().filter(|&b| b >= 1))?
+            {
+                Some((_, KnobSource::Flag)) if escalate_margin.is_none() =>
+                    anyhow::bail!("--tier-bits needs --escalate-margin \
+                                   or HELIX_ESCALATE_MARGIN"),
+                Some(_) if escalate_margin.is_none() => None,
+                Some((b, _)) => Some(b),
+                None => None,
+            };
+            kind.prepare(&dir)?;
+            let cfg = CoordinatorConfig {
+                model: model.clone(), bits, backend: kind,
+                artifacts_dir: dir.clone(),
+                dnn_shards: shards,
+                escalate_margin,
+                tier_bits,
+                ..Default::default()
+            };
+            let max_batch = cfg.policy.max_batch;
+            let server = Server::start(cfg, ServeConfig {
+                addr, tenant_quota, slo,
+            })?;
+            println!("serving {model}/{bits}b on {} ({shards} dnn \
+                      shard{}, tenant quota {}, slo {}) — kill to stop",
+                     server.local_addr(),
+                     if shards == 1 { "" } else { "s" },
+                     if tenant_quota == 0 { "unlimited".into() }
+                     else { tenant_quota.to_string() },
+                     slo.map_or("off".into(), |d| format!("{d:?}")));
+            // foreground forever: periodic metrics report (per-tenant
+            // rows included); the process is stopped by signal
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(30));
+                println!("{}", server.metrics().report(max_batch));
+            }
         }
         "simulate" => {
             let genome: usize = f.get("genome")

@@ -23,7 +23,7 @@ use helix::coordinator::{
 use helix::util::bounded::{bounded, TrySendError};
 
 fn win(read_id: usize, window_idx: usize, fill: u8) -> DecodedWindow {
-    DecodedWindow { read_id, window_idx, seq: vec![fill; 8] }
+    DecodedWindow { read_id, window_idx, tenant: 0, seq: vec![fill; 8] }
 }
 
 #[test]
@@ -1088,4 +1088,435 @@ fn soak_chaos_tiered_escalation_keeps_output_identical() {
         .count();
     assert!(fast_downs >= 1,
             "gaps must have retired a fast shard: {events:?}");
+}
+
+// ---------------------------------------------------------------------
+// multi-tenant TCP serving front-end (coordinator::net)
+// ---------------------------------------------------------------------
+
+use std::io::{Read as IoRead, Write as IoWrite};
+
+use helix::coordinator::net::frame::{BusyReason, Frame};
+use helix::coordinator::{Client, ServeConfig, Server};
+
+fn serve_pipeline_cfg() -> CoordinatorConfig {
+    CoordinatorConfig {
+        model: "guppy".into(),
+        bits: 32,
+        policy: BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+        },
+        artifacts_dir: no_artifacts_dir(),
+        ..Default::default()
+    }
+}
+
+/// Block until the server answers `tag`: the called bases on RESULT,
+/// the refusal reason on BUSY.
+fn await_answer(client: &mut Client, tag: u64)
+    -> Result<Vec<u8>, BusyReason>
+{
+    loop {
+        match client.next_event().unwrap() {
+            Frame::Result { tag: t, seq } if t == tag => return Ok(seq),
+            Frame::Busy { tag: t, reason } if t == tag =>
+                return Err(reason),
+            other => panic!("unexpected frame awaiting {tag}: {other:?}"),
+        }
+    }
+}
+
+/// The byte-identity pin: the same signals submitted through one TCP
+/// client must call the same bases as the in-process library path. The
+/// wire intake chops raw signal with no truth labels, so this is the
+/// test that keeps `Coordinator::submit_signal`'s chop aligned with
+/// `submit`'s windower.
+#[test]
+fn tcp_served_reads_match_library_submit_bytes() {
+    let run = sim_run(1200, 4, 57);
+    let (lib, _m) = call_run_with_shards(&run, 1);
+    let lib_by_id: std::collections::HashMap<usize, &helix::coordinator::CalledRead> =
+        lib.iter().map(|c| (c.read_id, c)).collect();
+
+    let server = Server::start(serve_pipeline_cfg(), ServeConfig {
+        tenant_quota: 0, // identity test, not an admission test
+        ..ServeConfig::default()
+    }).unwrap();
+    let mut client = Client::connect(server.local_addr()).unwrap();
+    for r in &run.reads {
+        client.submit(r.id as u64, &r.signal).unwrap();
+    }
+    let summary = client.drain().unwrap();
+    assert!(summary.busy.is_empty(), "nothing may be refused: {:?}",
+            summary.busy);
+    assert_eq!(summary.results.len(), run.reads.len(),
+               "every submitted read must be answered");
+    for (tag, seq) in &summary.results {
+        match lib_by_id.get(&(*tag as usize)) {
+            Some(l) => assert_eq!(
+                seq, &l.seq,
+                "read {tag}: TCP bases diverged from library submit()"),
+            // the library path emits nothing for sub-window reads; the
+            // wire path answers them with an explicit empty RESULT
+            None => assert!(seq.is_empty(),
+                            "read {tag} unknown to the library run \
+                             must be trivially empty"),
+        }
+    }
+    let m = server.metrics();
+    assert!(m.report(4).contains("tenants [t1 "),
+            "per-tenant row must render: {}", m.report(4));
+    server.shutdown().unwrap();
+}
+
+/// Three concurrent tenants over one pipeline: each gets exactly its
+/// own tags back, byte-identical to the library run, no cross-tenant
+/// leakage.
+#[test]
+fn concurrent_tenants_each_get_their_own_results() {
+    let run = sim_run(1000, 3, 91);
+    let (lib, _m) = call_run_with_shards(&run, 1);
+    let lib_by_id: std::collections::HashMap<usize, Vec<u8>> =
+        lib.iter().map(|c| (c.read_id, c.seq.clone())).collect();
+
+    let server = Server::start(serve_pipeline_cfg(), ServeConfig {
+        tenant_quota: 0,
+        ..ServeConfig::default()
+    }).unwrap();
+    let addr = server.local_addr();
+    let reads: Vec<(usize, Vec<f32>)> = run.reads.iter()
+        .map(|r| (r.id, r.signal.clone())).collect();
+    let reads = Arc::new(reads);
+
+    let mut handles = Vec::new();
+    for lane in 0..3usize {
+        let reads = reads.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut client = Client::connect(addr).unwrap();
+            let mine: Vec<&(usize, Vec<f32>)> = reads.iter()
+                .filter(|(id, _)| id % 3 == lane).collect();
+            for (id, sig) in &mine {
+                client.submit(*id as u64, sig).unwrap();
+            }
+            let summary = client.drain().unwrap();
+            let want: Vec<u64> =
+                mine.iter().map(|(id, _)| *id as u64).collect();
+            (summary, want)
+        }));
+    }
+    for h in handles {
+        let (summary, want) = h.join().unwrap();
+        assert!(summary.busy.is_empty());
+        let mut got: Vec<u64> =
+            summary.results.iter().map(|(t, _)| *t).collect();
+        got.sort_unstable();
+        let mut want = want;
+        want.sort_unstable();
+        assert_eq!(got, want,
+                   "a tenant must get exactly its own tags back");
+        for (tag, seq) in &summary.results {
+            if let Some(l) = lib_by_id.get(&(*tag as usize)) {
+                assert_eq!(seq, l, "read {tag} diverged over TCP");
+            }
+        }
+    }
+    server.shutdown().unwrap();
+}
+
+/// A malformed byte stream costs that client its connection and
+/// nothing else: the server closes it, and a well-behaved client on
+/// the same server still gets full service.
+#[test]
+fn malformed_stream_drops_connection_but_not_server() {
+    let server = Server::start(serve_pipeline_cfg(),
+                               ServeConfig::default()).unwrap();
+    let mut bad = std::net::TcpStream::connect(server.local_addr())
+        .unwrap();
+    bad.write_all(&[0xffu8; 64]).unwrap();
+    bad.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut sink = [0u8; 64];
+    assert_eq!(bad.read(&mut sink).unwrap(), 0,
+               "server must close a connection that sent garbage");
+
+    let run = sim_run(600, 2, 13);
+    let mut good = Client::connect(server.local_addr()).unwrap();
+    good.submit(7, &run.reads[0].signal).unwrap();
+    let summary = good.drain().unwrap();
+    assert_eq!(summary.results.len(), 1,
+               "a clean client must be unaffected");
+    server.shutdown().unwrap();
+}
+
+/// Quota accounting end-to-end, including the escalation edge: with
+/// `tenant_quota = 1` and every window forced through the hq
+/// escalation round-trip, three sequential reads must ALL be admitted
+/// — an escalated window that double-counted its read against the
+/// quota would wedge the slot and refuse read two — and the tenant's
+/// in-flight count must settle to 0 between reads.
+#[test]
+fn quota_slot_survives_escalation_roundtrip() {
+    let mut cfg = serve_pipeline_cfg();
+    cfg.escalate_margin = Some(f32::INFINITY); // escalate every window
+    let server = Server::start(cfg, ServeConfig {
+        tenant_quota: 1,
+        ..ServeConfig::default()
+    }).unwrap();
+    let run = sim_run(900, 3, 29);
+    let mut client = Client::connect(server.local_addr()).unwrap();
+    for (i, r) in run.reads.iter().take(3).enumerate() {
+        client.submit(i as u64, &r.signal).unwrap();
+        let seq = await_answer(&mut client, i as u64);
+        assert!(seq.is_ok(),
+                "sequential read {i} refused under quota 1: the slot \
+                 leaked ({seq:?})");
+        assert_eq!(server.tenant_in_flight(1), 0,
+                   "slot must be free once the read is answered");
+    }
+    // a flood past the quota is refused with BUSY(quota), not queued
+    let big = vec![0.2f32; 30_000];
+    let flood = 8u64;
+    for tag in 100..100 + flood {
+        client.submit(tag, &big).unwrap();
+    }
+    let summary = client.drain().unwrap();
+    assert_eq!(summary.results.len() + summary.busy.len(),
+               flood as usize, "every submission must be answered");
+    assert!(!summary.busy.is_empty(),
+            "a burst of {flood} reads under quota 1 must see BUSY");
+    assert!(summary.busy.iter()
+                .all(|(_, r)| *r == BusyReason::Quota),
+            "refusals must carry the quota reason: {:?}", summary.busy);
+    server.shutdown().unwrap();
+}
+
+/// SLO load shedding end-to-end. With a 1 ms budget no real read fits,
+/// so every interval in which a read completes leaves the gate
+/// breached until a quiet interval clears it. A load connection
+/// staggers big reads so completions keep re-breaching the gate while
+/// a probe connection polls submissions every 10 ms — the probe MUST
+/// see `BUSY(slo)` (a breach window outlives the probe period), the
+/// shed counter must cover it, and every probe must still be answered
+/// one way or the other.
+#[test]
+fn slo_breach_sheds_with_explicit_busy() {
+    let server = Server::start(serve_pipeline_cfg(), ServeConfig {
+        tenant_quota: 0,
+        slo: Some(Duration::from_millis(1)),
+        ..ServeConfig::default()
+    }).unwrap();
+    let addr = server.local_addr();
+
+    let load_reads = 6u64;
+    let load = std::thread::spawn(move || {
+        let big = vec![0.2f32; 12_000]; // ~100 windows: far over 1 ms
+        let mut c = Client::connect(addr).unwrap();
+        for tag in 0..load_reads {
+            c.submit(tag, &big).unwrap();
+            // stagger so completions land in separate gate intervals:
+            // several distinct breach windows, not one
+            std::thread::sleep(Duration::from_millis(30));
+        }
+        c.drain().unwrap()
+    });
+
+    let tiny = vec![0.1f32; 300]; // one window: cheap when admitted
+    let mut probe = Client::connect(addr).unwrap();
+    let mut probes = 0u64;
+    while !load.is_finished() {
+        probe.submit(probes, &tiny).unwrap();
+        probes += 1;
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    // keep probing through the trailing breach window (the interval
+    // holding the last completions has not been closed yet)
+    for _ in 0..8 {
+        probe.submit(probes, &tiny).unwrap();
+        probes += 1;
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    let load_summary = load.join().unwrap();
+    assert_eq!(
+        load_summary.results.len() + load_summary.busy.len(),
+        load_reads as usize,
+        "every load read must be answered");
+    let summary = probe.drain().unwrap();
+    assert_eq!(summary.results.len() + summary.busy.len(),
+               probes as usize, "every probe must be answered");
+    let busy_slo = summary.busy.iter()
+        .filter(|(_, r)| *r == BusyReason::Slo).count() as u64;
+    assert!(busy_slo >= 1,
+            "1 ms SLO with >1 ms completions must shed at least one \
+             probe ({probes} probes, {} admitted)",
+            summary.results.len());
+    let m = server.metrics();
+    assert!(m.shed_reads.load(Ordering::SeqCst) >= busy_slo,
+            "shed counter must cover every BUSY(slo)");
+    server.shutdown().unwrap();
+}
+
+/// A client that vanishes without FIN: its outstanding reads are
+/// cancelled at the collector — windows drain, nothing is emitted,
+/// `in_flight` settles to 0 — and a fresh client still gets service.
+#[test]
+fn client_disconnect_cancels_outstanding_reads() {
+    let server = Server::start(serve_pipeline_cfg(),
+                               ServeConfig::default()).unwrap();
+    let big = vec![0.3f32; 30_000];
+    let mut victim = Client::connect(server.local_addr()).unwrap();
+    for tag in 0..3u64 {
+        victim.submit(tag, &big).unwrap();
+    }
+    drop(victim); // vanish mid-flight, no FIN
+
+    // wait for the cancellation to show: the reader may still be
+    // backpressured inside submit_signal when the drop happens, so
+    // in_flight could read 0 before the reads are even registered —
+    // the drop counter is the signal that the teardown ran and at
+    // least one orphaned read drained through to assembly
+    let m = server.metrics();
+    let deadline = Instant::now() + Duration::from_secs(120);
+    while m.dropped_reads.load(Ordering::SeqCst) == 0
+        && Instant::now() < deadline
+    {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(m.dropped_reads.load(Ordering::SeqCst) >= 1,
+            "the victim's completed assemblies must be dropped");
+    while server.in_flight() > 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(server.in_flight(), 0,
+               "orphaned windows must drain, not leak");
+
+    let run = sim_run(600, 2, 31);
+    let mut fresh = Client::connect(server.local_addr()).unwrap();
+    fresh.submit(1, &run.reads[0].signal).unwrap();
+    assert_eq!(fresh.drain().unwrap().results.len(), 1);
+    server.shutdown().unwrap();
+}
+
+/// Soak/chaos for the serving front-end: a greedy tenant floods far
+/// past its quota while trickle tenants submit politely, and one
+/// victim client is killed mid-run. The greedy client must be refused
+/// with BUSY(quota) without ever starving the trickles (their reads
+/// all complete within a generous wall bound — the fairness claim),
+/// the victim's orphans must drain (`in_flight` settles to 0), and
+/// every trickle answer must be byte-identical to the library run.
+/// Sized for `cargo test` by default; `HELIX_CI_SOAK=1` runs the long
+/// variant.
+#[test]
+fn soak_chaos_serve_fairness_quota_and_disconnect() {
+    let slow = std::env::var("HELIX_CI_SOAK")
+        .map(|v| v == "1").unwrap_or(false);
+    let (greedy_reads, greedy_len, trickle_lanes, per_bound) = if slow {
+        (40usize, 20_000usize, 3usize, Duration::from_secs(60))
+    } else {
+        (12, 6_000, 2, Duration::from_secs(30))
+    };
+
+    let run = sim_run(900, 3, 123);
+    let (lib, _m) = call_run_with_shards(&run, 1);
+    let lib_by_id: std::collections::HashMap<usize, Vec<u8>> =
+        lib.iter().map(|c| (c.read_id, c.seq.clone())).collect();
+
+    let server = Server::start(serve_pipeline_cfg(), ServeConfig {
+        tenant_quota: 2,
+        ..ServeConfig::default()
+    }).unwrap();
+    let addr = server.local_addr();
+
+    // greedy tenant: floods everything up front, reads nothing until
+    // the end — the quota must push back on THIS connection only
+    let greedy = std::thread::spawn(move || {
+        let flood_sig = vec![0.4f32; greedy_len];
+        let mut c = Client::connect(addr).unwrap();
+        for tag in 0..greedy_reads as u64 {
+            c.submit(tag, &flood_sig).unwrap();
+        }
+        c.drain().unwrap()
+    });
+
+    // victim: submits and vanishes without FIN mid-run
+    let victim = std::thread::spawn(move || {
+        let doomed_sig = vec![0.5f32; 20_000];
+        let mut c = Client::connect(addr).unwrap();
+        for tag in 0..3u64 {
+            c.submit(tag, &doomed_sig).unwrap();
+        }
+        // dropped here: no FIN, reads still in flight
+    });
+
+    // trickle tenants: submit-wait loops over real reads; each read
+    // must complete inside the bound despite the greedy neighbour
+    let mut trickles = Vec::new();
+    for lane in 0..trickle_lanes {
+        let reads: Vec<(usize, Vec<f32>)> = run.reads.iter()
+            .filter(|r| r.id % trickle_lanes == lane)
+            .map(|r| (r.id, r.signal.clone()))
+            .collect();
+        trickles.push(std::thread::spawn(move || {
+            let mut c = Client::connect(addr).unwrap();
+            let mut answers = Vec::new();
+            let mut worst = Duration::ZERO;
+            for (id, sig) in &reads {
+                let t0 = Instant::now();
+                c.submit(*id as u64, sig).unwrap();
+                let seq = loop {
+                    match c.next_event().unwrap() {
+                        Frame::Result { tag, seq }
+                            if tag == *id as u64 => break seq,
+                        Frame::Busy { tag, reason }
+                            if tag == *id as u64 =>
+                            panic!("trickle read {tag} refused \
+                                    ({reason:?}): quota must never \
+                                    punish a polite tenant"),
+                        other => panic!("unexpected frame: {other:?}"),
+                    }
+                };
+                worst = worst.max(t0.elapsed());
+                answers.push((*id, seq));
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            let _ = c.fin();
+            (answers, worst)
+        }));
+    }
+
+    victim.join().unwrap();
+    for t in trickles {
+        let (answers, worst) = t.join().unwrap();
+        assert!(worst <= per_bound,
+                "a trickle read took {worst:?} (bound {per_bound:?}): \
+                 the greedy tenant starved its neighbours");
+        for (id, seq) in &answers {
+            if let Some(l) = lib_by_id.get(id) {
+                assert_eq!(seq, l,
+                           "trickle read {id} diverged under chaos");
+            }
+        }
+    }
+    let greedy_summary = greedy.join().unwrap();
+    assert_eq!(greedy_summary.results.len() + greedy_summary.busy.len(),
+               greedy_reads, "greedy reads lost");
+    assert!(!greedy_summary.busy.is_empty(),
+            "flooding {greedy_reads} reads past a quota of 2 must \
+             see BUSY");
+    assert!(greedy_summary.busy.iter()
+                .all(|(_, r)| *r == BusyReason::Quota),
+            "greedy refusals must carry the quota reason");
+
+    // the victim's kill plus everything else must drain to zero
+    let deadline = Instant::now() + Duration::from_secs(120);
+    while server.in_flight() > 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(server.in_flight(), 0,
+               "in_flight must settle to 0 after the chaos");
+    let m = server.metrics();
+    assert!(m.shed_reads.load(Ordering::SeqCst)
+                >= greedy_summary.busy.len() as u64,
+            "global shed counter must cover the greedy refusals");
+    server.shutdown().unwrap();
 }
