@@ -150,6 +150,16 @@ if [ "${1:-}" = "bench" ]; then
              "section (TCP serving bench missing)" >&2
         exit 1
     fi
+    # ... and so is the streaming assembly + rejection sweep: the
+    # `helix assemble` path (analysis stage throughput, reject gate
+    # accounting, streaming-vs-offline consensus identity) must emit
+    # its rows
+    if ! grep -q '"pipeline_rows"' BENCH_coordinator.json; then
+        echo "ci.sh: FAIL — BENCH_coordinator.json has no" \
+             "pipeline_rows section (streaming assembly bench" \
+             "missing)" >&2
+        exit 1
+    fi
     echo "wrote $(pwd)/BENCH_coordinator.json"
 
     echo "== cargo bench --bench basecall_hot (kernel perf gate)"

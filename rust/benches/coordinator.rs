@@ -8,7 +8,10 @@
 //! agreement and escalation cost across `--escalate-margin` values,
 //! with an hq-only baseline row), and the multi-tenant TCP front-end
 //! (`serve_rows`: many-small vs few-huge tenant shapes over a real
-//! socket, measuring wire-path cost against the library numbers).
+//! socket, measuring wire-path cost against the library numbers), and
+//! the streaming assembly + early-rejection sweep (`pipeline_rows`:
+//! the `helix assemble` path across reject thresholds, with the
+//! streaming-vs-offline consensus identity asserted inline).
 //! Self-contained:
 //! runs on the native quantized backend by default (artifacts are
 //! materialized on first run); HELIX_BACKEND=xla on a `--features xla`
@@ -514,6 +517,90 @@ fn main() {
                     serve_rows.len());
     }
 
+    // Streaming assembly + early rejection: the `helix assemble` path
+    // measured end-to-end (`pipeline_rows`). Voted reads side-feed the
+    // in-pipeline analysis stage; the sweep walks the reject threshold
+    // from off through a finite margin to "inf" (reject everything
+    // with a finite top-2 margin, i.e. all of it). Axes per row: wall
+    // throughput, reads surviving the gate, decode windows skipped by
+    // rejection, polished consensus length and its identity to the
+    // simulated genome — and the streaming-vs-offline byte-identity
+    // flag, asserted inline so a divergence fails the bench loudly
+    // rather than publishing a wrong row.
+    println!("\n== streaming assembly + rejection ({} reads) ==",
+             run.reads.len());
+    let mut pipeline_rows: Vec<String> = Vec::new();
+    let pipeline_summary;
+    {
+        use helix::basecall::edit::identity;
+        use helix::coordinator::ANALYSIS_MIN_OVERLAP;
+        let call_assemble = |reject: Option<f32>| {
+            let t0 = std::time::Instant::now();
+            let mut coord = Coordinator::new(CoordinatorConfig {
+                model: "guppy".into(),
+                bits: 32,
+                backend: kind,
+                decode_threads: 4,
+                analysis_threads: 2,
+                policy: BatchPolicy {
+                    max_batch: 8,
+                    max_wait: Duration::from_millis(5),
+                },
+                reject_threshold: reject,
+                artifacts_dir: dir.clone(),
+                ..Default::default()
+            }).unwrap();
+            let state = coord.analysis_state().unwrap();
+            let mut called = Vec::new();
+            for r in &run.reads {
+                coord.submit(r);
+                called.extend(coord.drain_ready());
+            }
+            let metrics = coord.metrics.clone();
+            called.extend(coord.finish().unwrap());
+            called.sort_by_key(|c| c.read_id);
+            (called, state.consensus(0), metrics,
+             t0.elapsed().as_secs_f64())
+        };
+        for (label, reject) in [("off", None),
+                                ("0", Some(0.0f32)),
+                                ("1.5", Some(1.5)),
+                                ("inf", Some(f32::INFINITY))] {
+            let (called, consensus, m, dt) = call_assemble(reject);
+            let seqs: Vec<Vec<u8>> =
+                called.iter().map(|c| c.seq.clone()).collect();
+            let offline =
+                helix::pipeline::consensus(&seqs, ANALYSIS_MIN_OVERLAP);
+            assert_eq!(consensus, offline,
+                       "streaming consensus diverged from the offline \
+                        pipeline at reject {label}");
+            let id = identity(&consensus, &run.genome);
+            let rejected = m.rejected_reads
+                .load(std::sync::atomic::Ordering::Relaxed);
+            let rwin = m.rejected_windows
+                .load(std::sync::atomic::Ordering::Relaxed);
+            let bases: usize =
+                called.iter().map(|c| c.seq.len()).sum();
+            println!("reject {label:<5} {dt:>8.2}s  {:>9.0} bases/s  \
+                      {} reads out ({rejected} rejected, {rwin} \
+                      windows skipped)  consensus {} bp  identity \
+                      {id:.4}",
+                     bases as f64 / dt, called.len(), consensus.len());
+            pipeline_rows.push(format!(
+                "{{\"reject\": \"{label}\", \"wall_s\": {dt:.3}, \
+                 \"bases_per_s\": {:.0}, \"reads_out\": {}, \
+                 \"rejected_reads\": {rejected}, \
+                 \"rejected_windows\": {rwin}, \
+                 \"consensus_len\": {}, \"identity\": {id:.4}, \
+                 \"offline_match\": true}}",
+                bases as f64 / dt, called.len(), consensus.len()));
+        }
+        pipeline_summary = format!(
+            "{{\"analysis_threads\": 2, \
+             \"min_overlap\": {ANALYSIS_MIN_OVERLAP}, \
+             \"genome_len\": 1200}}");
+    }
+
     // machine-readable summary for the perf trajectory (see ci.sh);
     // field semantics are documented in docs/TUNING.md
     let json = format!(
@@ -522,12 +609,14 @@ fn main() {
          \"shard_rows\": [{}], \"autoscale\": {}, \
          \"autoscale_rows\": [{}], \"slo\": {}, \
          \"slo_rows\": [{}], \"tier\": {}, \"tier_rows\": [{}], \
-         \"serve\": {}, \"serve_rows\": [{}]}}\n",
+         \"serve\": {}, \"serve_rows\": [{}], \
+         \"pipeline\": {}, \"pipeline_rows\": [{}]}}\n",
         kind.name(), run.reads.len(), total_bases, rows.join(", "),
         shard_rows.join(", "), autoscale_summary,
         autoscale_rows.join(", "), slo_summary, slo_rows.join(", "),
         tier_summary, tier_rows.join(", "),
-        serve_summary, serve_rows.join(", "));
+        serve_summary, serve_rows.join(", "),
+        pipeline_summary, pipeline_rows.join(", "));
     match std::fs::write("BENCH_coordinator.json", &json) {
         Ok(()) => println!("\nwrote BENCH_coordinator.json"),
         Err(e) => println!("\ncould not write BENCH_coordinator.json: {e}"),

@@ -1,0 +1,469 @@
+//! Streaming analysis stage + GenPIP-style early rejection.
+//!
+//! **Analysis** extends the coordinator past the collector: every voted
+//! read the vote pool emits is also side-fed (as an `AnalysisJob`) into
+//! a pool of analysis workers that maintain, per tenant, an
+//! *incremental* overlap graph — the same k-mer-seeded, banded-verified
+//! suffix/prefix graph `pipeline::overlap::find_overlaps` builds
+//! offline, discovered read-by-read as calls stream out. When the run
+//! (or a tenant's slice of it) is done, [`AnalysisState::consensus`]
+//! lays the graph out with the offline greedy assembler and polishes
+//! the draft against the same reads, so the streaming product is
+//! **byte-identical** to running `pipeline::consensus` over the called
+//! reads after the fact (pinned in `tests/coordinator_stream.rs`).
+//!
+//! Identity argument: for any ordered read pair `(a, b)`,
+//! `find_overlaps` emits an edge iff a tail-seed of `a` hits a
+//! head-seed of `b`, `a` is at least `min_len` long, and the banded
+//! verifier accepts — all order-free facts of the pair. The
+//! incremental index applies the exact same predicate when the later
+//! of the two reads arrives (in both directions), so the edge *set*
+//! matches; `consensus` then sorts reads by id and edges by
+//! `(a_idx, b_idx)`, reproducing `find_overlaps`' canonical emission
+//! order, and the greedy assembler's first-wins tie-breaks see
+//! identical input.
+//!
+//! **Rejection** is the GenPIP-style early exit: the CTC decode stage
+//! already computes a top-two-beam confidence margin per window (for
+//! tiered escalation); with `CoordinatorConfig::reject_threshold` set,
+//! a window whose margin lands *below* the threshold marks its whole
+//! read hopeless in the [`RejectGate`]. Every later window of that
+//! read skips the beam search entirely (`Metrics::rejected_windows`),
+//! the collector completes the read without voting or emitting it
+//! (`Metrics::rejected_reads`), and the analysis stage never sees it —
+//! the compute the read would have burned in decode/vote/overlap is
+//! returned to live reads. Threshold semantics follow the escalation
+//! margin: margins are non-negative, so `0.0` never rejects (and the
+//! pipeline is byte-identical to a gate-free build), while
+//! `f32::INFINITY` rejects every read whose decode produces a finite
+//! margin.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::basecall::vote::best_overlap;
+use crate::pipeline::assembly::{assemble_contigs_with_overlaps,
+                                assemble_with_overlaps};
+use crate::pipeline::overlap::{seed_hashes, Overlap};
+use crate::pipeline::polish::polish;
+use crate::util::bounded::Receiver;
+
+use super::autoscale::WorkerPool;
+use super::job::AnalysisJob;
+use super::metrics::{Metrics, StageId};
+
+/// Overlap floor for the streaming assembler — the `min_overlap` the
+/// offline identity pin runs `pipeline::consensus` with.
+pub const ANALYSIS_MIN_OVERLAP: usize = 20;
+
+/// Shared read-quality gate between the decode pool (which marks) and
+/// the collector router (which drops + forgets). Keyed by `read_id`
+/// alone — ids are globally unique across tenants.
+pub struct RejectGate {
+    threshold: f32,
+    rejected: Mutex<HashSet<usize>>,
+}
+
+impl RejectGate {
+    /// Gate with the given margin threshold (see
+    /// `CoordinatorConfig::reject_threshold` for the semantics).
+    pub fn new(threshold: f32) -> RejectGate {
+        RejectGate {
+            threshold,
+            rejected: Mutex::new(HashSet::new()),
+        }
+    }
+
+    /// The margin below which a window condemns its read.
+    pub fn threshold(&self) -> f32 {
+        self.threshold
+    }
+
+    /// Has this read already been condemned?
+    pub fn is_rejected(&self, read_id: usize) -> bool {
+        self.rejected.lock().unwrap().contains(&read_id)
+    }
+
+    /// Condemn a read. Returns `true` if this call newly marked it.
+    pub fn mark(&self, read_id: usize) -> bool {
+        self.rejected.lock().unwrap().insert(read_id)
+    }
+
+    /// Drop a read's mark once its last window has drained (no further
+    /// window can consult the gate, so the set stays bounded by the
+    /// reads in flight).
+    pub fn forget(&self, read_id: usize) {
+        self.rejected.lock().unwrap().remove(&read_id);
+    }
+
+    /// Drop every mark (end-of-stream; nothing can consult them now).
+    pub fn clear(&self) {
+        self.rejected.lock().unwrap().clear();
+    }
+}
+
+/// One tenant's incremental assembly state: the reads seen so far (in
+/// arrival order), the k-mer indexes over their heads/tails, and every
+/// verified overlap edge, kept as `(read_id, read_id, len)` triples so
+/// a later sort can translate them into the offline canonical order.
+#[derive(Default)]
+struct TenantAssembly {
+    /// `(read_id, voted sequence)` in arrival order; slot index is the
+    /// id space the seed indexes speak.
+    reads: Vec<(usize, Vec<u8>)>,
+    /// head-seed hash → slots whose first `min(len, min_overlap*2)`
+    /// bases contain it (every read, like `find_overlaps`' head index).
+    head_index: HashMap<u64, Vec<usize>>,
+    /// tail-seed hash → slots; only reads at least `min_overlap` long
+    /// (shorter reads are never an `a` side, exactly like the offline
+    /// outer-loop skip).
+    tail_index: HashMap<u64, Vec<usize>>,
+    /// verified edges as `(a_read_id, b_read_id, len)`.
+    overlaps: Vec<(usize, usize, usize)>,
+}
+
+struct AnalysisInner {
+    tenants: HashMap<u64, TenantAssembly>,
+    /// tombstones for cancelled tenants: ids are never reused, so a
+    /// late `AnalysisJob` draining out of the queue after
+    /// `drop_tenant` must be discarded, not resurrect the state.
+    cancelled: HashSet<u64>,
+}
+
+/// The streaming analysis stage's shared state: per-tenant incremental
+/// overlap graphs, queried for a polished consensus at any point.
+/// Workers call [`add_read`](AnalysisState::add_read) as voted reads
+/// stream out of the collector; `Coordinator::cancel_tenant` calls
+/// [`drop_tenant`](AnalysisState::drop_tenant) so a dead connection
+/// cannot leak partial contigs.
+pub struct AnalysisState {
+    min_overlap: usize,
+    inner: Mutex<AnalysisInner>,
+}
+
+impl AnalysisState {
+    /// Fresh state with the given overlap floor (the coordinator uses
+    /// [`ANALYSIS_MIN_OVERLAP`]).
+    pub fn new(min_overlap: usize) -> AnalysisState {
+        AnalysisState {
+            min_overlap,
+            inner: Mutex::new(AnalysisInner {
+                tenants: HashMap::new(),
+                cancelled: HashSet::new(),
+            }),
+        }
+    }
+
+    /// The overlap floor this state verifies against.
+    pub fn min_overlap(&self) -> usize {
+        self.min_overlap
+    }
+
+    /// Fold one voted read into its tenant's overlap graph: discover
+    /// every edge between it and the reads already indexed (both
+    /// directions, same seed-then-verify rule as `find_overlaps`),
+    /// then index its own head/tail seeds. Discarded without effect
+    /// for tenants already dropped.
+    pub fn add_read(&self, tenant: u64, read_id: usize, seq: Vec<u8>) {
+        let min = self.min_overlap;
+        let mut inner = self.inner.lock().unwrap();
+        if inner.cancelled.contains(&tenant) {
+            return;
+        }
+        let t = inner.tenants.entry(tenant).or_default();
+        // edges with the new read as the `a` (suffix) side: its tail
+        // seeds against the heads already indexed. Candidate slots are
+        // sorted + deduped like the offline candidate list.
+        if seq.len() >= min {
+            let tail = &seq[seq.len() - seq.len().min(min * 2)..];
+            let mut cands: Vec<usize> = seed_hashes(tail)
+                .filter_map(|h| t.head_index.get(&h))
+                .flatten()
+                .copied()
+                .collect();
+            cands.sort_unstable();
+            cands.dedup();
+            for b in cands {
+                if let Some(len) = best_overlap(&seq, &t.reads[b].1, min) {
+                    t.overlaps.push((read_id, t.reads[b].0, len));
+                }
+            }
+        }
+        // edges with the new read as the `b` (prefix) side: its head
+        // seeds against the tails already indexed.
+        let head = &seq[..seq.len().min(min * 2)];
+        let mut cands: Vec<usize> = seed_hashes(head)
+            .filter_map(|h| t.tail_index.get(&h))
+            .flatten()
+            .copied()
+            .collect();
+        cands.sort_unstable();
+        cands.dedup();
+        for a in cands {
+            if let Some(len) = best_overlap(&t.reads[a].1, &seq, min) {
+                t.overlaps.push((t.reads[a].0, read_id, len));
+            }
+        }
+        // index the new read: head seeds always (any read can be a
+        // prefix side), tail seeds only when long enough to ever be a
+        // suffix side.
+        let slot = t.reads.len();
+        for h in seed_hashes(head) {
+            t.head_index.entry(h).or_default().push(slot);
+        }
+        if seq.len() >= min {
+            let tail = &seq[seq.len() - seq.len().min(min * 2)..];
+            for h in seed_hashes(tail) {
+                t.tail_index.entry(h).or_default().push(slot);
+            }
+        }
+        t.reads.push((read_id, seq));
+    }
+
+    /// Snapshot a tenant's reads (sorted by read id) and its overlap
+    /// edges translated to indexes into that sorted order, sorted by
+    /// `(a, b)` — exactly the read order and edge order the offline
+    /// `find_overlaps` produces over the same reads.
+    fn snapshot(&self, tenant: u64)
+                -> Option<(Vec<Vec<u8>>, Vec<Overlap>)> {
+        let inner = self.inner.lock().unwrap();
+        let t = inner.tenants.get(&tenant)?;
+        let mut order: Vec<usize> = (0..t.reads.len()).collect();
+        order.sort_by_key(|&i| t.reads[i].0);
+        let idx_of: HashMap<usize, usize> = order.iter().enumerate()
+            .map(|(idx, &slot)| (t.reads[slot].0, idx))
+            .collect();
+        let seqs: Vec<Vec<u8>> = order.iter()
+            .map(|&slot| t.reads[slot].1.clone())
+            .collect();
+        let mut overlaps: Vec<Overlap> = t.overlaps.iter()
+            .map(|&(a_id, b_id, len)| Overlap {
+                a: idx_of[&a_id],
+                b: idx_of[&b_id],
+                len,
+            })
+            .collect();
+        overlaps.sort_by_key(|o| (o.a, o.b));
+        Some((seqs, overlaps))
+    }
+
+    /// The tenant's overlap edges in the offline canonical order
+    /// (read indexes follow read-id order). Empty for an unknown
+    /// tenant. Test/telemetry surface for the graph-identity pin.
+    pub fn overlaps(&self, tenant: u64) -> Vec<Overlap> {
+        self.snapshot(tenant).map_or_else(Vec::new, |(_, o)| o)
+    }
+
+    /// Polished consensus of everything the tenant has streamed so
+    /// far: greedy unitig layout over the incremental overlap graph,
+    /// then pileup-polish with the same reads — byte-identical to
+    /// `pipeline::consensus` over the tenant's called reads sorted by
+    /// id. Empty if the tenant has no reads.
+    pub fn consensus(&self, tenant: u64) -> Vec<u8> {
+        match self.snapshot(tenant) {
+            Some((seqs, overlaps)) => {
+                if seqs.is_empty() {
+                    return Vec::new();
+                }
+                let draft = assemble_with_overlaps(&seqs, &overlaps);
+                polish(&draft, &seqs)
+            }
+            None => Vec::new(),
+        }
+    }
+
+    /// Every contig of the tenant's incremental graph (the first is
+    /// what [`consensus`](AnalysisState::consensus) polishes), for
+    /// callers that want the disconnected pieces too.
+    pub fn contigs(&self, tenant: u64) -> Vec<Vec<u8>> {
+        match self.snapshot(tenant) {
+            Some((seqs, overlaps)) if !seqs.is_empty() =>
+                assemble_contigs_with_overlaps(&seqs, &overlaps),
+            _ => Vec::new(),
+        }
+    }
+
+    /// Purge a tenant's entire analysis state (its owning connection
+    /// died) and tombstone the id so late jobs still draining out of
+    /// the analysis queues are discarded instead of resurrecting it.
+    /// Returns the number of reads dropped. Tenant 0 — the in-process
+    /// library path — is refused, mirroring
+    /// `ReadRegistry::cancel_tenant`.
+    pub fn drop_tenant(&self, tenant: u64) -> usize {
+        if tenant == 0 {
+            return 0;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.cancelled.insert(tenant);
+        inner.tenants.remove(&tenant)
+            .map_or(0, |t| t.reads.len())
+    }
+
+    /// Reads currently indexed for `tenant` (0 for unknown/dropped
+    /// tenants). Telemetry/tests.
+    pub fn reads_indexed(&self, tenant: u64) -> usize {
+        self.inner.lock().unwrap().tenants.get(&tenant)
+            .map_or(0, |t| t.reads.len())
+    }
+}
+
+/// Build the streaming-analysis worker pool: per-worker queues in a
+/// QueueSet-backed [`WorkerPool`] (stage `StageId::Analysis`), fed
+/// round-robin by the vote workers through a `Feeder`, resizable by
+/// the autoscale controller when `AutoscaleConfig::scale_analysis` is
+/// set. Workers fold each voted read into the shared
+/// [`AnalysisState`]; per-slot busy time lands in
+/// `Metrics::analysis_workers` and stage time in
+/// `Metrics::analysis_micros`.
+pub(crate) fn spawn_analysis_pool(
+    metrics: Arc<Metrics>,
+    n_analysis: usize,
+    cap: usize,
+    state: Arc<AnalysisState>,
+) -> Arc<WorkerPool<AnalysisJob>> {
+    let m = metrics.clone();
+    WorkerPool::new(
+        StageId::Analysis, metrics, n_analysis, cap,
+        Box::new(move |slot, rx: Receiver<AnalysisJob>| {
+            let m = m.clone();
+            let state = state.clone();
+            std::thread::spawn(move || {
+                while let Ok(job) = rx.recv() {
+                    let t0 = Instant::now();
+                    state.add_read(job.tenant, job.read_id, job.seq);
+                    let busy = t0.elapsed().as_micros() as u64;
+                    m.add(&m.analysis_micros, busy);
+                    if let Some(st) = m.analysis_workers.get(slot) {
+                        m.add(&st.jobs, 1);
+                        m.add(&st.busy_micros, busy);
+                    }
+                }
+            })
+        }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::{self, find_overlaps};
+    use crate::util::rng::Rng;
+
+    fn shredded(genome_len: usize, read_len: usize, step: usize,
+                seed: u64) -> Vec<Vec<u8>> {
+        let mut rng = Rng::new(seed);
+        let genome: Vec<u8> =
+            (0..genome_len).map(|_| rng.base()).collect();
+        let mut reads = Vec::new();
+        let mut s = 0;
+        while s + read_len <= genome.len() {
+            reads.push(genome[s..s + read_len].to_vec());
+            s += step;
+        }
+        reads
+    }
+
+    /// THE identity pin at the unit level: the incremental graph must
+    /// equal `find_overlaps` edge-for-edge in canonical order, and the
+    /// streamed consensus must equal the offline one byte-for-byte —
+    /// regardless of arrival order.
+    #[test]
+    fn incremental_graph_and_consensus_match_offline() {
+        let reads = shredded(600, 80, 40, 31);
+        let offline_edges = find_overlaps(&reads, 20);
+        let offline = pipeline::consensus(&reads, 20);
+        // in-order arrival
+        let st = AnalysisState::new(20);
+        for (id, r) in reads.iter().enumerate() {
+            st.add_read(0, id, r.clone());
+        }
+        assert_eq!(st.overlaps(0), offline_edges);
+        assert_eq!(st.consensus(0), offline);
+        // reversed (worst-case out-of-order) arrival
+        let st2 = AnalysisState::new(20);
+        for (id, r) in reads.iter().enumerate().rev() {
+            st2.add_read(0, id, r.clone());
+        }
+        assert_eq!(st2.overlaps(0), offline_edges,
+                   "edge set/order must be arrival-order independent");
+        assert_eq!(st2.consensus(0), offline);
+    }
+
+    /// Degenerate inputs the offline pipeline tolerates must stream
+    /// through too: empty reads, short reads, a lone read, no reads.
+    #[test]
+    fn degenerate_reads_stream_without_panic() {
+        let st = AnalysisState::new(20);
+        assert!(st.consensus(0).is_empty(), "no reads yet");
+        assert!(st.contigs(0).is_empty());
+        let mut rng = Rng::new(33);
+        let real: Vec<u8> = (0..80).map(|_| rng.base()).collect();
+        let reads = vec![Vec::new(), real.clone(), vec![1u8, 2, 3],
+                         real.clone()];
+        for (id, r) in reads.iter().enumerate() {
+            st.add_read(0, id, r.clone());
+        }
+        assert_eq!(st.overlaps(0), find_overlaps(&reads, 20));
+        assert_eq!(st.consensus(0), pipeline::consensus(&reads, 20));
+        assert_eq!(st.reads_indexed(0), 4);
+    }
+
+    /// Tenants are isolated: interleaved arrivals build independent
+    /// graphs, and each consensus matches its own offline run.
+    #[test]
+    fn tenants_assemble_independently() {
+        let r5 = shredded(400, 80, 40, 35);
+        let r6 = shredded(400, 80, 40, 36);
+        let st = AnalysisState::new(20);
+        for (id, r) in r5.iter().enumerate() {
+            st.add_read(5, id, r.clone());
+            if let Some(r) = r6.get(id) {
+                st.add_read(6, 100 + id, r.clone());
+            }
+        }
+        assert_eq!(st.consensus(5), pipeline::consensus(&r5, 20));
+        assert_eq!(st.consensus(6), pipeline::consensus(&r6, 20));
+    }
+
+    /// `drop_tenant` purges the graph AND tombstones the tenant, so a
+    /// late job draining out of the queue after the purge is
+    /// discarded; tenant 0 is refused like the registry refuses it.
+    #[test]
+    fn drop_tenant_purges_and_tombstones() {
+        let st = AnalysisState::new(20);
+        let reads = shredded(300, 80, 40, 37);
+        for (id, r) in reads.iter().enumerate() {
+            st.add_read(9, id, r.clone());
+        }
+        assert!(st.reads_indexed(9) > 0);
+        assert_eq!(st.drop_tenant(9), reads.len());
+        assert_eq!(st.reads_indexed(9), 0);
+        assert!(st.consensus(9).is_empty());
+        // the straggler: a job that was queued before the purge
+        st.add_read(9, 999, reads[0].clone());
+        assert_eq!(st.reads_indexed(9), 0,
+                   "tombstone must discard late jobs");
+        // the library path cannot be purged
+        st.add_read(0, 0, reads[0].clone());
+        assert_eq!(st.drop_tenant(0), 0);
+        assert_eq!(st.reads_indexed(0), 1);
+    }
+
+    /// RejectGate bookkeeping: mark is idempotent-with-signal, forget
+    /// and clear unmark, and the threshold is what was configured.
+    #[test]
+    fn reject_gate_marks_once_and_forgets() {
+        let g = RejectGate::new(1.5);
+        assert_eq!(g.threshold(), 1.5);
+        assert!(!g.is_rejected(7));
+        assert!(g.mark(7), "first mark is new");
+        assert!(!g.mark(7), "re-mark reports already condemned");
+        assert!(g.is_rejected(7));
+        g.forget(7);
+        assert!(!g.is_rejected(7));
+        g.mark(1);
+        g.mark(2);
+        g.clear();
+        assert!(!g.is_rejected(1) && !g.is_rejected(2));
+    }
+}

@@ -107,6 +107,10 @@ pub struct AutoscaleConfig {
     /// also size the vote/splice pool with this controller (ceiling
     /// `CoordinatorConfig::vote_threads`, floor 1).
     pub scale_vote: bool,
+    /// also size the streaming-analysis pool with this controller
+    /// (ceiling `CoordinatorConfig::analysis_threads`, floor 1).
+    /// Ignored when the analysis stage is off.
+    pub scale_analysis: bool,
     /// floor on live hq-tier DNN shards when tiered serving is armed
     /// (`CoordinatorConfig::escalate_margin`); `0` means "default",
     /// normalized to 1. Ignored on single-tier pipelines.
@@ -130,6 +134,7 @@ impl Default for AutoscaleConfig {
             slo: None,
             scale_decode: false,
             scale_vote: false,
+            scale_analysis: false,
             hq_min_shards: 0,
             hq_max_shards: 0,
         }
@@ -168,9 +173,10 @@ impl AutoscaleConfig {
     /// `HELIX_MIN_SHARDS` and `HELIX_AUTOSCALE_TICK_MS` then refine
     /// the floor and the sampling period, `HELIX_SLO_MS` sets the p99
     /// latency objective, and `HELIX_AUTOSCALE_DECODE=1` /
-    /// `HELIX_AUTOSCALE_VOTE=1` extend the controller to the decode
-    /// and vote pools (unparsable values keep the defaults). Returns
-    /// `None` — autoscaling off — otherwise.
+    /// `HELIX_AUTOSCALE_VOTE=1` / `HELIX_AUTOSCALE_ANALYSIS=1` extend
+    /// the controller to the decode, vote, and streaming-analysis
+    /// pools (unparsable values keep the defaults). Returns `None` —
+    /// autoscaling off — otherwise.
     pub fn from_env() -> Option<AutoscaleConfig> {
         let max = std::env::var("HELIX_MAX_SHARDS").ok()?
             .parse::<usize>().ok()
@@ -200,6 +206,8 @@ impl AutoscaleConfig {
         cfg.scale_decode = std::env::var("HELIX_AUTOSCALE_DECODE")
             .is_ok_and(|v| v == "1" || v == "true");
         cfg.scale_vote = std::env::var("HELIX_AUTOSCALE_VOTE")
+            .is_ok_and(|v| v == "1" || v == "true");
+        cfg.scale_analysis = std::env::var("HELIX_AUTOSCALE_ANALYSIS")
             .is_ok_and(|v| v == "1" || v == "true");
         if let Some(n) = std::env::var("HELIX_HQ_MIN_SHARDS").ok()
             .and_then(|s| s.parse::<usize>().ok())
@@ -401,6 +409,8 @@ impl<T: Send> WorkerPool<T> {
         match self.stage {
             StageId::Decode => self.metrics.decode_workers.get(slot),
             StageId::Vote => self.metrics.vote_workers.get(slot),
+            StageId::Analysis =>
+                self.metrics.analysis_workers.get(slot),
             // DNN slots live in Metrics::shards / Metrics::hq_shards
             StageId::Dnn | StageId::DnnHq => None,
         }

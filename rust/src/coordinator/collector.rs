@@ -20,6 +20,13 @@
 //! window reaches this stage in either mode, so the expected-count
 //! completion rule and the vote/splice inputs are identical with
 //! tiering on or off.
+//!
+//! Two extensions ride the same router (see [`Collector::spawn_full`]):
+//! with a [`RejectGate`], a read any window condemned still completes —
+//! its registry entry drains `in_flight()` — but is dropped before the
+//! vote stage (`Metrics::rejected_reads`); with an analysis feeder,
+//! every voted read is also side-fed into the streaming analysis pool
+//! (`coordinator::analysis`) on its way to the output queue.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -29,9 +36,11 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::basecall::vote::vote_and_splice;
-use crate::util::bounded::{unbounded, Receiver};
+use crate::util::bounded::{unbounded, Feeder, Receiver};
 
+use super::analysis::RejectGate;
 use super::autoscale::{StagePool, WorkerPool};
+use super::job::AnalysisJob;
 use super::metrics::{Metrics, StageId};
 use super::server::CalledRead;
 
@@ -51,6 +60,12 @@ pub struct DecodedWindow {
     pub tenant: u64,
     /// decoded base fragment.
     pub seq: Vec<u8>,
+    /// the window's confidence margin fell below the reject
+    /// threshold (or its read was already condemned): the read
+    /// completes and drains normally, but the router drops it —
+    /// no vote, no emission, no analysis — counting
+    /// `Metrics::rejected_reads`.
+    pub rejected: bool,
 }
 
 struct ReadEntry {
@@ -195,6 +210,9 @@ struct Assembly {
     expected: Option<usize>,
     wins: Vec<Option<Vec<u8>>>,
     got: usize,
+    /// any window arrived tagged rejected: drop the read at
+    /// completion instead of voting it.
+    rejected: bool,
 }
 
 /// Handle over the router thread + vote worker pool + output queue.
@@ -211,10 +229,32 @@ impl Collector {
     /// the autoscale controller can retire and respawn them mid-run
     /// exactly like DNN shards; per-worker busy time lands in
     /// `Metrics::vote_workers` when the `Metrics` carries vote slots.
+    /// No analysis side-feed, no reject gate — see
+    /// [`Collector::spawn_full`].
     pub fn spawn(registry: Arc<ReadRegistry>,
                  rx_decoded: Receiver<DecodedWindow>,
                  metrics: Arc<Metrics>,
                  cfg: CollectorConfig) -> Collector {
+        Collector::spawn_full(registry, rx_decoded, metrics, cfg,
+                              None, None)
+    }
+
+    /// [`Collector::spawn`] plus the PR-9 extensions: with `analysis`
+    /// set, every voted read is also side-fed (round-robin) into the
+    /// streaming analysis pool's queues — the feeder moves into the
+    /// vote workers, so the analysis queue set seals exactly when the
+    /// last vote worker exits. With `gate` set, reads any window
+    /// condemned are dropped at the router (completing their registry
+    /// entry so `in_flight()` drains, counting
+    /// `Metrics::rejected_reads`) and their gate marks are forgotten
+    /// once no further window can arrive.
+    pub(crate) fn spawn_full(registry: Arc<ReadRegistry>,
+                             rx_decoded: Receiver<DecodedWindow>,
+                             metrics: Arc<Metrics>,
+                             cfg: CollectorConfig,
+                             analysis: Option<Feeder<AnalysisJob>>,
+                             gate: Option<Arc<RejectGate>>)
+                             -> Collector {
         let n_vote = cfg.vote_threads.max(1);
         let vote_cap = (cfg.queue_cap / n_vote).max(8);
         // the output queue is deliberately unbounded: its occupancy is
@@ -235,7 +275,11 @@ impl Collector {
                 Box::new(move |slot, rx: Receiver<VoteJob>| {
                     let out = tx_out.clone();
                     let m = m.clone();
+                    let analysis = analysis.clone();
                     std::thread::spawn(move || {
+                        // spread the analysis round-robin start points
+                        // so vote workers do not gang up on slot 0
+                        let mut rr_a = slot;
                         while let Ok(job) = rx.recv() {
                             let t0 = Instant::now();
                             let seq = vote_and_splice(&job.decodes,
@@ -256,6 +300,19 @@ impl Collector {
                                     m.add(&ts.reads_out, 1);
                                     ts.latency.record(us);
                                 }
+                            }
+                            // side-feed the voted read into the
+                            // streaming analysis stage BEFORE the
+                            // emission (the caller-facing CalledRead
+                            // is unchanged either way)
+                            if let Some(f) = &analysis {
+                                let _ = f.send_round_robin(
+                                    &mut rr_a,
+                                    AnalysisJob {
+                                        read_id: job.read_id,
+                                        tenant: job.tenant,
+                                        seq: seq.clone(),
+                                    });
                             }
                             if out.send(CalledRead {
                                 read_id: job.read_id,
@@ -282,6 +339,11 @@ impl Collector {
             // in_flight() truthful while its windows drained, and no
             // vote work is spent on a result nobody can receive.
             let dispatch = |read_id: usize, a: Assembly, rr: &mut usize| {
+                // the read's last window has drained: no further
+                // window can consult the gate, so its mark can go
+                if let Some(g) = &gate {
+                    g.forget(read_id);
+                }
                 let (submitted_at, tenant) =
                     match registry.complete(read_id) {
                         Completion::Cancelled { tenant } => {
@@ -296,6 +358,13 @@ impl Collector {
                             (Some(submitted_at), tenant),
                         Completion::Unregistered => (None, 0),
                     };
+                // GenPIP-style early exit lands here: a read any
+                // window condemned completes (in_flight drains) but
+                // is dropped before the vote stage spends on it
+                if a.rejected {
+                    m_router.add(&m_router.rejected_reads, 1);
+                    return true;
+                }
                 let decodes: Vec<Vec<u8>> =
                     a.wins.into_iter().flatten().collect();
                 vote_queues.send_round_robin(rr, VoteJob {
@@ -311,8 +380,10 @@ impl Collector {
                         expected: registry.expected(d.read_id),
                         wins: Vec::new(),
                         got: 0,
+                        rejected: false,
                     }
                 });
+                a.rejected |= d.rejected;
                 if a.wins.len() <= d.window_idx {
                     a.wins.resize(d.window_idx + 1, None);
                 }
@@ -337,6 +408,10 @@ impl Collector {
             // failure before their first window decoded) can never
             // complete now — drop them so in_flight() settles at 0.
             registry.clear();
+            // same for gate marks: no window remains to consult them
+            if let Some(g) = &gate {
+                g.clear();
+            }
             // seal the vote queue set: the workers drain and exit, and
             // the output queue disconnects once finish() has also
             // dropped the pool's respawn closure (the last sender).
@@ -428,7 +503,13 @@ mod tests {
     }
 
     fn win(read_id: usize, window_idx: usize, seq: &[u8]) -> DecodedWindow {
-        DecodedWindow { read_id, window_idx, tenant: 0, seq: seq.to_vec() }
+        DecodedWindow {
+            read_id,
+            window_idx,
+            tenant: 0,
+            seq: seq.to_vec(),
+            rejected: false,
+        }
     }
 
     #[test]
@@ -518,6 +599,7 @@ mod tests {
         reg.register_tenant(12, 1, 6);
         tx.send(DecodedWindow {
             read_id: 11, window_idx: 0, tenant: 5, seq: vec![1, 2, 3, 0],
+            rejected: false,
         }).unwrap();
         assert_eq!(reg.cancel_tenant(5), 1, "one read of tenant 5 marked");
         assert_eq!(reg.in_flight(), 2,
@@ -525,10 +607,12 @@ mod tests {
         // the cancelled read's last window arrives: dropped, not voted
         tx.send(DecodedWindow {
             read_id: 11, window_idx: 1, tenant: 5, seq: vec![0, 1, 2, 3],
+            rejected: false,
         }).unwrap();
         // tenant 6 is unaffected and completes normally
         tx.send(DecodedWindow {
             read_id: 12, window_idx: 0, tenant: 6, seq: vec![2, 2, 2, 2],
+            rejected: false,
         }).unwrap();
         let r = col.recv_timeout(Duration::from_secs(5)).unwrap();
         assert_eq!(r.read_id, 12);
@@ -551,6 +635,7 @@ mod tests {
         reg.register_tenant(3, 4, 9);
         tx.send(DecodedWindow {
             read_id: 3, window_idx: 0, tenant: 9, seq: vec![1, 1, 1, 1],
+            rejected: false,
         }).unwrap();
         assert_eq!(reg.cancel_tenant(9), 1);
         drop(tx); // stream ends with the read incomplete
@@ -568,6 +653,86 @@ mod tests {
         assert_eq!(reg.cancel_tenant(0), 0, "tenant 0 must be refused");
         assert_eq!(reg.cancel_tenant(42), 0, "unknown tenant: no-op");
         assert_eq!(reg.in_flight(), 1);
+    }
+
+    fn spawn_full_collector(gate: Option<Arc<RejectGate>>,
+                            analysis: Option<Feeder<AnalysisJob>>)
+        -> (Arc<ReadRegistry>, Sender<DecodedWindow>, Collector,
+            Arc<Metrics>)
+    {
+        let registry = Arc::new(ReadRegistry::default());
+        let metrics = Arc::new(Metrics::default());
+        let (tx, rx) = bounded::<DecodedWindow>(64);
+        let col = Collector::spawn_full(
+            registry.clone(), rx, metrics.clone(),
+            CollectorConfig { vote_threads: 2, queue_cap: 64 },
+            analysis, gate);
+        (registry, tx, col, metrics)
+    }
+
+    /// A read with a rejected window completes (in_flight drains, the
+    /// gate mark is forgotten) but is dropped before the vote stage:
+    /// never emitted, counted in `rejected_reads`, and the healthy
+    /// read beside it is untouched.
+    #[test]
+    fn rejected_read_drops_before_vote() {
+        use std::sync::atomic::Ordering;
+        let gate = Arc::new(RejectGate::new(f32::INFINITY));
+        gate.mark(21); // the decode pool condemned read 21
+        let (reg, tx, col, m) =
+            spawn_full_collector(Some(gate.clone()), None);
+        reg.register(21, 2);
+        reg.register(22, 1);
+        tx.send(DecodedWindow {
+            read_id: 21, window_idx: 0, tenant: 0,
+            seq: vec![1, 1, 1, 1], rejected: false,
+        }).unwrap();
+        tx.send(DecodedWindow {
+            read_id: 21, window_idx: 1, tenant: 0,
+            seq: Vec::new(), rejected: true,
+        }).unwrap();
+        tx.send(win(22, 0, &[2, 0, 2, 0])).unwrap();
+        let r = col.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(r.read_id, 22, "healthy read unaffected");
+        drop(tx);
+        assert!(col.finish().unwrap().is_empty(),
+                "a rejected read must never be emitted");
+        assert_eq!(m.rejected_reads.load(Ordering::Relaxed), 1);
+        assert_eq!(m.reads_out.load(Ordering::Relaxed), 1,
+                   "no vote was spent on the rejected read");
+        assert_eq!(reg.in_flight(), 0,
+                   "the rejected read still drains the registry");
+        assert!(!gate.is_rejected(21),
+                "the mark is forgotten once the read drains");
+    }
+
+    /// With an analysis feeder, every voted read lands in the
+    /// streaming analysis state too — and the caller-facing emission
+    /// is unchanged.
+    #[test]
+    fn voted_reads_side_feed_the_analysis_pool() {
+        use crate::coordinator::analysis::{spawn_analysis_pool,
+                                           AnalysisState};
+        let state = Arc::new(AnalysisState::new(20));
+        let metrics = Arc::new(Metrics::default());
+        let pool = spawn_analysis_pool(metrics.clone(), 2, 8,
+                                       state.clone());
+        let feeder = Feeder::new(pool.queues());
+        let (reg, tx, col, _m) =
+            spawn_full_collector(None, Some(feeder));
+        reg.register(1, 1);
+        tx.send(win(1, 0, &[0, 1, 2, 3, 0, 1, 2, 3])).unwrap();
+        let r = col.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(r.read_id, 1);
+        drop(tx);
+        // vote workers exit at finish(); the feeder clones drop with
+        // them, sealing the analysis queues so the workers drain out
+        col.finish().unwrap();
+        for h in pool.take_handles() {
+            h.join().unwrap();
+        }
+        assert_eq!(state.reads_indexed(0), 1);
+        assert_eq!(state.contigs(0), vec![r.seq]);
     }
 
     #[test]

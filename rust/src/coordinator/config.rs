@@ -87,6 +87,20 @@ pub struct CoordinatorConfig {
     /// else the widest rung below `bits`). Ignored unless
     /// `escalate_margin` is set.
     pub tier_bits: Option<u32>,
+    /// GenPIP-style early-rejection threshold over the CTC
+    /// top-two-beam score margin. `None` (default) never rejects —
+    /// byte-identical to pre-gate builds, and so is `Some(0.0)`
+    /// (margins are non-negative). `Some(m)` marks a read rejected the
+    /// first time one of its windows decodes with margin `< m`; the
+    /// read's remaining windows skip the CTC kernel and the read skips
+    /// vote/analysis entirely (it still completes through the
+    /// collector, so `in_flight()` drains to 0).
+    pub reject_threshold: Option<f32>,
+    /// streaming-analysis worker count (overlap → assembly → polish
+    /// fed from the vote stage). 0 (default) leaves the analysis stage
+    /// off — the pipeline ends at `CalledRead`, byte-identical to
+    /// pre-analysis builds.
+    pub analysis_threads: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -107,6 +121,8 @@ impl Default for CoordinatorConfig {
             prune: None,
             escalate_margin: None,
             tier_bits: None,
+            reject_threshold: None,
+            analysis_threads: 0,
         }
     }
 }
@@ -293,5 +309,30 @@ mod tests {
         let cfg = CoordinatorConfig::default();
         assert_eq!(cfg.escalate_margin, None);
         assert_eq!(cfg.tier_bits, None);
+        assert_eq!(cfg.reject_threshold, None,
+                   "early rejection defaults off");
+        assert_eq!(cfg.analysis_threads, 0,
+                   "analysis stage defaults off");
+    }
+
+    #[test]
+    fn reject_threshold_shares_the_margin_rule() {
+        // --reject-threshold resolves through the same helper with the
+        // same non-negative-margin parser as --escalate-margin
+        let margin = |s: &str| s.parse::<f32>().ok()
+            .filter(|m| !m.is_nan() && *m >= 0.0);
+        assert_eq!(
+            resolve_knob(&flags(&[("reject-threshold", "inf")]),
+                         "reject-threshold", "HELIX_TEST_RESOLVER_F",
+                         "a non-negative number", &margin).unwrap(),
+            Some((f32::INFINITY, KnobSource::Flag)));
+        assert_eq!(
+            resolve_knob(&flags(&[("reject-threshold", "0")]),
+                         "reject-threshold", "HELIX_TEST_RESOLVER_F",
+                         "a non-negative number", &margin).unwrap(),
+            Some((0.0, KnobSource::Flag)));
+        assert!(resolve_knob(&flags(&[("reject-threshold", "-0.5")]),
+                             "reject-threshold", "HELIX_TEST_RESOLVER_F",
+                             "a non-negative number", &margin).is_err());
     }
 }

@@ -60,6 +60,18 @@ pub(crate) struct ShardBatch {
     pub(crate) full: bool,
 }
 
+/// One voted read en route from the vote pool to the streaming
+/// analysis stage (overlap → assembly → polish). Carries only what the
+/// incremental assembler needs; the full `CalledRead` (with its
+/// per-window decodes) still streams to the caller unchanged.
+pub(crate) struct AnalysisJob {
+    pub(crate) read_id: usize,
+    /// see [`WindowJob::tenant`].
+    pub(crate) tenant: u64,
+    /// the voted/spliced consensus sequence of the read.
+    pub(crate) seq: Vec<u8>,
+}
+
 /// One window's log-probs en route to the CTC decode pool.
 pub(crate) struct DecodeJob {
     pub(crate) read_id: usize,

@@ -268,6 +268,10 @@ pub enum StageId {
     Decode,
     /// the vote/splice worker pool.
     Vote,
+    /// the streaming genomics analysis pool (overlap → assembly →
+    /// polish), fed by the vote stage (absent unless the pipeline runs
+    /// with `analysis_threads > 0`).
+    Analysis,
 }
 
 impl StageId {
@@ -278,6 +282,7 @@ impl StageId {
             StageId::DnnHq => "dnn-hq",
             StageId::Decode => "decode",
             StageId::Vote => "vote",
+            StageId::Analysis => "analysis",
         }
     }
 }
@@ -524,6 +529,21 @@ pub struct Metrics {
     /// per-worker vote/splice counters, one per vote pool slot (empty
     /// for `Metrics` built outside a coordinator).
     pub vote_workers: Vec<StageStats>,
+    /// per-worker streaming-analysis counters (overlap → assembly →
+    /// polish), one per analysis pool slot (empty when the analysis
+    /// stage is off).
+    pub analysis_workers: Vec<StageStats>,
+    /// wall-micros spent in incremental overlap discovery + consensus,
+    /// summed over analysis workers.
+    pub analysis_micros: AtomicU64,
+    /// reads short-circuited by the early-rejection gate: their
+    /// remaining windows skip decode and the read skips vote and
+    /// analysis entirely. Zero when rejection is off.
+    pub rejected_reads: AtomicU64,
+    /// windows that skipped the CTC decode kernel because their read
+    /// was already rejected (the rejecting window itself is decoded —
+    /// that decode produced the margin).
+    pub rejected_windows: AtomicU64,
     /// reads refused with an explicit `BUSY` response by the TCP
     /// front-end's admission gate (quota breach or SLO shed). Zero for
     /// in-process pipelines.
@@ -563,9 +583,18 @@ impl Metrics {
 
     /// Metrics sized for a tiered pipeline: `n` fast-tier DNN shard
     /// slots (min 1), `n_hq` hq-tier shard slots (0 = single tier),
-    /// plus the decode and vote worker slots.
+    /// plus the decode and vote worker slots (no analysis slots).
     pub fn for_tiered_pipeline(n: usize, n_hq: usize, n_decode: usize,
                                n_vote: usize) -> Metrics {
+        Metrics::for_full_pipeline(n, n_hq, n_decode, n_vote, 0)
+    }
+
+    /// Metrics sized for the full pipeline including the streaming
+    /// analysis stage: `n_analysis` overlap/assembly/polish worker
+    /// slots on top of the tiered layout (0 = analysis stage off).
+    pub fn for_full_pipeline(n: usize, n_hq: usize, n_decode: usize,
+                             n_vote: usize, n_analysis: usize)
+                             -> Metrics {
         Metrics {
             start: Instant::now(),
             reads_in: AtomicU64::new(0),
@@ -588,6 +617,11 @@ impl Metrics {
                 .map(|_| StageStats::default()).collect(),
             vote_workers: (0..n_vote)
                 .map(|_| StageStats::default()).collect(),
+            analysis_workers: (0..n_analysis)
+                .map(|_| StageStats::default()).collect(),
+            analysis_micros: AtomicU64::new(0),
+            rejected_reads: AtomicU64::new(0),
+            rejected_windows: AtomicU64::new(0),
             shed_reads: AtomicU64::new(0),
             dropped_reads: AtomicU64::new(0),
             tenants: Mutex::new(HashMap::new()),
@@ -771,7 +805,9 @@ impl Metrics {
                                 util_rows(&self.hq_shards, now).join(" ")));
         }
         for (label, workers) in [("decode-util", &self.decode_workers),
-                                 ("vote-util", &self.vote_workers)] {
+                                 ("vote-util", &self.vote_workers),
+                                 ("analysis-util",
+                                  &self.analysis_workers)] {
             if workers.len() <= 1 {
                 continue;
             }
@@ -801,6 +837,20 @@ impl Metrics {
                         / 1e3,
                 ));
             }
+        }
+        // early-rejection + streaming-analysis section: how many reads
+        // the quality gate short-circuited (and the decode work those
+        // reads' remaining windows skipped), plus the analysis stage's
+        // kernel time when it ran
+        let rej_r = self.rejected_reads.load(Ordering::Relaxed);
+        let rej_w = self.rejected_windows.load(Ordering::Relaxed);
+        if rej_r > 0 || rej_w > 0 {
+            s.push_str(&format!("  rejected {rej_r}r/{rej_w}w"));
+        }
+        let t_analysis = self.analysis_micros.load(Ordering::Relaxed);
+        if t_analysis > 0 {
+            s.push_str(&format!("  t_analysis {:.1}ms",
+                                t_analysis as f64 / 1e3));
         }
         // serving-ingress section: global shed/drop totals plus one
         // compact row per tenant, so one line still tells the whole
@@ -1072,6 +1122,36 @@ mod tests {
         assert_eq!(StageId::DnnHq.name(), "dnn-hq");
         assert_eq!(StageId::Decode.name(), "decode");
         assert_eq!(StageId::Vote.name(), "vote");
+        assert_eq!(StageId::Analysis.name(), "analysis");
+    }
+
+    #[test]
+    fn full_pipeline_metrics_size_analysis_slots() {
+        let m = Metrics::for_full_pipeline(1, 0, 1, 1, 3);
+        assert_eq!(m.analysis_workers.len(), 3);
+        // tiered/plain constructors leave the analysis stage off
+        assert!(Metrics::for_tiered_pipeline(1, 1, 1, 1)
+                    .analysis_workers.is_empty());
+        assert!(Metrics::default().analysis_workers.is_empty());
+    }
+
+    #[test]
+    fn report_shows_rejection_and_analysis_sections() {
+        let m = Metrics::for_full_pipeline(1, 0, 1, 1, 2);
+        let r0 = m.report(32);
+        assert!(!r0.contains("rejected"), "{r0}");
+        assert!(!r0.contains("t_analysis"), "{r0}");
+        m.add(&m.rejected_reads, 2);
+        m.add(&m.rejected_windows, 7);
+        m.add(&m.analysis_micros, 5_000);
+        let r = m.report(32);
+        assert!(r.contains("rejected 2r/7w"), "{r}");
+        assert!(r.contains("t_analysis 5.0ms"), "{r}");
+        // the analysis pool renders through the same util formatter
+        m.analysis_workers[0].mark_spawned(0);
+        m.add(&m.analysis_workers[0].busy_micros, 50);
+        assert!(m.report(32).contains("analysis-util ["),
+                "{}", m.report(32));
     }
 
     #[test]

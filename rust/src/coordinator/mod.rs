@@ -7,6 +7,7 @@
 //!
 #![doc = include_str!("README.md")]
 
+pub mod analysis;
 pub mod autoscale;
 pub mod batcher;
 pub mod collector;
@@ -18,6 +19,7 @@ pub mod net;
 mod pool;
 pub mod server;
 
+pub use analysis::{AnalysisState, RejectGate, ANALYSIS_MIN_OVERLAP};
 pub use autoscale::{AutoscaleConfig, Controller, Decision, Sample,
                     SpawnWorker, StageControl, StagePool, WorkerPool};
 pub use batcher::{Batch, Batcher, BatchPolicy, TieredBatcher};

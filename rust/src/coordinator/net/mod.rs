@@ -28,7 +28,10 @@
 //! still drain through the pipeline (so `in_flight` stays truthful and
 //! settles to 0) but the assembled reads are dropped at the router
 //! instead of being voted, and the tenant's quota slots are released
-//! immediately.
+//! immediately. Teardown also purges the tenant's per-read state from
+//! the streaming analysis stage (when enabled), so a client that
+//! vanishes mid-assembly cannot leak partial contigs — tenant ids are
+//! never reused, so the purge is permanent.
 
 pub mod frame;
 pub(crate) mod quota;
@@ -156,6 +159,18 @@ impl Server {
         self.shared.quota.in_flight(tenant)
     }
 
+    /// Handle on the shared streaming analysis stage, if the pipeline
+    /// was opened with `analysis_threads > 0` (None otherwise, and
+    /// None after [`Server::shutdown`] took the coordinator). Lets
+    /// tests and operators inspect per-tenant assembly state — e.g.
+    /// verify a disconnected tenant's partial contigs were purged.
+    pub fn analysis_state(&self)
+        -> Option<Arc<super::analysis::AnalysisState>>
+    {
+        self.shared.coord.lock().unwrap()
+            .as_ref().and_then(|c| c.analysis_state())
+    }
+
     /// Stop accepting, drop every connection, drain the pipeline, and
     /// join every thread. Outstanding reads of still-open connections
     /// are cancelled (this is an operator stop, not a graceful drain —
@@ -262,13 +277,16 @@ fn reader_loop(sh: &Arc<Shared>, mut stream: TcpStream, tenant: u64) {
     }
 
     // teardown: if the registry still knows us the drain was NOT clean
-    // (EOF/protocol error/stop before DONE) — cancel what's left
-    let orphaned = sh.conns.drop_conn(tenant);
+    // (EOF/protocol error/stop before DONE) — cancel what's left.
+    // cancel_tenant runs UNCONDITIONALLY (not just when reads were
+    // orphaned): even a cleanly-drained tenant may have per-read state
+    // parked in the streaming analysis stage, and tenant ids are never
+    // reused, so nobody will ever ask for those partial contigs again.
+    // Cancelling with nothing outstanding is a no-op at the registry.
+    let _orphaned = sh.conns.drop_conn(tenant);
     sh.quota.release_all(tenant);
-    if orphaned > 0 {
-        if let Some(c) = sh.coord.lock().unwrap().as_ref() {
-            c.cancel_tenant(tenant);
-        }
+    if let Some(c) = sh.coord.lock().unwrap().as_ref() {
+        c.cancel_tenant(tenant);
     }
     let _ = stream.shutdown(Shutdown::Read);
     let _ = writer.join();

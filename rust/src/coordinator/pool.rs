@@ -14,6 +14,7 @@ use crate::basecall::ctc::{beam_search, beam_search_pruned,
 use crate::runtime::{ShardFactory, Tier};
 use crate::util::bounded::{bounded, Feeder, QueueSet, Receiver, Sender};
 
+use super::analysis::RejectGate;
 use super::autoscale::{StagePool, WorkerPool};
 use super::collector::DecodedWindow;
 use super::job::{DecodeJob, ShardBatch, WindowJob};
@@ -267,6 +268,15 @@ pub(crate) fn rank_busiest(stats: &[ShardStats],
 /// collected. Hq-tier jobs (and every job when `esc` is `None`) run
 /// the exact single-best search of the single-tier pipeline, which is
 /// what keeps escalation-off output byte-identical.
+///
+/// With `gate` set (early rejection), every branch measures the same
+/// top-two margin (the top-2 traversal is identical to the top-1, so
+/// the best decode is unchanged) and a margin below the gate's
+/// threshold condemns the whole read: the window is delivered with
+/// `DecodedWindow::rejected` set, and every LATER window of that read
+/// skips the beam search entirely — the GenPIP-style early exit. On
+/// the fast tier, rejection is checked BEFORE escalation, so a
+/// hopeless window never burns an hq re-run.
 pub(crate) fn spawn_decode_pool(
     metrics: Arc<Metrics>,
     n_dec: usize,
@@ -275,6 +285,7 @@ pub(crate) fn spawn_decode_pool(
     prune: Option<BeamPrune>,
     tx_decoded: Sender<DecodedWindow>,
     esc: Option<Escalator>,
+    gate: Option<Arc<RejectGate>>,
 ) -> Arc<WorkerPool<DecodeJob>> {
     let m = metrics.clone();
     WorkerPool::new(
@@ -283,8 +294,34 @@ pub(crate) fn spawn_decode_pool(
             let tx = tx_decoded.clone();
             let m = m.clone();
             let esc = esc.clone();
+            let gate = gate.clone();
             std::thread::spawn(move || {
                 while let Ok(job) = rx.recv() {
+                    // a read already condemned skips the CTC kernel:
+                    // its window still flows to the collector (tagged
+                    // rejected) so the read completes and drains, but
+                    // no decode compute is spent on it
+                    if let Some(g) = &gate {
+                        if g.is_rejected(job.read_id) {
+                            m.add(&m.rejected_windows, 1);
+                            if let (Some(e), Tier::Fast) =
+                                (&esc, job.tier)
+                            {
+                                e.pending.fetch_sub(1,
+                                                    Ordering::Release);
+                            }
+                            if tx.send(DecodedWindow {
+                                read_id: job.read_id,
+                                window_idx: job.window_idx,
+                                tenant: job.tenant,
+                                seq: Vec::new(),
+                                rejected: true,
+                            }).is_err() {
+                                break;
+                            }
+                            continue;
+                        }
+                    }
                     let t0 = Instant::now();
                     if let (Some(e), Tier::Fast) = (&esc, job.tier) {
                         // confidence-gated fast tier: decode the top
@@ -308,6 +345,25 @@ pub(crate) fn spawn_decode_pool(
                             m.add(&st.busy_micros, busy);
                         }
                         m.add(&m.fast_decided, 1);
+                        // rejection beats escalation: a hopeless read
+                        // must not burn an hq re-run on its way out
+                        if let Some(g) = &gate {
+                            if margin < g.threshold() {
+                                g.mark(job.read_id);
+                                e.pending.fetch_sub(1,
+                                                    Ordering::Release);
+                                if tx.send(DecodedWindow {
+                                    read_id: job.read_id,
+                                    window_idx: job.window_idx,
+                                    tenant: job.tenant,
+                                    seq: Vec::new(),
+                                    rejected: true,
+                                }).is_err() {
+                                    break;
+                                }
+                                continue;
+                            }
+                        }
                         if margin < e.margin {
                             // low confidence: re-queue at the hq tier
                             // instead of collecting. The send must
@@ -340,16 +396,36 @@ pub(crate) fn spawn_decode_pool(
                             window_idx: job.window_idx,
                             tenant: job.tenant,
                             seq: best,
+                            rejected: false,
                         }).is_err() {
                             break;
                         }
                         continue;
                     }
                     // hq tier, or escalation disabled: the exact
-                    // single-tier decode path
-                    let seq = match prune {
-                        Some(p) => beam_search_pruned(&job.lp, beam, p),
-                        None => beam_search(&job.lp, beam),
+                    // single-tier decode path. With the reject gate
+                    // armed the margin must be observable here too, so
+                    // decode the top two beams — same traversal, same
+                    // best result, byte-identical output.
+                    let (seq, margin) = match &gate {
+                        Some(_) => {
+                            let mut top = beam_search_pruned_n(
+                                &job.lp, beam, 2,
+                                prune.unwrap_or(BeamPrune::OFF));
+                            let (best, best_score) =
+                                top.pop().unwrap_or_default();
+                            let margin = match top.pop() {
+                                Some((_, runner)) =>
+                                    best_score - runner,
+                                None => f32::INFINITY,
+                            };
+                            (best, Some(margin))
+                        }
+                        None => (match prune {
+                            Some(p) =>
+                                beam_search_pruned(&job.lp, beam, p),
+                            None => beam_search(&job.lp, beam),
+                        }, None),
                     };
                     let busy = t0.elapsed().as_micros() as u64;
                     m.add(&m.decode_micros, busy);
@@ -361,11 +437,27 @@ pub(crate) fn spawn_decode_pool(
                         m.escalation_latency.record(
                             at.elapsed().as_micros() as u64);
                     }
+                    if let (Some(g), Some(margin)) = (&gate, margin) {
+                        if margin < g.threshold() {
+                            g.mark(job.read_id);
+                            if tx.send(DecodedWindow {
+                                read_id: job.read_id,
+                                window_idx: job.window_idx,
+                                tenant: job.tenant,
+                                seq: Vec::new(),
+                                rejected: true,
+                            }).is_err() {
+                                break;
+                            }
+                            continue;
+                        }
+                    }
                     if tx.send(DecodedWindow {
                         read_id: job.read_id,
                         window_idx: job.window_idx,
                         tenant: job.tenant,
                         seq,
+                        rejected: false,
                     }).is_err() {
                         break;
                     }

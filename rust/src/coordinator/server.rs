@@ -42,6 +42,19 @@
 //! routing keyed by `(read_id, window_idx)` makes the substitution
 //! invisible downstream. Escalation off (`None`, the default) runs the
 //! exact single-tier code path, byte-identical to pre-tier builds.
+//!
+//! Two further opt-ins extend the pipeline past the collector (see
+//! `coordinator::analysis`): `CoordinatorConfig::analysis_threads`
+//! arms a **streaming analysis stage** — every voted read is side-fed
+//! from the vote workers into an autoscalable pool that grows an
+//! incremental per-tenant overlap graph, queryable at any point for a
+//! polished consensus byte-identical to the offline
+//! `pipeline::consensus` over the same called reads — and
+//! `CoordinatorConfig::reject_threshold` arms **GenPIP-style early
+//! rejection**: the decode stage's confidence margin condemns hopeless
+//! reads at chunk granularity, short-circuiting the rest of their
+//! windows past the CTC kernel and dropping them before vote/analysis
+//! spend on them. Both default off and change nothing when off.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -56,11 +69,13 @@ use crate::runtime::{ShardFactory, Tier, TierSet};
 use crate::util::bounded::{bounded, unbounded, Feeder, QueueSet,
                            Receiver, Sender};
 
+use super::analysis::{spawn_analysis_pool, AnalysisState, RejectGate,
+                      ANALYSIS_MIN_OVERLAP};
 use super::autoscale::{self, StageControl, StagePool, WorkerPool};
 use super::collector::{Collector, CollectorConfig, DecodedWindow,
                        ReadRegistry};
 use super::dispatch::{spawn_dispatch, TierRouting};
-use super::job::{DecodeJob, ShardBatch, WindowJob};
+use super::job::{AnalysisJob, DecodeJob, ShardBatch, WindowJob};
 use super::metrics::{Metrics, StageId};
 use super::pool::{spawn_decode_pool, Escalator, ShardHost,
                   SHARD_QUEUE_DEPTH};
@@ -100,6 +115,8 @@ pub struct Coordinator {
     autoscale_thread: Option<JoinHandle<()>>,
     decode_pool: Option<Arc<WorkerPool<DecodeJob>>>,
     collector: Option<Collector>,
+    analysis_pool: Option<Arc<WorkerPool<AnalysisJob>>>,
+    analysis: Option<Arc<AnalysisState>>,
     /// live pipeline telemetry (readable mid-run; see `Metrics`).
     pub metrics: Arc<Metrics>,
 }
@@ -160,9 +177,14 @@ impl Coordinator {
         };
         let n_dec = cfg.decode_threads.max(1);
         let n_vote = cfg.vote_threads.max(1);
-        let metrics = Arc::new(Metrics::for_tiered_pipeline(
-            n_slots, hq_slots, n_dec, n_vote));
+        let n_analysis = cfg.analysis_threads; // 0 = stage off
+        let metrics = Arc::new(Metrics::for_full_pipeline(
+            n_slots, hq_slots, n_dec, n_vote, n_analysis));
         let registry = Arc::new(ReadRegistry::default());
+        // early rejection: the gate the decode pool marks and the
+        // collector router drops/forgets through
+        let gate = cfg.reject_threshold
+            .map(|t| Arc::new(RejectGate::new(t)));
 
         let cap = cfg.queue_cap.max(1);
         let (tx_windows, rx_windows) = bounded::<WindowJob>(cap);
@@ -197,7 +219,25 @@ impl Coordinator {
         let dec_cap = (cap / n_dec).max(8);
         let decode_pool = spawn_decode_pool(
             metrics.clone(), n_dec, dec_cap, cfg.beam_width, cfg.prune,
-            tx_decoded, escalator);
+            tx_decoded, escalator, gate.clone());
+
+        // streaming analysis stage (off at 0 threads): the state the
+        // workers fold voted reads into, the pool, and the feeder the
+        // vote workers will side-send through. The feeder moves into
+        // the collector — its vote workers hold the only clones, so
+        // the analysis queues seal exactly when the vote stage exits.
+        let (analysis_state, analysis_pool, analysis_feed) =
+            if n_analysis > 0 {
+                let state = Arc::new(
+                    AnalysisState::new(ANALYSIS_MIN_OVERLAP));
+                let a_cap = (cap / n_analysis).max(8);
+                let pool = spawn_analysis_pool(
+                    metrics.clone(), n_analysis, a_cap, state.clone());
+                let feed = Feeder::new(pool.queues());
+                (Some(state), Some(pool), Some(feed))
+            } else {
+                (None, None, None)
+            };
 
         // per-shard batch queues live in a QueueSet so the autoscaler
         // can add/retire slots mid-run. Install the initial queues
@@ -292,8 +332,9 @@ impl Coordinator {
         drop(tx_ready); // shard threads hold the only ready senders
 
         // collector: assembles out-of-order windows, votes + splices in
-        // its own worker pool, emits CalledReads eagerly.
-        let collector = Collector::spawn(
+        // its own worker pool, emits CalledReads eagerly — and, when
+        // armed, side-feeds the analysis stage and drops rejected reads.
+        let collector = Collector::spawn_full(
             registry.clone(),
             rx_decoded,
             metrics.clone(),
@@ -301,6 +342,8 @@ impl Coordinator {
                 vote_threads: n_vote,
                 queue_cap: cap,
             },
+            analysis_feed,
+            gate,
         );
 
         // wait for every initial shard to finish opening + warming (or
@@ -360,6 +403,16 @@ impl Coordinator {
                         });
                     }
                 }
+                if a.scale_analysis {
+                    if let Some(pool) = &analysis_pool {
+                        stages.push(StageControl {
+                            stage: StageId::Analysis,
+                            pool: pool.clone() as Arc<dyn StagePool>,
+                            min: 1,
+                            max: n_analysis,
+                        });
+                    }
+                }
                 let m = metrics.clone();
                 let handle = std::thread::spawn(move || {
                     autoscale::run(stages, a, m, stop_rx);
@@ -382,6 +435,8 @@ impl Coordinator {
             autoscale_thread,
             decode_pool: Some(decode_pool),
             collector: Some(collector),
+            analysis_pool,
+            analysis: analysis_state,
             metrics,
         })
     }
@@ -494,10 +549,19 @@ impl Coordinator {
     /// connection died): the windows keep draining through the
     /// pipeline, but the collector drops each completed assembly
     /// instead of voting and emitting it, so nothing leaks and
-    /// `in_flight()` settles to 0 on its own. Returns the number of
-    /// reads marked. See [`ReadRegistry::cancel_tenant`].
+    /// `in_flight()` settles to 0 on its own. Also purges the
+    /// tenant's streaming-analysis state (and tombstones the id so
+    /// jobs still draining out of the analysis queues are discarded)
+    /// — a disconnected TCP client must not leak partial contigs.
+    /// Returns the number of reads marked. See
+    /// [`ReadRegistry::cancel_tenant`] and
+    /// [`AnalysisState::drop_tenant`].
     pub fn cancel_tenant(&self, tenant: u64) -> usize {
-        self.registry.cancel_tenant(tenant)
+        let n = self.registry.cancel_tenant(tenant);
+        if let Some(state) = &self.analysis {
+            state.drop_tenant(tenant);
+        }
+        n
     }
 
     /// The model's window length in samples (from the artifact meta) —
@@ -576,6 +640,16 @@ impl Coordinator {
             Some(c) => c.finish(),
             None => Ok(Vec::new()),
         };
+        // the collector drain joined the vote workers, whose feeder
+        // clones were the analysis queues' only producers — the
+        // analysis workers are draining out now, so their joins below
+        // are immediate. (The controller — the only other pool holder
+        // — was joined above, so the handle set is complete.)
+        let analysis_handles: Vec<JoinHandle<()>> =
+            match self.analysis_pool.take() {
+                Some(pool) => pool.take_handles(),
+                None => Vec::new(),
+            };
         let mut err = None;
         if let Some(h) = self.dispatch_thread.take() {
             if h.join().is_err() {
@@ -601,6 +675,11 @@ impl Coordinator {
         for h in decode_handles {
             if h.join().is_err() && err.is_none() {
                 err = Some(anyhow::anyhow!("decode worker panicked"));
+            }
+        }
+        for h in analysis_handles {
+            if h.join().is_err() && err.is_none() {
+                err = Some(anyhow::anyhow!("analysis worker panicked"));
             }
         }
         // a collector panic is the root cause of any knock-on DNN
@@ -670,6 +749,24 @@ impl Coordinator {
     /// resizes the pool. 0 once the pipeline is torn down.
     pub fn live_vote_workers(&self) -> usize {
         self.collector.as_ref().map_or(0, |c| c.live_vote_workers())
+    }
+
+    /// Analysis workers live right now: the configured
+    /// `analysis_threads` until the controller (with
+    /// `AutoscaleConfig::scale_analysis`) resizes the pool. 0 when
+    /// the stage is off or once the pipeline is torn down.
+    pub fn live_analysis_workers(&self) -> usize {
+        self.analysis_pool.as_ref().map_or(0, |p| p.live_count())
+    }
+
+    /// The streaming analysis state, when
+    /// `CoordinatorConfig::analysis_threads` armed the stage. Clone
+    /// the `Arc` BEFORE `finish()` (which consumes the coordinator)
+    /// to query the polished consensus after the drain:
+    /// `finish()` returns only after the analysis workers have folded
+    /// every voted read in, so `consensus(0)` is complete then.
+    pub fn analysis_state(&self) -> Option<Arc<AnalysisState>> {
+        self.analysis.clone()
     }
 
     /// Reads submitted but not yet emitted.

@@ -35,6 +35,12 @@ fn usage() -> ! {
         [--shards N]\n    \
         [--serve-addr HOST:PORT] [--tenant-quota N] [--slo-ms MS]\n    \
         [--escalate-margin M [--tier-bits B]]\n  \
+        assemble [--model guppy] [--bits 32] [--genome 2000] \
+        [--coverage 5]\n    \
+        [--seed S] [--backend native|xla] [--shards N]\n    \
+        [--analysis-threads N] [--reject-threshold M]\n    \
+        [--max-shards N [--min-shards N] [--autoscale-tick-ms MS]\n     \
+        [--slo-ms MS] [--autoscale-analysis]]\n  \
         simulate [--genome 10000] [--coverage 30]\n  \
         figures <fig2|...|fig26|table1..table5|all>\n  \
         schemes\n  \
@@ -46,7 +52,9 @@ fn usage() -> ! {
         HELIX_BEAM_PRUNE=DELTA HELIX_BEAM_FLOOR=FLOOR\n     \
         HELIX_ESCALATE_MARGIN=M HELIX_TIER_BITS=B\n     \
         HELIX_HQ_MIN_SHARDS=N HELIX_HQ_MAX_SHARDS=N\n     \
-        HELIX_SERVE_ADDR=HOST:PORT HELIX_TENANT_QUOTA=N\n\
+        HELIX_SERVE_ADDR=HOST:PORT HELIX_TENANT_QUOTA=N\n     \
+        HELIX_ANALYSIS_THREADS=N HELIX_REJECT_THRESHOLD=M \
+        HELIX_AUTOSCALE_ANALYSIS=1\n\
         Every knob resolves flag-over-env-over-default; a flag that does \
         not\n\
         parse is an error, a malformed env value keeps the default.\n\
@@ -78,6 +86,22 @@ fn usage() -> ! {
         runs the single-tier pipeline. --hq-min/max-shards bound the hq \
         pool\n\
         under the autoscaler (defaults: 1 and max-shards).\n\
+        assemble runs the full streaming pipeline PAST basecalling: \
+        voted\n\
+        reads side-feed an in-pipeline analysis stage \
+        (--analysis-threads,\n\
+        default 2) that assembles and polishes a consensus \
+        incrementally,\n\
+        and --reject-threshold (or HELIX_REJECT_THRESHOLD) arms \
+        GenPIP-style\n\
+        early rejection: a read whose first decoded window's top-two \
+        beam\n\
+        margin falls below M is dropped before further decode/vote/\
+        assembly\n\
+        spend. M=0 never rejects (byte-identical to unset); M=inf \
+        rejects\n\
+        every read with a finite margin. --autoscale-analysis puts the\n\
+        analysis pool under the --max-shards controller.\n\
         serve listens on --serve-addr (or HELIX_SERVE_ADDR; default\n\
         127.0.0.1:4550) and runs every connection as a tenant over ONE\n\
         shared pipeline: --tenant-quota bounds each tenant's in-flight \
@@ -94,7 +118,8 @@ fn usage() -> ! {
 /// Kept as an explicit allowlist so a value-taking flag with a missing
 /// value does NOT silently become "1" — it still consumes the next
 /// token and fails (or falls back) exactly as before.
-const BARE_FLAGS: &[&str] = &["autoscale-decode", "autoscale-vote"];
+const BARE_FLAGS: &[&str] = &["autoscale-decode", "autoscale-vote",
+                              "autoscale-analysis"];
 
 /// Tiny flag parser: `--key value` pairs after the subcommand, plus
 /// the [`BARE_FLAGS`] booleans, which may stand alone or take an
@@ -480,6 +505,135 @@ fn main() -> Result<()> {
                 std::thread::sleep(std::time::Duration::from_secs(30));
                 println!("{}", server.metrics().report(max_batch));
             }
+        }
+        "assemble" => {
+            let model = f.get("model").cloned()
+                .unwrap_or_else(|| "guppy".into());
+            let bits: u32 = f.get("bits").map_or(32, |s| s.parse().unwrap_or(32));
+            let genome: usize = f.get("genome")
+                .map_or(2000, |s| s.parse().unwrap_or(2000));
+            let coverage: usize = f.get("coverage")
+                .map_or(5, |s| s.parse().unwrap_or(5));
+            let seed: Option<u64> =
+                f.get("seed").and_then(|s| s.parse().ok());
+            let kind = backend_kind(&f)?;
+            let shards: usize =
+                resolve_knob(&f, "shards", "HELIX_SHARDS", POS_INT,
+                             pos_usize)?
+                    .map_or(1, |(n, _)| n);
+            // streaming analysis stage width: overlap/assembly/polish
+            // workers fed by the vote stage (this subcommand always
+            // opens the stage; basecall/serve leave it off)
+            let analysis_threads: usize = resolve_knob(
+                &f, "analysis-threads", "HELIX_ANALYSIS_THREADS",
+                POS_INT, pos_usize)?
+                .map_or(2, |(n, _)| n);
+            // GenPIP-style early rejection: margin threshold shares the
+            // escalation margin's parse rule (non-negative, 'inf' ok)
+            let reject_threshold: Option<f32> = resolve_knob(
+                &f, "reject-threshold", "HELIX_REJECT_THRESHOLD",
+                "a non-negative posterior margin, or 'inf'", margin_f32)?
+                .map(|(m, _)| m);
+            let autoscale: Option<AutoscaleConfig> = match resolve_knob(
+                &f, "max-shards", "HELIX_MAX_SHARDS", POS_INT,
+                pos_usize)?
+            {
+                Some((n, _)) => {
+                    let mut a = AutoscaleConfig {
+                        max_shards: n,
+                        ..AutoscaleConfig::default()
+                    };
+                    if let Some((v, _)) = resolve_knob(
+                        &f, "min-shards", "HELIX_MIN_SHARDS", POS_INT,
+                        pos_usize)?
+                    {
+                        a.min_shards = v;
+                    }
+                    if let Some((v, _)) = resolve_knob(
+                        &f, "autoscale-tick-ms",
+                        "HELIX_AUTOSCALE_TICK_MS", POS_MS, pos_ms)?
+                    {
+                        a.tick = v;
+                    }
+                    if let Some((v, _)) = resolve_knob(
+                        &f, "slo-ms", "HELIX_SLO_MS", POS_MS, pos_ms)?
+                    {
+                        a.slo = Some(v);
+                    }
+                    // bare flag: put the analysis pool under the same
+                    // controller (ceiling = --analysis-threads)
+                    if let Some((v, _)) = resolve_knob(
+                        &f, "autoscale-analysis",
+                        "HELIX_AUTOSCALE_ANALYSIS", BOOLISH, boolish)?
+                    {
+                        a.scale_analysis = v;
+                    }
+                    Some(a.normalized())
+                }
+                None => {
+                    for key in ["min-shards", "autoscale-tick-ms",
+                                "slo-ms", "autoscale-analysis"] {
+                        if f.contains_key(key) {
+                            anyhow::bail!(
+                                "--{key} needs autoscaling enabled via \
+                                 --max-shards or HELIX_MAX_SHARDS");
+                        }
+                    }
+                    None
+                }
+            };
+            kind.prepare(&dir)?;
+            let pm = PoreModel::load(&format!("{dir}/pore_model.json"))?;
+            let mut spec = RunSpec {
+                genome_len: genome, coverage, ..Default::default()
+            };
+            if let Some(s) = seed {
+                spec.seed = s;
+            }
+            let run = SequencingRun::simulate(&pm, spec);
+            println!("assembling {} reads ({} genome bp, {:.1}x \
+                      coverage) with {model}/{bits}b on the {} backend \
+                      ({shards} dnn shard{}, {analysis_threads} \
+                      analysis worker{}, reject {}) ...",
+                     run.reads.len(), genome, run.mean_coverage(),
+                     kind.name(),
+                     if shards == 1 { "" } else { "s" },
+                     if analysis_threads == 1 { "" } else { "s" },
+                     reject_threshold
+                         .map_or("off".into(), |m| format!("margin<{m}")));
+            let mut coord = Coordinator::new(CoordinatorConfig {
+                model, bits, backend: kind, artifacts_dir: dir.clone(),
+                dnn_shards: shards,
+                autoscale,
+                analysis_threads,
+                reject_threshold,
+                ..Default::default()
+            })?;
+            let state = coord.analysis_state()
+                .expect("assemble always opens the analysis stage");
+            let t0 = std::time::Instant::now();
+            let mut called = Vec::new();
+            for r in &run.reads {
+                coord.submit(r);
+                called.extend(coord.drain_ready());
+            }
+            let max_batch = coord.max_batch();
+            let metrics = coord.metrics.clone();
+            called.extend(coord.finish()?);
+            let dt = t0.elapsed();
+            // finish() returns only after the analysis workers folded
+            // every voted read, so the consensus below is complete
+            let consensus = state.consensus(0);
+            let rejected = metrics.rejected_reads
+                .load(std::sync::atomic::Ordering::Relaxed);
+            let id = if consensus.is_empty() { 0.0 }
+                     else { identity(&consensus, &run.genome) };
+            println!("called {} reads ({rejected} rejected) in {:.2?}",
+                     called.len(), dt);
+            println!("polished consensus: {} bp (genome {} bp), \
+                      identity {:.4}",
+                     consensus.len(), run.genome.len(), id);
+            println!("{}", metrics.report(max_batch));
         }
         "simulate" => {
             let genome: usize = f.get("genome")

@@ -51,6 +51,70 @@ pub fn assemble_with_overlaps(reads: &[Vec<u8>], overlaps: &[Overlap])
     contig
 }
 
+/// Assemble ALL reads into contigs: the same greedy unitig walk as
+/// [`assemble_with_overlaps`], repeated until every read is placed.
+/// Reads with no overlap above threshold come out as singleton contigs
+/// instead of silently disappearing (the first contig is exactly what
+/// `assemble` returns). Contigs are ordered by the walk: path heads
+/// (no incoming best-edge) longest-first, then any leftover cycle
+/// members longest-first.
+pub fn assemble_contigs(reads: &[Vec<u8>], min_overlap: usize)
+                        -> Vec<Vec<u8>> {
+    if reads.is_empty() {
+        return Vec::new();
+    }
+    let overlaps = find_overlaps(reads, min_overlap);
+    assemble_contigs_with_overlaps(reads, &overlaps)
+}
+
+/// Multi-contig assembly from precomputed overlaps (see
+/// [`assemble_contigs`]).
+pub fn assemble_contigs_with_overlaps(reads: &[Vec<u8>],
+                                      overlaps: &[Overlap])
+                                      -> Vec<Vec<u8>> {
+    let n = reads.len();
+    let mut best_out: Vec<Option<Overlap>> = vec![None; n];
+    let mut has_in = vec![false; n];
+    for o in overlaps {
+        if best_out[o.a].map_or(true, |b| o.len > b.len) {
+            best_out[o.a] = Some(*o);
+        }
+    }
+    for o in overlaps {
+        if best_out[o.a] == Some(*o) {
+            has_in[o.b] = true;
+        }
+    }
+    let mut visited = vec![false; n];
+    let mut contigs = Vec::new();
+    loop {
+        // same start rule as the single-contig walk, restricted to
+        // unplaced reads; once no path head is left, break cycles by
+        // taking the longest unplaced read
+        let start = (0..n)
+            .filter(|&i| !visited[i] && !has_in[i])
+            .max_by_key(|&i| reads[i].len())
+            .or_else(|| (0..n)
+                .filter(|&i| !visited[i])
+                .max_by_key(|&i| reads[i].len()));
+        let Some(start) = start else { break };
+        let mut contig = reads[start].clone();
+        visited[start] = true;
+        let mut cur = start;
+        while let Some(o) = best_out[cur] {
+            if visited[o.b] {
+                break;
+            }
+            contig.extend_from_slice(
+                &reads[o.b][o.len.min(reads[o.b].len())..]);
+            visited[o.b] = true;
+            cur = o.b;
+        }
+        contigs.push(contig);
+    }
+    contigs
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -99,5 +163,66 @@ mod tests {
         assert!(assemble(&[], 10).is_empty());
         let one = vec![vec![0u8, 1, 2, 3]];
         assert_eq!(assemble(&one, 2), one[0]);
+    }
+
+    #[test]
+    fn zero_length_read_does_not_panic() {
+        // a read the rejection gate (or a hopeless decode) left empty
+        // must flow through both assemblers without panicking
+        let mut rng = Rng::new(7);
+        let genome: Vec<u8> = (0..300).map(|_| rng.base()).collect();
+        let mut reads = shred(&genome, 80, 40);
+        reads.insert(1, Vec::new());
+        let draft = assemble(&reads, 20);
+        assert!(!draft.is_empty());
+        let contigs = assemble_contigs(&reads, 20);
+        // every read is placed: the empty read rides as a singleton
+        assert!(contigs.iter().any(|c| c.is_empty()), "{contigs:?}");
+        assert_eq!(contigs[0], draft);
+        // all-empty input is also fine
+        assert_eq!(assemble(&[Vec::new(), Vec::new()], 10), Vec::new());
+        assert_eq!(assemble_contigs(&[Vec::new()], 10),
+                   vec![Vec::new()]);
+    }
+
+    #[test]
+    fn single_read_is_a_singleton_contig() {
+        let one = vec![vec![3u8, 2, 1, 0, 3, 2]];
+        assert_eq!(assemble_contigs(&one, 3), one);
+        assert!(assemble_contigs(&[], 3).is_empty());
+    }
+
+    #[test]
+    fn identical_reads_collapse_to_one_contig() {
+        // all reads identical: full-length mutual overlaps, and the
+        // walk must terminate (visited check) at one copy's length
+        let mut rng = Rng::new(8);
+        let read: Vec<u8> = (0..60).map(|_| rng.base()).collect();
+        let reads = vec![read.clone(); 4];
+        let draft = assemble(&reads, 20);
+        assert_eq!(draft, read);
+        let contigs = assemble_contigs(&reads, 20);
+        assert!(!contigs.is_empty() && contigs.len() < reads.len(),
+                "walks must merge at least one pair: {}", contigs.len());
+        assert!(contigs.iter().all(|c| c == &read), "{contigs:?}");
+    }
+
+    #[test]
+    fn disjoint_reads_emit_singleton_contigs() {
+        // no overlap above threshold anywhere: the assembler must emit
+        // one singleton contig per read, not panic or drop reads
+        let mut rng = Rng::new(9);
+        let reads: Vec<Vec<u8>> = (0..3)
+            .map(|_| (0..50).map(|_| rng.base()).collect())
+            .collect();
+        let contigs = assemble_contigs(&reads, 25);
+        assert_eq!(contigs.len(), reads.len());
+        let mut sorted = contigs.clone();
+        sorted.sort();
+        let mut expect = reads.clone();
+        expect.sort();
+        assert_eq!(sorted, expect, "every read survives as-is");
+        // the single-contig entry point returns the longest read
+        assert_eq!(assemble(&reads, 25).len(), 50);
     }
 }

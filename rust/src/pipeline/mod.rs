@@ -8,7 +8,17 @@ pub mod mapping;
 pub mod overlap;
 pub mod polish;
 
-pub use assembly::assemble;
+pub use assembly::{assemble, assemble_contigs};
 pub use mapping::map_read;
 pub use overlap::find_overlaps;
 pub use polish::polish;
+
+/// The offline reads→polished-consensus entry point: greedy unitig
+/// assembly of `reads` into a draft, then pileup-polish the draft with
+/// the same reads. This is the reference the coordinator's streaming
+/// analysis stage (`coordinator::analysis`) is byte-identity-pinned
+/// against: same reads in the same order → identical bytes out.
+pub fn consensus(reads: &[Vec<u8>], min_overlap: usize) -> Vec<u8> {
+    let draft = assemble(reads, min_overlap);
+    polish(&draft, reads)
+}

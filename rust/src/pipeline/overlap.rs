@@ -30,6 +30,16 @@ fn seeds(read: &[u8]) -> impl Iterator<Item = (u64, usize)> + '_ {
     })
 }
 
+/// Seed hashes of `read` in position order — shared with the
+/// coordinator's streaming analysis stage so its incremental k-mer
+/// index hashes exactly like `find_overlaps` (same `SEED_K`, same
+/// rolling encode), which is what keeps the two overlap graphs
+/// identical.
+pub(crate) fn seed_hashes(read: &[u8])
+                          -> impl Iterator<Item = u64> + '_ {
+    seeds(read).map(|(h, _)| h)
+}
+
 /// Find suffix-prefix overlaps of length >= `min_len` between all pairs.
 ///
 /// Candidates come from a k-mer index (a seed of `a`'s tail matching a seed
@@ -105,6 +115,58 @@ mod tests {
         let r2: Vec<u8> = (0..80).map(|_| rng.base()).collect();
         let ovl = find_overlaps(&[r1, r2], 20);
         assert!(ovl.is_empty(), "{ovl:?}");
+    }
+
+    #[test]
+    fn zero_length_and_short_reads_are_skipped_not_panicked() {
+        let mut rng = Rng::new(5);
+        let real: Vec<u8> = (0..80).map(|_| rng.base()).collect();
+        let reads = vec![Vec::new(), real.clone(), vec![1u8, 2, 3],
+                         real.clone()];
+        let ovl = find_overlaps(&reads, 20);
+        // the empty and sub-min_len reads appear in no edge; the two
+        // identical full reads overlap both ways
+        assert!(ovl.iter().all(|o| o.a != 0 && o.b != 0
+                               && o.a != 2 && o.b != 2), "{ovl:?}");
+        assert!(ovl.contains(&Overlap { a: 1, b: 3, len: 80 }));
+        assert!(ovl.contains(&Overlap { a: 3, b: 1, len: 80 }));
+        // degenerate whole-input shapes
+        assert!(find_overlaps(&[], 10).is_empty());
+        assert!(find_overlaps(&[Vec::new()], 10).is_empty());
+    }
+
+    #[test]
+    fn single_read_has_no_self_overlap() {
+        let mut rng = Rng::new(6);
+        let read: Vec<u8> = (0..100).map(|_| rng.base()).collect();
+        assert!(find_overlaps(&[read], 20).is_empty(),
+                "a read must never overlap itself");
+    }
+
+    #[test]
+    fn identical_reads_overlap_pairwise_in_canonical_order() {
+        let mut rng = Rng::new(7);
+        let read: Vec<u8> = (0..60).map(|_| rng.base()).collect();
+        let reads = vec![read.clone(), read.clone(), read.clone()];
+        let ovl = find_overlaps(&reads, 15);
+        // every ordered pair, full length, grouped by a then b — the
+        // canonical order the streaming assembler reproduces
+        let expect: Vec<Overlap> = [(0, 1), (0, 2), (1, 0), (1, 2),
+                                    (2, 0), (2, 1)]
+            .iter()
+            .map(|&(a, b)| Overlap { a, b, len: 60 })
+            .collect();
+        assert_eq!(ovl, expect);
+    }
+
+    #[test]
+    fn no_overlap_above_threshold_yields_empty_graph() {
+        // consecutive reads DO overlap by 20, but min_len 40 must
+        // reject every candidate pair
+        let (_, reads) = shredded(400, 60, 40, 8);
+        assert!(find_overlaps(&reads, 40).is_empty());
+        // and lowering the bar back down finds them again
+        assert!(!find_overlaps(&reads, 15).is_empty());
     }
 
     #[test]

@@ -23,7 +23,13 @@ use helix::coordinator::{
 use helix::util::bounded::{bounded, TrySendError};
 
 fn win(read_id: usize, window_idx: usize, fill: u8) -> DecodedWindow {
-    DecodedWindow { read_id, window_idx, tenant: 0, seq: vec![fill; 8] }
+    DecodedWindow {
+        read_id,
+        window_idx,
+        tenant: 0,
+        seq: vec![fill; 8],
+        rejected: false,
+    }
 }
 
 #[test]
@@ -1518,5 +1524,319 @@ fn soak_chaos_serve_fairness_quota_and_disconnect() {
     assert!(m.shed_reads.load(Ordering::SeqCst)
                 >= greedy_summary.busy.len() as u64,
             "global shed counter must cover the greedy refusals");
+    server.shutdown().unwrap();
+}
+
+// ---------------------------------------------------------------------
+// streaming analysis stage + GenPIP-style early rejection
+// ---------------------------------------------------------------------
+
+use helix::coordinator::ANALYSIS_MIN_OVERLAP;
+
+/// Rejection-OFF property, half 1: `reject_threshold: Some(0.0)` must
+/// be byte-identical to `None`. Margins are non-negative, so a zero
+/// threshold can never fire — but arming the gate switches every
+/// decode onto the top-2 traversal, so this pins that measuring the
+/// margin never changes what gets called (the same invariant the
+/// tiered fast path relies on), and that no counter moves.
+#[test]
+fn reject_threshold_zero_is_byte_identical_to_off() {
+    let run = sim_run(900, 3, 47);
+    let (base, _m) = call_run_with_shards(&run, 1);
+    assert_eq!(base.len(), run.reads.len());
+
+    let mut coord = Coordinator::new(CoordinatorConfig {
+        model: "guppy".into(),
+        bits: 32,
+        dnn_shards: 1,
+        policy: BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+        },
+        reject_threshold: Some(0.0),
+        artifacts_dir: no_artifacts_dir(),
+        ..Default::default()
+    }).unwrap();
+    for r in &run.reads {
+        coord.submit(r);
+    }
+    let metrics = coord.metrics.clone();
+    let gated = coord.finish().unwrap();
+
+    assert_eq!(metrics.rejected_reads.load(Ordering::SeqCst), 0,
+               "a zero threshold must never reject a read");
+    assert_eq!(metrics.rejected_windows.load(Ordering::SeqCst), 0,
+               "a zero threshold must never skip a window");
+    assert_eq!(gated.len(), base.len());
+    for (a, b) in base.iter().zip(&gated) {
+        assert_eq!(a.read_id, b.read_id);
+        assert_eq!(a.seq, b.seq,
+                   "read {} diverged with the reject gate armed at 0",
+                   a.read_id);
+        assert_eq!(a.window_decodes, b.window_decodes,
+                   "read {} window decodes diverged with the gate \
+                    armed at 0", a.read_id);
+    }
+}
+
+/// Rejection property, half 2: an infinite threshold rejects every
+/// read (the top-2 margin is finite whenever two beams survive), so
+/// nothing is emitted, every read is counted rejected, and —
+/// critically — `in_flight()` still settles to 0 WITHOUT finish()'s
+/// help: rejected windows must keep flowing to the collector so no
+/// read leaks half-assembled at the router.
+#[test]
+fn reject_threshold_infinite_rejects_every_read_and_drains() {
+    let run = sim_run(900, 3, 59);
+    let mut coord = Coordinator::new(CoordinatorConfig {
+        model: "guppy".into(),
+        bits: 32,
+        dnn_shards: 2,
+        decode_threads: 2,
+        policy: BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+        },
+        reject_threshold: Some(f32::INFINITY),
+        artifacts_dir: no_artifacts_dir(),
+        ..Default::default()
+    }).unwrap();
+    for r in &run.reads {
+        coord.submit(r);
+    }
+    let metrics = coord.metrics.clone();
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while coord.in_flight() > 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(coord.in_flight(), 0,
+               "rejected reads' windows must drain at the collector, \
+                not leak");
+    assert!(coord.try_recv().is_none(),
+            "no rejected read may be emitted");
+    let called = coord.finish().unwrap();
+    assert!(called.is_empty(),
+            "an infinite threshold must reject everything \
+             ({} reads emitted)", called.len());
+    let n_in = metrics.reads_in.load(Ordering::SeqCst);
+    assert_eq!(metrics.rejected_reads.load(Ordering::SeqCst), n_in,
+               "every registered read must be counted rejected");
+    assert!(metrics.rejected_windows.load(Ordering::SeqCst) >= 1,
+            "multi-window reads must have skipped decode work");
+    assert!(metrics.report(4).contains("rejected"),
+            "the report must surface the rejection counters");
+}
+
+/// THE tentpole identity pin: the streaming analysis stage — reads
+/// folded into the overlap graph one at a time, in completion order,
+/// by concurrent workers — must produce the exact consensus bytes of
+/// the offline `pipeline::consensus` over the same called reads, for
+/// multiple seeds and shard counts. Incremental order-free discovery
+/// plus canonical (a, b) sorting makes arrival order invisible.
+#[test]
+fn streaming_assembly_matches_offline_pipeline_bytes() {
+    for seed in [7u64, 43, 101] {
+        for shards in [1usize, 4] {
+            let run = sim_run(800, 3, seed);
+            let mut coord = Coordinator::new(CoordinatorConfig {
+                model: "guppy".into(),
+                bits: 32,
+                dnn_shards: shards,
+                analysis_threads: 2,
+                policy: BatchPolicy {
+                    max_batch: 4,
+                    max_wait: Duration::from_millis(2),
+                },
+                artifacts_dir: no_artifacts_dir(),
+                ..Default::default()
+            }).unwrap();
+            let state = coord.analysis_state()
+                .expect("analysis_threads > 0 must open the stage");
+            for r in &run.reads {
+                coord.submit(r);
+            }
+            let called = coord.finish().unwrap();
+            assert_eq!(called.len(), run.reads.len(),
+                       "seed {seed} shards {shards}");
+            // offline reference: the voted sequences in read-id order
+            // (finish() sorts), through the one-shot pipeline
+            let seqs: Vec<Vec<u8>> =
+                called.iter().map(|c| c.seq.clone()).collect();
+            let offline =
+                helix::pipeline::consensus(&seqs, ANALYSIS_MIN_OVERLAP);
+            let streamed = state.consensus(0);
+            assert_eq!(streamed, offline,
+                       "seed {seed} shards {shards}: streaming \
+                        consensus diverged from the offline pipeline");
+            assert!(!streamed.is_empty(),
+                    "seed {seed} shards {shards}: the pin is vacuous \
+                     on an empty consensus");
+        }
+    }
+}
+
+/// Soak/chaos for the analysis stage: bursty waves with the autoscaler
+/// churning the analysis pool (grow under waves, retire in gaps — jobs
+/// must survive their worker's retirement) and the reject gate armed
+/// at a finite threshold. No read may be lost (called + rejected
+/// accounts for every registered read), `in_flight` must settle at 0,
+/// and the streamed consensus must STILL be byte-identical to the
+/// offline pipeline over whatever survived the gate. `HELIX_CI_SOAK=1`
+/// runs the long variant.
+#[test]
+fn soak_chaos_analysis_pool_with_rejection() {
+    let slow = std::env::var("HELIX_CI_SOAK")
+        .map(|v| v == "1").unwrap_or(false);
+    let (genome, coverage, waves, gap_ms) =
+        if slow { (2400, 6, 8, 300) } else { (900, 3, 3, 100) };
+    let run = sim_run(genome, coverage, 211);
+
+    let mut coord = Coordinator::new(CoordinatorConfig {
+        model: "guppy".into(),
+        bits: 32,
+        dnn_shards: 1,
+        decode_threads: 2,
+        analysis_threads: 4,
+        policy: BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+        },
+        // a finite mid-range threshold: deterministic margins decide
+        // per read; whether any fires depends on the model, and the
+        // accounting below must hold either way
+        reject_threshold: Some(0.5),
+        autoscale: Some(AutoscaleConfig {
+            min_shards: 1,
+            max_shards: 3,
+            tick: Duration::from_millis(2),
+            // deliberately churny: waves read hot almost immediately,
+            // gaps read cold within a few ticks
+            high_util: 0.10,
+            low_util: 0.05,
+            up_ticks: 1,
+            down_ticks: 2,
+            cooldown_ticks: 0,
+            scale_analysis: true,
+            ..AutoscaleConfig::default()
+        }),
+        artifacts_dir: no_artifacts_dir(),
+        ..Default::default()
+    }).unwrap();
+    let state = coord.analysis_state().unwrap();
+    assert_eq!(coord.live_analysis_workers(), 4,
+               "analysis pool starts at its configured width");
+
+    let mut called = Vec::new();
+    let chunk = run.reads.len().div_ceil(waves).max(1);
+    for wave in run.reads.chunks(chunk) {
+        for r in wave {
+            coord.submit(r);
+            called.extend(coord.drain_ready());
+        }
+        let gap_deadline =
+            Instant::now() + Duration::from_millis(gap_ms);
+        while Instant::now() < gap_deadline {
+            called.extend(coord.drain_ready());
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+    // idle until the controller has retired analysis workers at least
+    // once (the chaos ingredient: retirement with jobs in the fabric)
+    let churn_deadline = Instant::now() + Duration::from_secs(30);
+    while coord.live_analysis_workers() > 1
+        && Instant::now() < churn_deadline
+    {
+        called.extend(coord.drain_ready());
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let settle_deadline = Instant::now() + Duration::from_secs(60);
+    while coord.in_flight() > 0 && Instant::now() < settle_deadline {
+        called.extend(coord.drain_ready());
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(coord.in_flight(), 0, "in_flight must settle at 0");
+    let metrics = coord.metrics.clone();
+    called.extend(coord.finish().unwrap());
+    called.sort_by_key(|c| c.read_id);
+
+    // conservation: every registered read either came out or was
+    // rejected — chaos may not lose a single one
+    let n_in = metrics.reads_in.load(Ordering::SeqCst) as usize;
+    let rejected =
+        metrics.rejected_reads.load(Ordering::SeqCst) as usize;
+    assert_eq!(called.len() + rejected, n_in,
+               "{} called + {rejected} rejected != {n_in} submitted",
+               called.len());
+
+    // identity under chaos: the streamed graph over the survivors must
+    // match the offline pipeline over the same (id-sorted) survivors
+    let seqs: Vec<Vec<u8>> =
+        called.iter().map(|c| c.seq.clone()).collect();
+    let offline =
+        helix::pipeline::consensus(&seqs, ANALYSIS_MIN_OVERLAP);
+    assert_eq!(state.consensus(0), offline,
+               "streamed consensus diverged under analysis chaos");
+
+    // the soak is only a soak if the analysis pool actually churned
+    let events = metrics.scale_events();
+    let analysis_downs = events.iter()
+        .filter(|e| e.stage == StageId::Analysis
+                && e.action == ScaleAction::Down)
+        .count();
+    assert!(analysis_downs >= 1,
+            "gaps must have retired an analysis worker: {events:?}");
+}
+
+/// Satellite-5 regression: a TCP client that vanishes mid-assembly
+/// must not leak partial contigs in the analysis stage. Teardown runs
+/// `cancel_tenant` unconditionally, which both cancels in-flight reads
+/// AND purges + tombstones the tenant's analysis state — late jobs
+/// still draining out of the vote stage are discarded on arrival.
+#[test]
+fn disconnect_purges_tenant_partial_contigs() {
+    let mut cfg = serve_pipeline_cfg();
+    cfg.analysis_threads = 2;
+    let server = Server::start(cfg, ServeConfig::default()).unwrap();
+    let state = server.analysis_state()
+        .expect("serving with analysis_threads > 0 exposes the state");
+    let run = sim_run(900, 3, 67);
+
+    // first connection = tenant 1
+    let mut victim = Client::connect(server.local_addr()).unwrap();
+    for (i, r) in run.reads.iter().take(6).enumerate() {
+        victim.submit(i as u64, &r.signal).unwrap();
+    }
+    // wait until the stage holds partial state for the tenant, so the
+    // purge below is observable (not vacuous)
+    let deadline = Instant::now() + Duration::from_secs(120);
+    while state.reads_indexed(1) == 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(state.reads_indexed(1) > 0,
+            "a voted read must have been folded into the assembly");
+    drop(victim); // vanish mid-assembly, no FIN
+
+    while state.reads_indexed(1) > 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(state.reads_indexed(1), 0,
+               "the dead tenant's partial contigs must be purged");
+    assert!(state.contigs(1).is_empty());
+
+    // everything in flight drains; the tombstone keeps late-draining
+    // jobs from resurrecting the state
+    while server.in_flight() > 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(server.in_flight(), 0, "orphans must drain, not leak");
+    assert_eq!(state.reads_indexed(1), 0,
+               "late analysis jobs must be discarded by the tombstone");
+
+    // a fresh tenant on the same server still assembles normally
+    let mut fresh = Client::connect(server.local_addr()).unwrap();
+    fresh.submit(1, &run.reads[0].signal).unwrap();
+    let summary = fresh.drain().unwrap();
+    assert_eq!(summary.results.len(), 1,
+               "a clean client must be unaffected by the purge");
     server.shutdown().unwrap();
 }
