@@ -10,6 +10,19 @@
 #                    #   backend; artifacts self-materialize; the
 #                    #   kernel bench hard-fails on a regression past
 #                    #   rust/benches/baseline_kernels.json's band)
+#   ./ci.sh check    # ... plus the concurrency gate: helix-lint
+#                    #   (self-test, then the real tree — hard fail)
+#                    #   and the deterministic schedule-exploration
+#                    #   model suite under RUSTFLAGS="--cfg
+#                    #   helix_check" (see docs/CONCURRENCY.md; a
+#                    #   failure prints its HELIX_CHECK_SEED replay)
+#   HELIX_CI_TSAN=1 ./ci.sh check
+#                    # additionally run the util:: tests under nightly
+#                    #   ThreadSanitizer (soft: skips cleanly when no
+#                    #   nightly toolchain is installed)
+#   HELIX_CI_MIRI=1 ./ci.sh check
+#                    # additionally run the util::bounded tests under
+#                    #   miri (soft: skips cleanly when miri is absent)
 #   HELIX_CI_XLA=1 ./ci.sh
 #                    # additionally try the `xla` feature build
 #                    #   (best-effort: needs the PJRT binding crate,
@@ -34,9 +47,12 @@ cargo build --release
 echo "== cargo test -q"
 cargo test -q
 
-echo "== cargo clippy -- -D warnings"
+echo "== cargo clippy -- -D warnings (+ promoted pedantic lints)"
 if cargo clippy --version >/dev/null 2>&1; then
-    cargo clippy --all-targets -- -D warnings
+    cargo clippy --all-targets -- -D warnings \
+        -D clippy::needless_pass_by_value \
+        -D clippy::redundant_clone \
+        -D clippy::manual_let_else
 else
     echo "ci.sh: clippy not installed; skipping lint" >&2
 fi
@@ -54,7 +70,7 @@ RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 echo "== markdown link check"
 rm -f .linkcheck_failed
 for doc in README.md ARCHITECTURE.md docs/TUNING.md \
-           rust/src/coordinator/README.md; do
+           docs/CONCURRENCY.md rust/src/coordinator/README.md; do
     if [ ! -f "$doc" ]; then
         echo "ci.sh: FAIL — $doc is missing (link-checked doc set)" >&2
         exit 1
@@ -100,6 +116,58 @@ if [ "${HELIX_CI_XLA:-0}" = "1" ]; then
     else
         echo "ci.sh: xla feature build unavailable (offline registry?)" \
              "— skipping the PJRT path" >&2
+    fi
+fi
+
+if [ "${1:-}" = "check" ]; then
+    # Concurrency gate, both halves HARD-fail:
+    #  1. helix-lint — the in-tree source scanner (banned patterns:
+    #     float partial_cmp().unwrap(), std::sync::mpsc, bare
+    #     thread::spawn outside the pool whitelist, .unwrap() on
+    #     channel send/recv in production code, Instant::now() inside
+    #     the autoscale tick). Its --self-test proves every rule fires
+    #     on a bad fixture and stays quiet on its good twin before the
+    #     real tree is scanned.
+    #  2. The deterministic schedule-exploration model suite: the
+    #     util::sync shim routes Mutex/Condvar/atomics through the
+    #     util::check scheduler under --cfg helix_check, exploring
+    #     seeded interleavings of the pipeline's sync invariants. A
+    #     failing model prints HELIX_CHECK_SEED=<n>; replay with
+    #     HELIX_CHECK_SEED=<n> RUSTFLAGS="--cfg helix_check" \
+    #       cargo test <name>
+    echo "== helix-lint --self-test"
+    cargo run --release --bin helix_lint -- --self-test
+    echo "== helix-lint rust/src"
+    cargo run --release --bin helix_lint -- rust/src
+    echo '== RUSTFLAGS="--cfg helix_check" cargo test (model suite)'
+    RUSTFLAGS="--cfg helix_check" cargo test -q --lib
+    RUSTFLAGS="--cfg helix_check" cargo test -q --test check_models
+
+    # soft-gated sanitizer passes: real-weak-memory complements to the
+    # model checker (the model scheduler serializes threads, so it can
+    # not see data races the hardware could). Both skip cleanly when
+    # the extra toolchain is absent — the container bakes in stable
+    # only.
+    if [ "${HELIX_CI_TSAN:-0}" = "1" ]; then
+        if cargo +nightly --version >/dev/null 2>&1; then
+            host=$(rustc -vV | sed -n 's/^host: //p')
+            echo "== HELIX_CI_TSAN=1: nightly ThreadSanitizer (util::)"
+            RUSTFLAGS="-Zsanitizer=thread" \
+                cargo +nightly test -q --target "$host" --lib util::
+        else
+            echo "ci.sh: HELIX_CI_TSAN=1 but no nightly toolchain —" \
+                 "skipping the TSan pass" >&2
+        fi
+    fi
+    if [ "${HELIX_CI_MIRI:-0}" = "1" ]; then
+        if cargo +nightly miri --version >/dev/null 2>&1; then
+            echo "== HELIX_CI_MIRI=1: miri (util::bounded)"
+            MIRIFLAGS="-Zmiri-disable-isolation" \
+                cargo +nightly miri test -q --lib util::bounded
+        else
+            echo "ci.sh: HELIX_CI_MIRI=1 but miri is not installed —" \
+                 "skipping the miri pass" >&2
+        fi
     fi
 fi
 

@@ -49,7 +49,7 @@ pub fn bench<F: FnMut()>(name: &str, budget_ms: u64, mut f: F) -> Stats {
         f();
         samples.push(t.elapsed().as_nanos() as f64);
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples.sort_by(f64::total_cmp);
     let mean = samples.iter().sum::<f64>() / samples.len() as f64;
     let stats = Stats {
         iters: samples.len(),

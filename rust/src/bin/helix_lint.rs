@@ -1,0 +1,490 @@
+//! helix-lint: in-tree source scanner for the crate's known concurrency
+//! and float-ordering footguns (on-brand with `util::json` — no syn, no
+//! regex crate, just a small line scanner with a string/comment state
+//! machine). Run by `./ci.sh check` over `rust/src`; hard-fails CI on
+//! any finding.
+//!
+//! Rules (each scoped to NON-test code — `#[cfg(test)]` regions are
+//! tracked by brace depth and skipped):
+//!
+//! * `float-partial-cmp-unwrap` — `partial_cmp(..).unwrap()`: panics on
+//!   NaN; use `f64::total_cmp`.
+//! * `mpsc` — any `sync::mpsc` use: the pipeline's channel vocabulary
+//!   is `util::bounded` (backpressure + introspection + the model-check
+//!   shim); mpsc bypasses all three.
+//! * `thread-spawn` — bare `thread::spawn(` outside the whitelisted
+//!   pool/backend modules: ad-hoc threads dodge pool lifecycle,
+//!   shutdown draining, and the `util::check` scheduler.
+//! * `channel-unwrap` — `.unwrap()` directly on a channel
+//!   `send`/`recv`/`try_recv`/`recv_timeout` result in production
+//!   code: disconnects are expected lifecycle events, not bugs.
+//! * `instant-now-in-tick` — `Instant::now()` inside the autoscale
+//!   controller: tick logic must flow through `SampleClock` so the
+//!   control loop stays deterministic under test.
+//!
+//! A finding can be waived where genuinely intended with a trailing or
+//! preceding comment: `// helix-lint: allow(rule-name)`.
+//!
+//! `helix_lint --self-test` runs the scanner over embedded fixture
+//! snippets (each rule must fire on its bad fixture and stay quiet on
+//! its good twin) and exits non-zero on any miss — wired into
+//! `./ci.sh check` ahead of the real scan.
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// Modules allowed to call `thread::spawn` directly: the worker pools
+/// and serving back-ends that own thread lifecycle, plus the model
+/// scheduler itself.
+const SPAWN_WHITELIST: &[&str] = &[
+    "coordinator/pool.rs",
+    "coordinator/dispatch.rs",
+    "coordinator/server.rs",
+    "coordinator/collector.rs",
+    "coordinator/analysis.rs",
+    "coordinator/net/mod.rs",
+    "util/check.rs",
+];
+
+/// Files whose control-tick logic must use the sampled clock.
+const TICK_FILES: &[&str] = &["coordinator/autoscale.rs"];
+
+struct Finding {
+    file: String,
+    line: usize,
+    rule: &'static str,
+    message: String,
+}
+
+/// Strip comments and neutralize string/char literals so pattern and
+/// brace scanning cannot be fooled by `"{"`, `"// not a comment"`, or
+/// doc text. Returns one stripped line per input line (block comments
+/// and multi-line strings keep the line structure).
+fn strip_source(src: &str) -> Vec<String> {
+    #[derive(Clone, Copy, PartialEq)]
+    enum St {
+        Code,
+        LineComment,
+        BlockComment(u32),
+        Str,
+        RawStr(u32),
+        Char,
+    }
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut st = St::Code;
+    let chars: Vec<char> = src.chars().collect();
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        let next = chars.get(i + 1).copied();
+        if c == '\n' {
+            if st == St::LineComment {
+                st = St::Code;
+            }
+            out.push(std::mem::take(&mut cur));
+            i += 1;
+            continue;
+        }
+        match st {
+            St::Code => match (c, next) {
+                ('/', Some('/')) => st = St::LineComment,
+                ('/', Some('*')) => {
+                    st = St::BlockComment(1);
+                    i += 1;
+                }
+                ('r', Some('"')) | ('r', Some('#')) => {
+                    // raw string: count the # fence
+                    let mut hashes = 0;
+                    let mut j = i + 1;
+                    while chars.get(j) == Some(&'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if chars.get(j) == Some(&'"') {
+                        st = St::RawStr(hashes);
+                        cur.push('"');
+                        i = j + 1;
+                        continue;
+                    }
+                    cur.push(c);
+                }
+                ('"', _) => {
+                    st = St::Str;
+                    cur.push('"');
+                }
+                ('\'', _) => {
+                    // char literal vs lifetime: a literal is exactly
+                    // 'x', or starts with an escape ('\n', '\u{..}').
+                    // Anything else ('a in generics, &'a borrows) is a
+                    // lifetime — scanning ahead for a closing quote
+                    // would mis-eat `<'a>(x: &'a T)` as one literal.
+                    if next == Some('\\') {
+                        st = St::Char;
+                        cur.push('\'');
+                    } else if next.is_some()
+                        && chars.get(i + 2) == Some(&'\'')
+                    {
+                        cur.push('\'');
+                        cur.push('\'');
+                        i += 3;
+                        continue;
+                    } else {
+                        cur.push('\''); // lifetime: keep, no state
+                    }
+                }
+                _ => cur.push(c),
+            },
+            St::LineComment => {}
+            St::BlockComment(d) => match (c, next) {
+                ('*', Some('/')) => {
+                    st = if d == 1 {
+                        St::Code
+                    } else {
+                        St::BlockComment(d - 1)
+                    };
+                    i += 1;
+                }
+                ('/', Some('*')) => {
+                    st = St::BlockComment(d + 1);
+                    i += 1;
+                }
+                _ => {}
+            },
+            St::Str => match (c, next) {
+                ('\\', Some(_)) => i += 1,
+                ('"', _) => {
+                    st = St::Code;
+                    cur.push('"');
+                }
+                _ => {}
+            },
+            St::RawStr(hashes) => {
+                if c == '"' {
+                    let mut ok = true;
+                    for k in 0..hashes {
+                        if chars.get(i + 1 + k as usize) != Some(&'#') {
+                            ok = false;
+                            break;
+                        }
+                    }
+                    if ok {
+                        st = St::Code;
+                        cur.push('"');
+                        i += 1 + hashes as usize;
+                        continue;
+                    }
+                }
+            }
+            St::Char => {
+                if c == '\\' {
+                    i += 1;
+                } else if c == '\'' {
+                    st = St::Code;
+                    cur.push('\'');
+                }
+            }
+        }
+        i += 1;
+    }
+    if !cur.is_empty() || st == St::LineComment {
+        out.push(cur);
+    }
+    out
+}
+
+/// True when `win` contains `pat` starting before `line_len` (i.e. on
+/// the current line, not the lookahead line) followed by `.unwrap()`
+/// with no statement boundary (`;`) in between.
+fn call_then_unwrap(win: &str, line_len: usize, pat: &str) -> bool {
+    let mut from = 0;
+    while let Some(rel) = win[from..].find(pat) {
+        if from + rel >= line_len {
+            return false;
+        }
+        let start = from + rel + pat.len();
+        if let Some(u) = win[start..].find(".unwrap()") {
+            if !win[start..start + u].contains(';') {
+                return true;
+            }
+        }
+        from = start;
+    }
+    false
+}
+
+fn relpath(path: &Path) -> String {
+    path.to_string_lossy().replace('\\', "/")
+}
+
+fn scan_file(path: &Path, src: &str, findings: &mut Vec<Finding>) {
+    let rel = relpath(path);
+    let raw_lines: Vec<&str> = src.lines().collect();
+    let stripped = strip_source(src);
+    let is_tick_file = TICK_FILES.iter().any(|f| rel.ends_with(f));
+    let spawn_ok = SPAWN_WHITELIST.iter().any(|f| rel.ends_with(f));
+
+    let mut depth: i64 = 0;
+    let mut pending_test = false;
+    let mut test_end: Option<i64> = None;
+
+    let push = |findings: &mut Vec<Finding>, idx: usize,
+                rule: &'static str, message: String| {
+        // waiver: `helix-lint: allow(rule)` on this or the previous
+        // raw line (comments are stripped from the scan lines, so
+        // look at the raw source)
+        let waived = [idx, idx.saturating_sub(1)].iter().any(|&i| {
+            raw_lines.get(i).is_some_and(|l| {
+                l.contains("helix-lint: allow(")
+                    && l.contains(rule)
+            })
+        });
+        if !waived {
+            findings.push(Finding {
+                file: rel.clone(),
+                line: idx + 1,
+                rule,
+                message,
+            });
+        }
+    };
+
+    for (idx, line) in stripped.iter().enumerate() {
+        if test_end.is_none()
+            && (line.contains("#[cfg(test)]")
+                || line.contains("#[cfg(all(test"))
+        {
+            pending_test = true;
+        }
+        if test_end.is_none() && pending_test && line.contains('{') {
+            test_end = Some(depth);
+            pending_test = false;
+        }
+        let in_test = test_end.is_some();
+
+        if !in_test {
+            // two-line window so a call split across a line break is
+            // still seen as one expression
+            let mut win = line.clone();
+            if let Some(nl) = stripped.get(idx + 1) {
+                win.push(' ');
+                win.push_str(nl);
+            }
+            if call_then_unwrap(&win, line.len(), "partial_cmp") {
+                push(findings, idx, "float-partial-cmp-unwrap",
+                     "partial_cmp(..).unwrap() panics on NaN; use \
+                      f64::total_cmp".to_string());
+            }
+            if line.contains("sync::mpsc") {
+                push(findings, idx, "mpsc",
+                     "std::sync::mpsc is banned; use util::bounded \
+                      (backpressure + model-check shim)".to_string());
+            }
+            if line.contains("thread::spawn(") && !spawn_ok {
+                push(findings, idx, "thread-spawn",
+                     "bare thread::spawn outside the pool/backend \
+                      whitelist; route threads through a pool or \
+                      whitelist the module".to_string());
+            }
+            for pat in [".send(", ".recv()", ".try_recv()",
+                        ".recv_timeout("] {
+                if call_then_unwrap(&win, line.len(), pat) {
+                    push(findings, idx, "channel-unwrap",
+                         format!("{pat}..).unwrap() in production \
+                                  code: channel disconnects are \
+                                  lifecycle events, handle the Err"));
+                    break;
+                }
+            }
+            if is_tick_file && line.contains("Instant::now()") {
+                push(findings, idx, "instant-now-in-tick",
+                     "controller tick logic must read time through \
+                      SampleClock, not Instant::now()".to_string());
+            }
+        }
+
+        for ch in line.chars() {
+            match ch {
+                '{' => depth += 1,
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if let Some(end) = test_end {
+            if depth <= end {
+                test_end = None;
+            }
+        }
+    }
+}
+
+fn collect_rs(root: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    if root.is_file() {
+        if root.extension().is_some_and(|e| e == "rs") {
+            out.push(root.to_path_buf());
+        }
+        return Ok(());
+    }
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(root)?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+fn scan_roots(roots: &[PathBuf]) -> Result<Vec<Finding>, String> {
+    let mut files = Vec::new();
+    for root in roots {
+        collect_rs(root, &mut files)
+            .map_err(|e| format!("helix-lint: cannot read {}: {e}",
+                                 root.display()))?;
+    }
+    if files.is_empty() {
+        return Err(format!("helix-lint: no .rs files under {roots:?}"));
+    }
+    let mut findings = Vec::new();
+    for f in &files {
+        let src = std::fs::read_to_string(f)
+            .map_err(|e| format!("helix-lint: cannot read {}: {e}",
+                                 f.display()))?;
+        scan_file(f, &src, &mut findings);
+    }
+    Ok(findings)
+}
+
+/// (fixture name, source, rule that must fire — or None for clean)
+const FIXTURES: &[(&str, &str, Option<&str>)] = &[
+    ("bad_partial_cmp.rs",
+     "fn f(v: &mut Vec<f64>) {\n    v.sort_by(|a, b| \
+      a.partial_cmp(b).unwrap());\n}\n",
+     Some("float-partial-cmp-unwrap")),
+    ("bad_partial_cmp_split.rs",
+     "fn f(v: &mut Vec<f64>) {\n    v.sort_by(|a, b| a.partial_cmp(b)\n\
+      \x20       .unwrap());\n}\n",
+     Some("float-partial-cmp-unwrap")),
+    ("good_total_cmp.rs",
+     "fn f(v: &mut Vec<f64>) {\n    v.sort_by(f64::total_cmp);\n}\n",
+     None),
+    ("bad_mpsc.rs",
+     "use std::sync::mpsc;\nfn f() { let (_t, _r) = mpsc::channel::\
+      <u8>(); }\n",
+     Some("mpsc")),
+    ("good_mpsc_comment.rs",
+     "//! we use util::bounded instead of std::sync::mpsc here\n\
+      fn f() {}\n",
+     None),
+    ("bad_spawn.rs",
+     "fn f() {\n    std::thread::spawn(|| {});\n}\n",
+     Some("thread-spawn")),
+    ("good_spawn_in_test.rs",
+     "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        \
+      std::thread::spawn(|| {});\n    }\n}\n",
+     None),
+    ("bad_channel_unwrap.rs",
+     "fn f(tx: &Sender<u8>) {\n    tx.send(1).unwrap();\n}\n",
+     Some("channel-unwrap")),
+    ("good_channel_handled.rs",
+     "fn f(tx: &Sender<u8>) {\n    let _ = tx.send(1);\n    \
+      other.unwrap();\n}\n",
+     None),
+    ("good_lock_unwrap.rs",
+     "fn f(m: &Mutex<u8>) {\n    *m.lock().unwrap() += 1;\n}\n",
+     None),
+    ("coordinator/autoscale.rs",
+     "fn tick() {\n    let _now = Instant::now();\n}\n",
+     Some("instant-now-in-tick")),
+    ("good_waiver.rs",
+     "fn f(tx: &Sender<u8>) {\n    // helix-lint: allow(channel-unwrap)\
+      \n    tx.send(1).unwrap();\n}\n",
+     None),
+    ("good_lifetimes.rs",
+     "fn wait<'a>(core: &'a Core, g: Guard<'a, T>) -> Guard<'a, T> \
+      {\n    let _c = '{';\n    let _d = '\\n';\n    g\n}\n",
+     None),
+    ("good_string_brace.rs",
+     "fn f() {\n    let _s = \"not a // comment, and a { brace\";\n}\n\
+      #[cfg(test)]\nmod tests {\n    fn t(tx: &Sender<u8>) { \
+      tx.send(1).unwrap(); }\n}\n",
+     None),
+];
+
+fn self_test() -> Result<(), String> {
+    let mut errors = String::new();
+    for (name, src, expect) in FIXTURES {
+        let mut findings = Vec::new();
+        scan_file(Path::new(name), src, &mut findings);
+        match expect {
+            Some(rule) => {
+                if !findings.iter().any(|f| f.rule == *rule) {
+                    let _ = writeln!(
+                        errors,
+                        "fixture {name}: expected rule '{rule}' to \
+                         fire, got {:?}",
+                        findings.iter().map(|f| f.rule)
+                            .collect::<Vec<_>>());
+                }
+            }
+            None => {
+                if !findings.is_empty() {
+                    let _ = writeln!(
+                        errors,
+                        "fixture {name}: expected clean, got {:?}",
+                        findings.iter()
+                            .map(|f| (f.rule, f.line))
+                            .collect::<Vec<_>>());
+                }
+            }
+        }
+    }
+    if errors.is_empty() {
+        println!("helix-lint: self-test OK ({} fixtures)",
+                 FIXTURES.len());
+        Ok(())
+    } else {
+        Err(errors)
+    }
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--self-test") {
+        return match self_test() {
+            Ok(()) => ExitCode::SUCCESS,
+            Err(e) => {
+                eprintln!("helix-lint: self-test FAILED\n{e}");
+                ExitCode::FAILURE
+            }
+        };
+    }
+    let roots: Vec<PathBuf> = if args.is_empty() {
+        vec![PathBuf::from("src")]
+    } else {
+        args.iter().map(PathBuf::from).collect()
+    };
+    match scan_roots(&roots) {
+        Ok(findings) if findings.is_empty() => {
+            println!("helix-lint: OK ({} rule(s), clean tree)", 5);
+            ExitCode::SUCCESS
+        }
+        Ok(findings) => {
+            for f in &findings {
+                eprintln!("{}:{}: [{}] {}", f.file, f.line, f.rule,
+                          f.message);
+            }
+            eprintln!("helix-lint: {} finding(s)", findings.len());
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            ExitCode::FAILURE
+        }
+    }
+}

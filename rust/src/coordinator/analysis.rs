@@ -39,7 +39,9 @@
 //! margin.
 
 use std::collections::{HashMap, HashSet};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
+
+use crate::util::sync::Mutex;
 use std::time::Instant;
 
 use crate::basecall::vote::best_overlap;

@@ -499,6 +499,36 @@ struct StageState {
     prev_busy: Vec<u64>,
 }
 
+/// Time source for the control loop's tick-wall measurement. The
+/// controller never reads the system clock directly (helix-lint denies
+/// a bare `Instant::now()` inside tick logic): production passes
+/// [`SampleClock::system`], tests inject a deterministic function via
+/// [`SampleClock::from_fn`] so utilization math is reproducible.
+#[derive(Clone, Copy)]
+pub struct SampleClock(fn() -> Instant);
+
+impl SampleClock {
+    /// The real monotonic clock.
+    pub fn system() -> SampleClock {
+        SampleClock(Instant::now)
+    }
+
+    /// A caller-supplied time source (deterministic tests).
+    pub fn from_fn(f: fn() -> Instant) -> SampleClock {
+        SampleClock(f)
+    }
+
+    fn now(&self) -> Instant {
+        (self.0)()
+    }
+}
+
+impl Default for SampleClock {
+    fn default() -> SampleClock {
+        SampleClock::system()
+    }
+}
+
 /// The control loop the coordinator spawns when
 /// `CoordinatorConfig::autoscale` is set: sample → decide → act for
 /// every controlled stage, once per `cfg.tick`, until `stop` is
@@ -512,8 +542,16 @@ struct StageState {
 /// victim is the live slot with the smallest busy-delta this tick
 /// (ties retire the highest slot id, keeping slot 0 — the tail-batch
 /// magnet — alive longest).
-pub fn run(stages: Vec<StageControl>, cfg: AutoscaleConfig,
-           metrics: Arc<Metrics>, stop: Receiver<()>) {
+pub fn run(stages: &[StageControl], cfg: AutoscaleConfig,
+           metrics: &Metrics, stop: &Receiver<()>) {
+    run_with_clock(stages, cfg, metrics, stop, SampleClock::system());
+}
+
+/// [`run`] with an injected [`SampleClock`], the seam deterministic
+/// tests use to pin the tick-wall arithmetic without sleeping.
+pub fn run_with_clock(stages: &[StageControl], cfg: AutoscaleConfig,
+                      metrics: &Metrics, stop: &Receiver<()>,
+                      clock: SampleClock) {
     let cfg = cfg.normalized();
     if stages.is_empty() {
         return;
@@ -531,14 +569,14 @@ pub fn run(stages: Vec<StageControl>, cfg: AutoscaleConfig,
         })
         .collect();
     let mut prev_lat = metrics.read_latency.snapshot();
-    let mut last = Instant::now();
+    let mut last = clock.now();
     loop {
         match stop.recv_timeout(cfg.tick) {
             Err(RecvTimeoutError::Timeout) => {}
             // explicit stop or the coordinator dropped the stop sender
             Ok(()) | Err(RecvTimeoutError::Disconnected) => return,
         }
-        let now = Instant::now();
+        let now = clock.now();
         let wall = now.duration_since(last).as_micros().max(1) as f64;
         last = now;
         // shared latency signal: p99 of the reads completed this tick
@@ -621,6 +659,23 @@ mod tests {
 
     fn s(live: usize, util: f64) -> Sample {
         Sample { live, mean_util: util, backlog: 0.0, p99_micros: 0 }
+    }
+
+    #[test]
+    fn sample_clock_is_injectable_and_frozen_time_stands_still() {
+        fn frozen() -> Instant {
+            static BASE: std::sync::OnceLock<Instant> =
+                std::sync::OnceLock::new();
+            *BASE.get_or_init(Instant::now)
+        }
+        let clock = SampleClock::from_fn(frozen);
+        let a = clock.now();
+        let b = clock.now();
+        assert_eq!(b.duration_since(a), Duration::ZERO,
+                   "injected clock must be fully caller-controlled");
+        let sys = SampleClock::default();
+        let c = sys.now();
+        assert!(sys.now() >= c, "system source stays monotonic");
     }
 
     #[test]

@@ -4,8 +4,10 @@
 //! batches.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
+
+use crate::util::sync::AtomicU64;
 use std::time::{Duration, Instant};
 
 use crate::util::bounded::{Receiver, RecvTimeoutError, TryRecvError};
@@ -96,12 +98,9 @@ impl<T> Batcher<T> {
             return None;
         }
         // block for the first item
-        let first = match self.rx.recv() {
-            Ok(x) => x,
-            Err(_) => {
-                self.closed = true;
-                return None;
-            }
+        let Ok(first) = self.rx.recv() else {
+            self.closed = true;
+            return None;
         };
         let start = match self.stamp {
             Some(f) => f(&first),

@@ -29,7 +29,9 @@
 //! (`coordinator::analysis`) on its way to the output queue.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
+
+use crate::util::sync::Mutex;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 

@@ -6,8 +6,10 @@
 //! lanes never share a batch, so a shard's model selection applies to
 //! every row it receives.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
+
+use crate::util::sync::AtomicU64;
 use std::thread::JoinHandle;
 
 use crate::util::bounded::{QueueSet, Receiver};

@@ -11,8 +11,9 @@
 //! double-count a read.
 
 use std::collections::HashMap;
-use std::sync::Mutex;
 use std::time::Duration;
+
+use crate::util::sync::Mutex;
 
 use super::super::metrics::{LatencyHistogram, LatencySnapshot};
 
@@ -216,5 +217,85 @@ mod tests {
         }
         gate.refresh(&hist);
         assert!(!gate.shedding());
+    }
+}
+
+// Schedule-exploration models for the quota-slot conservation
+// invariants (docs/CONCURRENCY.md). Compiled only under
+// `--cfg helix_check`; run via `./ci.sh check`.
+#[cfg(all(test, helix_check))]
+mod model_tests {
+    use super::*;
+    use crate::util::check::{explore, spawn};
+    use std::sync::Arc;
+
+    /// Quota slots are conserved across concurrent acquire / release /
+    /// shed traffic: with quota 2 and three workers each doing
+    /// acquire→(maybe work)→release, the gate ends drained and every
+    /// successful acquire was matched by exactly one release — no
+    /// interleaving can leak a slot or drive the count negative.
+    #[test]
+    fn model_quota_slots_conserved_under_concurrency() {
+        explore("model_quota_slots_conserved_under_concurrency", 200,
+                || {
+            let g = Arc::new(QuotaGate::new(2));
+            let mut hs = Vec::new();
+            for _ in 0..3 {
+                let g = Arc::clone(&g);
+                hs.push(spawn(move || {
+                    let mut held = 0u32;
+                    for _ in 0..2 {
+                        if g.try_acquire(1) {
+                            held += 1;
+                        }
+                    }
+                    // release exactly what was acquired (the shed
+                    // path: acquire then give the slot back)
+                    for _ in 0..held {
+                        g.release(1);
+                    }
+                    held
+                }));
+            }
+            let granted: u32 = hs.into_iter().map(|h| h.join()).sum();
+            assert_eq!(g.in_flight(1), 0,
+                       "slots leaked ({granted} grants)");
+            assert!(g.try_acquire(1),
+                    "fully-released tenant must re-admit");
+            g.release(1);
+        });
+    }
+
+    /// PR 8 regression, schedule-exhaustive: a disconnect's
+    /// `release_all` racing the dead tenant's late per-read `release`
+    /// calls (pipeline drain) must end at zero in-flight — never
+    /// negative, never resurrecting slots — and the tenant id must
+    /// start clean on reuse, in every order the drain interleaves
+    /// with the teardown.
+    #[test]
+    fn model_disconnect_drain_release_race_stays_clean() {
+        explore("model_disconnect_drain_release_race_stays_clean", 200,
+                || {
+            let g = Arc::new(QuotaGate::new(4));
+            for _ in 0..3 {
+                assert!(g.try_acquire(9));
+            }
+            let g2 = Arc::clone(&g);
+            // late pipeline completions draining after the disconnect
+            let drain = spawn(move || {
+                g2.release(9);
+                g2.release(9);
+            });
+            // connection teardown
+            g.release_all(9);
+            drain.join();
+            assert_eq!(g.in_flight(9), 0,
+                       "drain/teardown race left residue");
+            // id reuse starts with full quota whatever the order
+            for _ in 0..4 {
+                assert!(g.try_acquire(9));
+            }
+            assert!(!g.try_acquire(9), "quota shrank after the race");
+        });
     }
 }

@@ -17,9 +17,9 @@
 //! reaches the socket).
 
 use std::collections::HashMap;
-use std::sync::Mutex;
 
 use crate::util::bounded::Sender;
+use crate::util::sync::Mutex;
 
 use super::frame::{encode, BusyReason, Frame};
 
@@ -195,5 +195,92 @@ mod tests {
         assert!(!reg.send_busy(4, 12, BusyReason::Quota));
         assert_eq!(drain(&rx), vec![], "nothing was queued");
         assert_eq!(reg.drop_conn(4), 0, "double drop is a no-op");
+    }
+}
+
+// Schedule-exploration models for the routing-rule invariants
+// (docs/CONCURRENCY.md). Compiled only under `--cfg helix_check`; run
+// via `./ci.sh check`.
+#[cfg(all(test, helix_check))]
+mod model_tests {
+    use super::*;
+    use crate::util::bounded;
+    use crate::util::check::{explore, spawn};
+    use std::sync::Arc;
+
+    use super::super::frame::FrameParser;
+
+    fn frames(rx: &bounded::Receiver<Vec<u8>>) -> Vec<Frame> {
+        let mut parser = FrameParser::default();
+        while let Ok(b) = rx.try_recv() {
+            parser.feed(&b);
+        }
+        let mut out = Vec::new();
+        while let Some(f) = parser.next().unwrap() {
+            out.push(f);
+        }
+        out
+    }
+
+    /// The registry queues exactly one DONE per tenant: when the last
+    /// RESULT races the client's FIN, whichever of `route_result` /
+    /// `mark_fin` observes `fin && outstanding.is_empty()` first queues
+    /// the DONE and removes the connection — never both, never
+    /// neither, and the DONE always follows the RESULT on the wire.
+    #[test]
+    fn model_last_result_vs_fin_queues_exactly_one_done() {
+        explore("model_last_result_vs_fin_queues_exactly_one_done",
+                200, || {
+            let reg = Arc::new(ConnectionRegistry::default());
+            let (tx, rx) = bounded::bounded(64);
+            reg.add(5, tx);
+            assert!(reg.track(5, 100, 7));
+            let reg2 = Arc::clone(&reg);
+            let h = spawn(move || reg2.route_result(5, 100, &[1, 2]));
+            reg.mark_fin(5);
+            assert!(h.join(), "the tracked result must route");
+            let fs = frames(&rx);
+            let dones = fs.iter()
+                .filter(|f| matches!(f, Frame::Done)).count();
+            let results = fs.iter()
+                .filter(|f| matches!(f, Frame::Result { .. })).count();
+            assert_eq!((results, dones), (1, 1),
+                       "wire saw {fs:?} — exactly one RESULT then one \
+                        DONE expected");
+            assert!(matches!(fs.last(), Some(Frame::Done)),
+                    "DONE must be the final frame");
+            assert!(!reg.route_result(5, 100, &[]),
+                    "connection must be gone after its DONE");
+        });
+    }
+
+    /// A dying connection (`drop_conn`) racing a late `route_result`
+    /// accounts for each outstanding read exactly once: either the
+    /// result routed before the teardown (frame queued, zero orphans)
+    /// or the teardown counted it as an orphan and the late result is
+    /// dropped — never both, never neither, so quota release can key
+    /// off the orphan count without double-freeing.
+    #[test]
+    fn model_drop_conn_vs_late_result_counts_read_once() {
+        explore("model_drop_conn_vs_late_result_counts_read_once", 200,
+                || {
+            let reg = Arc::new(ConnectionRegistry::default());
+            let (tx, rx) = bounded::bounded(64);
+            reg.add(6, tx);
+            assert!(reg.track(6, 42, 9));
+            let reg2 = Arc::clone(&reg);
+            let h = spawn(move || reg2.route_result(6, 42, &[3]));
+            let orphans = reg.drop_conn(6);
+            let routed = h.join();
+            assert!(routed != (orphans == 1),
+                    "read counted {}", if routed && orphans == 1 {
+                        "twice (routed AND orphaned)"
+                    } else {
+                        "zero times (neither routed nor orphaned)"
+                    });
+            let queued = frames(&rx).iter()
+                .filter(|f| matches!(f, Frame::Result { .. })).count();
+            assert_eq!(queued, usize::from(routed));
+        });
     }
 }

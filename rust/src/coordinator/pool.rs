@@ -2,8 +2,10 @@
 //! decode worker pool, plus the escalation hub the decode workers use
 //! to re-queue low-confidence fast-tier windows.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex};
+
+use crate::util::sync::AtomicU64;
 use std::thread::JoinHandle;
 use std::time::Instant;
 

@@ -56,8 +56,10 @@
 //! windows past the CTC kernel and dropping them before vote/analysis
 //! spend on them. Both default off and change nothing when off.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex};
+
+use crate::util::sync::AtomicU64;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -415,7 +417,7 @@ impl Coordinator {
                 }
                 let m = metrics.clone();
                 let handle = std::thread::spawn(move || {
-                    autoscale::run(stages, a, m, stop_rx);
+                    autoscale::run(&stages, a, &m, &stop_rx);
                 });
                 (Some(stop_tx), Some(handle))
             }

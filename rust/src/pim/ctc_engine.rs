@@ -96,13 +96,12 @@ pub fn decode_on_crossbar(lp: &LogProbs, beam_width: usize) -> Vec<u8> {
         }
         let mut scored: Vec<(Vec<u8>, (f64, f64))> = next.into_iter().collect();
         scored.sort_by(|a, b| (b.1 .0 + b.1 .1)
-            .partial_cmp(&(a.1 .0 + a.1 .1)).unwrap());
+            .total_cmp(&(a.1 .0 + a.1 .1)));
         scored.truncate(beam_width);
         beams = scored.into_iter().collect();
     }
     beams.into_iter()
-        .max_by(|a, b| (a.1 .0 + a.1 .1).partial_cmp(&(b.1 .0 + b.1 .1))
-            .unwrap())
+        .max_by(|a, b| (a.1 .0 + a.1 .1).total_cmp(&(b.1 .0 + b.1 .1)))
         .map(|(p, _)| p)
         .unwrap_or_default()
 }

@@ -166,6 +166,15 @@ pub fn evaluate_with_adc(scheme: Scheme, topo: &Topology, beam_width: usize,
     let gpu_ctc = GPU_CTC_PER_STEP * topo.ctc_steps as f64
         * (beam_width as f64 / 10.0) / bases;
     let gpu_vote = GPU_VOTE_PER_BASE;
+    let base = PimParams {
+        w_bits,
+        a_bits,
+        gpu_ctc,
+        gpu_vote,
+        ctc_on_pim: false,
+        vote_on_cmp: false,
+        beam_width,
+    };
 
     match scheme {
         Scheme::Cpu => Eval {
@@ -191,31 +200,44 @@ pub fn evaluate_with_adc(scheme: Scheme, topo: &Topology, beam_width: usize,
                                                  chip.imas_per_tile, ima, &[]);
                 chip.array.adc_bits = bits;
             }
-            pim_eval(&chip, topo, w_bits, a_bits, gpu_ctc, gpu_vote,
-                     false, false, beam_width)
+            pim_eval(&chip, topo, &base)
         }
         Scheme::Adc => {
             let chip = Chip::helix_no_cmp();
-            pim_eval(&chip, topo, w_bits, a_bits, gpu_ctc, gpu_vote,
-                     false, false, beam_width)
+            pim_eval(&chip, topo, &base)
         }
         Scheme::Ctc => {
             let chip = Chip::helix_no_cmp();
-            pim_eval(&chip, topo, w_bits, a_bits, gpu_ctc, gpu_vote,
-                     true, false, beam_width)
+            pim_eval(&chip, topo,
+                     &PimParams { ctc_on_pim: true, ..base })
         }
         Scheme::Helix => {
             let chip = Chip::helix();
-            pim_eval(&chip, topo, w_bits, a_bits, gpu_ctc, gpu_vote,
-                     true, true, beam_width)
+            pim_eval(&chip, topo,
+                     &PimParams { ctc_on_pim: true, vote_on_cmp: true,
+                                  ..base })
         }
     }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn pim_eval(chip: &Chip, topo: &Topology, w_bits: u32, a_bits: u32,
-            gpu_ctc: f64, gpu_vote: f64, ctc_on_pim: bool,
-            vote_on_cmp: bool, beam_width: usize) -> Eval {
+/// The per-scheme knobs of the shared PIM evaluation: DNN operand
+/// widths, the GPU fallback costs for the stages a scheme leaves off
+/// the chip, and which stages it moves on (Fig 24's ADC/CTC/Helix
+/// ablation axis).
+#[derive(Clone, Copy)]
+struct PimParams {
+    w_bits: u32,
+    a_bits: u32,
+    gpu_ctc: f64,
+    gpu_vote: f64,
+    ctc_on_pim: bool,
+    vote_on_cmp: bool,
+    beam_width: usize,
+}
+
+fn pim_eval(chip: &Chip, topo: &Topology, p: &PimParams) -> Eval {
+    let PimParams { w_bits, a_bits, gpu_ctc, gpu_vote, ctc_on_pim,
+                    vote_on_cmp, beam_width } = *p;
     let rate = chip.cell_ops_per_sec();
     let mut dnn_ops = dnn_cell_ops_per_base(topo, &chip.array, w_bits, a_bits);
     let mut t_ctc = gpu_ctc;

@@ -61,7 +61,7 @@ pub fn duration_mc(cell_f2: f64, v_write: f64, samples: usize, seed: u64)
         let d = sample_device(&nominal, &sig, &mut rng);
         logs.push(d.duration_at_voltage(v_write).ln());
     }
-    logs.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+    logs.sort_unstable_by(f64::total_cmp);
     let n = logs.len() as f64;
     let mean_log = logs.iter().sum::<f64>() / n;
     let var_log = logs.iter().map(|x| (x - mean_log) * (x - mean_log))

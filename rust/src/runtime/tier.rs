@@ -90,16 +90,16 @@ impl TierSet {
                 let below: Vec<u32> = ladder.iter().copied()
                     .filter(|&b| b < hq_bits)
                     .collect();
-                match below.iter().copied()
+                let Some(b) = below.iter().copied()
                     .find(|&b| b == PREFERRED_FAST_BITS)
                     .or_else(|| below.last().copied())
-                {
-                    Some(b) => b,
-                    None => anyhow::bail!(
+                else {
+                    anyhow::bail!(
                         "tiered serving needs a ladder rung below \
                          {hq_bits}b for {model}, but the artifacts only \
-                         export {ladder:?}"),
-                }
+                         export {ladder:?}")
+                };
+                b
             }
         };
         Ok(TierSet {

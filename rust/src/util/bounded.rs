@@ -18,8 +18,10 @@
 //! receiver is gone.
 
 use std::collections::VecDeque;
-use std::sync::{Arc, Condvar, Mutex};
-use std::time::{Duration, Instant};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::util::sync::{Condvar, Instant, Mutex};
 
 /// The receiver disconnected; the unsent value is returned.
 #[derive(Debug, PartialEq, Eq)]
@@ -617,13 +619,10 @@ impl<T> Receiver<T> {
     /// Block up to `timeout` for the next item.
     pub fn recv_timeout(&self, timeout: Duration)
                         -> Result<T, RecvTimeoutError> {
-        let deadline = match Instant::now().checked_add(timeout) {
-            Some(d) => d,
+        let Some(deadline) = Instant::now().checked_add(timeout) else {
             // effectively infinite timeout
-            None => {
-                return self.recv()
-                    .map_err(|_| RecvTimeoutError::Disconnected);
-            }
+            return self.recv()
+                .map_err(|_| RecvTimeoutError::Disconnected);
         };
         let mut g = self.shared.inner.lock().unwrap();
         loop {
@@ -1087,5 +1086,189 @@ mod tests {
         thread::sleep(Duration::from_millis(50));
         drop(rx);
         assert_eq!(h.join().unwrap(), Err(SendError(2)));
+    }
+}
+
+// Schedule-exploration models for the channel/queue-set invariants
+// documented in docs/CONCURRENCY.md. Compiled only under
+// `--cfg helix_check`; run via `./ci.sh check`.
+#[cfg(all(test, helix_check))]
+mod model_tests {
+    use super::*;
+    use crate::util::check::{explore, spawn};
+
+    /// Every item sent is received exactly once, in order, across all
+    /// explored interleavings — including schedules where the sender
+    /// blocks on a full queue and schedules with injected spurious
+    /// condvar wakeups (the `send`/`recv` wait loops must re-check
+    /// their predicates, not trust the wakeup).
+    #[test]
+    fn model_send_recv_delivers_everything_in_order() {
+        explore("model_send_recv_delivers_everything_in_order", 150,
+                || {
+            let (tx, rx) = bounded::<u32>(2);
+            let h = spawn(move || {
+                for i in 0..4 {
+                    tx.send(i).unwrap();
+                }
+            });
+            let mut got = Vec::new();
+            loop {
+                match rx.recv() {
+                    Ok(v) => got.push(v),
+                    Err(RecvError) => break,
+                }
+            }
+            h.join();
+            assert_eq!(got, vec![0, 1, 2, 3]);
+        });
+    }
+
+    /// `recv_timeout` with a generous deadline must NEVER time out
+    /// while a sender is runnable and about to deliver: the virtual
+    /// clock only fires a deadline when no other thread can make
+    /// progress, mirroring real time where a 60s timeout cannot beat
+    /// a running sender.
+    #[test]
+    fn model_recv_timeout_never_fires_early() {
+        explore("model_recv_timeout_never_fires_early", 120, || {
+            let (tx, rx) = bounded::<u32>(1);
+            let h = spawn(move || {
+                rx.recv_timeout(Duration::from_secs(60))
+            });
+            tx.send(7).unwrap();
+            assert_eq!(h.join(), Ok(7));
+        });
+    }
+
+    /// With a live but idle sender, `recv_timeout` must report
+    /// `Timeout` (not hang, not `Disconnected`) — and must survive
+    /// spurious wakeups by recomputing the remaining deadline rather
+    /// than re-waiting the full timeout forever.
+    #[test]
+    fn model_recv_timeout_fires_when_idle() {
+        explore("model_recv_timeout_fires_when_idle", 120, || {
+            let (tx, rx) = bounded::<u32>(1);
+            let h = spawn(move || {
+                rx.recv_timeout(Duration::from_millis(1))
+            });
+            assert_eq!(h.join(), Err(RecvTimeoutError::Timeout));
+            drop(tx);
+        });
+    }
+
+    /// A sender dropping while the receiver waits with a deadline must
+    /// surface as `Disconnected`, never as a spurious `Timeout` and
+    /// never as a hang.
+    #[test]
+    fn model_recv_timeout_sees_disconnect() {
+        explore("model_recv_timeout_sees_disconnect", 120, || {
+            let (tx, rx) = bounded::<u32>(1);
+            let h = spawn(move || {
+                rx.recv_timeout(Duration::from_secs(60))
+            });
+            drop(tx);
+            assert_eq!(h.join(),
+                       Err(RecvTimeoutError::Disconnected));
+        });
+    }
+
+    /// PR 4 regression, schedule-exhaustive: a stale owner calling
+    /// `retire_generation` with an old token can never kill a slot
+    /// that was since recycled by a newer `add` — whatever order the
+    /// graceful retire, the recycling `add`, and the stale retire
+    /// interleave in.
+    #[test]
+    fn model_stale_generation_retire_never_kills_recycled_slot() {
+        explore(
+            "model_stale_generation_retire_never_kills_recycled_slot",
+            200, || {
+            let set = Arc::new(QueueSet::<u32>::with_slots(1));
+            let (tx1, _rx1) = bounded::<u32>(1);
+            let slot = set.add(tx1).expect("empty set accepts");
+            let g1 = set.generation(slot);
+            let set2 = Arc::clone(&set);
+            let h = spawn(move || set2.retire_generation(0, g1));
+            let retired = set.retire(slot);
+            let (tx2, _rx2) = bounded::<u32>(1);
+            let slot2 = set.add(tx2);
+            let stale = h.join();
+            // the single gen-1 installation can be retired at most
+            // once, by whichever call got there first
+            assert!(!(stale && retired),
+                    "one installation retired twice");
+            // the recycling add always lands (the slot is free by
+            // construction) and must still be live afterwards
+            assert_eq!(slot2, Some(0));
+            assert_eq!(set.live_slots(), vec![0],
+                       "stale retire killed the recycled slot");
+        });
+    }
+
+    /// `close_all` seals against a racing `add`: whichever order they
+    /// land in, a sealed set ends with zero live slots (an add that
+    /// slipped in first is closed by `close_all`; one that arrives
+    /// after the seal is refused), so shutdown can never orphan a
+    /// queue that nobody will close again.
+    #[test]
+    fn model_close_all_seals_against_racing_add() {
+        explore("model_close_all_seals_against_racing_add", 150, || {
+            let set = Arc::new(QueueSet::<u32>::with_slots(2));
+            let set2 = Arc::clone(&set);
+            let h = spawn(move || set2.close_all());
+            let (tx, _rx) = bounded::<u32>(1);
+            let added = set.add(tx);
+            h.join();
+            assert_eq!(set.live_count(), 0,
+                       "sealed set still has a live slot \
+                        (add result: {added:?})");
+            let (tx3, _rx3) = bounded::<u32>(1);
+            assert_eq!(set.add(tx3), None,
+                       "sealed set accepted a post-seal add");
+        });
+    }
+
+    /// The last-`Feeder`-drop seal chain always unblocks every
+    /// receiver: all jobs sent before the producers exit are drained,
+    /// and both consumers then observe the disconnect instead of
+    /// blocking forever — across all interleavings of the two
+    /// producer drops and the consumer recv loops.
+    #[test]
+    fn model_feeder_last_drop_unblocks_every_receiver() {
+        explore("model_feeder_last_drop_unblocks_every_receiver", 150,
+                || {
+            let set = Arc::new(QueueSet::<u32>::with_slots(2));
+            let (tx_a, rx_a) = bounded::<u32>(2);
+            let (tx_b, rx_b) = bounded::<u32>(2);
+            assert_eq!(set.add(tx_a), Some(0));
+            assert_eq!(set.add(tx_b), Some(1));
+            let feeder = Feeder::new(Arc::clone(&set));
+            let mut producers = Vec::new();
+            for base in [0u32, 100] {
+                let f = feeder.clone();
+                producers.push(spawn(move || {
+                    let mut rr = 0;
+                    assert!(f.send_round_robin(&mut rr, base));
+                    assert!(f.send_round_robin(&mut rr, base + 1));
+                }));
+            }
+            drop(feeder);
+            let mut consumers = Vec::new();
+            for rx in [rx_a, rx_b] {
+                consumers.push(spawn(move || {
+                    let mut got = 0usize;
+                    while rx.recv().is_ok() {
+                        got += 1;
+                    }
+                    got
+                }));
+            }
+            for p in producers {
+                p.join();
+            }
+            let total: usize =
+                consumers.into_iter().map(|c| c.join()).sum();
+            assert_eq!(total, 4, "seal chain lost or duplicated jobs");
+        });
     }
 }

@@ -1,10 +1,17 @@
 //! Small in-tree replacements for crates unavailable in the offline build
 //! environment (DESIGN.md §Substitutions): a seeded RNG (`rng`), a JSON
-//! subset parser (`json`), a property-testing helper (`prop`), and a
+//! subset parser (`json`), a property-testing helper (`prop`), a
 //! bounded MPSC channel (`bounded`) used to join the coordinator's
-//! pipeline stages with backpressure.
+//! pipeline stages with backpressure, the sync-primitive shim (`sync`)
+//! those structures are built on, and — under `--cfg helix_check` — the
+//! deterministic schedule explorer (`check`, a zero-dependency
+//! loom-lite) that model-tests their concurrency invariants (see
+//! docs/CONCURRENCY.md).
 
 pub mod bounded;
+#[cfg(helix_check)]
+pub mod check;
 pub mod json;
 pub mod prop;
 pub mod rng;
+pub mod sync;

@@ -1,0 +1,386 @@
+//! Synchronization shim: the ONE import point for the `Mutex`/`Condvar`/
+//! atomic/`Instant` vocabulary used by the pipeline's hand-rolled
+//! concurrency structures (`util::bounded`, the coordinator's
+//! [`QuotaGate`](crate::coordinator::net), connection registry, analysis
+//! state, and the tiered-shutdown `pending` counter).
+//!
+//! In a **normal build** every name here is a plain re-export of the
+//! `std` type — zero wrappers, identical codegen, nothing to audit.
+//!
+//! Under **`--cfg helix_check`** the same names resolve to model-aware
+//! hybrids that route *model threads* (threads spawned through
+//! [`util::check`](crate::util::check) inside a schedule exploration)
+//! through the deterministic scheduler:
+//!
+//! * every lock acquire/release, condvar wait/notify, and atomic op is a
+//!   controlled yield point, so seeded schedules can interleave threads
+//!   at exactly the places real preemption could;
+//! * condvar waits get scheduler-injected **spurious wakeups** and
+//!   **virtual-clock timeouts**, so wait-loop predicates and deadline
+//!   arithmetic are exercised far beyond what wall-clock tests reach;
+//! * [`Instant`] reads virtual nanoseconds from the schedule clock, so
+//!   `recv_timeout`-style deadline math is deterministic under the model.
+//!
+//! Threads NOT registered with the scheduler (every ordinary unit test,
+//! even in a `helix_check` build) fall straight through to the `std`
+//! primitives, so the regular suite runs unchanged under the check cfg.
+//! Mixing model and non-model threads on the *same* structure instance
+//! during a schedule is unsupported — model tests own their structures.
+
+#[cfg(not(helix_check))]
+pub use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize};
+#[cfg(not(helix_check))]
+pub use std::sync::{Condvar, Mutex, MutexGuard, WaitTimeoutResult};
+#[cfg(not(helix_check))]
+pub use std::time::Instant;
+
+#[cfg(helix_check)]
+pub use model::{AtomicBool, AtomicU64, AtomicUsize, Condvar, Instant,
+                Mutex, MutexGuard, WaitTimeoutResult};
+
+#[cfg(helix_check)]
+mod model {
+    use std::cmp::Ordering as CmpOrdering;
+    use std::convert::Infallible;
+    use std::ops::{Deref, DerefMut, Sub};
+    use std::sync::atomic::Ordering;
+    use std::sync::PoisonError;
+    use std::time::Duration;
+
+    use crate::util::check;
+
+    /// Model-aware mutex: storage lives in a real `std::sync::Mutex`
+    /// (which is what non-model threads use directly); model threads
+    /// additionally acquire *logical* ownership through the scheduler,
+    /// which is where schedule exploration happens.
+    pub struct Mutex<T> {
+        storage: std::sync::Mutex<T>,
+    }
+
+    impl<T> Mutex<T> {
+        /// Wrap `t` (same shape as `std::sync::Mutex::new`).
+        pub fn new(t: T) -> Mutex<T> {
+            Mutex { storage: std::sync::Mutex::new(t) }
+        }
+
+        fn addr(&self) -> usize {
+            self as *const Mutex<T> as *const () as usize
+        }
+
+        /// Acquire the lock. The `Result` is always `Ok` (the model
+        /// never poisons), shaped so `.lock().unwrap()` call sites are
+        /// identical to the `std` ones.
+        pub fn lock(&self) -> Result<MutexGuard<'_, T>, Infallible> {
+            let model = check::is_model_thread();
+            if model {
+                check::mutex_acquire(self.addr());
+            }
+            let inner = self.storage.lock()
+                .unwrap_or_else(PoisonError::into_inner);
+            Ok(MutexGuard { lock: self, inner: Some(inner), model })
+        }
+    }
+
+    /// Guard returned by [`Mutex::lock`]; releases logical ownership
+    /// back to the scheduler (a yield point) when dropped by a model
+    /// thread.
+    pub struct MutexGuard<'a, T> {
+        lock: &'a Mutex<T>,
+        inner: Option<std::sync::MutexGuard<'a, T>>,
+        model: bool,
+    }
+
+    impl<T> Deref for MutexGuard<'_, T> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            self.inner.as_ref().expect("guard holds storage")
+        }
+    }
+
+    impl<T> DerefMut for MutexGuard<'_, T> {
+        fn deref_mut(&mut self) -> &mut T {
+            self.inner.as_mut().expect("guard holds storage")
+        }
+    }
+
+    impl<T> Drop for MutexGuard<'_, T> {
+        fn drop(&mut self) {
+            // storage first, then logical ownership: a waiter scheduled
+            // by the release must find the std mutex already free.
+            self.inner.take();
+            if self.model {
+                check::mutex_release(self.lock.addr());
+            }
+        }
+    }
+
+    /// Atomically release the storage guard without running the normal
+    /// Drop (the scheduler-side release already happened inside
+    /// `cv_wait_begin`, under the same core lock that registered the
+    /// wait — that is what makes release-and-wait atomic).
+    fn release_storage<T>(mut guard: MutexGuard<'_, T>) {
+        guard.inner.take();
+        std::mem::forget(guard);
+    }
+
+    /// Result of a [`Condvar::wait_timeout`] under the model.
+    #[derive(Clone, Copy, Debug)]
+    pub struct WaitTimeoutResult(bool);
+
+    impl WaitTimeoutResult {
+        /// True when the wait ended because the (virtual) deadline
+        /// passed rather than by notification.
+        pub fn timed_out(&self) -> bool {
+            self.0
+        }
+    }
+
+    /// Model-aware condition variable. Model threads wait and notify
+    /// through the scheduler (with injected spurious wakeups and
+    /// virtual-deadline timeouts); non-model threads delegate to the
+    /// embedded `std::sync::Condvar`.
+    pub struct Condvar {
+        std: std::sync::Condvar,
+    }
+
+    impl Condvar {
+        /// A fresh condvar (same shape as `std::sync::Condvar::new`).
+        pub fn new() -> Condvar {
+            Condvar { std: std::sync::Condvar::new() }
+        }
+
+        fn addr(&self) -> usize {
+            self as *const Condvar as *const () as usize
+        }
+
+        /// Release the guard, wait to be woken (notify, or a
+        /// scheduler-injected spurious wakeup), re-acquire, return the
+        /// new guard. Always `Ok` — shaped for `.wait(g).unwrap()`.
+        pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>)
+                           -> Result<MutexGuard<'a, T>, Infallible> {
+            if guard.model {
+                let lock = guard.lock;
+                check::cv_wait_begin(self.addr(), lock.addr(), None);
+                release_storage(guard);
+                let _timed_out = check::cv_wait_block();
+                lock.lock()
+            } else {
+                let mut guard = guard;
+                let inner = guard.inner.take()
+                    .expect("guard holds storage");
+                let inner = self.std.wait(inner)
+                    .unwrap_or_else(PoisonError::into_inner);
+                guard.inner = Some(inner);
+                Ok(guard)
+            }
+        }
+
+        /// [`Condvar::wait`] with a deadline. Under the model the
+        /// deadline is virtual: when no other thread can make progress
+        /// the schedule clock jumps to it and the wait reports a
+        /// timeout.
+        pub fn wait_timeout<'a, T>(&self, guard: MutexGuard<'a, T>,
+                                   dur: Duration)
+            -> Result<(MutexGuard<'a, T>, WaitTimeoutResult), Infallible>
+        {
+            if guard.model {
+                let lock = guard.lock;
+                let deadline = check::virtual_deadline(dur);
+                check::cv_wait_begin(self.addr(), lock.addr(), deadline);
+                release_storage(guard);
+                let timed_out = check::cv_wait_block();
+                let g = lock.lock()?;
+                Ok((g, WaitTimeoutResult(timed_out)))
+            } else {
+                let mut guard = guard;
+                let inner = guard.inner.take()
+                    .expect("guard holds storage");
+                let (inner, res) = self.std.wait_timeout(inner, dur)
+                    .unwrap_or_else(PoisonError::into_inner);
+                guard.inner = Some(inner);
+                Ok((guard, WaitTimeoutResult(res.timed_out())))
+            }
+        }
+
+        /// Wake one waiter (the scheduler picks which model waiter
+        /// deterministically from the schedule's seed).
+        pub fn notify_one(&self) {
+            if check::is_model_thread() {
+                check::cv_notify_one(self.addr());
+            }
+            self.std.notify_one();
+        }
+
+        /// Wake every waiter.
+        pub fn notify_all(&self) {
+            if check::is_model_thread() {
+                check::cv_notify_all(self.addr());
+            }
+            self.std.notify_all();
+        }
+    }
+
+    impl Default for Condvar {
+        fn default() -> Condvar {
+            Condvar::new()
+        }
+    }
+
+    #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+    enum Stamp {
+        Real(std::time::Instant),
+        /// virtual nanoseconds on the schedule clock.
+        Virtual(u64),
+    }
+
+    /// Hybrid monotonic timestamp: model threads read virtual
+    /// nanoseconds from the schedule clock (every read advances it a
+    /// little, so single-threaded time still progresses); non-model
+    /// threads get the real `std::time::Instant`. Instants from the two
+    /// domains must never be compared — in practice each deadline
+    /// computation creates and consumes its instants on one thread.
+    #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+    pub struct Instant(Stamp);
+
+    impl Instant {
+        /// The current (virtual or real) time.
+        pub fn now() -> Instant {
+            if check::is_model_thread() {
+                Instant(Stamp::Virtual(check::clock_tick()))
+            } else {
+                Instant(Stamp::Real(std::time::Instant::now()))
+            }
+        }
+
+        /// `self + d`, `None` on overflow (callers treat `None` as an
+        /// infinite deadline, mirroring `std`).
+        pub fn checked_add(&self, d: Duration) -> Option<Instant> {
+            match self.0 {
+                Stamp::Real(t) => {
+                    t.checked_add(d).map(|t| Instant(Stamp::Real(t)))
+                }
+                Stamp::Virtual(n) => u64::try_from(d.as_nanos()).ok()
+                    .and_then(|dn| n.checked_add(dn))
+                    .map(|n| Instant(Stamp::Virtual(n))),
+            }
+        }
+
+        /// Time since this instant (saturating at zero).
+        pub fn elapsed(&self) -> Duration {
+            Instant::now() - *self
+        }
+
+        /// `self - earlier`, saturating at zero like
+        /// `std::time::Instant::duration_since` post-1.60.
+        pub fn duration_since(&self, earlier: Instant) -> Duration {
+            *self - earlier
+        }
+    }
+
+    impl Sub<Instant> for Instant {
+        type Output = Duration;
+        fn sub(self, rhs: Instant) -> Duration {
+            match (self.0, rhs.0) {
+                (Stamp::Real(a), Stamp::Real(b)) => {
+                    a.saturating_duration_since(b)
+                }
+                (Stamp::Virtual(a), Stamp::Virtual(b)) => {
+                    Duration::from_nanos(a.saturating_sub(b))
+                }
+                _ => panic!("helix_check: virtual/real Instant mix"),
+            }
+        }
+    }
+
+    impl PartialOrd for Instant {
+        fn partial_cmp(&self, other: &Instant) -> Option<CmpOrdering> {
+            Some(self.cmp(other))
+        }
+    }
+
+    impl Ord for Instant {
+        fn cmp(&self, other: &Instant) -> CmpOrdering {
+            match (self.0, other.0) {
+                (Stamp::Real(a), Stamp::Real(b)) => a.cmp(&b),
+                (Stamp::Virtual(a), Stamp::Virtual(b)) => a.cmp(&b),
+                _ => panic!("helix_check: virtual/real Instant mix"),
+            }
+        }
+    }
+
+    macro_rules! model_atomic {
+        ($(#[$doc:meta])* $name:ident, $std:ty, $prim:ty) => {
+            $(#[$doc])*
+            pub struct $name {
+                v: $std,
+            }
+
+            impl $name {
+                /// Wrap an initial value.
+                pub const fn new(v: $prim) -> $name {
+                    $name { v: <$std>::new(v) }
+                }
+
+                /// Load (a scheduler yield point; the model always runs
+                /// the op itself SeqCst).
+                pub fn load(&self, _order: Ordering) -> $prim {
+                    check::atomic_yield();
+                    self.v.load(Ordering::SeqCst)
+                }
+
+                /// Store (a scheduler yield point).
+                pub fn store(&self, v: $prim, _order: Ordering) {
+                    check::atomic_yield();
+                    self.v.store(v, Ordering::SeqCst);
+                }
+
+                /// Swap (a scheduler yield point).
+                pub fn swap(&self, v: $prim, _order: Ordering) -> $prim {
+                    check::atomic_yield();
+                    self.v.swap(v, Ordering::SeqCst)
+                }
+            }
+        };
+    }
+
+    model_atomic!(
+        /// Model-aware `AtomicBool`: identical API, every op is a
+        /// scheduler yield point for model threads.
+        AtomicBool, std::sync::atomic::AtomicBool, bool);
+    model_atomic!(
+        /// Model-aware `AtomicU64` (the tiered-shutdown `pending`
+        /// counter routes through this, so the two-phase protocol's
+        /// load/decrement orderings are schedule-explorable).
+        AtomicU64, std::sync::atomic::AtomicU64, u64);
+    model_atomic!(
+        /// Model-aware `AtomicUsize`.
+        AtomicUsize, std::sync::atomic::AtomicUsize, usize);
+
+    impl AtomicU64 {
+        /// Add, returning the previous value (a yield point).
+        pub fn fetch_add(&self, v: u64, _order: Ordering) -> u64 {
+            check::atomic_yield();
+            self.v.fetch_add(v, Ordering::SeqCst)
+        }
+
+        /// Subtract, returning the previous value (a yield point).
+        pub fn fetch_sub(&self, v: u64, _order: Ordering) -> u64 {
+            check::atomic_yield();
+            self.v.fetch_sub(v, Ordering::SeqCst)
+        }
+    }
+
+    impl AtomicUsize {
+        /// Add, returning the previous value (a yield point).
+        pub fn fetch_add(&self, v: usize, _order: Ordering) -> usize {
+            check::atomic_yield();
+            self.v.fetch_add(v, Ordering::SeqCst)
+        }
+
+        /// Subtract, returning the previous value (a yield point).
+        pub fn fetch_sub(&self, v: usize, _order: Ordering) -> usize {
+            check::atomic_yield();
+            self.v.fetch_sub(v, Ordering::SeqCst)
+        }
+    }
+}

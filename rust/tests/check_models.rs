@@ -1,0 +1,148 @@
+//! Deterministic schedule-exploration models over the crate's PUBLIC
+//! concurrency surface (the `pub(crate)` internals carry their models
+//! as in-file unit tests). Compiled and run only under
+//! `RUSTFLAGS="--cfg helix_check"` — `./ci.sh check` drives it.
+//!
+//! Every test explores seeded interleavings via `util::check::explore`;
+//! a failure prints the losing seed, replayable with
+//! `HELIX_CHECK_SEED=<seed> RUSTFLAGS="--cfg helix_check" cargo test
+//! --test check_models <name>`. See docs/CONCURRENCY.md for the
+//! invariant catalog.
+#![cfg(helix_check)]
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use helix::coordinator::batcher::{BatchPolicy, TieredBatcher,
+                                  LANE_REQUEUE};
+use helix::coordinator::AnalysisState;
+use helix::util::bounded::{bounded, Feeder, QueueSet};
+use helix::util::check;
+use helix::util::sync::AtomicU64;
+
+/// Tiered-batcher test item: (re-)enqueue stamp + payload. The stamp
+/// stays on std's real clock — `TieredBatcher`'s public API speaks
+/// `std::time::Instant` — and a 3600s `max_wait` keeps every
+/// deadline-math branch inert so the model exercises only the
+/// channel/counter protocol.
+struct J(Instant, u32);
+
+fn stamp(j: &J) -> Instant {
+    j.0
+}
+
+/// Invariant (f): the two-phase tiered shutdown never drops an
+/// in-flight escalation. The decode-side protocol is `send the
+/// re-queue, THEN decrement pending (Release)`; the batcher may only
+/// end the stream after observing pending == 0 (Acquire) and draining
+/// the side channel once more. Explored: every interleaving of the
+/// escalator against the batcher's shutdown probe.
+#[test]
+fn model_two_phase_shutdown_never_drops_inflight_escalation() {
+    check::explore(
+        "model_two_phase_shutdown_never_drops_inflight_escalation",
+        150,
+        || {
+            let (ftx, frx) = bounded::<J>(4);
+            let (rtx, rrx) = bounded::<J>(4);
+            // one fast-tier window is dispatched and undecided
+            let pending = Arc::new(AtomicU64::new(1));
+            let p = pending.clone();
+            let escalator = check::spawn(move || {
+                let _ = rtx.send(J(Instant::now(), 42));
+                p.fetch_sub(1, Ordering::Release);
+            });
+            // fresh intake closes while the decision is in flight
+            drop(ftx);
+            let mut b = TieredBatcher::new(
+                frx,
+                rrx,
+                BatchPolicy {
+                    max_batch: 4,
+                    max_wait: Duration::from_secs(3600),
+                },
+                stamp,
+                pending,
+            );
+            let mut got = Vec::new();
+            while let Some((lane, batch)) = b.next_batch() {
+                assert_eq!(lane, LANE_REQUEUE,
+                           "no fresh items exist; only the re-queue \
+                            lane may flush");
+                got.extend(batch.items.iter().map(|x| x.1));
+            }
+            escalator.join();
+            assert_eq!(got, vec![42],
+                       "in-flight escalation dropped at shutdown");
+        },
+    );
+}
+
+/// PR-9 regression as a model: a clean-FIN tenant purge
+/// (`drop_tenant`) racing a late `add_read` still draining out of the
+/// analysis queue must never resurrect the tenant — the tombstone
+/// makes the late add a no-op regardless of arrival order.
+#[test]
+fn model_clean_fin_purge_discards_racing_add_read() {
+    check::explore(
+        "model_clean_fin_purge_discards_racing_add_read",
+        120,
+        || {
+            let st = Arc::new(AnalysisState::new(20));
+            let s2 = st.clone();
+            let adder = check::spawn(move || {
+                s2.add_read(7, 1, vec![1, 2, 3]);
+            });
+            let dropped = st.drop_tenant(7);
+            adder.join();
+            assert!(dropped <= 1, "at most the racing read existed");
+            assert_eq!(st.reads_indexed(7), 0,
+                       "racing add_read resurrected a purged tenant");
+            // the tombstone also holds for every later straggler
+            st.add_read(7, 2, vec![1, 2, 3]);
+            assert_eq!(st.reads_indexed(7), 0,
+                       "tombstone must outlive the purge");
+        },
+    );
+}
+
+/// Public QueueSet/Feeder cross-check: a slot retired mid-stream never
+/// loses a job — every job a producer pushed is either delivered to a
+/// still-drainable queue or reported back as undeliverable, across all
+/// interleavings of `Feeder::send` against `retire`.
+#[test]
+fn model_feeder_routing_conserves_jobs_across_retirement() {
+    check::explore(
+        "model_feeder_routing_conserves_jobs_across_retirement",
+        150,
+        || {
+            let set = Arc::new(QueueSet::with_slots(2));
+            let (tx0, rx0) = bounded::<u32>(8);
+            let (tx1, rx1) = bounded::<u32>(8);
+            assert_eq!(set.add(tx0), Some(0));
+            assert_eq!(set.add(tx1), Some(1));
+            let feeder = Feeder::new(set.clone());
+            let producer = check::spawn(move || {
+                let mut rejected = 0u32;
+                for i in 0..3u32 {
+                    if feeder.send(i).is_err() {
+                        rejected += 1;
+                    }
+                }
+                rejected
+            });
+            set.retire(0);
+            let rejected = producer.join();
+            set.close_all();
+            let mut delivered = 0u32;
+            for rx in [rx0, rx1] {
+                while rx.recv().is_ok() {
+                    delivered += 1;
+                }
+            }
+            assert_eq!(delivered + rejected, 3,
+                       "job lost or duplicated across retirement");
+        },
+    );
+}
